@@ -1,0 +1,114 @@
+//! # Distributed node embeddings (paper §3.6)
+//!
+//! Each of `m` machines observes a *censored* copy of a graph (every edge
+//! independently hidden with probability `p = 0.1`), computes HOPE/Katz
+//! node embeddings locally, and the coordinator combines them. Because the
+//! implicit-factorization loss `||Z Z^T - S||_F^2` is invariant to
+//! `Z -> Z Q`, the local embeddings are arbitrarily rotated relative to
+//! each other — exactly the ambiguity Procrustes fixing resolves.
+//!
+//! We reproduce the paper's qualitative findings:
+//! - the aligned average stays close to the "central" embedding (computed
+//!   on the uncensored graph) as `m` grows, while naive averaging drifts
+//!   (Fig 9);
+//! - a downstream node classifier on the aligned embedding loses (almost)
+//!   no macro-F1 vs the central embedding (Table 2).
+//!
+//! The Wikipedia/PPI datasets are not available offline; we use a
+//! stochastic block model with planted community labels (DESIGN.md
+//! substitution ledger).
+//!
+//! Run: `cargo run --release --example node_embeddings`
+
+use deigen::align;
+use deigen::classify::macro_f1_experiment;
+use deigen::graph::{hope_embedding, sbm};
+use deigen::linalg::procrustes::procrustes_align;
+use deigen::linalg::Mat;
+use deigen::rng::Pcg64;
+
+/// Embedding-space distance used by Fig 9: relative Frobenius distance of
+/// the aligned estimate from the central embedding (aligning first, since
+/// even the central embedding is only defined up to rotation).
+fn rel_dist(z: &Mat, z_central: &Mat) -> f64 {
+    let aligned = procrustes_align(z, z_central);
+    aligned.sub(z_central).fro_norm() / z_central.fro_norm()
+}
+
+fn main() {
+    let seed = 20200504u64;
+    let mut rng = Pcg64::seed(seed);
+    let (nodes, communities) = (220usize, 4usize);
+    let dim = 32usize;
+    let beta = 0.02;
+    let p_hide = 0.1;
+
+    println!("deigen node embeddings: SBM n={nodes} k={communities}, HOPE dim={dim}, censor p={p_hide}");
+    let g = sbm(nodes, communities, 0.25, 0.02, &mut rng);
+    println!("graph: {} edges", g.m());
+
+    // central embedding on the uncensored graph
+    let z_central = hope_embedding(&g, dim, beta);
+    let f1_central = macro_f1_experiment(&z_central, &g.labels, communities, 1.0, &mut rng);
+    println!(
+        "central embedding: macro-F1 {:.3}, accuracy {:.3}",
+        f1_central.macro_f1, f1_central.accuracy
+    );
+
+    println!("\n  m    dist(aligned)  dist(naive)   rel F1 change");
+    println!("  ---  -------------  -----------   -------------");
+    for &m in &[4usize, 8, 16, 32] {
+        // per-machine censored views + local embeddings
+        let locals: Vec<Mat> = (0..m)
+            .map(|_| {
+                let cg = g.censor(p_hide, &mut rng);
+                hope_embedding(&cg, dim, beta)
+            })
+            .collect();
+
+        // Procrustes-aligned average (Algorithm 1 on non-orthonormal panels:
+        // alignment minimizes ||Z_i Q - Z_1||_F over orthogonal Q)
+        let mut acc = Mat::zeros(nodes, dim);
+        for z in &locals {
+            acc.axpy(1.0 / m as f64, &procrustes_align(z, &locals[0]));
+        }
+        let z_avg = acc;
+        // naive average
+        let mut z_naive = Mat::zeros(nodes, dim);
+        for z in &locals {
+            z_naive.axpy(1.0 / m as f64, z);
+        }
+
+        let da = rel_dist(&z_avg, &z_central);
+        let dn = rel_dist(&z_naive, &z_central);
+        let f1 = macro_f1_experiment(&z_avg, &g.labels, communities, 1.0, &mut rng);
+        let rel_f1 = (f1_central.macro_f1 - f1.macro_f1) / f1_central.macro_f1;
+        println!(
+            "  {m:>3}  {da:>13.4}  {dn:>11.4}   {:>+12.2}%",
+            100.0 * rel_f1
+        );
+    }
+
+    // Fig-9 shape check at the largest m
+    let locals: Vec<Mat> = (0..32)
+        .map(|_| hope_embedding(&g.censor(p_hide, &mut rng), dim, beta))
+        .collect();
+    let mut acc = Mat::zeros(nodes, dim);
+    for z in &locals {
+        acc.axpy(1.0 / 32.0, &procrustes_align(z, &locals[0]));
+    }
+    let mut z_naive = Mat::zeros(nodes, dim);
+    for z in &locals {
+        z_naive.axpy(1.0 / 32.0, z);
+    }
+    let da = rel_dist(&acc, &z_central);
+    let dn = rel_dist(&z_naive, &z_central);
+    assert!(
+        da < dn,
+        "aligned ({da:.3}) should stay closer to central than naive ({dn:.3})"
+    );
+    println!("\nnode_embeddings OK: aligned stays near the central embedding; naive drifts.");
+
+    // make the unused import of align explicit-useful: sanity vs library fn
+    let _ = align::naive_average(&[Pcg64::seed(1).haar_stiefel(8, 2)]);
+}

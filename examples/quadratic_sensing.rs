@@ -1,0 +1,56 @@
+//! # Distributed spectral initialization for quadratic sensing (paper §3.7)
+//!
+//! `m = 30` machines each observe `n = i * r * d` quadratic measurements
+//! `y = ||X_sharp^T a||^2` of a shared ground-truth `X_sharp in O_{d,r}`.
+//! Each machine forms its truncated spectral matrix `D_N` and extracts a
+//! weak local estimate; the coordinator refines by Procrustes fixing with
+//! iterative refinement (Algorithm 2, n_iter = 10) — reproducing Fig 10's
+//! finding that the distributed initialization weakly recovers `X_sharp`
+//! once `n >~ 2 r d` per machine, while naive averaging stays near-orthogonal
+//! to the signal.
+//!
+//! Run: `cargo run --release --example quadratic_sensing`
+
+use deigen::align;
+use deigen::rng::Pcg64;
+use deigen::linalg::Mat;
+use deigen::sensing::{local_init, SensingInstance};
+
+fn main() {
+    let seed = 20200504u64;
+    let mut rng = Pcg64::seed(seed);
+    let (d, r, m) = (60usize, 3usize, 30usize);
+    println!("deigen quadratic sensing: d={d} r={r} m={m}, n = i*r*d per machine");
+    let inst = SensingInstance::draw(d, r, 0.0, &mut rng);
+
+    println!("\n  i    n/machine  leak(aligned)  leak(naive)  leak(local)");
+    println!("  ---  ---------  -------------  -----------  -----------");
+    let mut last_aligned = f64::NAN;
+    for i in [1usize, 2, 4, 6] {
+        let n = i * r * d;
+        let locals: Vec<Mat> = (0..m)
+            .map(|j| {
+                let mut node_rng = rng.split((i * 100 + j) as u64);
+                let (a, y) = inst.measure(n, &mut node_rng);
+                local_init(&a, &y, r)
+            })
+            .collect();
+
+        let refined = align::iterative_refinement(&locals, 10);
+        let naive = align::naive_average(&locals);
+        let leak_refined = inst.leakage(&refined);
+        let leak_naive = inst.leakage(&naive);
+        let leak_local = inst.leakage(&locals[0]);
+        println!(
+            "  {i:>3}  {n:>9}  {leak_refined:>13.4}  {leak_naive:>11.4}  {leak_local:>11.4}"
+        );
+        last_aligned = leak_refined;
+    }
+
+    assert!(
+        last_aligned < 0.7,
+        "distributed init should weakly recover X_sharp at n = 6rd (leak {last_aligned:.3})"
+    );
+    println!("\nquadratic_sensing OK: Algorithm 2 turns weak local spectral \
+              estimates into a usable initialization.");
+}

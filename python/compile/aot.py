@@ -1,0 +1,114 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+Run once by ``make artifacts``; the rust runtime
+(``rust/src/runtime/pjrt.rs``) loads the text with
+``HloModuleProto::from_text_file``, compiles on the PJRT CPU client, and
+executes — Python never runs at request time.
+
+HLO TEXT (not ``lowered.compile().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 (the version the published ``xla`` 0.1.6 crate links)
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.
+
+PJRT executables are fixed-shape, so we emit one artifact per (graph,
+shape) pair listed in ``SHAPE_MANIFEST`` and a ``manifest.json`` the rust
+side uses to pick the right executable. The wide statistical sweeps run on
+the rust-native engine (same algorithm, any shape); examples and
+integration tests exercise these PJRT artifacts end-to-end.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, builder, [input shapes]) — every entry becomes artifacts/<key>.hlo.txt
+# local_eig:    x (n, d), v0 (d, r)   -> (V (d, r), theta (r,))
+# local_eig_cov: c (d, d), v0 (d, r)  -> (V (d, r), theta (r,))
+# procrustes:   v (d, r), vref (d, r) -> (V Z (d, r),)
+# gram:         x (n, d)              -> (C (d, d),)
+SHAPE_MANIFEST = [
+    ("local_eig", "local_eig", [(500, 64), (64, 8)]),
+    ("local_eig", "local_eig", [(200, 32), (32, 4)]),
+    ("local_eig", "local_eig", [(1000, 128), (128, 16)]),
+    ("local_eig_cov", "local_eig_cov", [(64, 64), (64, 8)]),
+    ("local_eig_cov", "local_eig_cov", [(128, 128), (128, 16)]),
+    ("procrustes", "procrustes", [(64, 8), (64, 8)]),
+    ("procrustes", "procrustes", [(32, 4), (32, 4)]),
+    ("procrustes", "procrustes", [(128, 16), (128, 16)]),
+    ("gram", "gram", [(500, 64)]),
+]
+
+
+def _builders():
+    return {
+        "local_eig": lambda x, v0: model.local_eigsolve(x, v0),
+        "local_eig_cov": lambda c, v0: model.local_eigsolve_cov(c, v0),
+        "procrustes": lambda v, vref: (model.procrustes_align(v, vref),),
+        "gram": lambda x: (model.gram_cov(x),),
+    }
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side unwraps a single tuple result uniformly)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_key(name: str, shapes) -> str:
+    dims = "_".join("x".join(str(d) for d in s) for s in shapes)
+    return f"{name}__{dims}"
+
+
+def build_all(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    builders = _builders()
+    manifest = []
+    for name, builder_name, shapes in SHAPE_MANIFEST:
+        fn = builders[builder_name]
+        specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        key = artifact_key(name, shapes)
+        path = os.path.join(out_dir, f"{key}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = [
+            list(getattr(o, "shape", ())) for o in lowered.out_info
+        ] if hasattr(lowered, "out_info") else []
+        manifest.append(
+            {
+                "name": name,
+                "key": key,
+                "file": f"{key}.hlo.txt",
+                "inputs": [list(s) for s in shapes],
+                "outputs": out_shapes,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json ({len(manifest)} artifacts)")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="artifact output dir")
+    args = p.parse_args()
+    build_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""L1: Pallas kernels for the compute hot-spots of distributed eigenspace
+estimation — tiled Gram accumulation, panel matmul, fused Newton–Schulz
+polar / inverse-sqrt. Each has a pure-jnp oracle in ``ref``."""
+
+from .gram import gram
+from .matmul import matmul
+from .polar import newton_schulz_polar, invsqrt_ns
+
+__all__ = ["gram", "matmul", "newton_schulz_polar", "invsqrt_ns"]

@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: tiled dense matmul (used for the ``C @ V`` panel product
+inside block orthogonal iteration).
+
+The subspace-iteration step multiplies the (d, d) local Gram matrix with the
+current (d, r) basis panel. ``r`` is small (1..64 in the paper), so the tile
+schedule keeps a full (block_m, r) output strip resident in VMEM and streams
+(block_m, block_k) tiles of ``C``:
+
+  grid = (d/bm, d/bk);   VMEM per step = bm*bk + bk*r + bm*r floats
+
+which is MXU-shaped for bm = bk = 128 (the systolic array's native tile).
+Runs under ``interpret=True`` on CPU — see gram.py for rationale.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _ceil_to(v: int, b: int) -> int:
+    return ((v + b - 1) // b) * b
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k"))
+def matmul(
+    a: jnp.ndarray, b: jnp.ndarray, *, block_m: int = 128, block_k: int = 128
+) -> jnp.ndarray:
+    """Tiled Pallas matmul ``A @ B`` for A (m, k), B (k, n) with small n.
+
+    Zero-pads every dimension up to the tile grid, computes in fp32, and
+    slices back to the exact (m, n) result.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims differ: {k} vs {k2}"
+    bm = min(block_m, _ceil_to(m, 8))
+    bk = min(block_k, _ceil_to(k, 8))
+    mp, kp = _ceil_to(m, bm), _ceil_to(k, bk)
+    npad = _ceil_to(n, 8)
+    ap = jnp.pad(a.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    bp = jnp.pad(b.astype(jnp.float32), ((0, kp - k), (0, npad - n)))
+
+    grid = (mp // bm, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k_: (i, k_)),
+            pl.BlockSpec((bk, npad), lambda i, k_: (k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, npad), lambda i, k_: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, npad), jnp.float32),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]

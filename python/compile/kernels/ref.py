@@ -1,0 +1,99 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every kernel in this package has a reference implementation here, written
+with plain ``jax.numpy`` ops only. ``python/tests`` asserts kernel == ref
+under ``numpy.testing.assert_allclose`` across shape/dtype sweeps
+(hypothesis). The refs are also used by ``local_eigsolve_ref`` in
+``python/tests/test_model.py`` to validate the full L2 graph against
+``numpy.linalg.eigh``.
+
+Nothing in this file may call ``jnp.linalg`` factorizations except the
+*test-only* gold standard ``polar_svd_ref`` — the production L2 graph must
+stay LAPACK-free (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Sample second-moment matrix ``(1/n) X^T X`` for ``X`` of shape (n, d)."""
+    n = x.shape[0]
+    return (x.T @ x) / n
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain dense matmul reference."""
+    return a @ b
+
+
+def newton_schulz_polar_ref(a: jnp.ndarray, iters: int = 18) -> jnp.ndarray:
+    """Orthogonal polar factor of a square matrix via Newton–Schulz.
+
+    ``Y_{k+1} = 0.5 * Y_k (3 I - Y_k^T Y_k)`` converges quadratically to the
+    polar factor ``U V^T`` (where ``A = U S V^T``) whenever all singular
+    values of the initial iterate lie in ``(0, sqrt(3))``; we guarantee that
+    by scaling with the Frobenius norm.
+    """
+    r = a.shape[0]
+    eye = jnp.eye(r, dtype=a.dtype)
+    y = a / jnp.maximum(jnp.sqrt(jnp.sum(a * a)), 1e-30)
+    for _ in range(iters):
+        y = 0.5 * y @ (3.0 * eye - y.T @ y)
+    return y
+
+
+def polar_svd_ref(a: jnp.ndarray) -> jnp.ndarray:
+    """Exact polar factor via SVD (test-only gold standard)."""
+    u, _, vt = jnp.linalg.svd(a, full_matrices=False)
+    return u @ vt
+
+
+def invsqrt_ns_ref(g: jnp.ndarray, iters: int = 30) -> jnp.ndarray:
+    """Inverse matrix square root of an SPD matrix via coupled Newton–Schulz.
+
+    Uses the coupled iteration ``T = (3I - Z Y)/2; Y <- Y T; Z <- T Z`` with
+    ``Y0 = G/a, Z0 = I`` and scale ``a = trace(G)`` so that the spectrum of
+    ``Y0`` lies in (0, 1]. On convergence ``Y -> I`` and ``Z -> (G/a)^{-1/2}``;
+    returns ``G^{-1/2} = Z / sqrt(a)``.
+    """
+    r = g.shape[0]
+    eye = jnp.eye(r, dtype=g.dtype)
+    a = jnp.maximum(jnp.trace(g), 1e-30)
+    y = g / a
+    z = eye
+    for _ in range(iters):
+        t = 0.5 * (3.0 * eye - z @ y)
+        y = y @ t
+        z = t @ z
+    return z / jnp.sqrt(a)
+
+
+def cholqr_ref(w: jnp.ndarray, iters: int = 30) -> jnp.ndarray:
+    """Orthonormalize the columns of ``w`` via CholeskyQR with NS inverse sqrt:
+    ``Q = W (W^T W)^{-1/2}`` — LAPACK-free, matmul-dominant."""
+    g = w.T @ w
+    return w @ invsqrt_ns_ref(g, iters)
+
+
+def orth_iter_ref(c: jnp.ndarray, v0: jnp.ndarray, steps: int) -> jnp.ndarray:
+    """Block orthogonal iteration reference: repeat ``V <- cholqr(C V)``."""
+    v = cholqr_ref(v0)
+    for _ in range(steps):
+        v = cholqr_ref(c @ v)
+    return v
+
+
+def local_eigsolve_ref(x: jnp.ndarray, v0: jnp.ndarray, steps: int):
+    """Full local-solver reference: gram + orthogonal iteration + Ritz values."""
+    c = gram_ref(x)
+    v = orth_iter_ref(c, v0, steps)
+    theta = jnp.diagonal(v.T @ (c @ v))
+    return v, theta
+
+
+def procrustes_align_ref(v: jnp.ndarray, v_ref: jnp.ndarray) -> jnp.ndarray:
+    """Reference Procrustes alignment: ``V Z`` with
+    ``Z = argmin_{Z in O_r} ||V Z - V_ref||_F = polar(V^T V_ref)``."""
+    return v @ newton_schulz_polar_ref(v.T @ v_ref)

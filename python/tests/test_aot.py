@@ -1,0 +1,78 @@
+"""AOT pipeline checks: artifacts on disk are consistent with the manifest
+and with a freshly lowered graph; HLO text is parseable interchange."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_files_exist():
+    for entry in _manifest():
+        assert os.path.exists(os.path.join(ART, entry["file"])), entry["key"]
+
+
+def test_manifest_covers_shape_manifest():
+    keys = {e["key"] for e in _manifest()}
+    for name, _, shapes in aot.SHAPE_MANIFEST:
+        assert aot.artifact_key(name, shapes) in keys
+
+
+def test_hlo_text_has_entry_computation():
+    for entry in _manifest():
+        with open(os.path.join(ART, entry["file"])) as f:
+            text = f.read()
+        assert "ENTRY" in text, entry["key"]
+        assert "HloModule" in text, entry["key"]
+
+
+def test_hlo_text_is_lapack_free():
+    """No custom-calls to LAPACK — the portability invariant that lets the
+    rust PJRT CPU client compile the artifact (DESIGN.md §Hardware-Adaptation)."""
+    for entry in _manifest():
+        with open(os.path.join(ART, entry["file"])) as f:
+            text = f.read()
+        assert "lapack" not in text.lower(), entry["key"]
+
+
+def test_lowering_deterministic():
+    spec = jax.ShapeDtypeStruct((32, 4), jnp.float32)
+    low1 = jax.jit(lambda v, w: (model.procrustes_align(v, w),)).lower(spec, spec)
+    low2 = jax.jit(lambda v, w: (model.procrustes_align(v, w),)).lower(spec, spec)
+    assert aot.to_hlo_text(low1) == aot.to_hlo_text(low2)
+
+
+def test_artifact_key_format():
+    assert aot.artifact_key("gram", [(500, 64)]) == "gram__500x64"
+    assert (
+        aot.artifact_key("local_eig", [(500, 64), (64, 8)])
+        == "local_eig__500x64_64x8"
+    )
+
+
+def test_manifest_shapes_match_outputs():
+    for entry in _manifest():
+        if entry["name"] in ("local_eig", "local_eig_cov"):
+            (d, r) = entry["inputs"][1]
+            assert entry["outputs"][0] == [d, r]
+            assert entry["outputs"][1] == [r]
+        elif entry["name"] == "procrustes":
+            assert entry["outputs"][0] == entry["inputs"][0]
+        elif entry["name"] == "gram":
+            n, d = entry["inputs"][0]
+            assert entry["outputs"][0] == [d, d]

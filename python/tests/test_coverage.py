@@ -1,0 +1,177 @@
+"""Widened L1/L2 coverage: dtype handling, tile-boundary edge shapes,
+iteration-count sensitivity, and cross-kernel composition properties that
+the basic suites don't touch.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import gram, invsqrt_ns, matmul, newton_schulz_polar
+from compile.kernels import ref
+
+SET = dict(deadline=None, max_examples=15)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ------------------------------------------------------------- dtypes
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_gram_accepts_both_float_dtypes(dtype):
+    x = _rng(0).standard_normal((64, 16)).astype(dtype)
+    out = np.asarray(gram(x))
+    assert out.dtype == np.float32  # kernels compute in f32
+    np.testing.assert_allclose(out, ref.gram_ref(x.astype(np.float32)), rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_matmul_accepts_both_float_dtypes(dtype):
+    g = _rng(1)
+    a = g.standard_normal((20, 12)).astype(dtype)
+    b = g.standard_normal((12, 4)).astype(dtype)
+    out = np.asarray(matmul(a, b))
+    assert out.dtype == np.float32
+    np.testing.assert_allclose(
+        out, (a.astype(np.float64) @ b.astype(np.float64)), rtol=1e-4, atol=1e-4
+    )
+
+
+# --------------------------------------------- exact tile boundaries
+
+
+@pytest.mark.parametrize("n", [127, 128, 129, 256])
+@pytest.mark.parametrize("d", [7, 8, 128])
+def test_gram_tile_boundaries(n, d):
+    x = _rng(n * d).standard_normal((n, d)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(gram(x)), ref.gram_ref(x), rtol=1e-4, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("m,k", [(128, 128), (129, 127), (1, 128), (128, 1)])
+def test_matmul_tile_boundaries(m, k):
+    g = _rng(m * 1000 + k)
+    a = g.standard_normal((m, k)).astype(np.float32)
+    b = g.standard_normal((k, 3)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(matmul(a, b)), a @ b, rtol=1e-4, atol=1e-4
+    )
+
+
+# ------------------------------------------ iteration-count behaviour
+
+
+def test_polar_iteration_monotone_convergence():
+    """More NS iterations never worsen orthogonality defect."""
+    a = _rng(5).standard_normal((10, 10)).astype(np.float32) * 0.3 + np.eye(
+        10, dtype=np.float32
+    )
+    defects = []
+    for iters in (4, 8, 16, 32):
+        z = np.asarray(newton_schulz_polar(a, iters=iters)).astype(np.float64)
+        defects.append(np.abs(z.T @ z - np.eye(10)).max())
+    assert defects[-1] <= defects[0]
+    assert defects[-1] < 1e-5
+
+
+def test_invsqrt_iteration_monotone_convergence():
+    g = _rng(6)
+    q = np.linalg.qr(g.standard_normal((8, 8)))[0]
+    spd = ((q * np.linspace(1.5, 0.4, 8)) @ q.T).astype(np.float32)
+    errs = []
+    for iters in (10, 20, 40):
+        z = np.asarray(invsqrt_ns(spd, iters=iters)).astype(np.float64)
+        errs.append(np.abs(z @ spd @ z - np.eye(8)).max())
+    assert errs[-1] <= errs[0] + 1e-6  # equal up to f32 roundoff once converged
+    assert errs[-1] < 1e-4
+
+
+@settings(**SET)
+@given(steps=st.integers(min_value=5, max_value=40))
+def test_orth_iter_more_steps_never_hurts(steps):
+    g = np.random.default_rng(7)
+    d, r = 32, 3
+    q = np.linalg.qr(g.standard_normal((d, d)))[0]
+    evs = np.concatenate([[1.0, 0.95, 0.9], 0.5 * 0.8 ** np.arange(d - r)])
+    c = ((q * evs) @ q.T).astype(np.float32)
+    v0 = g.standard_normal((d, r)).astype(np.float32)
+    v = np.asarray(model.orth_iter(c, v0, steps)).astype(np.float64)
+    v_ref = q[:, :r]
+    dist = np.linalg.norm(v @ v.T - v_ref @ v_ref.T, 2)
+    # convergence ratio 0.5/0.9 per step from a random start
+    assert dist < max(2.0 * (0.5 / 0.9) ** steps, 5e-3), f"steps={steps} dist={dist}"
+
+
+# ------------------------------------------------- composition props
+
+
+@settings(**SET)
+@given(
+    d=st.integers(min_value=8, max_value=64),
+    r=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_align_then_average_beats_naive(d, r, seed):
+    """The paper's core claim at kernel level: Procrustes-aligned averaging
+    of rotated noisy copies tracks the truth; naive averaging does not."""
+    r = min(r, d // 2)
+    g = np.random.default_rng(seed)
+    truth = np.linalg.qr(g.standard_normal((d, r)))[0].astype(np.float32)
+    m = 8
+    locals_, naive_sum = [], np.zeros((d, r))
+    for _ in range(m):
+        z = np.linalg.qr(g.standard_normal((r, r)))[0]
+        v = np.linalg.qr(truth @ z + 0.05 * g.standard_normal((d, r)))[0].astype(
+            np.float32
+        )
+        locals_.append(v)
+        naive_sum += v
+    align = model.jit_procrustes_align()
+    acc = np.zeros((d, r))
+    for v in locals_:
+        acc += np.asarray(align(v, locals_[0]))
+    avg = np.linalg.qr(acc / m)[0]
+    naive = np.linalg.qr(naive_sum / m)[0]
+
+    def dist(a):
+        return np.linalg.norm(
+            a @ a.T - truth.astype(np.float64) @ truth.astype(np.float64).T, 2
+        )
+
+    assert dist(avg) <= dist(naive) + 1e-6
+
+
+def test_local_eigsolve_insensitive_to_init():
+    """Different random inits must reach the same subspace (gap present)."""
+    g = np.random.default_rng(8)
+    d, r, n = 48, 4, 800
+    q = np.linalg.qr(g.standard_normal((d, d)))[0]
+    evs = np.concatenate([np.linspace(1.0, 0.8, r), 0.4 * 0.9 ** np.arange(d - r)])
+    L = (q * np.sqrt(evs)).astype(np.float64)
+    x = (g.standard_normal((n, d)) @ L.T).astype(np.float32)
+    solve = model.jit_local_eigsolve()
+    v1 = np.asarray(solve(x, g.standard_normal((d, r)).astype(np.float32))[0])
+    v2 = np.asarray(solve(x, g.standard_normal((d, r)).astype(np.float32))[0])
+    dist = np.linalg.norm(
+        v1.astype(np.float64) @ v1.T - v2.astype(np.float64) @ v2.T, 2
+    )
+    assert dist < 1e-3, f"init sensitivity {dist}"
+
+
+def test_gram_then_eigsolve_equals_direct_eigsolve():
+    """local_eigsolve(x) == local_eigsolve_cov(gram(x)) — the two AOT
+    entry points must agree."""
+    g = np.random.default_rng(9)
+    d, r, n = 32, 4, 300
+    x = g.standard_normal((n, d)).astype(np.float32)
+    v0 = g.standard_normal((d, r)).astype(np.float32)
+    v_a, t_a = model.jit_local_eigsolve()(x, v0)
+    c = np.asarray(model.jit_gram_cov()(x))
+    v_b, t_b = model.jit_local_eigsolve_cov()(c, v0)
+    np.testing.assert_allclose(np.asarray(v_a), np.asarray(v_b), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(t_a), np.asarray(t_b), atol=5e-4)

@@ -1,0 +1,198 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and, where relevant, conditioning) so we
+exercise the padding/tiling edge cases of the BlockSpec schedules, not
+just the happy 128-aligned path.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gram, matmul, newton_schulz_polar, invsqrt_ns
+from compile.kernels import ref
+
+SET = dict(deadline=None, max_examples=25)
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- gram
+
+
+@settings(**SET)
+@given(
+    n=st.integers(min_value=1, max_value=300),
+    d=st.integers(min_value=1, max_value=80),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_gram_matches_ref(n, d, seed):
+    x = _rng(seed).standard_normal((n, d)).astype(np.float32)
+    got = np.asarray(gram(x))
+    want = np.asarray(ref.gram_ref(x))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SET)
+@given(
+    n=st.integers(min_value=2, max_value=200),
+    d=st.integers(min_value=2, max_value=64),
+    bn=st.sampled_from([8, 32, 128]),
+    bd=st.sampled_from([8, 32, 128]),
+)
+def test_gram_tile_invariance(n, d, bn, bd):
+    """The result must not depend on the tiling schedule."""
+    x = _rng(n * 1000 + d).standard_normal((n, d)).astype(np.float32)
+    a = np.asarray(gram(x, block_n=bn, block_d=bd))
+    b = np.asarray(gram(x, block_n=128, block_d=128))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_gram_symmetry_and_psd():
+    x = _rng(7).standard_normal((123, 45)).astype(np.float32)
+    c = np.asarray(gram(x))
+    np.testing.assert_allclose(c, c.T, atol=1e-6)
+    w = np.linalg.eigvalsh(c.astype(np.float64))
+    assert w.min() > -1e-5
+
+
+def test_gram_zero_input():
+    c = np.asarray(gram(np.zeros((10, 6), np.float32)))
+    np.testing.assert_allclose(c, 0.0)
+
+
+def test_gram_single_sample():
+    x = _rng(3).standard_normal((1, 17)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(gram(x)), np.outer(x[0], x[0]), rtol=1e-5, atol=1e-6
+    )
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(**SET)
+@given(
+    m=st.integers(min_value=1, max_value=180),
+    k=st.integers(min_value=1, max_value=180),
+    n=st.integers(min_value=1, max_value=32),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    g = _rng(seed)
+    a = g.standard_normal((m, k)).astype(np.float32)
+    b = g.standard_normal((k, n)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(matmul(a, b)), a @ b, rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_identity():
+    a = _rng(5).standard_normal((64, 64)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(matmul(a, np.eye(64, dtype=np.float32))), a, rtol=1e-6
+    )
+
+
+def test_matmul_tile_invariance():
+    g = _rng(11)
+    a = g.standard_normal((200, 150)).astype(np.float32)
+    b = g.standard_normal((150, 12)).astype(np.float32)
+    x = np.asarray(matmul(a, b, block_m=32, block_k=64))
+    y = np.asarray(matmul(a, b, block_m=128, block_k=128))
+    np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_shape_mismatch_raises():
+    a = np.zeros((4, 5), np.float32)
+    b = np.zeros((6, 2), np.float32)
+    with pytest.raises(AssertionError):
+        matmul(a, b)
+
+
+# ---------------------------------------------------------------- polar
+
+
+def _near_orthogonal(r, noise, seed):
+    g = _rng(seed)
+    q = np.linalg.qr(g.standard_normal((r, r)))[0]
+    return (q + noise * g.standard_normal((r, r))).astype(np.float32)
+
+
+@settings(**SET)
+@given(
+    r=st.integers(min_value=1, max_value=24),
+    noise=st.floats(min_value=0.0, max_value=0.2),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_polar_matches_svd(r, noise, seed):
+    a = _near_orthogonal(r, noise, seed)
+    got = np.asarray(newton_schulz_polar(a, iters=30))
+    want = np.asarray(ref.polar_svd_ref(a))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@settings(**SET)
+@given(
+    r=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_polar_output_orthogonal(r, seed):
+    a = _near_orthogonal(r, 0.3, seed)
+    z = np.asarray(newton_schulz_polar(a, iters=40)).astype(np.float64)
+    np.testing.assert_allclose(z.T @ z, np.eye(r), atol=5e-4)
+
+
+def test_polar_of_orthogonal_is_identity_map():
+    q = np.linalg.qr(_rng(2).standard_normal((12, 12)))[0].astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(newton_schulz_polar(q, iters=20)), q, atol=1e-4
+    )
+
+
+def test_polar_matches_jnp_ref_kernel_vs_ref():
+    a = _near_orthogonal(8, 0.1, 99)
+    got = np.asarray(newton_schulz_polar(a, iters=18))
+    want = np.asarray(ref.newton_schulz_polar_ref(a, iters=18))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_polar_sign_fix_scalar():
+    """r=1 polar is exactly the sign — the Garber et al. reduction."""
+    for v in (0.7, -0.3, 2.5, -1e-3):
+        z = float(np.asarray(newton_schulz_polar(np.array([[v]], np.float32), iters=40))[0, 0])
+        assert abs(z - np.sign(v)) < 1e-4
+
+
+# ---------------------------------------------------------------- invsqrt
+
+
+@settings(**SET)
+@given(
+    r=st.integers(min_value=1, max_value=20),
+    cond=st.floats(min_value=1.0, max_value=50.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_invsqrt_inverts(r, cond, seed):
+    g = _rng(seed)
+    q = np.linalg.qr(g.standard_normal((r, r)))[0]
+    evs = np.linspace(1.0, 1.0 / cond, r)
+    spd = ((q * evs) @ q.T).astype(np.float32)
+    z = np.asarray(invsqrt_ns(spd, iters=60)).astype(np.float64)
+    np.testing.assert_allclose(z @ spd.astype(np.float64) @ z, np.eye(r), atol=5e-3)
+
+
+def test_invsqrt_matches_ref():
+    g = _rng(4)
+    q = np.linalg.qr(g.standard_normal((10, 10)))[0]
+    spd = ((q * np.linspace(2.0, 0.5, 10)) @ q.T).astype(np.float32)
+    got = np.asarray(invsqrt_ns(spd, iters=30))
+    want = np.asarray(ref.invsqrt_ns_ref(spd, iters=30))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_invsqrt_identity():
+    z = np.asarray(invsqrt_ns(np.eye(6, dtype=np.float32), iters=30))
+    np.testing.assert_allclose(z, np.eye(6), atol=1e-5)

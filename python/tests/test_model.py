@@ -1,0 +1,158 @@
+"""L2 correctness: the AOT-lowered compute graphs against numpy/LAPACK.
+
+The production graphs are LAPACK-free by construction; here (test-only) we
+are allowed numpy.linalg as the gold standard.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+SET = dict(deadline=None, max_examples=10)
+
+
+def _gapped_cov(d, r, gap, seed, lo=0.7, hi=1.0):
+    g = np.random.default_rng(seed)
+    u = np.linalg.qr(g.standard_normal((d, d)))[0]
+    evs = np.concatenate(
+        [np.linspace(hi, lo, r), (lo - gap) * 0.9 ** np.arange(d - r)]
+    )
+    return ((u * evs) @ u.T).astype(np.float32), u[:, :r]
+
+
+def _subspace_dist(a, b):
+    return np.linalg.norm(a @ a.T - b @ b.T, 2)
+
+
+# ---------------------------------------------------------------- cholqr
+
+
+@settings(**SET)
+@given(
+    d=st.integers(min_value=4, max_value=100),
+    r=st.integers(min_value=1, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_cholqr_orthonormal_and_span(d, r, seed):
+    r = min(r, d)
+    w = np.random.default_rng(seed).standard_normal((d, r)).astype(np.float32)
+    q = np.asarray(model.cholqr(w)).astype(np.float64)
+    np.testing.assert_allclose(q.T @ q, np.eye(r), atol=2e-3)
+    # same column span: projector of q equals projector of orth(w)
+    qw = np.linalg.qr(w.astype(np.float64))[0]
+    assert _subspace_dist(q, qw) < 5e-3
+
+
+# -------------------------------------------------------------- orth_iter
+
+
+def test_orth_iter_converges_to_leading_subspace():
+    c, v1 = _gapped_cov(64, 8, 0.2, 0)
+    v0 = np.random.default_rng(1).standard_normal((64, 8)).astype(np.float32)
+    v = np.asarray(model.orth_iter(c, v0, 30))
+    assert _subspace_dist(v.astype(np.float64), v1) < 1e-3
+
+
+def test_orth_iter_rank_one():
+    c, v1 = _gapped_cov(32, 1, 0.3, 5)
+    v0 = np.random.default_rng(2).standard_normal((32, 1)).astype(np.float32)
+    v = np.asarray(model.orth_iter(c, v0, 30))
+    assert _subspace_dist(v.astype(np.float64), v1) < 1e-3
+
+
+def test_orth_iter_matches_ref():
+    c, _ = _gapped_cov(40, 4, 0.2, 9)
+    v0 = np.random.default_rng(3).standard_normal((40, 4)).astype(np.float32)
+    got = np.asarray(model.orth_iter(c, v0, 10))
+    want = np.asarray(ref.orth_iter_ref(c, v0, 10))
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------- local_eigsolve
+
+
+def test_local_eigsolve_matches_eigh():
+    g = np.random.default_rng(11)
+    d, r, n = 64, 8, 500
+    c, _ = _gapped_cov(d, r, 0.2, 7)
+    x = (g.standard_normal((n, d)) @ np.linalg.cholesky(
+        c.astype(np.float64) + 1e-9 * np.eye(d)).T).astype(np.float32)
+    v0 = g.standard_normal((d, r)).astype(np.float32)
+    v, theta = model.jit_local_eigsolve()(x, v0)
+    v = np.asarray(v).astype(np.float64)
+    emp = x.astype(np.float64).T @ x.astype(np.float64) / n
+    w, q = np.linalg.eigh(emp)
+    assert _subspace_dist(v, q[:, -r:]) < 2e-3
+    # Ritz values bracket the true eigenvalue range
+    assert np.all(np.asarray(theta) > w[-r] - 0.05)
+    assert np.all(np.asarray(theta) < w[-1] + 0.05)
+
+
+def test_local_eigsolve_cov_matches_eigh():
+    c, v1 = _gapped_cov(64, 8, 0.2, 13)
+    v0 = np.random.default_rng(4).standard_normal((64, 8)).astype(np.float32)
+    v, _ = model.jit_local_eigsolve_cov()(c, v0)
+    assert _subspace_dist(np.asarray(v).astype(np.float64), v1) < 1e-3
+
+
+# ------------------------------------------------------- procrustes_align
+
+
+@settings(**SET)
+@given(
+    d=st.integers(min_value=6, max_value=80),
+    r=st.integers(min_value=1, max_value=10),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_procrustes_align_optimal(d, r, seed):
+    """Aligned distance must match the SVD-Procrustes optimum."""
+    r = min(r, d // 2)
+    g = np.random.default_rng(seed)
+    vref = np.linalg.qr(g.standard_normal((d, r)))[0].astype(np.float32)
+    # v = vref rotated by a random orthogonal + small noise, re-orthonormalized
+    z = np.linalg.qr(g.standard_normal((r, r)))[0]
+    v = np.linalg.qr(vref @ z + 0.05 * g.standard_normal((d, r)))[0].astype(np.float32)
+    aligned = np.asarray(model.jit_procrustes_align()(v, vref)).astype(np.float64)
+    # optimum via SVD
+    u, _, vt = np.linalg.svd(v.astype(np.float64).T @ vref.astype(np.float64))
+    opt = v.astype(np.float64) @ (u @ vt)
+    assert np.linalg.norm(aligned - vref, "fro") <= np.linalg.norm(opt - vref, "fro") + 1e-3
+
+
+def test_procrustes_align_rotation_invariance():
+    """align(V Q, ref) spans == align(V, ref) spans, and both ≈ ref-aligned."""
+    g = np.random.default_rng(21)
+    d, r = 40, 6
+    vref = np.linalg.qr(g.standard_normal((d, r)))[0].astype(np.float32)
+    v = np.linalg.qr(vref + 0.1 * g.standard_normal((d, r)))[0].astype(np.float32)
+    q = np.linalg.qr(g.standard_normal((r, r)))[0].astype(np.float32)
+    a1 = np.asarray(model.jit_procrustes_align()(v, vref))
+    a2 = np.asarray(model.jit_procrustes_align()((v @ q).astype(np.float32), vref))
+    np.testing.assert_allclose(a1, a2, atol=5e-3)
+
+
+def test_procrustes_align_sign_fix_r1():
+    """r=1 must reduce exactly to the sign-fixing scheme of Garber et al."""
+    g = np.random.default_rng(31)
+    d = 50
+    vref = g.standard_normal((d, 1))
+    vref /= np.linalg.norm(vref)
+    v = -(vref + 0.05 * g.standard_normal((d, 1)))
+    v /= np.linalg.norm(v)
+    aligned = np.asarray(
+        model.jit_procrustes_align()(v.astype(np.float32), vref.astype(np.float32))
+    )
+    s = np.sign(float((v.T @ vref)[0, 0]))
+    np.testing.assert_allclose(aligned, s * v, atol=1e-4)
+
+
+def test_procrustes_idempotent():
+    g = np.random.default_rng(41)
+    d, r = 30, 4
+    vref = np.linalg.qr(g.standard_normal((d, r)))[0].astype(np.float32)
+    v = np.linalg.qr(vref + 0.1 * g.standard_normal((d, r)))[0].astype(np.float32)
+    once = np.asarray(model.jit_procrustes_align()(v, vref))
+    twice = np.asarray(model.jit_procrustes_align()(once, vref))
+    np.testing.assert_allclose(once, twice, atol=1e-3)

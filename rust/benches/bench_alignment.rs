@@ -1,0 +1,56 @@
+//! Estimator benchmarks: wall-clock of Algorithm 1/2, naive averaging,
+//! sign fixing, projector averaging and the robust median variant across
+//! (d, r, m) — the coordinator-side cost the paper's Remark 1 analyses.
+//! Run: `cargo bench --bench bench_alignment`
+
+use deigen::align;
+use deigen::benchutil::{bench, header, report};
+use deigen::linalg::gemm::matmul;
+use deigen::linalg::qr::orthonormalize;
+use deigen::linalg::Mat;
+use deigen::rng::Pcg64;
+
+fn noisy_locals(rng: &mut Pcg64, d: usize, r: usize, m: usize) -> Vec<Mat> {
+    let truth = rng.haar_stiefel(d, r);
+    (0..m)
+        .map(|_| {
+            let z = rng.haar_orthogonal(r);
+            orthonormalize(&matmul(&truth, &z).add(&rng.normal_mat(d, r).scale(0.05)))
+        })
+        .collect()
+}
+
+fn main() {
+    header("alignment estimators");
+    let mut rng = Pcg64::seed(2);
+
+    for &(d, r, m) in &[(100usize, 4usize, 25usize), (300, 8, 50), (300, 16, 50)] {
+        let locals = noisy_locals(&mut rng, d, r, m);
+        println!("--- d={d} r={r} m={m} ---");
+        report(&bench("procrustes_fix (Alg 1)", 1, 7, || {
+            std::hint::black_box(align::procrustes_fix(&locals));
+        }));
+        report(&bench("iterative_refinement x5 (Alg 2)", 1, 5, || {
+            std::hint::black_box(align::iterative_refinement(&locals, 5));
+        }));
+        report(&bench("naive_average", 1, 7, || {
+            std::hint::black_box(align::naive_average(&locals));
+        }));
+        report(&bench("projector_average (Fan [20])", 1, 5, || {
+            std::hint::black_box(align::projector_average(&locals));
+        }));
+        report(&bench("coordinate_median_fix (robust)", 1, 3, || {
+            std::hint::black_box(align::coordinate_median_fix(&locals));
+        }));
+    }
+
+    // r = 1: Procrustes must collapse to (cheap) sign fixing
+    let locals = noisy_locals(&mut rng, 300, 1, 50);
+    println!("--- d=300 r=1 m=50 ---");
+    report(&bench("sign_fix_average (Garber [24])", 1, 9, || {
+        std::hint::black_box(align::sign_fix_average(&locals));
+    }));
+    report(&bench("procrustes_fix r=1", 1, 9, || {
+        std::hint::black_box(align::procrustes_fix(&locals));
+    }));
+}

@@ -1,0 +1,84 @@
+//! Microbenchmarks for the native linalg substrate — the L3 hot paths
+//! profiled in EXPERIMENTS.md §Perf: GEMM/SYRK (covariance formation),
+//! QR, the symmetric eigensolver, Jacobi SVD and the two polar routes.
+//! Run: `cargo bench --bench bench_linalg` (add `-- --quick` to smoke).
+
+use deigen::benchutil::{bench, header, report};
+use deigen::linalg::eig::sym_eig;
+use deigen::linalg::gemm::{matmul, matmul_naive, syrk_scaled};
+use deigen::linalg::procrustes::{polar_newton_schulz, polar_svd};
+use deigen::linalg::qr::thin_qr;
+use deigen::linalg::svd::svd;
+use deigen::rng::Pcg64;
+
+fn main() {
+    header("linalg substrate");
+    let mut rng = Pcg64::seed(1);
+
+    for &n in &[64usize, 128, 256] {
+        let a = rng.normal_mat(n, n);
+        let b = rng.normal_mat(n, n);
+        let flops = 2.0 * (n as f64).powi(3);
+        let r = bench(&format!("matmul {n}x{n}x{n}"), 2, 9, || {
+            std::hint::black_box(matmul(&a, &b));
+        });
+        report(&r);
+        println!("      -> {:.2} GFLOP/s", flops / r.median_s / 1e9);
+    }
+
+    // blocked vs naive at one size (the §Perf before/after anchor)
+    let a = rng.normal_mat(192, 192);
+    let b = rng.normal_mat(192, 192);
+    let rb = bench("matmul blocked 192", 2, 9, || {
+        std::hint::black_box(matmul(&a, &b));
+    });
+    let rn = bench("matmul naive   192", 2, 9, || {
+        std::hint::black_box(matmul_naive(&a, &b));
+    });
+    report(&rb);
+    report(&rn);
+    println!("      -> blocked/naive speedup: {:.2}x", rn.median_s / rb.median_s);
+
+    for &(n, d) in &[(500usize, 100usize), (1000, 300)] {
+        let x = rng.normal_mat(n, d);
+        let r = bench(&format!("syrk (cov) n={n} d={d}"), 1, 7, || {
+            std::hint::black_box(syrk_scaled(&x, n as f64));
+        });
+        report(&r);
+    }
+
+    for &(m, k) in &[(300usize, 16usize), (300, 64)] {
+        let x = rng.normal_mat(m, k);
+        report(&bench(&format!("thin_qr {m}x{k}"), 2, 9, || {
+            std::hint::black_box(thin_qr(&x));
+        }));
+    }
+
+    for &d in &[100usize, 250] {
+        let mut s = rng.normal_mat(d, d);
+        s.symmetrize();
+        report(&bench(&format!("sym_eig d={d}"), 1, 5, || {
+            std::hint::black_box(sym_eig(&s));
+        }));
+    }
+
+    for &(m, k) in &[(64usize, 16usize), (128, 32)] {
+        let x = rng.normal_mat(m, k);
+        report(&bench(&format!("jacobi svd {m}x{k}"), 2, 7, || {
+            std::hint::black_box(svd(&x));
+        }));
+    }
+
+    for &r in &[8usize, 16, 32] {
+        let q = rng.haar_orthogonal(r);
+        let a = q.add(&rng.normal_mat(r, r).scale(0.05));
+        let rs = bench(&format!("polar svd    r={r}"), 3, 11, || {
+            std::hint::black_box(polar_svd(&a));
+        });
+        let rn = bench(&format!("polar newton r={r}"), 3, 11, || {
+            std::hint::black_box(polar_newton_schulz(&a, 18));
+        });
+        report(&rs);
+        report(&rn);
+    }
+}

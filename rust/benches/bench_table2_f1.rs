@@ -1,0 +1,25 @@
+//! Regenerates paper experiment **table2** as a bench target: runs the same
+//! sweep as `deigen exp table2` (quick-scaled under `-- --quick`) and reports
+//! wall-clock. The printed rows ARE the paper's series; see
+//! rust/src/experiments/ for the parameters and EXPERIMENTS.md for the
+//! paper-vs-measured comparison.
+
+use deigen::benchutil::header;
+use deigen::config::RunOptions;
+
+fn main() {
+    header("paper experiment table2");
+    // Bench targets time the harness; they run the quick-scaled sweep by
+    // default so `cargo bench` stays bounded. Set DEIGEN_BENCH_FULL=1 to
+    // regenerate the paper-size series here instead of via `deigen exp`.
+    let full = std::env::var("DEIGEN_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    let opts = RunOptions {
+        seed: 20200504,
+        out_dir: "results/bench".to_string(),
+        trials: if full { 0 } else { 1 },
+        quick: !full,
+    };
+    let t0 = std::time::Instant::now();
+    deigen::experiments::run("table2", &opts).expect("experiment failed");
+    println!("\n  bench_table2_f1: regenerated table2 in {:?}", t0.elapsed());
+}

@@ -1,0 +1,303 @@
+//! The paper's estimators and baselines.
+//!
+//! All estimators consume the local leading-eigenbasis panels
+//! `V̂₁⁽ⁱ⁾ ∈ O_{d,r}` (already computed on each node — by the PJRT engine
+//! or the native engine) and return an orthonormal (d, r) estimate.
+
+use crate::linalg::gemm::{a_bt, matmul};
+use crate::linalg::procrustes::{procrustes_align, procrustes_rotation};
+use crate::linalg::qr::orthonormalize;
+use crate::linalg::Mat;
+
+/// **Algorithm 1** (Procrustes fixing) with an explicit reference panel:
+/// align every local solution with `reference`, average, re-orthonormalize.
+///
+/// `tilde V^(i) = V^(i) Z_i`, `Z_i = argmin_{Z in O_r} ||V^(i) Z - ref||_F`;
+/// returns the Q factor of `mean_i tilde V^(i)`.
+pub fn procrustes_fix_with_reference(locals: &[Mat], reference: &Mat) -> Mat {
+    assert!(!locals.is_empty(), "need at least one local solution");
+    let (d, r) = locals[0].shape();
+    assert_eq!(reference.shape(), (d, r));
+    let mut acc = Mat::zeros(d, r);
+    for v in locals {
+        assert_eq!(v.shape(), (d, r), "local panels must share a shape");
+        acc.axpy(1.0, &procrustes_align(v, reference));
+    }
+    orthonormalize(&acc.scale(1.0 / locals.len() as f64))
+}
+
+/// **Algorithm 1** with the paper's default reference: the first local
+/// solution.
+pub fn procrustes_fix(locals: &[Mat]) -> Mat {
+    procrustes_fix_with_reference(locals, &locals[0])
+}
+
+/// **Algorithm 2** (iterative refinement): run Algorithm 1 `n_iter` times,
+/// feeding each round's output back as the next round's reference.
+pub fn iterative_refinement(locals: &[Mat], n_iter: usize) -> Mat {
+    assert!(n_iter >= 1);
+    let mut reference = locals[0].clone();
+    for _ in 0..n_iter {
+        reference = procrustes_fix_with_reference(locals, &reference);
+    }
+    reference
+}
+
+/// Naive averaging baseline (Eq. 3): `qr(mean_i V^(i))` with **no**
+/// alignment — the estimator the paper proves can be arbitrarily bad.
+pub fn naive_average(locals: &[Mat]) -> Mat {
+    assert!(!locals.is_empty());
+    let (d, r) = locals[0].shape();
+    let mut acc = Mat::zeros(d, r);
+    for v in locals {
+        acc.axpy(1.0, v);
+    }
+    orthonormalize(&acc.scale(1.0 / locals.len() as f64))
+}
+
+/// Sign-fixing average of Garber et al. [24] — rank-1 only (Eq. 4):
+/// `v̄ = mean_i sign(<v_i, v_1>) v_i`, normalized.
+pub fn sign_fix_average(locals: &[Mat]) -> Mat {
+    assert!(!locals.is_empty());
+    let (d, r) = locals[0].shape();
+    assert_eq!(r, 1, "sign fixing is the r = 1 special case");
+    let vref = &locals[0];
+    let mut acc = vec![0.0; d];
+    for v in locals {
+        let dot: f64 = (0..d).map(|i| v[(i, 0)] * vref[(i, 0)]).sum();
+        let s = if dot >= 0.0 { 1.0 } else { -1.0 };
+        for (i, a) in acc.iter_mut().enumerate() {
+            *a += s * v[(i, 0)];
+        }
+    }
+    let nrm: f64 = acc.iter().map(|x| x * x).sum::<f64>().sqrt();
+    Mat::from_fn(d, 1, |i, _| acc[i] / nrm.max(1e-300))
+}
+
+/// Spectral-projector averaging of Fan et al. [20], Algorithm 1: form
+/// `P̄ = mean_i V^(i) (V^(i))^T` and return its top-r eigenspace. Orthogonal
+/// ambiguity disappears because projectors are basis-independent; the cost
+/// is the d x d projector average plus an eigensolve (Remark 1 compares
+/// runtimes).
+pub fn projector_average(locals: &[Mat]) -> Mat {
+    assert!(!locals.is_empty());
+    let (d, r) = locals[0].shape();
+    let mut p = Mat::zeros(d, d);
+    for v in locals {
+        p.axpy(1.0 / locals.len() as f64, &a_bt(v, v));
+    }
+    crate::linalg::eig::top_eigvecs(&p, r).0
+}
+
+/// Centralized estimator: the top-r eigenspace of the average of the local
+/// matrices (for PCA this equals the pooled empirical covariance of all
+/// m*n samples — the paper's "Central" label).
+pub fn centralized(local_mats: &[Mat], r: usize) -> Mat {
+    assert!(!local_mats.is_empty());
+    let d = local_mats[0].rows();
+    let mut avg = Mat::zeros(d, d);
+    for x in local_mats {
+        avg.axpy(1.0 / local_mats.len() as f64, x);
+    }
+    crate::linalg::eig::top_eigvecs(&avg, r).0
+}
+
+/// QR of the plain mean of already-aligned panels (the leader-side
+/// aggregation step of a refinement round).
+pub fn mean_qr(panels: &[Mat]) -> Mat {
+    assert!(!panels.is_empty());
+    let (d, r) = panels[0].shape();
+    let mut acc = Mat::zeros(d, r);
+    for p in panels {
+        acc.axpy(1.0 / panels.len() as f64, p);
+    }
+    orthonormalize(&acc)
+}
+
+/// QR of the entry-wise median of already-aligned panels (robust
+/// aggregation for the Byzantine extension).
+pub fn median_qr(panels: &[Mat]) -> Mat {
+    assert!(!panels.is_empty());
+    let (d, r) = panels[0].shape();
+    let mut med = Mat::zeros(d, r);
+    let mut buf = vec![0.0f64; panels.len()];
+    for i in 0..d {
+        for j in 0..r {
+            for (k, p) in panels.iter().enumerate() {
+                buf[k] = p[(i, j)];
+            }
+            buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mid = buf.len() / 2;
+            med[(i, j)] = if buf.len() % 2 == 1 {
+                buf[mid]
+            } else {
+                0.5 * (buf[mid - 1] + buf[mid])
+            };
+        }
+    }
+    orthonormalize(&med)
+}
+
+/// The *unnormalized* aligned average `mean_i V^(i) Z_i` (before QR) —
+/// exposed for the Theorem-2 bound checks in tests.
+pub fn aligned_average_raw(locals: &[Mat], reference: &Mat) -> Mat {
+    let (d, r) = locals[0].shape();
+    let mut acc = Mat::zeros(d, r);
+    for v in locals {
+        acc.axpy(1.0 / locals.len() as f64, &procrustes_align(v, reference));
+    }
+    acc
+}
+
+/// Procrustes rotations for a set of locals against a reference — the
+/// message the coordinator broadcasts in the parallel variant (Remark 2).
+pub fn rotations(locals: &[Mat], reference: &Mat) -> Vec<Mat> {
+    locals.iter().map(|v| procrustes_rotation(v, reference)).collect()
+}
+
+/// Convenience: apply rotations to locals (worker-side step of Remark 2).
+pub fn apply_rotations(locals: &[Mat], zs: &[Mat]) -> Vec<Mat> {
+    locals.iter().zip(zs).map(|(v, z)| matmul(v, z)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::subspace::{dist2, is_orthonormal};
+    use crate::rng::Pcg64;
+
+    /// Build m noisy rotated copies of a ground-truth panel.
+    fn noisy_locals(
+        rng: &mut Pcg64,
+        d: usize,
+        r: usize,
+        m: usize,
+        noise: f64,
+    ) -> (Mat, Vec<Mat>) {
+        let truth = rng.haar_stiefel(d, r);
+        let locals = (0..m)
+            .map(|_| {
+                let z = rng.haar_orthogonal(r);
+                let noisy = matmul(&truth, &z).add(&rng.normal_mat(d, r).scale(noise));
+                orthonormalize(&noisy)
+            })
+            .collect();
+        (truth, locals)
+    }
+
+    #[test]
+    fn outputs_orthonormal() {
+        let mut rng = Pcg64::seed(1);
+        let (_, locals) = noisy_locals(&mut rng, 30, 4, 8, 0.1);
+        for est in [
+            procrustes_fix(&locals),
+            iterative_refinement(&locals, 3),
+            naive_average(&locals),
+            projector_average(&locals),
+        ] {
+            assert!(is_orthonormal(&est, 1e-8));
+        }
+    }
+
+    #[test]
+    fn procrustes_beats_naive_under_rotation_ambiguity() {
+        let mut rng = Pcg64::seed(2);
+        let (truth, locals) = noisy_locals(&mut rng, 40, 4, 16, 0.05);
+        let aligned = procrustes_fix(&locals);
+        let naive = naive_average(&locals);
+        let da = dist2(&aligned, &truth);
+        let dn = dist2(&naive, &truth);
+        assert!(da < 0.12, "aligned dist {da}");
+        assert!(dn > 3.0 * da, "naive {dn} vs aligned {da}");
+    }
+
+    #[test]
+    fn averaging_reduces_error_vs_single_node() {
+        let mut rng = Pcg64::seed(3);
+        let (truth, locals) = noisy_locals(&mut rng, 50, 3, 32, 0.08);
+        let single = dist2(&locals[0], &truth);
+        let avg = dist2(&procrustes_fix(&locals), &truth);
+        assert!(avg < single, "avg {avg} vs single {single}");
+    }
+
+    #[test]
+    fn r1_procrustes_equals_sign_fixing() {
+        let mut rng = Pcg64::seed(4);
+        let (_, locals) = noisy_locals(&mut rng, 25, 1, 10, 0.1);
+        let a = procrustes_fix(&locals);
+        let b = sign_fix_average(&locals);
+        // same up to global sign
+        let dot: f64 = (0..25).map(|i| a[(i, 0)] * b[(i, 0)]).sum();
+        assert!((dot.abs() - 1.0).abs() < 1e-8, "dot={dot}");
+    }
+
+    #[test]
+    fn global_rotation_invariance() {
+        // rotating every local by the same orthogonal matrix must not
+        // change the estimated subspace
+        let mut rng = Pcg64::seed(5);
+        let (_, locals) = noisy_locals(&mut rng, 20, 3, 6, 0.1);
+        let q = rng.haar_orthogonal(3);
+        let rotated: Vec<Mat> = locals.iter().map(|v| matmul(v, &q)).collect();
+        let a = procrustes_fix(&locals);
+        let b = procrustes_fix(&rotated);
+        assert!(dist2(&a, &b) < 1e-6);
+    }
+
+    #[test]
+    fn reference_choice_changes_little_at_low_noise() {
+        let mut rng = Pcg64::seed(6);
+        let (_, locals) = noisy_locals(&mut rng, 30, 4, 12, 0.02);
+        let a = procrustes_fix_with_reference(&locals, &locals[0]);
+        let b = procrustes_fix_with_reference(&locals, &locals[5]);
+        assert!(dist2(&a, &b) < 0.01);
+    }
+
+    #[test]
+    fn refinement_at_least_as_good_as_single_round() {
+        let mut rng = Pcg64::seed(7);
+        let (truth, locals) = noisy_locals(&mut rng, 40, 4, 10, 0.25);
+        let one = dist2(&procrustes_fix(&locals), &truth);
+        let refined = dist2(&iterative_refinement(&locals, 5), &truth);
+        assert!(refined <= one + 0.02, "refined {refined} vs one {one}");
+    }
+
+    #[test]
+    fn projector_average_close_to_procrustes() {
+        let mut rng = Pcg64::seed(8);
+        let (truth, locals) = noisy_locals(&mut rng, 30, 3, 20, 0.05);
+        let p = dist2(&projector_average(&locals), &truth);
+        let a = dist2(&procrustes_fix(&locals), &truth);
+        assert!(p < 0.12 && a < 0.12, "p={p} a={a}");
+    }
+
+    #[test]
+    fn centralized_recovers_truth() {
+        let mut rng = Pcg64::seed(9);
+        let q = rng.haar_orthogonal(20);
+        let evs: Vec<f64> = (0..20).map(|i| if i < 3 { 1.0 } else { 0.2 }).collect();
+        let sigma = matmul(
+            &Mat::from_fn(20, 20, |i, j| q[(i, j)] * evs[j]),
+            &q.transpose(),
+        );
+        // locals = sigma + small symmetric noise
+        let mats: Vec<Mat> = (0..10)
+            .map(|_| {
+                let mut e = rng.normal_mat(20, 20).scale(0.01);
+                e.symmetrize();
+                sigma.add(&e)
+            })
+            .collect();
+        let est = centralized(&mats, 3);
+        let truth = q.col_block(0, 3);
+        assert!(dist2(&est, &truth) < 0.05);
+    }
+
+    #[test]
+    fn single_local_is_fixed_point() {
+        let mut rng = Pcg64::seed(10);
+        let v = rng.haar_stiefel(15, 3);
+        let est = procrustes_fix(&[v.clone()]);
+        assert!(dist2(&est, &v) < 1e-6);
+    }
+}

@@ -1,0 +1,17 @@
+//! Estimator zoo for distributed eigenspace estimation (DESIGN.md S4):
+//! the paper's Algorithm 1 (Procrustes fixing) and Algorithm 2 (iterative
+//! refinement), the rank-1 sign-fixing scheme of Garber et al. [24], the
+//! naive average of Eq. (3), the spectral-projector averaging of Fan et
+//! al. [20], the centralized estimator, and the Byzantine-robust
+//! extension sketched in §4 of the paper.
+
+mod estimators;
+mod robust;
+
+pub use estimators::{
+    aligned_average_raw, apply_rotations, centralized, iterative_refinement,
+    mean_qr, median_qr, naive_average, procrustes_fix,
+    procrustes_fix_with_reference, projector_average, rotations,
+    sign_fix_average,
+};
+pub use robust::{coordinate_median_fix, robust_reference_index};

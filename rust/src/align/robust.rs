@@ -1,0 +1,135 @@
+//! Byzantine-robust extension (paper §4, "what if some of the machines are
+//! compromised?"): a robust reference pick plus a coordinate-wise median
+//! aggregation of the aligned panels. This implements the future-work
+//! sketch at the end of the paper and is exercised by
+//! `examples/byzantine_robust.rs` and the failure-injection tests.
+
+use crate::linalg::procrustes::{procrustes_align, procrustes_distance};
+use crate::linalg::qr::orthonormalize;
+use crate::linalg::Mat;
+
+/// Pick a trustworthy reference: the local solution whose **median**
+/// Procrustes distance to the other solutions is smallest. An honest
+/// majority keeps the median small for honest nodes and large for
+/// adversarial ones, so a compromised panel is never chosen as reference.
+pub fn robust_reference_index(locals: &[Mat]) -> usize {
+    assert!(!locals.is_empty());
+    let m = locals.len();
+    let mut best = (f64::INFINITY, 0usize);
+    for i in 0..m {
+        let mut dists: Vec<f64> = (0..m)
+            .filter(|&j| j != i)
+            .map(|j| procrustes_distance(&locals[j], &locals[i]))
+            .collect();
+        dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = if dists.is_empty() {
+            0.0
+        } else {
+            dists[dists.len() / 2]
+        };
+        if med < best.0 {
+            best = (med, i);
+        }
+    }
+    best.1
+}
+
+/// Robust Procrustes fixing: align every panel with the robustly chosen
+/// reference, then aggregate with an **entry-wise median** instead of the
+/// mean (robust mean estimation in its simplest form), then orthonormalize.
+pub fn coordinate_median_fix(locals: &[Mat]) -> Mat {
+    assert!(!locals.is_empty());
+    let (d, r) = locals[0].shape();
+    let ref_idx = robust_reference_index(locals);
+    let aligned: Vec<Mat> = locals
+        .iter()
+        .map(|v| procrustes_align(v, &locals[ref_idx]))
+        .collect();
+    let mut med = Mat::zeros(d, r);
+    let mut buf = vec![0.0f64; locals.len()];
+    for i in 0..d {
+        for j in 0..r {
+            for (k, a) in aligned.iter().enumerate() {
+                buf[k] = a[(i, j)];
+            }
+            buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mid = buf.len() / 2;
+            med[(i, j)] = if buf.len() % 2 == 1 {
+                buf[mid]
+            } else {
+                0.5 * (buf[mid - 1] + buf[mid])
+            };
+        }
+    }
+    orthonormalize(&med)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::align::procrustes_fix;
+    use crate::linalg::gemm::matmul;
+    use crate::linalg::subspace::dist2;
+    use crate::rng::Pcg64;
+
+    fn honest_and_byzantine(
+        rng: &mut Pcg64,
+        d: usize,
+        r: usize,
+        honest: usize,
+        byz: usize,
+        noise: f64,
+    ) -> (Mat, Vec<Mat>) {
+        let truth = rng.haar_stiefel(d, r);
+        let mut locals: Vec<Mat> = (0..honest)
+            .map(|_| {
+                let z = rng.haar_orthogonal(r);
+                let noisy = matmul(&truth, &z).add(&rng.normal_mat(d, r).scale(noise));
+                orthonormalize(&noisy)
+            })
+            .collect();
+        for _ in 0..byz {
+            locals.push(rng.haar_stiefel(d, r)); // arbitrary orthonormal junk
+        }
+        (truth, locals)
+    }
+
+    #[test]
+    fn robust_reference_avoids_byzantine_nodes() {
+        let mut rng = Pcg64::seed(1);
+        let (_, locals) = honest_and_byzantine(&mut rng, 30, 3, 9, 3, 0.05);
+        // byzantine panels are indices 9, 10, 11
+        let idx = robust_reference_index(&locals);
+        assert!(idx < 9, "picked byzantine reference {idx}");
+    }
+
+    #[test]
+    fn median_fix_survives_byzantine_minority() {
+        let mut rng = Pcg64::seed(2);
+        let (truth, locals) = honest_and_byzantine(&mut rng, 40, 3, 17, 4, 0.05);
+        let robust = coordinate_median_fix(&locals);
+        let dr = dist2(&robust, &truth);
+        assert!(dr < 0.25, "robust dist {dr}");
+    }
+
+    #[test]
+    fn plain_alg1_degrades_when_reference_is_byzantine() {
+        // adversary in slot 0 (the default reference!) poisons Algorithm 1;
+        // the robust variant shrugs it off.
+        let mut rng = Pcg64::seed(3);
+        let (truth, mut locals) = honest_and_byzantine(&mut rng, 40, 3, 12, 0, 0.05);
+        locals[0] = rng.haar_stiefel(40, 3); // compromise the reference
+        let plain = dist2(&procrustes_fix(&locals), &truth);
+        let robust = dist2(&coordinate_median_fix(&locals), &truth);
+        assert!(robust < plain, "robust {robust} vs plain {plain}");
+    }
+
+    #[test]
+    fn no_byzantine_matches_mean_closely() {
+        let mut rng = Pcg64::seed(4);
+        let (truth, locals) = honest_and_byzantine(&mut rng, 30, 4, 15, 0, 0.05);
+        let a = dist2(&procrustes_fix(&locals), &truth);
+        let b = dist2(&coordinate_median_fix(&locals), &truth);
+        assert!((a - b).abs() < 0.1, "mean {a} median {b}");
+    }
+}

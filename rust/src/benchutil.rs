@@ -1,0 +1,115 @@
+//! Bench harness substrate (DESIGN.md S12). Criterion is not available
+//! offline, so `cargo bench` targets are `harness = false` binaries built
+//! on this module: warmup + repeated timing, median / MAD / min reporting,
+//! and a `--quick` mode (via the `DEIGEN_BENCH_QUICK` env var or argv) that
+//! shrinks iteration counts for smoke runs.
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Median wall-clock per iteration, seconds.
+    pub median_s: f64,
+    /// Median absolute deviation, seconds.
+    pub mad_s: f64,
+    /// Fastest iteration, seconds.
+    pub min_s: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    /// Iterations per second at the median.
+    pub fn throughput(&self) -> f64 {
+        1.0 / self.median_s.max(1e-12)
+    }
+}
+
+/// Is quick mode on? (`cargo bench -- --quick` or DEIGEN_BENCH_QUICK=1)
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("DEIGEN_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmup calls.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    let (warmup, iters) = if quick_mode() {
+        (warmup.min(1), iters.clamp(1, 3))
+    } else {
+        (warmup, iters.max(1))
+    };
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchResult {
+        name: name.to_string(),
+        median_s: median,
+        mad_s: devs[devs.len() / 2],
+        min_s: times[0],
+        iters,
+    }
+}
+
+/// Print one result line (aligned columns).
+pub fn report(r: &BenchResult) {
+    println!(
+        "  {:<44} {:>12} ± {:>10}  (min {:>10}, n={})",
+        r.name,
+        fmt_time(r.median_s),
+        fmt_time(r.mad_s),
+        fmt_time(r.min_s),
+        r.iters
+    );
+}
+
+/// Human duration formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Standard bench-main header.
+pub fn header(title: &str) {
+    println!("\n=== {title} ({}) ===", if quick_mode() { "quick" } else { "full" });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.median_s >= 0.0);
+        assert!(r.min_s <= r.median_s + 1e-9);
+        assert_eq!(r.iters, if quick_mode() { 3.min(5) } else { 5 });
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(2.5).ends_with('s'));
+        assert!(fmt_time(2.5e-3).ends_with("ms"));
+        assert!(fmt_time(2.5e-6).ends_with("us"));
+        assert!(fmt_time(2.5e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,279 @@
+//! Classification substrate for Table 2: one-vs-rest L2-regularized
+//! logistic regression trained by gradient descent with backtracking line
+//! search, feature standardization, train/test splitting, and macro-F1.
+
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+
+/// Fit statistics returned by [`macro_f1_experiment`].
+#[derive(Clone, Copy, Debug)]
+pub struct F1Result {
+    pub macro_f1: f64,
+    pub accuracy: f64,
+}
+
+/// Standardize columns to zero mean / unit variance (returns a new matrix;
+/// constant columns are left centered only).
+pub fn standardize(x: &Mat) -> Mat {
+    let (n, d) = x.shape();
+    let mut out = x.clone();
+    for j in 0..d {
+        let mean: f64 = (0..n).map(|i| x[(i, j)]).sum::<f64>() / n as f64;
+        let var: f64 =
+            (0..n).map(|i| (x[(i, j)] - mean).powi(2)).sum::<f64>() / n as f64;
+        let sd = var.sqrt();
+        for i in 0..n {
+            out[(i, j)] = (x[(i, j)] - mean) / if sd > 1e-12 { sd } else { 1.0 };
+        }
+    }
+    out
+}
+
+/// Random train/test split: returns (train indices, test indices).
+pub fn train_test_split(n: usize, test_frac: f64, rng: &mut Pcg64) -> (Vec<usize>, Vec<usize>) {
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    let test = idx.split_off(n - n_test);
+    (idx, test)
+}
+
+fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Binary logistic regression with L2 penalty `1/(2C) ||w||^2`, gradient
+/// descent with backtracking. Returns (weights, bias).
+pub fn logistic_fit(
+    x: &Mat,
+    y: &[bool],
+    c: f64,
+    max_iter: usize,
+) -> (Vec<f64>, f64) {
+    let (n, d) = x.shape();
+    assert_eq!(y.len(), n);
+    let mut w = vec![0.0f64; d];
+    let mut b = 0.0f64;
+    let lambda = 1.0 / c;
+    let nf = n as f64;
+
+    let loss = |w: &[f64], b: f64| -> f64 {
+        let mut l = 0.0;
+        for i in 0..n {
+            let z: f64 = x.row(i).iter().zip(w).map(|(a, b)| a * b).sum::<f64>() + b;
+            let t = if y[i] { z } else { -z };
+            // log(1 + e^{-t}) computed stably
+            l += if t > 0.0 { (-t).exp().ln_1p() } else { (t).exp().ln_1p() - t };
+        }
+        l / nf + 0.5 * lambda * w.iter().map(|v| v * v).sum::<f64>() / nf
+    };
+
+    let mut step = 1.0;
+    let mut cur = loss(&w, b);
+    for _ in 0..max_iter {
+        // gradient
+        let mut gw = vec![0.0f64; d];
+        let mut gb = 0.0f64;
+        for i in 0..n {
+            let z: f64 = x.row(i).iter().zip(&w).map(|(a, b)| a * b).sum::<f64>() + b;
+            let p = sigmoid(z);
+            let t = p - if y[i] { 1.0 } else { 0.0 };
+            gb += t;
+            for (g, &xv) in gw.iter_mut().zip(x.row(i)) {
+                *g += t * xv;
+            }
+        }
+        for (g, &wv) in gw.iter_mut().zip(&w) {
+            *g = *g / nf + lambda * wv / nf;
+        }
+        gb /= nf;
+        let gnorm2: f64 = gw.iter().map(|g| g * g).sum::<f64>() + gb * gb;
+        if gnorm2 < 1e-14 {
+            break;
+        }
+        // backtracking
+        step *= 2.0;
+        loop {
+            let wt: Vec<f64> = w.iter().zip(&gw).map(|(a, g)| a - step * g).collect();
+            let bt = b - step * gb;
+            let lt = loss(&wt, bt);
+            if lt <= cur - 0.25 * step * gnorm2 || step < 1e-12 {
+                w = wt;
+                b = bt;
+                cur = lt;
+                break;
+            }
+            step *= 0.5;
+        }
+    }
+    (w, b)
+}
+
+/// One-vs-rest multi-class logistic regression.
+pub struct OvrLogistic {
+    /// Per-class (weights, bias).
+    pub models: Vec<(Vec<f64>, f64)>,
+}
+
+impl OvrLogistic {
+    /// Fit `k` one-vs-rest binary models.
+    pub fn fit(x: &Mat, labels: &[usize], k: usize, c: f64) -> Self {
+        let models = (0..k)
+            .map(|cls| {
+                let y: Vec<bool> = labels.iter().map(|&l| l == cls).collect();
+                logistic_fit(x, &y, c, 200)
+            })
+            .collect();
+        OvrLogistic { models }
+    }
+
+    /// Predict class = argmax of per-class scores.
+    pub fn predict(&self, x: &Mat) -> Vec<usize> {
+        (0..x.rows())
+            .map(|i| {
+                let row = x.row(i);
+                let mut best = (f64::NEG_INFINITY, 0usize);
+                for (cls, (w, b)) in self.models.iter().enumerate() {
+                    let z: f64 = row.iter().zip(w).map(|(a, b)| a * b).sum::<f64>() + b;
+                    if z > best.0 {
+                        best = (z, cls);
+                    }
+                }
+                best.1
+            })
+            .collect()
+    }
+}
+
+/// Macro-averaged F1 over `k` classes.
+pub fn macro_f1(truth: &[usize], pred: &[usize], k: usize) -> f64 {
+    assert_eq!(truth.len(), pred.len());
+    let mut f1_sum = 0.0;
+    for cls in 0..k {
+        let tp = truth
+            .iter()
+            .zip(pred)
+            .filter(|&(&t, &p)| t == cls && p == cls)
+            .count() as f64;
+        let fp = truth
+            .iter()
+            .zip(pred)
+            .filter(|&(&t, &p)| t != cls && p == cls)
+            .count() as f64;
+        let fnn = truth
+            .iter()
+            .zip(pred)
+            .filter(|&(&t, &p)| t == cls && p != cls)
+            .count() as f64;
+        let prec = if tp + fp > 0.0 { tp / (tp + fp) } else { 0.0 };
+        let rec = if tp + fnn > 0.0 { tp / (tp + fnn) } else { 0.0 };
+        f1_sum += if prec + rec > 0.0 { 2.0 * prec * rec / (prec + rec) } else { 0.0 };
+    }
+    f1_sum / k as f64
+}
+
+/// End-to-end Table-2 evaluation: standardize features, 75/25 split, fit
+/// OvR logistic with inverse regularization `c`, report macro-F1 and
+/// accuracy on the test set.
+pub fn macro_f1_experiment(
+    features: &Mat,
+    labels: &[usize],
+    k: usize,
+    c: f64,
+    rng: &mut Pcg64,
+) -> F1Result {
+    let x = standardize(features);
+    let (train, test) = train_test_split(x.rows(), 0.25, rng);
+    let xtr = Mat::from_fn(train.len(), x.cols(), |i, j| x[(train[i], j)]);
+    let ytr: Vec<usize> = train.iter().map(|&i| labels[i]).collect();
+    let xte = Mat::from_fn(test.len(), x.cols(), |i, j| x[(test[i], j)]);
+    let yte: Vec<usize> = test.iter().map(|&i| labels[i]).collect();
+    let model = OvrLogistic::fit(&xtr, &ytr, k, c);
+    let pred = model.predict(&xte);
+    let acc = yte.iter().zip(&pred).filter(|&(a, b)| a == b).count() as f64
+        / yte.len() as f64;
+    F1Result { macro_f1: macro_f1(&yte, &pred, k), accuracy: acc }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut rng = Pcg64::seed(1);
+        let x = Mat::from_fn(200, 3, |_, j| rng.next_normal() * (j as f64 + 1.0) + 5.0);
+        let s = standardize(&x);
+        for j in 0..3 {
+            let mean: f64 = (0..200).map(|i| s[(i, j)]).sum::<f64>() / 200.0;
+            let var: f64 = (0..200).map(|i| s[(i, j)].powi(2)).sum::<f64>() / 200.0;
+            assert!(mean.abs() < 1e-10);
+            assert!((var - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn split_sizes_and_disjoint() {
+        let mut rng = Pcg64::seed(2);
+        let (tr, te) = train_test_split(100, 0.25, &mut rng);
+        assert_eq!(tr.len(), 75);
+        assert_eq!(te.len(), 25);
+        let mut all: Vec<usize> = tr.iter().chain(&te).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn logistic_separable_data() {
+        let mut rng = Pcg64::seed(3);
+        // class = sign of first coordinate, margin 1
+        let x = Mat::from_fn(120, 2, |i, j| {
+            let s = if i % 2 == 0 { 1.0 } else { -1.0 };
+            if j == 0 { s * (1.0 + rng.next_f64()) } else { rng.next_normal() }
+        });
+        let y: Vec<bool> = (0..120).map(|i| i % 2 == 0).collect();
+        let (w, b) = logistic_fit(&x, &y, 10.0, 300);
+        let correct = (0..120)
+            .filter(|&i| {
+                let z: f64 = x.row(i).iter().zip(&w).map(|(a, b)| a * b).sum::<f64>() + b;
+                (z > 0.0) == y[i]
+            })
+            .count();
+        assert!(correct >= 118, "correct={correct}");
+    }
+
+    #[test]
+    fn ovr_three_gaussians() {
+        let mut rng = Pcg64::seed(4);
+        let centers = [(-4.0, 0.0), (4.0, 0.0), (0.0, 5.0)];
+        let x = Mat::from_fn(300, 2, |i, j| {
+            let (cx, cy) = centers[i % 3];
+            (if j == 0 { cx } else { cy }) + rng.next_normal() * 0.6
+        });
+        let labels: Vec<usize> = (0..300).map(|i| i % 3).collect();
+        let res = macro_f1_experiment(&x, &labels, 3, 1.0, &mut rng);
+        assert!(res.macro_f1 > 0.95, "f1={}", res.macro_f1);
+        assert!(res.accuracy > 0.95);
+    }
+
+    #[test]
+    fn macro_f1_perfect_and_worst() {
+        let t = vec![0, 1, 2, 0, 1, 2];
+        assert!((macro_f1(&t, &t, 3) - 1.0).abs() < 1e-12);
+        let wrong = vec![1, 2, 0, 1, 2, 0];
+        assert_eq!(macro_f1(&t, &wrong, 3), 0.0);
+    }
+
+    #[test]
+    fn macro_f1_handles_missing_class_predictions() {
+        let t = vec![0, 0, 1, 1];
+        let p = vec![0, 0, 0, 0]; // never predicts class 1
+        let f1 = macro_f1(&t, &p, 2);
+        assert!(f1 > 0.0 && f1 < 1.0);
+    }
+}

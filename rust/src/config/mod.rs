@@ -1,0 +1,166 @@
+//! Configuration substrate: a hand-rolled CLI argument parser (no `clap`
+//! offline) and typed experiment options shared by the `deigen` binary,
+//! examples and benches.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand path plus `--key value` / `--flag`
+/// options.
+#[derive(Debug, Default, Clone)]
+pub struct Cli {
+    /// Positional arguments before the first `--` option (e.g. `exp fig2`).
+    pub positional: Vec<String>,
+    /// `--key value` options; bare `--flag` maps to "true".
+    pub options: BTreeMap<String, String>,
+}
+
+impl Cli {
+    /// Parse an argv-style iterator (excluding the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Cli, String> {
+        let mut cli = Cli::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    cli.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let val = iter.next().unwrap();
+                    cli.options.insert(key.to_string(), val);
+                } else {
+                    cli.options.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                cli.positional.push(arg);
+            }
+        }
+        Ok(cli)
+    }
+
+    /// Parse from the process arguments.
+    pub fn from_env() -> Result<Cli, String> {
+        Cli::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    pub fn get_flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+}
+
+/// Options shared by every experiment run.
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    /// Master seed; every experiment derives per-trial streams from it.
+    pub seed: u64,
+    /// Output directory for CSV results.
+    pub out_dir: String,
+    /// Number of independent trials to median over.
+    pub trials: usize,
+    /// Quick mode: shrink sweeps for smoke testing (~seconds instead of
+    /// minutes).
+    pub quick: bool,
+}
+
+impl RunOptions {
+    pub fn from_cli(cli: &Cli) -> Result<Self, String> {
+        Ok(RunOptions {
+            seed: cli.get_u64("seed", 20200504)?, // paper's arXiv date
+            out_dir: cli.get_str("out", "results"),
+            trials: cli.get_usize("trials", 0)?, // 0 = experiment default
+            quick: cli.get_flag("quick"),
+        })
+    }
+
+    /// Trials to run, with a per-experiment default.
+    pub fn trials_or(&self, default: usize) -> usize {
+        if self.trials == 0 {
+            default
+        } else {
+            self.trials
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Cli {
+        Cli::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let cli = parse(&["exp", "fig2", "--seed", "7", "--quick", "--out=res"]);
+        assert_eq!(cli.positional, vec!["exp", "fig2"]);
+        assert_eq!(cli.get("seed"), Some("7"));
+        assert!(cli.get_flag("quick"));
+        assert_eq!(cli.get_str("out", "x"), "res");
+    }
+
+    #[test]
+    fn typed_getters_defaults() {
+        let cli = parse(&["--n", "25"]);
+        assert_eq!(cli.get_usize("n", 1).unwrap(), 25);
+        assert_eq!(cli.get_usize("m", 9).unwrap(), 9);
+        assert_eq!(cli.get_f64("delta", 0.2).unwrap(), 0.2);
+        assert!(cli.get_usize("n_bad", 1).is_ok());
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let cli = parse(&["--n", "abc"]);
+        assert!(cli.get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let cli = parse(&["--quick", "--seed", "3"]);
+        assert!(cli.get_flag("quick"));
+        assert_eq!(cli.get_u64("seed", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn run_options_defaults() {
+        let cli = parse(&[]);
+        let opts = RunOptions::from_cli(&cli).unwrap();
+        assert_eq!(opts.seed, 20200504);
+        assert_eq!(opts.trials_or(10), 10);
+        assert!(!opts.quick);
+    }
+}

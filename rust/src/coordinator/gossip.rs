@@ -1,0 +1,206 @@
+//! Decentralized gossip alignment — the third distributed-computing flavor
+//! from the paper's related work (§1.2): no coordinator; machines exchange
+//! panels with neighbors on a communication graph and average locally
+//! after Procrustes-aligning the incoming panel with their own. This gives
+//! the ablation the paper implies: gossip needs MANY rounds to mix, while
+//! the federated Algorithm 1 needs ONE.
+//!
+//! Protocol per round (synchronous): each node i picks its neighbors,
+//! receives their current panels, aligns each incoming panel with its own,
+//! averages (own + aligned incoming), re-orthonormalizes.
+
+use crate::linalg::procrustes::procrustes_align;
+use crate::linalg::qr::orthonormalize;
+use crate::linalg::subspace::dist2;
+use crate::linalg::Mat;
+
+use super::netsim::CommStats;
+use super::protocol::HEADER_BYTES;
+
+/// Communication topology for gossip.
+#[derive(Clone, Debug)]
+pub enum Topology {
+    /// Ring: node i talks to i±1.
+    Ring,
+    /// Complete graph: everyone talks to everyone (upper bound on mixing).
+    Complete,
+    /// Static k-regular ring lattice: i talks to i±1..i±k/2.
+    KRegular(usize),
+}
+
+impl Topology {
+    /// Neighbor list of node `i` among `m` nodes.
+    pub fn neighbors(&self, i: usize, m: usize) -> Vec<usize> {
+        match self {
+            Topology::Ring => {
+                if m <= 1 {
+                    vec![]
+                } else if m == 2 {
+                    vec![1 - i]
+                } else {
+                    vec![(i + m - 1) % m, (i + 1) % m]
+                }
+            }
+            Topology::Complete => (0..m).filter(|&j| j != i).collect(),
+            Topology::KRegular(k) => {
+                let half = (k / 2).max(1);
+                let mut out = Vec::new();
+                for delta in 1..=half {
+                    if m > 2 * delta {
+                        out.push((i + m - delta) % m);
+                        out.push((i + delta) % m);
+                    }
+                }
+                out.sort_unstable();
+                out.dedup();
+                out.retain(|&j| j != i);
+                out
+            }
+        }
+    }
+}
+
+/// Result of a gossip run.
+pub struct GossipResult {
+    /// Final per-node panels.
+    pub panels: Vec<Mat>,
+    /// Max pairwise subspace distance after each round (mixing trace).
+    pub spread_per_round: Vec<f64>,
+    /// Total bytes exchanged.
+    pub bytes: usize,
+    /// Rounds executed.
+    pub rounds: usize,
+}
+
+/// Max pairwise subspace distance among panels (the "spread").
+pub fn spread(panels: &[Mat]) -> f64 {
+    let mut worst = 0.0f64;
+    for i in 0..panels.len() {
+        for j in (i + 1)..panels.len() {
+            worst = worst.max(dist2(&panels[i], &panels[j]));
+        }
+    }
+    worst
+}
+
+/// Run synchronous gossip alignment for `rounds` rounds (or until the
+/// spread drops below `tol`, if `tol > 0`). Panels are consumed.
+pub fn gossip_align(
+    mut panels: Vec<Mat>,
+    topology: &Topology,
+    rounds: usize,
+    tol: f64,
+    stats: Option<&CommStats>,
+) -> GossipResult {
+    let m = panels.len();
+    assert!(m >= 1);
+    let (d, r) = panels[0].shape();
+    let panel_bytes = HEADER_BYTES + 4 * d * r;
+    let mut bytes = 0usize;
+    let mut trace = Vec::with_capacity(rounds);
+    let mut executed = 0;
+
+    for _ in 0..rounds {
+        let snapshot = panels.clone();
+        for i in 0..m {
+            let nbrs = topology.neighbors(i, m);
+            if nbrs.is_empty() {
+                continue;
+            }
+            let mut acc = panels[i].clone();
+            for &j in &nbrs {
+                // receiving j's panel costs one message
+                bytes += panel_bytes;
+                if let Some(s) = stats {
+                    s.record_up(panel_bytes);
+                }
+                acc.axpy(1.0, &procrustes_align(&snapshot[j], &snapshot[i]));
+            }
+            panels[i] = orthonormalize(&acc.scale(1.0 / (nbrs.len() + 1) as f64));
+        }
+        if let Some(s) = stats {
+            s.bump_round();
+        }
+        executed += 1;
+        let sp = spread(&panels);
+        trace.push(sp);
+        if tol > 0.0 && sp < tol {
+            break;
+        }
+    }
+
+    GossipResult { panels, spread_per_round: trace, bytes, rounds: executed }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+    use crate::rng::Pcg64;
+
+    fn noisy_panels(rng: &mut Pcg64, d: usize, r: usize, m: usize) -> (Mat, Vec<Mat>) {
+        let truth = rng.haar_stiefel(d, r);
+        let panels = (0..m)
+            .map(|_| {
+                let z = rng.haar_orthogonal(r);
+                orthonormalize(&matmul(&truth, &z).add(&rng.normal_mat(d, r).scale(0.05)))
+            })
+            .collect();
+        (truth, panels)
+    }
+
+    #[test]
+    fn topology_neighbors_sane() {
+        assert_eq!(Topology::Ring.neighbors(0, 5), vec![4, 1]);
+        assert_eq!(Topology::Ring.neighbors(0, 2), vec![1]);
+        assert_eq!(Topology::Complete.neighbors(2, 4), vec![0, 1, 3]);
+        let n = Topology::KRegular(4).neighbors(0, 10);
+        assert_eq!(n, vec![1, 2, 8, 9]);
+    }
+
+    #[test]
+    fn gossip_reduces_spread_monotonically_ish() {
+        let mut rng = Pcg64::seed(1);
+        let (_, panels) = noisy_panels(&mut rng, 24, 3, 8);
+        let before = spread(&panels);
+        let res = gossip_align(panels, &Topology::Ring, 10, 0.0, None);
+        let after = *res.spread_per_round.last().unwrap();
+        assert!(after < before, "spread {before} -> {after}");
+    }
+
+    #[test]
+    fn complete_graph_mixes_in_one_round() {
+        let mut rng = Pcg64::seed(2);
+        let (truth, panels) = noisy_panels(&mut rng, 20, 2, 6);
+        let res = gossip_align(panels, &Topology::Complete, 1, 0.0, None);
+        // all nodes should now be near the truth AND near each other
+        assert!(res.spread_per_round[0] < 0.1);
+        for p in &res.panels {
+            assert!(dist2(p, &truth) < 0.2);
+        }
+    }
+
+    #[test]
+    fn ring_needs_more_rounds_than_complete() {
+        let mut rng = Pcg64::seed(3);
+        let (_, panels) = noisy_panels(&mut rng, 24, 3, 12);
+        let ring = gossip_align(panels.clone(), &Topology::Ring, 30, 1e-3, None);
+        let comp = gossip_align(panels, &Topology::Complete, 30, 1e-3, None);
+        assert!(
+            ring.rounds > comp.rounds,
+            "ring {} vs complete {}",
+            ring.rounds,
+            comp.rounds
+        );
+    }
+
+    #[test]
+    fn bytes_accounting_matches_topology() {
+        let mut rng = Pcg64::seed(4);
+        let (_, panels) = noisy_panels(&mut rng, 16, 2, 6);
+        let res = gossip_align(panels, &Topology::Ring, 3, 0.0, None);
+        // 6 nodes x 2 neighbors x 3 rounds messages
+        let expected = 6 * 2 * 3 * (HEADER_BYTES + 4 * 16 * 2);
+        assert_eq!(res.bytes, expected);
+    }
+}

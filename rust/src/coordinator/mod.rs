@@ -1,0 +1,21 @@
+//! L3 distributed coordinator (DESIGN.md S5) — the systems half of the
+//! paper: a leader/worker federated topology with an explicit
+//! communication model.
+//!
+//! The paper's headline systems claim is *communication efficiency*: one
+//! round of worker→leader traffic (each worker ships its (d, r) panel)
+//! suffices to match the centralized error rate. This module makes that
+//! claim measurable: workers run as real OS threads exchanging typed
+//! messages over channels; every message is metered (bytes, rounds) and a
+//! configurable latency/bandwidth model converts traffic into simulated
+//! wall-clock, so the benches can print the paper's communication
+//! comparisons exactly.
+
+mod cluster;
+pub mod gossip;
+mod netsim;
+mod protocol;
+
+pub use cluster::{run_cluster, ClusterConfig, ClusterResult, NodeBehavior, WorkerData};
+pub use netsim::{CommStats, NetworkModel};
+pub use protocol::{AggregationRule, Message};

@@ -1,0 +1,141 @@
+//! Communication model + accounting. The paper's experiments run on an
+//! abstract "m machines, one coordinator" cluster and reason about
+//! communication *rounds* and *volume*; this module meters both and maps
+//! them onto a latency/bandwidth model (`T = rounds * latency +
+//! bytes / bandwidth`), mirroring the `T_comm` term of Remark 2.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Per-link network model.
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkModel {
+    /// One-way message latency, seconds.
+    pub latency_s: f64,
+    /// Link bandwidth, bytes/second.
+    pub bandwidth_bps: f64,
+}
+
+impl NetworkModel {
+    /// A datacenter-ish default: 0.5 ms latency, 1 GB/s.
+    pub fn datacenter() -> Self {
+        NetworkModel { latency_s: 5e-4, bandwidth_bps: 1e9 }
+    }
+
+    /// A WAN / federated default: 50 ms latency, 10 MB/s — the regime the
+    /// paper's single-round design is built for.
+    pub fn wan() -> Self {
+        NetworkModel { latency_s: 5e-2, bandwidth_bps: 1e7 }
+    }
+
+    /// Simulated transfer time for one message of `bytes` bytes.
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+}
+
+/// Thread-safe communication meter shared by all links of a cluster run.
+#[derive(Debug, Default)]
+pub struct CommStats {
+    /// Total worker -> leader bytes.
+    pub bytes_up: AtomicUsize,
+    /// Total leader -> worker bytes.
+    pub bytes_down: AtomicUsize,
+    /// Worker -> leader messages.
+    pub msgs_up: AtomicUsize,
+    /// Leader -> worker messages.
+    pub msgs_down: AtomicUsize,
+    /// Synchronous communication rounds completed.
+    pub rounds: AtomicUsize,
+}
+
+impl CommStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_up(&self, bytes: usize) {
+        self.bytes_up.fetch_add(bytes, Ordering::Relaxed);
+        self.msgs_up.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_down(&self, bytes: usize) {
+        self.bytes_down.fetch_add(bytes, Ordering::Relaxed);
+        self.msgs_down.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn bump_round(&self) {
+        self.rounds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.bytes_up.load(Ordering::Relaxed) + self.bytes_down.load(Ordering::Relaxed)
+    }
+
+    pub fn rounds_done(&self) -> usize {
+        self.rounds.load(Ordering::Relaxed)
+    }
+
+    /// Simulated wall-clock under `net`, assuming per-round barrier
+    /// synchronization: each round costs one latency plus the serialized
+    /// per-link volume of its widest link. We use the conservative
+    /// aggregate `rounds * latency + total_bytes / bandwidth`.
+    pub fn simulated_time(&self, net: &NetworkModel) -> f64 {
+        self.rounds_done() as f64 * net.latency_s
+            + self.total_bytes() as f64 / net.bandwidth_bps
+    }
+
+    /// Snapshot into a plain struct for reporting.
+    pub fn snapshot(&self) -> CommSnapshot {
+        CommSnapshot {
+            bytes_up: self.bytes_up.load(Ordering::Relaxed),
+            bytes_down: self.bytes_down.load(Ordering::Relaxed),
+            msgs_up: self.msgs_up.load(Ordering::Relaxed),
+            msgs_down: self.msgs_down.load(Ordering::Relaxed),
+            rounds: self.rounds_done(),
+        }
+    }
+}
+
+/// Plain-data snapshot of [`CommStats`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CommSnapshot {
+    pub bytes_up: usize,
+    pub bytes_down: usize,
+    pub msgs_up: usize,
+    pub msgs_down: usize,
+    pub rounds: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_model() {
+        let net = NetworkModel { latency_s: 0.01, bandwidth_bps: 1000.0 };
+        assert!((net.transfer_time(500) - 0.51).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let s = CommStats::new();
+        s.record_up(100);
+        s.record_up(50);
+        s.record_down(10);
+        s.bump_round();
+        let snap = s.snapshot();
+        assert_eq!(snap.bytes_up, 150);
+        assert_eq!(snap.bytes_down, 10);
+        assert_eq!(snap.msgs_up, 2);
+        assert_eq!(snap.rounds, 1);
+        assert_eq!(s.total_bytes(), 160);
+    }
+
+    #[test]
+    fn wan_slower_than_datacenter() {
+        let s = CommStats::new();
+        s.record_up(1_000_000);
+        s.bump_round();
+        assert!(s.simulated_time(&NetworkModel::wan()) > s.simulated_time(&NetworkModel::datacenter()));
+    }
+}

@@ -1,0 +1,65 @@
+//! Wire protocol between workers and the leader. Message payloads are
+//! `Mat` panels; `wire_bytes` gives the f32-on-the-wire size used by the
+//! communication accounting (the paper transmits single-precision panels;
+//! 4 bytes/entry + a fixed header).
+
+use crate::linalg::Mat;
+
+/// Fixed per-message envelope overhead (type tag + shape + node id), bytes.
+pub const HEADER_BYTES: usize = 32;
+
+/// Messages of the distributed protocol.
+#[derive(Clone, Debug)]
+pub enum Message {
+    /// Worker -> leader: local leading-eigenbasis panel `V̂₁⁽ⁱ⁾` (+ Ritz values).
+    LocalEstimate { node: usize, panel: Mat, ritz: Vec<f64> },
+    /// Leader -> worker: reference panel to align against (Remark 2 /
+    /// Algorithm 2 broadcast).
+    Reference { round: usize, panel: Mat },
+    /// Worker -> leader: locally aligned panel `V̂₁⁽ⁱ⁾ Zᵢ` (Remark 2 path).
+    Aligned { node: usize, round: usize, panel: Mat },
+    /// Leader -> worker: the protocol is finished.
+    Done,
+}
+
+impl Message {
+    /// Bytes on the wire: header + f32 payload.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Message::LocalEstimate { panel, ritz, .. } => {
+                HEADER_BYTES + 4 * panel.rows() * panel.cols() + 4 * ritz.len()
+            }
+            Message::Reference { panel, .. } | Message::Aligned { panel, .. } => {
+                HEADER_BYTES + 4 * panel.rows() * panel.cols()
+            }
+            Message::Done => HEADER_BYTES,
+        }
+    }
+}
+
+/// How the leader combines aligned panels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggregationRule {
+    /// Mean of aligned panels then QR (Algorithms 1/2).
+    Mean,
+    /// Entry-wise median then QR (Byzantine-robust extension).
+    CoordinateMedian,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_bytes_scales_with_panel() {
+        let m = Message::Reference { round: 0, panel: Mat::zeros(64, 8) };
+        assert_eq!(m.wire_bytes(), HEADER_BYTES + 4 * 64 * 8);
+        let e = Message::LocalEstimate {
+            node: 1,
+            panel: Mat::zeros(64, 8),
+            ritz: vec![0.0; 8],
+        };
+        assert_eq!(e.wire_bytes(), HEADER_BYTES + 4 * 64 * 8 + 32);
+        assert_eq!(Message::Done.wire_bytes(), HEADER_BYTES);
+    }
+}

@@ -1,0 +1,177 @@
+//! Shared infrastructure for the figure/table experiments: the distributed
+//! PCA trial (sample → local covariances → local panels → all estimators),
+//! summary statistics, and log-log slope fits for Table 1.
+
+use crate::align;
+use crate::linalg::subspace::dist2;
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+use crate::runtime::{LocalSolver, NativeEngine};
+use crate::synth::CovModel;
+
+/// Which estimators a trial should evaluate (the dense baselines are
+/// expensive at large d, so experiments opt in).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EstimatorSet {
+    /// Algorithm 2 with this many refinement rounds (0 = skip).
+    pub refine_rounds: usize,
+    /// Evaluate naive averaging (Eq. 3).
+    pub naive: bool,
+    /// Evaluate Fan et al. [20] spectral-projector averaging.
+    pub projector: bool,
+}
+
+/// Subspace distances (dist_2 to the true principal subspace) of one trial.
+#[derive(Clone, Copy, Debug)]
+pub struct TrialErrors {
+    pub central: f64,
+    pub algo1: f64,
+    /// Algorithm 2 (NaN if not requested).
+    pub algo2: f64,
+    /// Naive average (NaN if not requested).
+    pub naive: f64,
+    /// Projector averaging (NaN if not requested).
+    pub projector: f64,
+    /// Error of the first local solution (single-machine baseline).
+    pub local1: f64,
+}
+
+/// One distributed-PCA trial: each of `m` machines draws `n` samples from
+/// `cov`, computes its local panel with the native engine, and every
+/// requested estimator is scored against the true principal subspace.
+pub fn pca_trial(
+    cov: &CovModel,
+    m: usize,
+    n: usize,
+    set: EstimatorSet,
+    rng: &mut Pcg64,
+) -> TrialErrors {
+    let r = cov.r;
+    let d = cov.dim();
+    let truth = cov.principal_subspace();
+    let solver = NativeEngine::default();
+
+    let mut avg_cov = Mat::zeros(d, d);
+    let mut panels: Vec<Mat> = Vec::with_capacity(m);
+    for i in 0..m {
+        let mut node_rng = rng.split(i as u64 + 1);
+        let x = cov.sample(n, &mut node_rng);
+        let c = CovModel::empirical_cov(&x);
+        avg_cov.axpy(1.0 / m as f64, &c);
+        panels.push(solver.leading_subspace(&c, r, &mut node_rng));
+    }
+
+    let central = crate::linalg::eig::top_eigvecs(&avg_cov, r).0;
+    let a1 = align::procrustes_fix(&panels);
+
+    TrialErrors {
+        central: dist2(&central, &truth),
+        algo1: dist2(&a1, &truth),
+        algo2: if set.refine_rounds > 0 {
+            dist2(&align::iterative_refinement(&panels, set.refine_rounds), &truth)
+        } else {
+            f64::NAN
+        },
+        naive: if set.naive {
+            dist2(&align::naive_average(&panels), &truth)
+        } else {
+            f64::NAN
+        },
+        projector: if set.projector {
+            dist2(&align::projector_average(&panels), &truth)
+        } else {
+            f64::NAN
+        },
+        local1: dist2(&panels[0], &truth),
+    }
+}
+
+/// Median of a slice (sorted copy).
+pub fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mid = v.len() / 2;
+    if v.len() % 2 == 1 {
+        v[mid]
+    } else {
+        0.5 * (v[mid - 1] + v[mid])
+    }
+}
+
+/// Least-squares slope of log(y) against log(x) — the empirical rate
+/// exponent used by the Table-1 consistency check.
+pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let pts: Vec<(f64, f64)> = xs
+        .iter()
+        .zip(ys)
+        .filter(|(&x, &y)| x > 0.0 && y > 0.0)
+        .map(|(&x, &y)| (x.ln(), y.ln()))
+        .collect();
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+/// The simplified Theorem-4 rate `f(r_star, n)` of Eq. (36).
+pub fn theory_rate(r_star: f64, n: usize, m: usize, delta: f64) -> f64 {
+    let nf = n as f64;
+    let mf = m as f64;
+    (r_star + mf.ln()) / (delta * delta * nf)
+        + ((r_star + 2.0 * nf.ln()) / (delta * delta * mf * nf)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::SpectrumModel;
+
+    #[test]
+    fn trial_errors_sane() {
+        let mut rng = Pcg64::seed(1);
+        let model = SpectrumModel::M1 { r: 2, lambda_lo: 0.5, lambda_hi: 1.0, delta: 0.2 };
+        let cov = CovModel::draw(&model, 40, &mut rng);
+        let set = EstimatorSet { refine_rounds: 2, naive: true, projector: true };
+        let e = pca_trial(&cov, 8, 200, set, &mut rng);
+        assert!(e.central < 0.5 && e.central > 0.0);
+        assert!(e.algo1 < 0.5);
+        assert!(e.algo2 < 0.5);
+        assert!(e.projector < 0.5);
+        assert!(e.local1 >= e.central * 0.5); // single machine no better than pooled
+        assert!(e.naive > 0.0);
+    }
+
+    #[test]
+    fn skipped_estimators_are_nan() {
+        let mut rng = Pcg64::seed(2);
+        let model = SpectrumModel::M1 { r: 1, lambda_lo: 0.5, lambda_hi: 1.0, delta: 0.2 };
+        let cov = CovModel::draw(&model, 20, &mut rng);
+        let e = pca_trial(&cov, 4, 100, EstimatorSet::default(), &mut rng);
+        assert!(e.algo2.is_nan() && e.naive.is_nan() && e.projector.is_nan());
+        assert!(!e.algo1.is_nan());
+    }
+
+    #[test]
+    fn median_and_slope() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        // exact power law y = x^{-0.5}
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64 * 10.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x.powf(-0.5)).collect();
+        assert!((loglog_slope(&xs, &ys) + 0.5).abs() < 1e-10);
+    }
+
+    #[test]
+    fn theory_rate_decreases_in_n() {
+        let a = theory_rate(16.0, 100, 50, 0.2);
+        let b = theory_rate(16.0, 400, 50, 0.2);
+        assert!(b < a);
+    }
+}

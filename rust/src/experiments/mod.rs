@@ -1,0 +1,52 @@
+//! Experiment harness (DESIGN.md S11): regeneration code for **every**
+//! figure and table in the paper's evaluation. Each experiment prints a
+//! paper-style table and writes CSV series under `--out` (default
+//! `results/`). `--quick` shrinks the sweeps to seconds for smoke runs;
+//! default parameters follow the paper (scaled where the paper's exact
+//! sizes are gratuitous on one CPU — each scaling is noted in the module
+//! docs and EXPERIMENTS.md).
+
+pub mod common;
+mod figs_apps;
+mod figs_intdim;
+mod figs_pca;
+mod tables;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::RunOptions;
+
+/// Every runnable experiment, in paper order.
+pub const ALL: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9",
+    "fig10", "table1", "table2",
+];
+
+/// Dispatch a single experiment by name.
+pub fn run(name: &str, opts: &RunOptions) -> Result<()> {
+    std::fs::create_dir_all(&opts.out_dir)?;
+    match name {
+        "fig1" => figs_pca::fig1(opts),
+        "fig2" => figs_pca::fig2(opts),
+        "fig3" => figs_pca::fig3(opts),
+        "fig4" => figs_pca::fig4(opts),
+        "fig5" => figs_intdim::fig5(opts),
+        "fig6" => figs_intdim::fig6(opts),
+        "fig7" => figs_intdim::fig7(opts),
+        "fig8" => figs_intdim::fig8(opts),
+        "fig9" => figs_apps::fig9(opts),
+        "fig10" => figs_apps::fig10(opts),
+        "table1" => tables::table1(opts),
+        "table2" => figs_apps::table2(opts),
+        "all" => {
+            for n in ALL {
+                println!("\n================ {n} ================");
+                run(n, opts)?;
+            }
+            Ok(())
+        }
+        other => Err(anyhow!(
+            "unknown experiment '{other}' (choose one of {ALL:?} or 'all')"
+        )),
+    }
+}

@@ -1,0 +1,96 @@
+//! Table 1: the statistical-rate comparison. The paper's Table 1 is
+//! theoretical; we reproduce it as (a) the printed theoretical rates and
+//! (b) an empirical consistency check — log-log slope fits of Algorithm
+//! 1's error against n (expect ≈ -1/2 in the variance-dominated regime)
+//! and against m at fixed n (expect ≈ -1/2 until the quadratic bias floor).
+
+use anyhow::Result;
+
+use crate::config::RunOptions;
+use crate::io::{CsvWriter, Table};
+use crate::rng::Pcg64;
+use crate::synth::{CovModel, SpectrumModel};
+
+use super::common::{loglog_slope, median, pca_trial, EstimatorSet};
+
+pub fn table1(opts: &RunOptions) -> Result<()> {
+    println!("[table1] theoretical rates (paper Table 1):");
+    let mut t = Table::new(&["setting", "rate", "reference"]);
+    t.row(vec![
+        "D in sqrt(b) B^d".into(),
+        "sqrt(b^2/(d^2 m n)) + b^2/(d^2 n)".into(),
+        "[24] (r=1) / Thm 3".into(),
+    ]);
+    t.row(vec![
+        "D subgaussian".into(),
+        "k sqrt((r*+log n)/(m n)) + k^2 (r*+log m)/n".into(),
+        "Thm 4".into(),
+    ]);
+    t.row(vec![
+        "D subgaussian (Frobenius)".into(),
+        "sqrt(r) k sqrt(r*/(m n)) + sqrt(r) k^2 r*/n".into(),
+        "[20]".into(),
+    ]);
+    t.print();
+
+    // empirical slope fits
+    let quick = opts.quick;
+    let d = if quick { 60 } else { 150 };
+    let r = 4;
+    let trials = opts.trials_or(if quick { 1 } else { 5 });
+    let model = SpectrumModel::M1 { r, lambda_lo: 0.5, lambda_hi: 1.0, delta: 0.2 };
+
+    // slope in n at fixed m
+    let m = if quick { 10 } else { 25 };
+    let ns: Vec<usize> = if quick { vec![100, 200, 400] } else { vec![100, 200, 400, 800, 1600] };
+    let mut errs_n = vec![];
+    for &n in &ns {
+        let mut e = vec![];
+        for trial in 0..trials {
+            let mut rng = Pcg64::seed_stream(opts.seed, (n * 10 + trial) as u64);
+            let cov = CovModel::draw(&model, d, &mut rng);
+            e.push(pca_trial(&cov, m, n, EstimatorSet::default(), &mut rng).algo1);
+        }
+        errs_n.push(median(&e));
+    }
+    let xs: Vec<f64> = ns.iter().map(|&n| n as f64).collect();
+    let slope_n = loglog_slope(&xs, &errs_n);
+
+    // slope in m at fixed (large) n
+    let n_fix = if quick { 300 } else { 800 };
+    let ms: Vec<usize> = if quick { vec![5, 10, 20] } else { vec![5, 10, 20, 40, 80] };
+    let mut errs_m = vec![];
+    for &m in &ms {
+        let mut e = vec![];
+        for trial in 0..trials {
+            let mut rng = Pcg64::seed_stream(opts.seed, (m * 1000 + trial + 7) as u64);
+            let cov = CovModel::draw(&model, d, &mut rng);
+            e.push(pca_trial(&cov, m, n_fix, EstimatorSet::default(), &mut rng).algo1);
+        }
+        errs_m.push(median(&e));
+    }
+    let xm: Vec<f64> = ms.iter().map(|&m| m as f64).collect();
+    let slope_m = loglog_slope(&xm, &errs_m);
+
+    let mut csv = CsvWriter::create(
+        format!("{}/table1_slopes.csv", opts.out_dir),
+        &[("seed", opts.seed.to_string()), ("d", d.to_string())],
+        &["axis", "slope", "theory"],
+    )?;
+    csv.row_strs(&["n".into(), format!("{slope_n:.3}"), "-0.5".into()])?;
+    csv.row_strs(&["m".into(), format!("{slope_m:.3}"), "-0.5 (to bias floor)".into()])?;
+    csv.finish()?;
+
+    println!("\n[table1] empirical rate exponents of Algorithm 1:");
+    let mut t2 = Table::new(&["axis", "fitted slope", "theory"]);
+    t2.row(vec!["n (m fixed)".into(), format!("{slope_n:.3}"), "-0.5".into()]);
+    t2.row(vec![
+        "m (n fixed)".into(),
+        format!("{slope_m:.3}"),
+        "-0.5 until bias floor".into(),
+    ]);
+    t2.print();
+    println!("[table1] paper shape: 1/sqrt(mn) variance decay{}",
+        if slope_n < -0.3 { " — confirmed" } else { " — NOT matched" });
+    Ok(())
+}

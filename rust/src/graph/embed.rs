@@ -1,0 +1,106 @@
+//! HOPE-style node embeddings (Ou et al. 2016) via Katz proximity —
+//! the implicit-factorization embedding family of §3.6: the loss
+//! `||Z Z^T - S||_F^2` is invariant to `Z -> Z Q`, so Procrustes fixing
+//! applies verbatim to combining per-machine embeddings.
+
+use crate::linalg::eig::top_eigvecs;
+use crate::linalg::gemm::matmul;
+use crate::linalg::Mat;
+
+use super::gen::Graph;
+
+/// Katz proximity `S = sum_{t>=1} beta^t A^t`, evaluated by truncated
+/// series (converges when `beta * lambda_max(A) < 1`; `terms` around 20
+/// reaches machine precision for `beta = 0.1` on sparse-ish graphs).
+pub fn katz_proximity(g: &Graph, beta: f64, terms: usize) -> Mat {
+    let a = g.adjacency();
+    let mut power = a.scale(beta); // beta^1 A^1
+    let mut s = power.clone();
+    for _ in 1..terms {
+        power = matmul(&power, &a).scale(beta);
+        s.axpy(1.0, &power);
+    }
+    s
+}
+
+/// HOPE embedding of dimension `dim`: factor `S ~ Z Z^T` by the top
+/// eigenpairs of the (symmetric) Katz matrix, `Z = V_r diag(|lambda|^{1/2})`.
+/// Rows of the returned (n, dim) matrix are node embeddings.
+pub fn hope_embedding(g: &Graph, dim: usize, beta: f64) -> Mat {
+    let s = katz_proximity(g, beta, 24);
+    let (v, lam) = top_eigvecs(&s, dim);
+    let mut z = v;
+    for j in 0..dim {
+        let scale = lam[j].max(0.0).sqrt();
+        for i in 0..z.rows() {
+            z[(i, j)] *= scale;
+        }
+    }
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::sbm;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn katz_series_converges() {
+        let mut rng = Pcg64::seed(1);
+        let g = sbm(60, 2, 0.3, 0.05, &mut rng);
+        let s20 = katz_proximity(&g, 0.02, 20);
+        let s40 = katz_proximity(&g, 0.02, 40);
+        assert!(s20.sub(&s40).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn katz_symmetric_nonneg() {
+        let mut rng = Pcg64::seed(2);
+        let g = sbm(40, 2, 0.3, 0.05, &mut rng);
+        let s = katz_proximity(&g, 0.02, 20);
+        for i in 0..40 {
+            for j in 0..40 {
+                assert!((s[(i, j)] - s[(j, i)]).abs() < 1e-12);
+                assert!(s[(i, j)] >= -1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn embedding_approximates_proximity() {
+        let mut rng = Pcg64::seed(3);
+        let g = sbm(80, 2, 0.4, 0.05, &mut rng);
+        let s = katz_proximity(&g, 0.02, 24);
+        let z = hope_embedding(&g, 16, 0.02);
+        let rec = crate::linalg::gemm::a_bt(&z, &z);
+        let rel = rec.sub(&s).fro_norm() / s.fro_norm();
+        assert!(rel < 0.65, "relative reconstruction error {rel}");
+    }
+
+    #[test]
+    fn embedding_separates_communities() {
+        // mean within-community embedding distance << across-community
+        let mut rng = Pcg64::seed(4);
+        let g = sbm(100, 2, 0.35, 0.02, &mut rng);
+        let z = hope_embedding(&g, 8, 0.05);
+        let (mut dw, mut nw, mut da, mut na) = (0.0, 0usize, 0.0, 0usize);
+        for u in 0..100 {
+            for v in (u + 1)..100 {
+                let dist: f64 = (0..8)
+                    .map(|j| (z[(u, j)] - z[(v, j)]).powi(2))
+                    .sum::<f64>()
+                    .sqrt();
+                if g.labels[u] == g.labels[v] {
+                    dw += dist;
+                    nw += 1;
+                } else {
+                    da += dist;
+                    na += 1;
+                }
+            }
+        }
+        let (mw, ma) = (dw / nw as f64, da / na as f64);
+        assert!(ma > 1.2 * mw, "within {mw} across {ma}");
+    }
+}

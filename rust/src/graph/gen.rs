@@ -1,0 +1,131 @@
+//! Undirected graph type + stochastic-block-model generator + the edge
+//! censoring process of §3.6 (each machine sees the graph with every edge
+//! independently hidden with probability p).
+
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+
+/// Simple undirected graph stored as an edge list plus adjacency structure.
+#[derive(Clone)]
+pub struct Graph {
+    /// Number of nodes.
+    pub n: usize,
+    /// Undirected edges as (u, v) with u < v, deduplicated.
+    pub edges: Vec<(usize, usize)>,
+    /// Ground-truth community labels (for classification experiments).
+    pub labels: Vec<usize>,
+}
+
+impl Graph {
+    /// Number of edges.
+    pub fn m(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Dense symmetric adjacency matrix (n, n).
+    pub fn adjacency(&self) -> Mat {
+        let mut a = Mat::zeros(self.n, self.n);
+        for &(u, v) in &self.edges {
+            a[(u, v)] = 1.0;
+            a[(v, u)] = 1.0;
+        }
+        a
+    }
+
+    /// Node degrees.
+    pub fn degrees(&self) -> Vec<usize> {
+        let mut deg = vec![0usize; self.n];
+        for &(u, v) in &self.edges {
+            deg[u] += 1;
+            deg[v] += 1;
+        }
+        deg
+    }
+
+    /// The censored view of machine i (§3.6): each edge kept independently
+    /// with probability `1 - p_hide`.
+    pub fn censor(&self, p_hide: f64, rng: &mut Pcg64) -> Graph {
+        let edges = self
+            .edges
+            .iter()
+            .filter(|_| !rng.bernoulli(p_hide))
+            .copied()
+            .collect();
+        Graph { n: self.n, edges, labels: self.labels.clone() }
+    }
+}
+
+/// Stochastic block model: `k` equal-size communities; within-community
+/// edges appear with probability `p_in`, across with `p_out`.
+pub fn sbm(n: usize, k: usize, p_in: f64, p_out: f64, rng: &mut Pcg64) -> Graph {
+    assert!(k >= 1 && n >= k);
+    let labels: Vec<usize> = (0..n).map(|i| i * k / n).collect();
+    let mut edges = Vec::new();
+    for u in 0..n {
+        for v in (u + 1)..n {
+            let p = if labels[u] == labels[v] { p_in } else { p_out };
+            if rng.bernoulli(p) {
+                edges.push((u, v));
+            }
+        }
+    }
+    Graph { n, edges, labels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sbm_density_matches_parameters() {
+        let mut rng = Pcg64::seed(1);
+        let g = sbm(200, 2, 0.3, 0.02, &mut rng);
+        let (mut within, mut across) = (0usize, 0usize);
+        for &(u, v) in &g.edges {
+            if g.labels[u] == g.labels[v] {
+                within += 1;
+            } else {
+                across += 1;
+            }
+        }
+        // 2 blocks of 100: within pairs = 2*C(100,2)=9900, across = 10000
+        let rw = within as f64 / 9900.0;
+        let ra = across as f64 / 10_000.0;
+        assert!((rw - 0.3).abs() < 0.05, "within rate {rw}");
+        assert!((ra - 0.02).abs() < 0.01, "across rate {ra}");
+    }
+
+    #[test]
+    fn censor_removes_expected_fraction() {
+        let mut rng = Pcg64::seed(2);
+        let g = sbm(150, 3, 0.5, 0.05, &mut rng);
+        let c = g.censor(0.1, &mut rng);
+        let kept = c.m() as f64 / g.m() as f64;
+        assert!((kept - 0.9).abs() < 0.05, "kept {kept}");
+        // censored edges are a subset
+        let set: std::collections::HashSet<_> = g.edges.iter().collect();
+        assert!(c.edges.iter().all(|e| set.contains(e)));
+    }
+
+    #[test]
+    fn adjacency_symmetric_zero_diag() {
+        let mut rng = Pcg64::seed(3);
+        let g = sbm(40, 2, 0.4, 0.1, &mut rng);
+        let a = g.adjacency();
+        for i in 0..40 {
+            assert_eq!(a[(i, i)], 0.0);
+            for j in 0..40 {
+                assert_eq!(a[(i, j)], a[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn labels_partition_evenly() {
+        let mut rng = Pcg64::seed(4);
+        let g = sbm(90, 3, 0.2, 0.02, &mut rng);
+        for c in 0..3 {
+            assert_eq!(g.labels.iter().filter(|&&l| l == c).count(), 30);
+        }
+    }
+}

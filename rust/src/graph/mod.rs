@@ -1,0 +1,11 @@
+//! Graph substrate for the distributed node-embedding application (§3.6):
+//! an undirected graph type, a stochastic-block-model generator (our
+//! offline stand-in for Wikipedia/PPI — DESIGN.md substitution ledger),
+//! Bernoulli edge censoring, and HOPE-style Katz-proximity embeddings
+//! computed with the from-scratch eigensolver.
+
+mod embed;
+mod gen;
+
+pub use embed::{hope_embedding, katz_proximity};
+pub use gen::{sbm, Graph};

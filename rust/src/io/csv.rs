@@ -1,0 +1,85 @@
+//! Tiny CSV writer for experiment results. Every experiment run records
+//! its seed and parameters in `# key: value` header comments so results
+//! are reproducible from the file alone.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Buffered CSV writer with comment-header support.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create (truncating) `path`, write `# key: value` metadata lines and
+    /// the header row.
+    pub fn create(
+        path: impl AsRef<Path>,
+        metadata: &[(&str, String)],
+        header: &[&str],
+    ) -> std::io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        for (k, v) in metadata {
+            writeln!(out, "# {k}: {v}")?;
+        }
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, cols: header.len() })
+    }
+
+    /// Write one row of f64 cells (formatted with enough precision to
+    /// round-trip).
+    pub fn row(&mut self, cells: &[f64]) -> std::io::Result<()> {
+        assert_eq!(cells.len(), self.cols, "row width != header width");
+        let strs: Vec<String> = cells.iter().map(|v| format!("{v:.10e}")).collect();
+        writeln!(self.out, "{}", strs.join(","))
+    }
+
+    /// Write one row of preformatted string cells.
+    pub fn row_strs(&mut self, cells: &[String]) -> std::io::Result<()> {
+        assert_eq!(cells.len(), self.cols);
+        writeln!(self.out, "{}", cells.join(","))
+    }
+
+    /// Flush to disk.
+    pub fn finish(mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("deigen_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(
+            &path,
+            &[("seed", "42".to_string())],
+            &["n", "dist"],
+        )
+        .unwrap();
+        w.row(&[10.0, 0.5]).unwrap();
+        w.row(&[20.0, 0.25]).unwrap();
+        w.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("# seed: 42\nn,dist\n"));
+        assert_eq!(text.lines().count(), 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_width_panics() {
+        let dir = std::env::temp_dir().join("deigen_csv_test2");
+        let mut w =
+            CsvWriter::create(dir.join("t.csv"), &[], &["a", "b"]).unwrap();
+        let _ = w.row(&[1.0]);
+    }
+}

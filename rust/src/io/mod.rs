@@ -1,0 +1,12 @@
+//! IO substrate: CSV result writers, a minimal JSON parser (for the AOT
+//! artifact manifest), and a fixed-width table printer for paper-style
+//! console output. No serde offline — all hand-rolled and unit-tested.
+
+mod csv;
+pub mod plot;
+mod json;
+mod table;
+
+pub use csv::CsvWriter;
+pub use json::{parse_json, Json};
+pub use table::Table;

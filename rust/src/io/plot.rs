@@ -1,0 +1,230 @@
+//! ASCII scatter/line plots for the experiment CSVs — this repo runs in
+//! terminal-only environments, so `deigen plot` renders the paper's
+//! figures directly in the console (log-log by default, matching the
+//! paper's axes).
+
+/// One named series of (x, y) points.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Plot configuration.
+pub struct PlotCfg {
+    pub width: usize,
+    pub height: usize,
+    pub log_x: bool,
+    pub log_y: bool,
+    pub title: String,
+}
+
+impl Default for PlotCfg {
+    fn default() -> Self {
+        PlotCfg { width: 72, height: 20, log_x: false, log_y: true, title: String::new() }
+    }
+}
+
+const MARKS: &[char] = &['*', '+', 'o', 'x', '#', '@', '%', '&'];
+
+fn tx(v: f64, log: bool) -> f64 {
+    if log {
+        v.max(1e-300).log10()
+    } else {
+        v
+    }
+}
+
+/// Render series into an ASCII chart.
+pub fn render(series: &[Series], cfg: &PlotCfg) -> String {
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter())
+        .filter(|(x, y)| {
+            (!cfg.log_x || *x > 0.0) && (!cfg.log_y || *y > 0.0)
+        })
+        .map(|&(x, y)| (tx(x, cfg.log_x), tx(y, cfg.log_y)))
+        .collect();
+    if pts.is_empty() {
+        return "(no plottable points)".to_string();
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+
+    let mut grid = vec![vec![' '; cfg.width]; cfg.height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for &(x, y) in &s.points {
+            if (cfg.log_x && x <= 0.0) || (cfg.log_y && y <= 0.0) {
+                continue;
+            }
+            let px = ((tx(x, cfg.log_x) - x0) / (x1 - x0) * (cfg.width - 1) as f64)
+                .round() as usize;
+            let py = ((tx(y, cfg.log_y) - y0) / (y1 - y0) * (cfg.height - 1) as f64)
+                .round() as usize;
+            grid[cfg.height - 1 - py][px] = mark;
+        }
+    }
+
+    let fmt_axis = |v: f64, log: bool| {
+        let val = if log { 10f64.powf(v) } else { v };
+        if val != 0.0 && (val.abs() >= 1e4 || val.abs() < 1e-3) {
+            format!("{val:.2e}")
+        } else {
+            format!("{val:.3}")
+        }
+    };
+
+    let mut out = String::new();
+    if !cfg.title.is_empty() {
+        out.push_str(&format!("  {}\n", cfg.title));
+    }
+    for (i, row) in grid.iter().enumerate() {
+        let yv = y1 - (y1 - y0) * i as f64 / (cfg.height - 1) as f64;
+        let label = if i == 0 || i == cfg.height - 1 || i == cfg.height / 2 {
+            format!("{:>9}", fmt_axis(yv, cfg.log_y))
+        } else {
+            " ".repeat(9)
+        };
+        out.push_str(&format!("{label} |{}\n", row.iter().collect::<String>()));
+    }
+    out.push_str(&format!(
+        "{} +{}\n",
+        " ".repeat(9),
+        "-".repeat(cfg.width)
+    ));
+    out.push_str(&format!(
+        "{} {:<12}{:>width$}\n",
+        " ".repeat(9),
+        fmt_axis(x0, cfg.log_x),
+        fmt_axis(x1, cfg.log_x),
+        width = cfg.width.saturating_sub(12)
+    ));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", MARKS[si % MARKS.len()], s.name));
+    }
+    out
+}
+
+/// Parse an experiment CSV (as written by [`super::CsvWriter`]) into
+/// named columns, skipping `#` metadata lines.
+pub fn parse_csv(text: &str) -> Result<(Vec<String>, Vec<Vec<f64>>), String> {
+    let mut lines = text.lines().filter(|l| !l.starts_with('#') && !l.trim().is_empty());
+    let header: Vec<String> = lines
+        .next()
+        .ok_or("empty csv")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let mut rows = Vec::new();
+    for (i, line) in lines.enumerate() {
+        let row: Result<Vec<f64>, _> =
+            line.split(',').map(|c| c.trim().parse::<f64>()).collect();
+        match row {
+            Ok(r) if r.len() == header.len() => rows.push(r),
+            Ok(_) => return Err(format!("row {i} width mismatch")),
+            Err(_) => continue, // string-valued rows (fig1 scatter): skip
+        }
+    }
+    Ok((header, rows))
+}
+
+/// Build series "y_col vs x_col", one series per distinct value-tuple of
+/// the `group_cols`.
+pub fn csv_series(
+    header: &[String],
+    rows: &[Vec<f64>],
+    x_col: &str,
+    y_col: &str,
+    group_cols: &[&str],
+) -> Result<Vec<Series>, String> {
+    let idx = |name: &str| {
+        header
+            .iter()
+            .position(|h| h == name)
+            .ok_or(format!("no column '{name}' in {header:?}"))
+    };
+    let xi = idx(x_col)?;
+    let yi = idx(y_col)?;
+    let gis: Vec<usize> = group_cols
+        .iter()
+        .map(|g| idx(g))
+        .collect::<Result<_, _>>()?;
+    let mut map: std::collections::BTreeMap<String, Vec<(f64, f64)>> =
+        std::collections::BTreeMap::new();
+    for row in rows {
+        let key = if gis.is_empty() {
+            y_col.to_string()
+        } else {
+            gis.iter()
+                .map(|&g| format!("{}={}", header[g], row[g]))
+                .collect::<Vec<_>>()
+                .join(" ")
+        };
+        map.entry(key).or_default().push((row[xi], row[yi]));
+    }
+    Ok(map
+        .into_iter()
+        .map(|(name, points)| Series { name, points })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_basic_plot() {
+        let s = Series {
+            name: "err".into(),
+            points: (1..=10).map(|i| (i as f64, 1.0 / i as f64)).collect(),
+        };
+        let out = render(&[s], &PlotCfg::default());
+        assert!(out.contains('*'));
+        assert!(out.contains("err"));
+        assert!(out.lines().count() > 20);
+    }
+
+    #[test]
+    fn parse_csv_roundtrip() {
+        let text = "# seed: 1\nn,dist\n10,0.5\n20,0.25\n";
+        let (h, rows) = parse_csv(text).unwrap();
+        assert_eq!(h, vec!["n", "dist"]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1][1], 0.25);
+    }
+
+    #[test]
+    fn grouping_splits_series() {
+        let text = "m,n,d\n25,10,0.5\n25,20,0.3\n50,10,0.4\n50,20,0.2\n";
+        let (h, rows) = parse_csv(text).unwrap();
+        let series = csv_series(&h, &rows, "n", "d", &["m"]).unwrap();
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].points.len(), 2);
+    }
+
+    #[test]
+    fn missing_column_errors() {
+        let (h, rows) = parse_csv("a,b\n1,2\n").unwrap();
+        assert!(csv_series(&h, &rows, "a", "zzz", &[]).is_err());
+    }
+
+    #[test]
+    fn log_axes_drop_nonpositive() {
+        let s = Series { name: "x".into(), points: vec![(0.0, 1.0), (1.0, 1.0)] };
+        let out = render(&[s], &PlotCfg { log_x: true, ..Default::default() });
+        assert!(out.contains('*'));
+    }
+}

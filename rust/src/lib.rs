@@ -1,0 +1,39 @@
+#![allow(clippy::needless_range_loop)] // index loops mirror the math in numeric kernels
+//! # deigen — communication-efficient distributed eigenspace estimation
+//!
+//! A full-system reproduction of *"Communication-efficient distributed
+//! eigenspace estimation"* (Charisopoulos, Benson & Damle, 2020): a rust
+//! federated coordinator (L3) orchestrating local eigenspace solves that
+//! were AOT-compiled from JAX + Pallas (L2/L1) to PJRT executables, plus a
+//! from-scratch native compute engine for arbitrary-shape statistical
+//! sweeps, the paper's baselines, and every experiment in its evaluation.
+//!
+//! Layering (see DESIGN.md):
+//! - [`linalg`], [`rng`] — numeric substrates (no external BLAS/rand).
+//! - [`synth`], [`graph`], [`sensing`], [`classify`] — workload substrates.
+//! - [`align`] — Algorithm 1/2 and all baselines.
+//! - [`coordinator`] — the distributed leader/worker runtime with an
+//!   explicit communication model.
+//! - [`runtime`] — PJRT loading/execution of the AOT artifacts.
+//! - [`experiments`] — regeneration of every figure/table in the paper.
+
+pub mod align;
+pub mod benchutil;
+pub mod classify;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod graph;
+pub mod io;
+pub mod linalg;
+pub mod rng;
+pub mod runtime;
+pub mod sensing;
+pub mod sketch;
+pub mod stream;
+pub mod synth;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,139 @@
+//! Cholesky factorization and SPD linear solves — the substrate behind the
+//! shift-and-invert local solver (the multi-round baseline of Garber et
+//! al. [23, 24] and Chen et al. [11] that Algorithm 1's single round is
+//! compared against).
+
+use super::mat::Mat;
+
+/// Lower-triangular Cholesky factor `L` with `A = L L^T`.
+/// Returns `None` if `A` is not (numerically) positive definite.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert!(a.is_square(), "cholesky needs a square matrix");
+    let n = a.rows();
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)];
+            for k in 0..j {
+                sum -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[(i, j)] = sum.sqrt();
+            } else {
+                l[(i, j)] = sum / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `L y = b` (forward substitution) for lower-triangular `L`.
+pub fn forward_sub(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        let lr = l.row(i);
+        for k in 0..i {
+            sum -= lr[k] * y[k];
+        }
+        y[i] = sum / lr[i];
+    }
+    y
+}
+
+/// Solve `L^T x = y` (backward substitution) for lower-triangular `L`.
+pub fn backward_sub(l: &Mat, y: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in (i + 1)..n {
+            sum -= l[(k, i)] * x[k];
+        }
+        x[i] = sum / l[(i, i)];
+    }
+    x
+}
+
+/// Solve the SPD system `A X = B` column-by-column via Cholesky.
+/// Returns `None` if `A` is not positive definite.
+pub fn spd_solve(a: &Mat, b: &Mat) -> Option<Mat> {
+    let l = cholesky(a)?;
+    let n = a.rows();
+    assert_eq!(b.rows(), n);
+    let mut x = Mat::zeros(n, b.cols());
+    for j in 0..b.cols() {
+        let col = b.col(j);
+        let sol = backward_sub(&l, &forward_sub(&l, &col));
+        x.set_col(j, &sol);
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{a_bt, matmul};
+    use crate::rng::Pcg64;
+
+    fn random_spd(rng: &mut Pcg64, n: usize) -> Mat {
+        let g = rng.normal_mat(n, n);
+        let mut s = a_bt(&g, &g);
+        for i in 0..n {
+            s[(i, i)] += n as f64 * 0.1;
+        }
+        s
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Pcg64::seed(1);
+        for &n in &[1usize, 3, 10, 30] {
+            let a = random_spd(&mut rng, n);
+            let l = cholesky(&a).expect("SPD");
+            let rec = a_bt(&l, &l);
+            assert!(rec.sub(&a).max_abs() < 1e-8 * (n as f64), "n={n}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eig {3, -1}
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn spd_solve_inverts() {
+        let mut rng = Pcg64::seed(2);
+        let a = random_spd(&mut rng, 15);
+        let b = rng.normal_mat(15, 4);
+        let x = spd_solve(&a, &b).unwrap();
+        let res = matmul(&a, &x).sub(&b).max_abs();
+        assert!(res < 1e-8, "residual {res}");
+    }
+
+    #[test]
+    fn triangular_substitutions() {
+        let mut rng = Pcg64::seed(3);
+        let a = random_spd(&mut rng, 8);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..8).map(|i| i as f64 - 3.0).collect();
+        let y = forward_sub(&l, &b);
+        // L y == b
+        for i in 0..8 {
+            let got: f64 = (0..8).map(|k| l[(i, k)] * y[k]).sum();
+            assert!((got - b[i]).abs() < 1e-10);
+        }
+        let x = backward_sub(&l, &y);
+        for i in 0..8 {
+            let got: f64 = (0..8).map(|k| l[(k, i)] * x[k]).sum();
+            assert!((got - y[i]).abs() < 1e-10);
+        }
+    }
+}

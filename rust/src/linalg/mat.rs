@@ -1,0 +1,321 @@
+//! Dense row-major matrix type — the foundation of the native engine.
+//!
+//! The paper's sweeps run over thousands of (m, n, d, r) configurations with
+//! arbitrary shapes, which fixed-shape PJRT executables cannot serve; this
+//! substrate implements the identical algorithm in pure rust (f64) and is
+//! cross-checked against the PJRT engine in integration tests.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Dense row-major `f64` matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// All-zeros matrix of shape `(rows, cols)`.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix of order `n`.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a function of the index pair.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a row-major data vector (length must equal rows*cols).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length != rows*cols");
+        Mat { rows, cols, data }
+    }
+
+    /// Diagonal matrix from a slice.
+    pub fn from_diag(d: &[f64]) -> Self {
+        let n = d.len();
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = d[i];
+        }
+        m
+    }
+
+    /// Column vector (n x 1) from a slice.
+    pub fn col_vec(v: &[f64]) -> Self {
+        Mat { rows: v.len(), cols: 1, data: v.to_vec() }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Borrow the raw row-major buffer.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutably borrow the raw row-major buffer.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Borrow row `i` as a contiguous slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutably borrow row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        debug_assert!(j < self.cols);
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Set column `j` from a slice.
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    /// New matrix holding columns `j0..j1` (exclusive).
+    pub fn col_block(&self, j0: usize, j1: usize) -> Mat {
+        assert!(j0 <= j1 && j1 <= self.cols);
+        Mat::from_fn(self.rows, j1 - j0, |i, j| self[(i, j0 + j)])
+    }
+
+    /// New matrix holding rows `i0..i1` (exclusive).
+    pub fn row_block(&self, i0: usize, i1: usize) -> Mat {
+        assert!(i0 <= i1 && i1 <= self.rows);
+        let mut m = Mat::zeros(i1 - i0, self.cols);
+        m.data.copy_from_slice(&self.data[i0 * self.cols..i1 * self.cols]);
+        m
+    }
+
+    /// Transpose (allocates).
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// `self + other`.
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// `self - other`.
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// `self * s` (scalar).
+    pub fn scale(&self, s: f64) -> Mat {
+        let data = self.data.iter().map(|a| a * s).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, x| m.max(x.abs()))
+    }
+
+    /// Trace (square only).
+    pub fn trace(&self) -> f64 {
+        assert!(self.is_square());
+        (0..self.rows).map(|i| self[(i, i)]).sum()
+    }
+
+    /// Symmetrize in place: `A <- (A + A^T)/2`.
+    pub fn symmetrize(&mut self) {
+        assert!(self.is_square());
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let v = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = v;
+                self[(j, i)] = v;
+            }
+        }
+    }
+
+    /// Euclidean inner product `<self, other> = tr(self^T other)`.
+    pub fn dot(&self, other: &Mat) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
+    }
+
+    /// Convert to a flat `f32` vector (row-major) — the PJRT input format.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// Build from a flat `f32` buffer (row-major) — the PJRT output format.
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(8);
+        for i in 0..show_r {
+            write!(f, "  ")?;
+            for j in 0..show_c {
+                write!(f, "{:>10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "…" } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_eye_shapes() {
+        let z = Mat::zeros(3, 4);
+        assert_eq!(z.shape(), (3, 4));
+        assert_eq!(z.fro_norm(), 0.0);
+        let i = Mat::eye(5);
+        assert_eq!(i.trace(), 5.0);
+        assert_eq!(i.fro_norm(), 5f64.sqrt());
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        let mut m = Mat::zeros(2, 3);
+        m[(1, 2)] = 7.0;
+        assert_eq!(m[(1, 2)], 7.0);
+        assert_eq!(m.row(1), &[0.0, 0.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Mat::from_fn(3, 5, |i, j| (i * 5 + j) as f64);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose()[(4, 2)], m[(2, 4)]);
+    }
+
+    #[test]
+    fn add_sub_scale() {
+        let a = Mat::from_fn(2, 2, |i, j| (i + j) as f64);
+        let b = a.scale(2.0);
+        assert_eq!(a.add(&a), b);
+        assert_eq!(b.sub(&a), a);
+    }
+
+    #[test]
+    fn col_ops() {
+        let m = Mat::from_fn(3, 3, |i, j| (i * 3 + j) as f64);
+        assert_eq!(m.col(1), vec![1.0, 4.0, 7.0]);
+        let blk = m.col_block(1, 3);
+        assert_eq!(blk.shape(), (3, 2));
+        assert_eq!(blk[(2, 0)], 7.0);
+    }
+
+    #[test]
+    fn symmetrize_works() {
+        let mut m = Mat::from_fn(2, 2, |i, j| (i * 2 + j) as f64);
+        m.symmetrize();
+        assert_eq!(m[(0, 1)], m[(1, 0)]);
+        assert_eq!(m[(0, 1)], 1.5);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let m = Mat::from_fn(4, 3, |i, j| (i as f64) - (j as f64) * 0.5);
+        let v = m.to_f32();
+        let back = Mat::from_f32(4, 3, &v);
+        assert!(m.sub(&back).max_abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_bad_len_panics() {
+        let _ = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,19 @@
+//! From-scratch dense linear-algebra substrate (the "BLAS/LAPACK" of the
+//! native engine). See DESIGN.md S1. Everything the paper's algorithms
+//! need: blocked matrix products, Householder QR, a symmetric eigensolver,
+//! one-sided Jacobi SVD, polar/Procrustes solvers and subspace metrics —
+//! validated module-by-module against naive oracles and algebraic
+//! identities.
+
+pub mod chol;
+pub mod eig;
+pub mod gemm;
+pub mod mat;
+pub mod orthiter;
+pub mod procrustes;
+pub mod qr;
+pub mod shiftinvert;
+pub mod subspace;
+pub mod svd;
+
+pub use mat::Mat;

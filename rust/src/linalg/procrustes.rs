@@ -1,0 +1,150 @@
+//! The orthogonal Procrustes problem — the heart of Algorithm 1.
+//!
+//! `argmin_{Z in O_r} ||V Z - V_ref||_F` has the closed form `Z = P Q^T`
+//! where `P S Q^T = svd(V^T V_ref)` (Higham 1988); equivalently `Z` is the
+//! orthogonal polar factor of the cross-Gram `V^T V_ref`. Two routes are
+//! provided: the exact Jacobi-SVD route (native engine default) and the
+//! Newton–Schulz iteration that mirrors what the fused Pallas kernel
+//! computes on the accelerator (and is faster for well-conditioned
+//! cross-Grams — see `bench_alignment`).
+
+use super::gemm::{at_b, matmul};
+use super::mat::Mat;
+use super::svd::svd;
+
+/// Exact orthogonal polar factor of a square matrix via SVD: `U V^T`.
+pub fn polar_svd(a: &Mat) -> Mat {
+    assert!(a.is_square(), "polar factor needs a square matrix");
+    let (u, _, v) = svd(a);
+    matmul(&u, &v.transpose())
+}
+
+/// Orthogonal polar factor via the Newton–Schulz iteration
+/// `Y <- 0.5 Y (3 I - Y^T Y)` after Frobenius scaling. Quadratic
+/// convergence for sigma(Y0) in (0, sqrt(3)); `iters` ~ 18 reaches f64
+/// roundoff for near-orthogonal inputs (the Procrustes case).
+pub fn polar_newton_schulz(a: &Mat, iters: usize) -> Mat {
+    assert!(a.is_square());
+    let r = a.rows();
+    let fro = a.fro_norm().max(1e-300);
+    let mut y = a.scale(1.0 / fro);
+    let eye3 = Mat::eye(r).scale(3.0);
+    for _ in 0..iters {
+        let g = at_b(&y, &y);
+        let t = eye3.sub(&g);
+        y = matmul(&y, &t).scale(0.5);
+    }
+    y
+}
+
+/// Solve the Procrustes problem: the `Z in O_r` minimizing
+/// `||V Z - V_ref||_F`. Exact SVD route.
+pub fn procrustes_rotation(v: &Mat, v_ref: &Mat) -> Mat {
+    assert_eq!(v.shape(), v_ref.shape());
+    polar_svd(&at_b(v, v_ref))
+}
+
+/// Align `v` with `v_ref`: returns `V Z` with `Z = procrustes_rotation`.
+pub fn procrustes_align(v: &Mat, v_ref: &Mat) -> Mat {
+    matmul(v, &procrustes_rotation(v, v_ref))
+}
+
+/// Procrustean distance `min_{Z in O_r} ||V Z - V_ref||_F`.
+pub fn procrustes_distance(v: &Mat, v_ref: &Mat) -> f64 {
+    procrustes_align(v, v_ref).sub(v_ref).fro_norm()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn polar_of_orthogonal_is_itself() {
+        let mut rng = Pcg64::seed(1);
+        let q = rng.haar_orthogonal(8);
+        assert!(polar_svd(&q).sub(&q).max_abs() < 1e-10);
+        assert!(polar_newton_schulz(&q, 25).sub(&q).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn polar_routes_agree() {
+        let mut rng = Pcg64::seed(2);
+        for noise in [0.01, 0.1, 0.3] {
+            let q = rng.haar_orthogonal(6);
+            let a = q.add(&rng.normal_mat(6, 6).scale(noise));
+            let exact = polar_svd(&a);
+            let ns = polar_newton_schulz(&a, 40);
+            assert!(exact.sub(&ns).max_abs() < 1e-8, "noise={noise}");
+        }
+    }
+
+    #[test]
+    fn polar_output_orthogonal() {
+        let mut rng = Pcg64::seed(3);
+        let a = rng.normal_mat(5, 5);
+        let p = polar_svd(&a);
+        assert!(at_b(&p, &p).sub(&Mat::eye(5)).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn procrustes_is_optimal_over_sampled_rotations() {
+        // the closed-form solution must beat 200 random rotations
+        let mut rng = Pcg64::seed(4);
+        let d = 20;
+        let r = 4;
+        let vref = rng.haar_stiefel(d, r);
+        let v = {
+            let z = rng.haar_orthogonal(r);
+            let noisy = matmul(&vref, &z).add(&rng.normal_mat(d, r).scale(0.1));
+            crate::linalg::qr::orthonormalize(&noisy)
+        };
+        let best = procrustes_distance(&v, &vref);
+        for _ in 0..200 {
+            let z = rng.haar_orthogonal(r);
+            let dist = matmul(&v, &z).sub(&vref).fro_norm();
+            assert!(best <= dist + 1e-9);
+        }
+    }
+
+    #[test]
+    fn r1_reduces_to_sign_fixing() {
+        let mut rng = Pcg64::seed(5);
+        let d = 30;
+        let vref = rng.haar_stiefel(d, 1);
+        let mut v = vref.scale(-1.0).add(&rng.normal_mat(d, 1).scale(0.05));
+        let nrm = v.fro_norm();
+        v = v.scale(1.0 / nrm);
+        let z = procrustes_rotation(&v, &vref);
+        let dot: f64 = (0..d).map(|i| v[(i, 0)] * vref[(i, 0)]).sum();
+        assert!((z[(0, 0)] - dot.signum()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn alignment_never_increases_distance() {
+        let mut rng = Pcg64::seed(6);
+        for _ in 0..20 {
+            let d = 15;
+            let r = 3;
+            let vref = rng.haar_stiefel(d, r);
+            let v = rng.haar_stiefel(d, r);
+            let before = v.sub(&vref).fro_norm();
+            let after = procrustes_align(&v, &vref).sub(&vref).fro_norm();
+            assert!(after <= before + 1e-9);
+        }
+    }
+
+    #[test]
+    fn alignment_rotation_invariant() {
+        // align(V Q, ref) == align(V, ref) for any orthogonal Q
+        let mut rng = Pcg64::seed(7);
+        let d = 25;
+        let r = 5;
+        let vref = rng.haar_stiefel(d, r);
+        let v = rng.haar_stiefel(d, r);
+        let q = rng.haar_orthogonal(r);
+        let a1 = procrustes_align(&v, &vref);
+        let a2 = procrustes_align(&matmul(&v, &q), &vref);
+        assert!(a1.sub(&a2).max_abs() < 1e-9);
+    }
+}

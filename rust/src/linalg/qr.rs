@@ -1,0 +1,144 @@
+//! Householder QR factorization (thin variant) — used for the final
+//! re-orthonormalization step of Algorithm 1 (`qr(V̄)`), random orthogonal
+//! generation, and as the orthonormalizer inside the native eigensolver.
+
+use super::mat::Mat;
+
+/// Thin QR via Householder reflections: `A = Q R` with `Q` (m, n)
+/// orthonormal columns and `R` (n, n) upper triangular. Requires `m >= n`.
+pub fn thin_qr(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "thin_qr requires rows >= cols (got {m}x{n})");
+    let mut r = a.clone();
+    // Householder vectors stored column-by-column (v[k..m] for column k).
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+
+    for k in 0..n {
+        // build the reflector for column k
+        let mut v = vec![0.0; m - k];
+        let mut norm2 = 0.0;
+        for i in k..m {
+            let x = r[(i, k)];
+            v[i - k] = x;
+            norm2 += x * x;
+        }
+        let norm = norm2.sqrt();
+        if norm == 0.0 {
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        let alpha = if v[0] >= 0.0 { -norm } else { norm };
+        v[0] -= alpha;
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            vs.push(v);
+            r[(k, k)] = alpha;
+            continue;
+        }
+        // apply H = I - 2 v v^T / (v^T v) to R[k.., k..]
+        for j in k..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * r[(i, j)];
+            }
+            let beta = 2.0 * dot / vnorm2;
+            for i in k..m {
+                r[(i, j)] -= beta * v[i - k];
+            }
+        }
+        vs.push(v);
+    }
+
+    // accumulate thin Q by applying reflectors (in reverse) to I(m, n)
+    let mut q = Mat::from_fn(m, n, |i, j| if i == j { 1.0 } else { 0.0 });
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * q[(i, j)];
+            }
+            let beta = 2.0 * dot / vnorm2;
+            for i in k..m {
+                q[(i, j)] -= beta * v[i - k];
+            }
+        }
+    }
+
+    // zero the strictly-lower part of R and truncate to n x n
+    let rr = Mat::from_fn(n, n, |i, j| if j >= i { r[(i, j)] } else { 0.0 });
+    (q, rr)
+}
+
+/// Orthonormalize the columns of `a` (thin Q factor only).
+pub fn orthonormalize(a: &Mat) -> Mat {
+    thin_qr(a).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{at_b, matmul};
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Pcg64::seed(1);
+        for &(m, n) in &[(5, 5), (10, 3), (40, 17), (7, 1)] {
+            let a = rng.normal_mat(m, n);
+            let (q, r) = thin_qr(&a);
+            assert_eq!(q.shape(), (m, n));
+            assert_eq!(r.shape(), (n, n));
+            let qr = matmul(&q, &r);
+            assert!(qr.sub(&a).max_abs() < 1e-10, "({m},{n})");
+        }
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Pcg64::seed(2);
+        let a = rng.normal_mat(30, 8);
+        let (q, _) = thin_qr(&a);
+        let qtq = at_b(&q, &q);
+        assert!(qtq.sub(&Mat::eye(8)).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Pcg64::seed(3);
+        let a = rng.normal_mat(12, 6);
+        let (_, r) = thin_qr(&a);
+        for i in 0..6 {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_column_does_not_crash() {
+        let mut a = Mat::zeros(6, 3);
+        for i in 0..6 {
+            a[(i, 0)] = 1.0;
+            a[(i, 2)] = (i as f64) + 1.0;
+        }
+        // column 1 is zero
+        let (q, r) = thin_qr(&a);
+        let qr = matmul(&q, &r);
+        assert!(qr.sub(&a).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn orthonormalize_projector_preserves_span() {
+        let mut rng = Pcg64::seed(4);
+        let a = rng.normal_mat(20, 5);
+        let q = orthonormalize(&a);
+        // span check: residual of projecting A onto span(Q) is zero
+        let proj = matmul(&q, &at_b(&q, &a));
+        assert!(proj.sub(&a).max_abs() < 1e-9);
+    }
+}

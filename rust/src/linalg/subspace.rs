@@ -1,0 +1,122 @@
+//! Subspace metrics: the paper measures everything with
+//! `dist_2(U, V) = ||U U^T - V V^T||_2` (spectral norm of the projector
+//! difference = sin of the largest principal angle) and occasionally the
+//! Frobenius analogue. Both are computed from the singular values of the
+//! r x r cross-Gram `U^T V` — no d x d projector is ever materialized.
+
+use super::gemm::at_b;
+use super::mat::Mat;
+use super::svd::svd;
+
+/// Cosines of the principal angles between the column spans of two
+/// orthonormal panels (descending; length r).
+pub fn principal_angle_cosines(u: &Mat, v: &Mat) -> Vec<f64> {
+    assert_eq!(u.rows(), v.rows(), "ambient dims differ");
+    assert_eq!(u.cols(), v.cols(), "subspace dims differ");
+    let g = at_b(u, v);
+    let (_, s, _) = svd(&g);
+    s.into_iter().map(|x| x.min(1.0)).collect()
+}
+
+/// Spectral subspace distance `||U U^T - V V^T||_2 = sin(theta_max)
+/// = sqrt(1 - sigma_min(U^T V)^2)` for equal-rank orthonormal panels.
+pub fn dist2(u: &Mat, v: &Mat) -> f64 {
+    let cos = principal_angle_cosines(u, v);
+    let c_min = cos.last().copied().unwrap_or(1.0);
+    (1.0 - c_min * c_min).max(0.0).sqrt()
+}
+
+/// Frobenius subspace distance `||U U^T - V V^T||_F
+/// = sqrt(2 r - 2 ||U^T V||_F^2)` (the metric of Fan et al. [20]).
+pub fn dist_fro(u: &Mat, v: &Mat) -> f64 {
+    let r = u.cols() as f64;
+    let g = at_b(u, v);
+    let g2 = g.fro_norm();
+    (2.0 * r - 2.0 * g2 * g2).max(0.0).sqrt()
+}
+
+/// Check a panel has orthonormal columns to within `tol`.
+pub fn is_orthonormal(v: &Mat, tol: f64) -> bool {
+    let g = at_b(v, v);
+    g.sub(&Mat::eye(v.cols())).max_abs() <= tol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn identical_subspaces_zero_distance() {
+        let mut rng = Pcg64::seed(1);
+        let u = rng.haar_stiefel(20, 4);
+        let q = rng.haar_orthogonal(4);
+        let v = matmul(&u, &q); // same span, different basis
+        assert!(dist2(&u, &v) < 1e-5);
+        assert!(dist_fro(&u, &v) < 1e-7);
+    }
+
+    #[test]
+    fn orthogonal_subspaces_distance_one() {
+        // span(e1, e2) vs span(e3, e4)
+        let u = Mat::from_fn(6, 2, |i, j| if i == j { 1.0 } else { 0.0 });
+        let v = Mat::from_fn(6, 2, |i, j| if i == j + 2 { 1.0 } else { 0.0 });
+        assert!((dist2(&u, &v) - 1.0).abs() < 1e-12);
+        assert!((dist_fro(&u, &v) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dist2_matches_projector_norm() {
+        // cross-check against the definition via explicit projectors
+        let mut rng = Pcg64::seed(2);
+        let u = rng.haar_stiefel(12, 3);
+        let v = rng.haar_stiefel(12, 3);
+        let pu = matmul(&u, &u.transpose());
+        let pv = matmul(&v, &v.transpose());
+        let diff = pu.sub(&pv);
+        let direct = crate::linalg::svd::spectral_norm(&diff);
+        assert!((dist2(&u, &v) - direct).abs() < 1e-8);
+    }
+
+    #[test]
+    fn dist_fro_matches_projector_norm() {
+        let mut rng = Pcg64::seed(3);
+        let u = rng.haar_stiefel(10, 2);
+        let v = rng.haar_stiefel(10, 2);
+        let pu = matmul(&u, &u.transpose());
+        let pv = matmul(&v, &v.transpose());
+        assert!((dist_fro(&u, &v) - pu.sub(&pv).fro_norm()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn distances_symmetric() {
+        let mut rng = Pcg64::seed(4);
+        let u = rng.haar_stiefel(15, 5);
+        let v = rng.haar_stiefel(15, 5);
+        assert!((dist2(&u, &v) - dist2(&v, &u)).abs() < 1e-10);
+        assert!((dist_fro(&u, &v) - dist_fro(&v, &u)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn norm_equivalence() {
+        // dist2 <= dist_fro <= sqrt(2 r) dist2
+        let mut rng = Pcg64::seed(5);
+        for _ in 0..10 {
+            let u = rng.haar_stiefel(20, 4);
+            let v = rng.haar_stiefel(20, 4);
+            let d2 = dist2(&u, &v);
+            let df = dist_fro(&u, &v);
+            assert!(d2 <= df + 1e-10);
+            assert!(df <= (8.0f64).sqrt() * d2 + 1e-10);
+        }
+    }
+
+    #[test]
+    fn is_orthonormal_detects() {
+        let mut rng = Pcg64::seed(6);
+        let u = rng.haar_stiefel(10, 3);
+        assert!(is_orthonormal(&u, 1e-10));
+        assert!(!is_orthonormal(&u.scale(1.1), 1e-3));
+    }
+}

@@ -1,0 +1,248 @@
+//! Singular value decomposition via one-sided Jacobi rotations
+//! (Hestenes method). Used by the Procrustes solver (r x r cross-Grams),
+//! the HOPE node-embedding factorization, and the subspace-distance
+//! metrics. Accurate for the small-to-moderate sizes this library needs
+//! (r <= 64, embedding d <= 256); cyclic sweeps until off-diagonal decay.
+
+use super::mat::Mat;
+
+/// Thin SVD `A = U diag(s) V^T` for `A` (m, n) with `m >= n`.
+///
+/// Returns `(U (m, n), s descending (n), V (n, n))`. Singular values are
+/// non-negative; tiny trailing values correspond to rank deficiency and
+/// their `U` columns are completed to an orthonormal set via QR against
+/// the previously converged columns.
+pub fn svd(a: &Mat) -> (Mat, Vec<f64>, Mat) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "svd requires rows >= cols (transpose first)");
+    let mut u = a.clone();
+    let mut v = Mat::eye(n);
+
+    // One-sided Jacobi: orthogonalize pairs of columns of U.
+    let max_sweeps = 60;
+    let eps = 1e-14;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // 2x2 Gram of columns p, q
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt().max(f64::MIN_POSITIVE) {
+                    continue;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(f64::MIN_POSITIVE));
+                // Jacobi rotation eliminating the (p, q) Gram entry
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    u[(i, p)] = c * up - s * uq;
+                    u[(i, q)] = s * up + c * uq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-13 {
+            break;
+        }
+    }
+
+    // column norms are singular values
+    let mut s: Vec<f64> = (0..n)
+        .map(|j| (0..m).map(|i| u[(i, j)] * u[(i, j)]).sum::<f64>().sqrt())
+        .collect();
+    // sort descending, permuting U, V columns
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| s[j].partial_cmp(&s[i]).unwrap());
+    let su = u.clone();
+    let sv = v.clone();
+    let mut s_sorted = vec![0.0; n];
+    for (jj, &j) in order.iter().enumerate() {
+        s_sorted[jj] = s[j];
+        for i in 0..m {
+            u[(i, jj)] = su[(i, j)];
+        }
+        for i in 0..n {
+            v[(i, jj)] = sv[(i, j)];
+        }
+    }
+    s = s_sorted;
+
+    // normalize U columns (rank-deficient columns get an arbitrary
+    // orthonormal completion via modified Gram-Schmidt against prior cols)
+    let tol = s[0].max(1.0) * 1e-300;
+    for j in 0..n {
+        if s[j] > tol && s[j] > 0.0 {
+            for i in 0..m {
+                u[(i, j)] /= s[j];
+            }
+        } else {
+            s[j] = 0.0;
+            // complete: start from a unit coordinate vector, orthogonalize
+            let mut col = vec![0.0; m];
+            for attempt in 0..m {
+                for (i, cv) in col.iter_mut().enumerate() {
+                    *cv = if i == (j + attempt) % m { 1.0 } else { 0.0 };
+                }
+                for prev in 0..j {
+                    let dot: f64 = (0..m).map(|i| col[i] * u[(i, prev)]).sum();
+                    for (i, cv) in col.iter_mut().enumerate() {
+                        *cv -= dot * u[(i, prev)];
+                    }
+                }
+                let nrm: f64 = col.iter().map(|x| x * x).sum::<f64>().sqrt();
+                if nrm > 1e-8 {
+                    for cv in col.iter_mut() {
+                        *cv /= nrm;
+                    }
+                    break;
+                }
+            }
+            for i in 0..m {
+                u[(i, j)] = col[i];
+            }
+        }
+    }
+    (u, s, v)
+}
+
+/// Spectral norm (largest singular value) of an arbitrary matrix.
+/// Power iteration on `A^T A` with a deterministic start; adequate for the
+/// diagnostic uses here (error norms of noise matrices).
+pub fn spectral_norm(a: &Mat) -> f64 {
+    let (m, n) = a.shape();
+    if m == 0 || n == 0 {
+        return 0.0;
+    }
+    if n <= 3 && m >= n {
+        let (_, s, _) = svd(a);
+        return s[0];
+    }
+    let mut x: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64 * 0.7).sin()).collect();
+    let mut norm_prev = 0.0;
+    for _ in 0..300 {
+        // y = A x ; x = A^T y ; normalize
+        let mut y = vec![0.0; m];
+        for i in 0..m {
+            let row = a.row(i);
+            y[i] = row.iter().zip(&x).map(|(p, q)| p * q).sum();
+        }
+        let mut xn = vec![0.0; n];
+        for i in 0..m {
+            let row = a.row(i);
+            let yi = y[i];
+            for (o, &v) in xn.iter_mut().zip(row) {
+                *o += yi * v;
+            }
+        }
+        let nrm = xn.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if nrm == 0.0 {
+            return 0.0;
+        }
+        for v in xn.iter_mut() {
+            *v /= nrm;
+        }
+        x = xn;
+        let cur = nrm.sqrt(); // ||A^T A x|| -> sigma^2, sqrt gives sigma
+        if (cur - norm_prev).abs() <= 1e-12 * cur.max(1.0) {
+            return cur;
+        }
+        norm_prev = cur;
+    }
+    norm_prev
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{at_b, matmul};
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn svd_reconstructs() {
+        let mut rng = Pcg64::seed(1);
+        for &(m, n) in &[(1, 1), (4, 4), (10, 3), (30, 8), (5, 5)] {
+            let a = rng.normal_mat(m, n);
+            let (u, s, v) = svd(&a);
+            let us = Mat::from_fn(m, n, |i, j| u[(i, j)] * s[j]);
+            let rec = matmul(&us, &v.transpose());
+            assert!(rec.sub(&a).max_abs() < 1e-9, "({m},{n})");
+        }
+    }
+
+    #[test]
+    fn factors_orthonormal() {
+        let mut rng = Pcg64::seed(2);
+        let a = rng.normal_mat(20, 6);
+        let (u, _, v) = svd(&a);
+        assert!(at_b(&u, &u).sub(&Mat::eye(6)).max_abs() < 1e-10);
+        assert!(at_b(&v, &v).sub(&Mat::eye(6)).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn singular_values_descending_nonneg() {
+        let mut rng = Pcg64::seed(3);
+        let a = rng.normal_mat(15, 7);
+        let (_, s, _) = svd(&a);
+        for w in s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn known_singular_values() {
+        // diag(3, 2, 1) embedded in a rotation
+        let mut rng = Pcg64::seed(4);
+        let u0 = rng.haar_stiefel(9, 3);
+        let v0 = rng.haar_orthogonal(3);
+        let us = Mat::from_fn(9, 3, |i, j| u0[(i, j)] * [3.0, 2.0, 1.0][j]);
+        let a = matmul(&us, &v0.transpose());
+        let (_, s, _) = svd(&a);
+        assert!((s[0] - 3.0).abs() < 1e-9);
+        assert!((s[1] - 2.0).abs() < 1e-9);
+        assert!((s[2] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rank_deficient() {
+        // two identical columns -> one zero singular value
+        let mut rng = Pcg64::seed(5);
+        let b = rng.normal_mat(10, 1);
+        let a = Mat::from_fn(10, 2, |i, _| b[(i, 0)]);
+        let (u, s, _) = svd(&a);
+        assert!(s[1] < 1e-10);
+        assert!(at_b(&u, &u).sub(&Mat::eye(2)).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn spectral_norm_matches_svd() {
+        let mut rng = Pcg64::seed(6);
+        for &(m, n) in &[(8, 8), (20, 5), (40, 12)] {
+            let a = rng.normal_mat(m, n);
+            let (_, s, _) = svd(&a);
+            let p = spectral_norm(&a);
+            assert!((p - s[0]).abs() < 1e-6 * s[0], "({m},{n}): {p} vs {}", s[0]);
+        }
+    }
+
+    #[test]
+    fn spectral_norm_zero_matrix() {
+        assert_eq!(spectral_norm(&Mat::zeros(5, 4)), 0.0);
+    }
+}

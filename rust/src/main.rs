@@ -1,0 +1,200 @@
+//! `deigen` — the leader entrypoint / CLI.
+//!
+//! Subcommands:
+//! - `exp <fig1..fig10|table1|table2|all> [--quick] [--seed S] [--out DIR]
+//!   [--trials T]` — regenerate a paper figure/table (CSV + console table).
+//! - `cluster [--m M] [--n N] [--d D] [--r R] [--refine K] [--pjrt]
+//!   [--byzantine B] [--median]` — run the threaded leader/worker
+//!   coordinator on a synthetic distributed-PCA workload and report
+//!   accuracy + communication accounting.
+//! - `info` — version, artifact manifest, PJRT platform.
+
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use deigen::config::{Cli, RunOptions};
+use deigen::coordinator::{
+    run_cluster, AggregationRule, ClusterConfig, NetworkModel, NodeBehavior,
+    WorkerData,
+};
+use deigen::linalg::subspace::dist2;
+use deigen::rng::Pcg64;
+use deigen::runtime::{Manifest, NativeEngine, PjrtEngine, SharedPjrtSolver};
+use deigen::synth::{CovModel, SpectrumModel};
+
+const USAGE: &str = "usage:
+  deigen exp <name|all> [--quick] [--seed S] [--out DIR] [--trials T]
+  deigen cluster [--m M] [--n N] [--d D] [--r R] [--refine K] [--pjrt]
+                 [--byzantine B] [--median] [--wan] [--seed S]
+  deigen plot <csv> [--x COL] [--y COL[,COL..]] [--group COL[,COL..]]
+              [--linear-x] [--linear-y]
+  deigen info
+experiments: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 table1 table2";
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let cli = Cli::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    match cli.positional.first().map(|s| s.as_str()) {
+        Some("exp") => {
+            let name = cli
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("exp needs a name\n{USAGE}"))?;
+            let opts = RunOptions::from_cli(&cli).map_err(|e| anyhow::anyhow!(e))?;
+            let t0 = std::time::Instant::now();
+            deigen::experiments::run(name, &opts)?;
+            println!("\n[{}] done in {:?}; CSVs in {}/", name, t0.elapsed(), opts.out_dir);
+            Ok(())
+        }
+        Some("cluster") => cluster_demo(&cli),
+        Some("plot") => plot(&cli),
+        Some("info") => info(),
+        _ => {
+            println!("deigen {} — distributed eigenspace estimation", deigen::version());
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cluster_demo(cli: &Cli) -> anyhow::Result<()> {
+    let m = cli.get_usize("m", 16).map_err(|e| anyhow::anyhow!(e))?;
+    let n = cli.get_usize("n", 400).map_err(|e| anyhow::anyhow!(e))?;
+    let use_pjrt = cli.get_flag("pjrt");
+    // the PJRT local_eig_cov artifacts exist for (d, r) in {(64,8),(128,16)}
+    let d = cli.get_usize("d", if use_pjrt { 64 } else { 100 }).map_err(|e| anyhow::anyhow!(e))?;
+    let r = cli.get_usize("r", if use_pjrt { 8 } else { 4 }).map_err(|e| anyhow::anyhow!(e))?;
+    let refine = cli.get_usize("refine", 0).map_err(|e| anyhow::anyhow!(e))?;
+    let byz = cli.get_usize("byzantine", 0).map_err(|e| anyhow::anyhow!(e))?;
+    let seed = cli.get_u64("seed", 20200504).map_err(|e| anyhow::anyhow!(e))?;
+
+    println!("cluster: m={m} n={n} d={d} r={r} refine={refine} byzantine={byz} engine={}",
+        if use_pjrt { "pjrt" } else { "native" });
+
+    let mut rng = Pcg64::seed(seed);
+    let model = SpectrumModel::M1 { r, lambda_lo: 0.5, lambda_hi: 1.0, delta: 0.2 };
+    let cov = CovModel::draw(&model, d, &mut rng);
+    let truth = cov.principal_subspace();
+
+    let workers: Vec<WorkerData> = (0..m)
+        .map(|i| {
+            let x = cov.sample(n, &mut rng.split(i as u64));
+            WorkerData {
+                observation: CovModel::empirical_cov(&x),
+                behavior: if i > 0 && i <= byz {
+                    NodeBehavior::Byzantine
+                } else {
+                    NodeBehavior::Honest
+                },
+            }
+        })
+        .collect();
+
+    let config = ClusterConfig {
+        r,
+        refine_rounds: refine,
+        aggregation: if cli.get_flag("median") {
+            AggregationRule::CoordinateMedian
+        } else {
+            AggregationRule::Mean
+        },
+        network: if cli.get_flag("wan") {
+            NetworkModel::wan()
+        } else {
+            NetworkModel::datacenter()
+        },
+        seed,
+    };
+
+    let solver: Arc<dyn deigen::runtime::LocalSolver> = if use_pjrt {
+        let engine = PjrtEngine::load_default()?;
+        anyhow::ensure!(
+            engine.supports_cov_shape(d, r),
+            "no local_eig_cov artifact for (d={d}, r={r}); rebuild with aot.py or use native"
+        );
+        Arc::new(SharedPjrtSolver::new(engine))
+    } else {
+        Arc::new(NativeEngine::default())
+    };
+
+    let t0 = std::time::Instant::now();
+    let res = run_cluster(workers, solver, &config);
+    let wall = t0.elapsed();
+
+    println!("estimate dist2 to truth: {:.4}", dist2(&res.estimate, &truth));
+    println!(
+        "comm: rounds={} up={}B ({} msgs) down={}B ({} msgs); simulated net time {:.4}s; wall {:?}",
+        res.comm.rounds,
+        res.comm.bytes_up,
+        res.comm.msgs_up,
+        res.comm.bytes_down,
+        res.comm.msgs_down,
+        res.sim_time_s,
+        wall,
+    );
+    Ok(())
+}
+
+/// `deigen plot <csv> --x n --y dist_alg1[,dist_central] [--group r,m]
+/// [--linear-x] [--linear-y]` — render experiment CSVs as ASCII charts.
+fn plot(cli: &Cli) -> anyhow::Result<()> {
+    use deigen::io::plot::{csv_series, parse_csv, render, PlotCfg};
+    let path = cli
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("plot needs a CSV path"))?;
+    let text = std::fs::read_to_string(path)?;
+    let (header, rows) = parse_csv(&text).map_err(|e| anyhow::anyhow!(e))?;
+    let x = cli.get_str("x", header.first().map(String::as_str).unwrap_or("n"));
+    let ys = cli.get_str("y", header.get(1).map(String::as_str).unwrap_or(""));
+    let groups_owned = cli.get_str("group", "");
+    let groups: Vec<&str> =
+        groups_owned.split(',').filter(|s| !s.is_empty()).collect();
+    let mut all = Vec::new();
+    for y in ys.split(',').filter(|s| !s.is_empty()) {
+        let series =
+            csv_series(&header, &rows, &x, y, &groups).map_err(|e| anyhow::anyhow!(e))?;
+        for mut s in series {
+            if ys.contains(',') {
+                s.name = format!("{y} {}", s.name);
+            }
+            all.push(s);
+        }
+    }
+    let cfg = PlotCfg {
+        log_x: !cli.get_flag("linear-x"),
+        log_y: !cli.get_flag("linear-y"),
+        title: format!("{path}: {ys} vs {x}"),
+        ..Default::default()
+    };
+    println!("{}", render(&all, &cfg));
+    Ok(())
+}
+
+fn info() -> anyhow::Result<()> {
+    println!("deigen {}", deigen::version());
+    let dir = Manifest::default_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts ({}):", dir.display());
+            for e in &m.entries {
+                println!("  {:<32} inputs {:?} -> outputs {:?}", e.key, e.inputs, e.outputs);
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e}); run `make artifacts`"),
+    }
+    match PjrtEngine::load_default() {
+        Ok(engine) => println!("PJRT platform: {}", engine.platform()),
+        Err(e) => println!("PJRT: unavailable ({e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,198 @@
+//! Deterministic random-number substrate (no `rand` crate offline).
+//!
+//! Everything stochastic in the library — sample draws, Haar-random
+//! orthogonal matrices, graph censoring, Byzantine injection — flows
+//! through [`Pcg64`], so every experiment is reproducible from a single
+//! `u64` seed recorded in its CSV header.
+
+mod pcg;
+
+pub use pcg::Pcg64;
+
+use crate::linalg::{qr::thin_qr, Mat};
+
+impl Pcg64 {
+    /// Standard normal via the Box–Muller transform (uses both outputs).
+    pub fn next_normal(&mut self) -> f64 {
+        match self.cached_normal.take() {
+            Some(z) => z,
+            None => {
+                // u1 in (0, 1] to avoid ln(0)
+                let u1 = 1.0 - self.next_f64();
+                let u2 = self.next_f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                let theta = 2.0 * std::f64::consts::PI * u2;
+                self.cached_normal = Some(r * theta.sin());
+                r * theta.cos()
+            }
+        }
+    }
+
+    /// Vector of i.i.d. standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.next_normal()).collect()
+    }
+
+    /// Matrix with i.i.d. standard normal entries.
+    pub fn normal_mat(&mut self, rows: usize, cols: usize) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| self.next_normal())
+    }
+
+    /// Uniform integer in `[0, n)`.
+    pub fn next_below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        // multiply-shift; bias is negligible for n << 2^64
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Bernoulli draw with success probability `p`.
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Haar-distributed random orthogonal matrix via QR of a Gaussian with
+    /// sign correction (Mezzadri 2007): Q diag(sign(diag(R))).
+    pub fn haar_orthogonal(&mut self, n: usize) -> Mat {
+        let g = self.normal_mat(n, n);
+        let (mut q, r) = thin_qr(&g);
+        for j in 0..n {
+            if r[(j, j)] < 0.0 {
+                for i in 0..n {
+                    q[(i, j)] = -q[(i, j)];
+                }
+            }
+        }
+        q
+    }
+
+    /// Random (d, r) matrix with orthonormal columns, Haar on the Stiefel
+    /// manifold (QR of a Gaussian panel with sign correction).
+    pub fn haar_stiefel(&mut self, d: usize, r: usize) -> Mat {
+        assert!(r <= d);
+        let g = self.normal_mat(d, r);
+        let (mut q, rr) = thin_qr(&g);
+        for j in 0..r {
+            if rr[(j, j)] < 0.0 {
+                for i in 0..d {
+                    q[(i, j)] = -q[(i, j)];
+                }
+            }
+        }
+        q
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// `k` distinct indices sampled uniformly from `[0, n)`.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::at_b;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Pcg64::seed(42);
+        let mut b = Pcg64::seed(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg64::seed(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut rng = Pcg64::seed(7);
+        let n = 50_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.next_f64();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seed(11);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn haar_orthogonal_is_orthogonal() {
+        let mut rng = Pcg64::seed(3);
+        let q = rng.haar_orthogonal(20);
+        let qtq = at_b(&q, &q);
+        assert!(qtq.sub(&Mat::eye(20)).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn stiefel_is_orthonormal() {
+        let mut rng = Pcg64::seed(5);
+        let q = rng.haar_stiefel(30, 7);
+        let qtq = at_b(&q, &q);
+        assert!(qtq.sub(&Mat::eye(7)).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn next_below_in_range_and_covers() {
+        let mut rng = Pcg64::seed(9);
+        let mut seen = [false; 7];
+        for _ in 0..500 {
+            let v = rng.next_below(7);
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seed(13);
+        let mut xs: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Pcg64::seed(17);
+        let idx = rng.sample_indices(100, 10);
+        assert_eq!(idx.len(), 10);
+        let mut s = idx.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 10);
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut rng = Pcg64::seed(19);
+        let hits = (0..20_000).filter(|_| rng.bernoulli(0.3)).count();
+        let rate = hits as f64 / 20_000.0;
+        assert!((rate - 0.3).abs() < 0.02, "rate={rate}");
+    }
+}

@@ -1,0 +1,144 @@
+//! Artifact manifest: the typed view of `artifacts/manifest.json` written
+//! by `python/compile/aot.py`. Maps (graph name, input shapes) to the HLO
+//! text file the PJRT engine should compile.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::io::{parse_json, Json};
+
+/// One AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    /// Graph name: `local_eig`, `local_eig_cov`, `procrustes`, `gram`.
+    pub name: String,
+    /// Unique key (`name__dims`).
+    pub key: String,
+    /// HLO text file, relative to the artifact dir.
+    pub file: String,
+    /// Input shapes in argument order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes in tuple order.
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// The parsed manifest plus its base directory.
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("shape is not an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("non-numeric dim")))
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let doc = parse_json(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let arr = doc.as_arr().ok_or_else(|| anyhow!("manifest is not an array"))?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for e in arr {
+            entries.push(ArtifactEntry {
+                name: e
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing name"))?
+                    .to_string(),
+                key: e
+                    .get("key")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing key"))?
+                    .to_string(),
+                file: e
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing file"))?
+                    .to_string(),
+                inputs: e
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("entry missing inputs"))?
+                    .iter()
+                    .map(shape_of)
+                    .collect::<Result<_>>()?,
+                outputs: e
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().map(shape_of).collect::<Result<_>>())
+                    .transpose()?
+                    .unwrap_or_default(),
+            });
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    /// Default artifact dir: `$DEIGEN_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("DEIGEN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Find the artifact for a graph name + exact input shapes.
+    pub fn find(&self, name: &str, inputs: &[Vec<usize>]) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name && e.inputs == inputs)
+    }
+
+    /// All (d, r) shapes for which a `local_eig_cov` artifact exists.
+    pub fn local_eig_cov_shapes(&self) -> Vec<(usize, usize)> {
+        self.entries
+            .iter()
+            .filter(|e| e.name == "local_eig_cov")
+            .map(|e| (e.inputs[1][0], e.inputs[1][1]))
+            .collect()
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.entries.is_empty());
+        let gram = m.find("gram", &[vec![500, 64]]);
+        assert!(gram.is_some());
+        for e in &m.entries {
+            assert!(m.path(e).exists(), "{} missing", e.file);
+        }
+        assert!(!m.local_eig_cov_shapes().is_empty());
+    }
+
+    #[test]
+    fn find_misses_unknown_shape() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.find("gram", &[vec![7, 7]]).is_none());
+    }
+}

@@ -1,0 +1,19 @@
+//! Runtime layer (DESIGN.md S6): loading and executing the AOT-compiled
+//! HLO artifacts via the PJRT C API (`xla` crate), plus the interchangeable
+//! native engine.
+//!
+//! `make artifacts` (Python, build time only) emits `artifacts/*.hlo.txt`
+//! and `artifacts/manifest.json`; [`PjrtEngine`] compiles them once on the
+//! PJRT CPU client and serves `local_eig` / `procrustes` / `gram` calls
+//! from the L3 hot path with zero Python involvement. [`NativeEngine`]
+//! implements the identical algorithm in pure rust for arbitrary shapes;
+//! the two are cross-checked in `rust/tests/pjrt_vs_native.rs`.
+
+mod engine;
+mod manifest;
+#[allow(clippy::module_inception)]
+mod pjrt;
+
+pub use engine::{LocalSolver, NativeEngine, ShiftInvertEngine};
+pub use manifest::{ArtifactEntry, Manifest};
+pub use pjrt::{PjrtEngine, SharedPjrtSolver};

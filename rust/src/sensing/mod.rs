@@ -1,0 +1,148 @@
+//! Quadratic-sensing substrate (§3.7): measurements
+//! `y_i = ||X_sharp^T a_i||^2 + noise`, the truncated spectral-init matrix
+//! `D_N = (1/N) sum_i T(y_i) a_i a_i^T`, and the distributed spectral
+//! initialization that Algorithm 2 refines.
+
+use crate::linalg::{gemm::syrk_scaled, Mat};
+use crate::rng::Pcg64;
+
+/// A quadratic-sensing ground truth `X_sharp in O_{d,r}` plus measurement
+/// parameters.
+pub struct SensingInstance {
+    /// Ground-truth orthonormal (d, r) signal.
+    pub x_sharp: Mat,
+    /// Additive measurement-noise std (0 for the paper's experiment).
+    pub noise_std: f64,
+}
+
+impl SensingInstance {
+    /// Draw `X_sharp ~ Haar(O_{d,r})`.
+    pub fn draw(d: usize, r: usize, noise_std: f64, rng: &mut Pcg64) -> Self {
+        SensingInstance { x_sharp: rng.haar_stiefel(d, r), noise_std }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x_sharp.rows()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.x_sharp.cols()
+    }
+
+    /// Draw `n` measurements: returns `(A (n, d) design rows, y (n))`.
+    pub fn measure(&self, n: usize, rng: &mut Pcg64) -> (Mat, Vec<f64>) {
+        let d = self.dim();
+        let r = self.rank();
+        let a = rng.normal_mat(n, d);
+        let y = (0..n)
+            .map(|i| {
+                let row = a.row(i);
+                let mut acc = 0.0;
+                for j in 0..r {
+                    let mut dot = 0.0;
+                    for l in 0..d {
+                        dot += self.x_sharp[(l, j)] * row[l];
+                    }
+                    acc += dot * dot;
+                }
+                acc + self.noise_std * rng.next_normal()
+            })
+            .collect();
+        (a, y)
+    }
+
+    /// Recovery metric of Fig 10: `||(I - X X^T) X0||_2` — how much of the
+    /// estimate leaks out of the true column space.
+    pub fn leakage(&self, x0: &Mat) -> f64 {
+        // (I - X X^T) X0 = X0 - X (X^T X0)
+        let xt_x0 = crate::linalg::gemm::at_b(&self.x_sharp, x0);
+        let proj = crate::linalg::gemm::matmul(&self.x_sharp, &xt_x0);
+        crate::linalg::svd::spectral_norm(&x0.sub(&proj))
+    }
+}
+
+/// Truncated spectral-init matrix `D_N = (1/N) sum T(y_i) a_i a_i^T` with
+/// `T(y) = y * 1{y <= tau}`; `tau = 3 * mean(y)` (the standard truncation
+/// that tames heavy-tailed `y a a^T` terms — cf. Chen & Candès 2015).
+pub fn spectral_matrix(a: &Mat, y: &[f64]) -> Mat {
+    assert_eq!(a.rows(), y.len());
+    let n = a.rows();
+    let mean_y = y.iter().sum::<f64>() / n as f64;
+    let tau = 3.0 * mean_y;
+    // scale rows by sqrt(T(y_i)) then SYRK
+    let mut scaled = a.clone();
+    for i in 0..n {
+        let w = if y[i] <= tau { y[i].max(0.0) } else { 0.0 };
+        let s = w.sqrt();
+        for v in scaled.row_mut(i) {
+            *v *= s;
+        }
+    }
+    syrk_scaled(&scaled, n as f64)
+}
+
+/// Local spectral initialization: top-r eigenspace of the local `D` matrix.
+pub fn local_init(a: &Mat, y: &[f64], r: usize) -> Mat {
+    let d = spectral_matrix(a, y);
+    crate::linalg::eig::top_eigvecs(&d, r).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::subspace::dist2;
+
+    #[test]
+    fn measurements_nonnegative_noiseless() {
+        let mut rng = Pcg64::seed(1);
+        let inst = SensingInstance::draw(20, 3, 0.0, &mut rng);
+        let (_, y) = inst.measure(100, &mut rng);
+        assert!(y.iter().all(|&v| v >= 0.0));
+        // E[y] = r for orthonormal X_sharp and standard normal a
+        let mean = y.iter().sum::<f64>() / 100.0;
+        assert!((mean - 3.0).abs() < 1.0, "mean {mean}");
+    }
+
+    #[test]
+    fn spectral_init_recovers_subspace_with_many_samples() {
+        let mut rng = Pcg64::seed(2);
+        let d = 30;
+        let r = 2;
+        let inst = SensingInstance::draw(d, r, 0.0, &mut rng);
+        let (a, y) = inst.measure(40 * r * d, &mut rng);
+        let x0 = local_init(&a, &y, r);
+        let dist = dist2(&x0, &inst.x_sharp);
+        assert!(dist < 0.6, "dist {dist} (weak recovery regime)");
+        assert!(inst.leakage(&x0) < 0.6);
+    }
+
+    #[test]
+    fn leakage_zero_for_truth() {
+        let mut rng = Pcg64::seed(3);
+        let inst = SensingInstance::draw(15, 4, 0.0, &mut rng);
+        assert!(inst.leakage(&inst.x_sharp) < 1e-10);
+    }
+
+    #[test]
+    fn leakage_one_for_orthogonal_complement() {
+        let mut rng = Pcg64::seed(4);
+        let inst = SensingInstance::draw(20, 2, 0.0, &mut rng);
+        // build a panel orthogonal to x_sharp via QR of (I - XX^T) G
+        let g = rng.normal_mat(20, 2);
+        let xtg = crate::linalg::gemm::at_b(&inst.x_sharp, &g);
+        let resid = g.sub(&crate::linalg::gemm::matmul(&inst.x_sharp, &xtg));
+        let q = crate::linalg::qr::orthonormalize(&resid);
+        assert!((inst.leakage(&q) - 1.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn truncation_drops_outliers() {
+        // one giant y must not dominate D_N
+        let mut rng = Pcg64::seed(5);
+        let a = rng.normal_mat(200, 10);
+        let mut y: Vec<f64> = (0..200).map(|_| 1.0 + 0.1 * rng.next_f64()).collect();
+        y[0] = 1e6;
+        let d = spectral_matrix(&a, &y);
+        assert!(d.max_abs() < 100.0, "outlier leaked: {}", d.max_abs());
+    }
+}

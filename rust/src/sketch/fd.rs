@@ -1,0 +1,187 @@
+//! Frequent Directions (Ghashami et al. 2016): a deterministic, mergeable
+//! matrix sketch. Each machine streams its samples into an `l x d` sketch;
+//! sketches are MERGEABLE (concatenate + shrink), so the coordinator can
+//! combine m sketches into one and eigendecompose `B^T B` — an alternative
+//! distributed low-rank pipeline the paper's related work contrasts with.
+//!
+//! Guarantee: for sketch size `l`, `0 <= x^T (A^T A - B^T B) x <=
+//! ||A||_F^2 / (l - k)` for all unit `x` and any `k < l`.
+
+use crate::linalg::eig::sym_eig;
+use crate::linalg::gemm::syrk_scaled;
+use crate::linalg::Mat;
+
+/// A Frequent Directions sketch of a stream of d-dimensional rows.
+pub struct FrequentDirections {
+    /// Sketch buffer (l, d); the invariant is that at most `l - 1` rows
+    /// are non-zero after each shrink.
+    b: Mat,
+    /// Number of buffered (unshrunk) rows.
+    filled: usize,
+    /// Sketch size l.
+    l: usize,
+}
+
+impl FrequentDirections {
+    /// New sketch with `l` rows over dimension `d` (`l >= 2`).
+    pub fn new(l: usize, d: usize) -> Self {
+        assert!(l >= 2);
+        FrequentDirections { b: Mat::zeros(l, d), filled: 0, l }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.b.cols()
+    }
+
+    /// Append one row, shrinking when the buffer fills.
+    pub fn insert(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.dim());
+        if self.filled == self.l {
+            self.shrink();
+        }
+        self.b.row_mut(self.filled).copy_from_slice(row);
+        self.filled += 1;
+    }
+
+    /// Append every row of a sample block.
+    pub fn insert_all(&mut self, x: &Mat) {
+        for i in 0..x.rows() {
+            self.insert(x.row(i));
+        }
+    }
+
+    /// The FD shrink step: SVD the buffer, subtract the (l/2)-th squared
+    /// singular value from all squared singular values, rebuild.
+    fn shrink(&mut self) {
+        let d = self.dim();
+        // eigendecompose B^T B = V diag(s^2) V^T (d x d; fine for the
+        // moderate d of our experiments), then B <- diag(s') V^T
+        let btb = syrk_scaled(&self.b, 1.0);
+        let (vals, vecs) = sym_eig(&btb);
+        // take the top l-1 directions, shrink by the median energy
+        let mut s2: Vec<f64> = (0..self.l.min(d))
+            .map(|j| vals[d - 1 - j].max(0.0))
+            .collect();
+        let delta = s2[self.l / 2 - 1.min(self.l / 2)].min(*s2.last().unwrap_or(&0.0));
+        let delta = if self.l / 2 < s2.len() { s2[self.l / 2] } else { delta };
+        for v in s2.iter_mut() {
+            *v = (*v - delta).max(0.0);
+        }
+        let mut nb = Mat::zeros(self.l, d);
+        let mut kept = 0;
+        for (j, &e2) in s2.iter().enumerate() {
+            if e2 > 0.0 {
+                let s = e2.sqrt();
+                for c in 0..d {
+                    nb[(kept, c)] = s * vecs[(c, d - 1 - j)];
+                }
+                kept += 1;
+            }
+        }
+        self.b = nb;
+        self.filled = kept;
+    }
+
+    /// Merge another sketch into this one (the mergeability property).
+    pub fn merge(&mut self, other: &FrequentDirections) {
+        assert_eq!(self.dim(), other.dim());
+        for i in 0..other.filled {
+            self.insert(other.b.row(i));
+        }
+    }
+
+    /// The sketch's estimate of `A^T A` (unnormalized second moment).
+    pub fn covariance_estimate(&self) -> Mat {
+        let mut view = self.b.clone();
+        // only the filled rows contribute
+        for i in self.filled..self.l {
+            for v in view.row_mut(i) {
+                *v = 0.0;
+            }
+        }
+        syrk_scaled(&view, 1.0)
+    }
+
+    /// Top-r eigenbasis of the sketched second moment.
+    pub fn leading_subspace(&self, r: usize) -> Mat {
+        crate::linalg::eig::top_eigvecs(&self.covariance_estimate(), r).0
+    }
+
+    /// Wire size of the sketch in bytes (f32 entries) — for the
+    /// communication-accuracy trade-off bench.
+    pub fn wire_bytes(&self) -> usize {
+        4 * self.l * self.dim()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::subspace::dist2;
+    use crate::linalg::svd::spectral_norm;
+    use crate::rng::Pcg64;
+    use crate::synth::{CovModel, SpectrumModel};
+
+    #[test]
+    fn fd_error_bound_holds() {
+        let mut rng = Pcg64::seed(1);
+        let (n, d, l) = (400usize, 20usize, 12usize);
+        let x = rng.normal_mat(n, d);
+        let mut fd = FrequentDirections::new(l, d);
+        fd.insert_all(&x);
+        let exact = syrk_scaled(&x, 1.0);
+        let est = fd.covariance_estimate();
+        let diff = exact.sub(&est);
+        let err = spectral_norm(&diff);
+        let fro2: f64 = x.as_slice().iter().map(|v| v * v).sum();
+        // guarantee with k = l/2
+        let bound = fro2 / (l as f64 / 2.0);
+        assert!(err <= bound, "err {err} vs bound {bound}");
+        // FD always UNDERestimates: A^T A - B^T B is PSD
+        let (vals, _) = sym_eig(&diff);
+        assert!(vals[0] > -1e-6, "not PSD: {}", vals[0]);
+    }
+
+    #[test]
+    fn fd_recovers_planted_subspace() {
+        let mut rng = Pcg64::seed(2);
+        let model = SpectrumModel::M1 { r: 3, lambda_lo: 0.6, lambda_hi: 1.0, delta: 0.4 };
+        let cov = CovModel::draw(&model, 24, &mut rng);
+        let x = cov.sample(2000, &mut rng);
+        let mut fd = FrequentDirections::new(12, 24);
+        fd.insert_all(&x);
+        let v = fd.leading_subspace(3);
+        let dist = dist2(&v, &cov.principal_subspace());
+        assert!(dist < 0.25, "dist {dist}");
+    }
+
+    #[test]
+    fn merged_sketches_approximate_union() {
+        let mut rng = Pcg64::seed(3);
+        let d = 16;
+        let x1 = rng.normal_mat(300, d);
+        let x2 = rng.normal_mat(300, d);
+        let mut fd1 = FrequentDirections::new(10, d);
+        fd1.insert_all(&x1);
+        let mut fd2 = FrequentDirections::new(10, d);
+        fd2.insert_all(&x2);
+        fd1.merge(&fd2);
+
+        let mut union = Mat::zeros(600, d);
+        for i in 0..300 {
+            union.row_mut(i).copy_from_slice(x1.row(i));
+            union.row_mut(300 + i).copy_from_slice(x2.row(i));
+        }
+        let exact = syrk_scaled(&union, 1.0);
+        let err = spectral_norm(&exact.sub(&fd1.covariance_estimate()));
+        let fro2: f64 = union.as_slice().iter().map(|v| v * v).sum();
+        assert!(err <= fro2 / 4.0, "merged err {err}"); // generous k=~4
+    }
+
+    #[test]
+    fn sketch_smaller_than_data() {
+        let fd = FrequentDirections::new(8, 100);
+        assert_eq!(fd.wire_bytes(), 4 * 8 * 100);
+        assert!(fd.wire_bytes() < 4 * 1000 * 100); // vs shipping 1000 samples
+    }
+}

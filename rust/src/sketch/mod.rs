@@ -1,0 +1,12 @@
+//! Sketching substrate: the Frequent Directions baseline ([25] in the
+//! paper's related work — Ghashami, Liberty, Phillips & Woodruff 2016) and
+//! panel quantization for communication compression (the paper's §1.2
+//! notes that projector-averaging methods "can be augmented by sketching
+//! to reduce the communication cost"; this module quantifies that
+//! trade-off for Procrustes fixing too).
+
+mod fd;
+mod quant;
+
+pub use fd::FrequentDirections;
+pub use quant::{dequantize_panel, quantize_panel, Codec, QuantizedPanel};

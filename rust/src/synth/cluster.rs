@@ -1,0 +1,90 @@
+//! Gaussian cluster mixture — the Fig-1 workload. The paper projects MNIST
+//! onto its top-2 principal components to visualize how naive averaging
+//! destroys the projection while Procrustes alignment preserves it; MNIST
+//! is not available offline, so we build a mixture of `k` well-separated
+//! Gaussian clusters in high dimension whose top PCs likewise carry the
+//! cluster geometry (substitution ledger, DESIGN.md).
+
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+
+/// Mixture of `k` isotropic Gaussian clusters with means in a low-dim
+/// subspace of R^d.
+pub struct ClusterMixture {
+    /// Cluster means (k, d).
+    pub means: Mat,
+    /// Per-coordinate noise std.
+    pub noise: f64,
+}
+
+impl ClusterMixture {
+    /// Means are `scale / sqrt(c + 1) * (random orthonormal directions)`:
+    /// the decaying per-direction scales give the population second moment
+    /// a decaying spectrum (like MNIST's), so leading principal subspaces
+    /// are well-separated by an eigengap.
+    pub fn draw(k: usize, d: usize, scale: f64, noise: f64, rng: &mut Pcg64) -> Self {
+        let basis = rng.haar_stiefel(d, k);
+        let means =
+            Mat::from_fn(k, d, |c, j| basis[(j, c)] * scale / ((c + 1) as f64).sqrt());
+        ClusterMixture { means, noise }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.means.cols()
+    }
+
+    /// Draw `n` samples; returns `(X (n, d), labels)`.
+    pub fn sample(&self, n: usize, rng: &mut Pcg64) -> (Mat, Vec<usize>) {
+        let (k, d) = self.means.shape();
+        let mut x = Mat::zeros(n, d);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = rng.next_below(k);
+            labels.push(c);
+            let mu = self.means.row(c);
+            let row = x.row_mut(i);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = mu[j] + self.noise * rng.next_normal();
+            }
+        }
+        (x, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::syrk_scaled;
+    use crate::linalg::subspace::dist2;
+
+    #[test]
+    fn top_pcs_capture_cluster_geometry() {
+        let mut rng = Pcg64::seed(1);
+        let mix = ClusterMixture::draw(3, 40, 5.0, 0.5, &mut rng);
+        let (x, _) = mix.sample(4000, &mut rng);
+        let c = syrk_scaled(&x, x.rows() as f64);
+        let v = crate::linalg::eig::top_eigvecs(&c, 3).0;
+        // span of the means is (close to) the top-3 eigenspace
+        let means_basis = crate::linalg::qr::orthonormalize(&mix.means.transpose());
+        assert!(dist2(&v, &means_basis) < 0.15);
+    }
+
+    #[test]
+    fn labels_match_nearest_mean() {
+        let mut rng = Pcg64::seed(2);
+        let mix = ClusterMixture::draw(4, 20, 8.0, 0.3, &mut rng);
+        let (x, labels) = mix.sample(200, &mut rng);
+        for i in 0..200 {
+            let row = x.row(i);
+            let mut best = (f64::INFINITY, 0);
+            for c in 0..4 {
+                let mu = mix.means.row(c);
+                let d2: f64 = row.iter().zip(mu).map(|(a, b)| (a - b) * (a - b)).sum();
+                if d2 < best.0 {
+                    best = (d2, c);
+                }
+            }
+            assert_eq!(best.1, labels[i]);
+        }
+    }
+}

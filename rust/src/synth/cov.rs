@@ -1,0 +1,251 @@
+//! Covariance models (M1) and (M2) from §3 of the paper, plus the Gaussian
+//! sampler `x ~ N(0, Sigma)` with `Sigma = U T U^T`, `U ~ Haar(O_d)`.
+
+use crate::linalg::{gemm::a_bt, gemm::matmul, Mat};
+use crate::rng::Pcg64;
+
+/// Eigenvalue-profile generator for the population covariance.
+#[derive(Clone, Debug)]
+pub enum SpectrumModel {
+    /// (M1): the r principal eigenvalues are linearly spaced in
+    /// `[lambda_lo, lambda_hi]`; trailing eigenvalues decay geometrically
+    /// from `lambda_lo - delta` with ratio 0.9. Eigengap exactly `delta`.
+    M1 { r: usize, lambda_lo: f64, lambda_hi: f64, delta: f64 },
+    /// (M2): all r principal eigenvalues are 1; trailing eigenvalues are
+    /// `(1 - delta) * alpha^{i - r}` where `alpha` solves
+    /// `(1 - delta) / (1 - alpha) = r_star - r`, pinning the intrinsic
+    /// dimension near `r_star`. Eigengap exactly `delta`.
+    M2 { r: usize, r_star: f64, delta: f64 },
+}
+
+impl SpectrumModel {
+    /// The eigenvalue sequence `tau_1 >= ... >= tau_d` of the model.
+    pub fn taus(&self, d: usize) -> Vec<f64> {
+        match *self {
+            SpectrumModel::M1 { r, lambda_lo, lambda_hi, delta } => {
+                assert!(r >= 1 && r <= d);
+                (1..=d)
+                    .map(|i| {
+                        if i <= r {
+                            if r == 1 {
+                                lambda_hi
+                            } else {
+                                lambda_hi
+                                    - (lambda_hi - lambda_lo) * (i as f64 - 1.0)
+                                        / (r as f64 - 1.0)
+                            }
+                        } else {
+                            (lambda_lo - delta) * 0.9f64.powi((i - r) as i32 - 1)
+                        }
+                    })
+                    .collect()
+            }
+            SpectrumModel::M2 { r, r_star, delta } => {
+                assert!(r >= 1 && r <= d);
+                assert!(
+                    r_star - r as f64 > 1.0 - delta,
+                    "need r_star - r > 1 - delta for alpha in (0,1)"
+                );
+                let alpha = 1.0 - (1.0 - delta) / (r_star - r as f64);
+                // NOTE: the paper prints tau_i = (1-delta) alpha^{i-r}, but its
+                // alpha-equation (1-delta)/(1-alpha) = r_star - r and its claim
+                // that "the eigengap is exactly delta" are both only consistent
+                // with exponent i - r - 1 (so tau_{r+1} = 1 - delta). We follow
+                // the consistent reading.
+                (1..=d)
+                    .map(|i| {
+                        if i <= r {
+                            1.0
+                        } else {
+                            (1.0 - delta) * alpha.powi((i - r) as i32 - 1)
+                        }
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Principal-subspace dimension r of the model.
+    pub fn r(&self) -> usize {
+        match *self {
+            SpectrumModel::M1 { r, .. } | SpectrumModel::M2 { r, .. } => r,
+        }
+    }
+
+    /// The designed eigengap `tau_r - tau_{r+1}`.
+    pub fn gap(&self, d: usize) -> f64 {
+        let t = self.taus(d);
+        let r = self.r();
+        t[r - 1] - t[r]
+    }
+}
+
+/// Intrinsic dimension `intdim(A) = tr(A) / ||A||_2` of a PSD spectrum.
+pub fn intdim(taus: &[f64]) -> f64 {
+    let top = taus.iter().fold(0.0f64, |m, &x| m.max(x));
+    if top == 0.0 {
+        return 0.0;
+    }
+    taus.iter().sum::<f64>() / top
+}
+
+/// A concrete population covariance `Sigma = U diag(taus) U^T` together
+/// with everything the experiments need: exact principal subspace, square
+/// root factor for sampling, spectrum diagnostics.
+pub struct CovModel {
+    /// Haar-random eigenbasis (d, d); column i pairs with `taus[i]`.
+    pub u: Mat,
+    /// Eigenvalues, descending.
+    pub taus: Vec<f64>,
+    /// Target subspace dimension.
+    pub r: usize,
+}
+
+impl CovModel {
+    /// Draw `Sigma = U T U^T` with `U ~ Haar(O_d)` for the given spectrum.
+    pub fn draw(model: &SpectrumModel, d: usize, rng: &mut Pcg64) -> Self {
+        let taus = model.taus(d);
+        let u = rng.haar_orthogonal(d);
+        CovModel { u, taus, r: model.r() }
+    }
+
+    /// Ambient dimension.
+    pub fn dim(&self) -> usize {
+        self.u.rows()
+    }
+
+    /// The true principal r-dimensional eigenbasis `V_1` (d, r).
+    pub fn principal_subspace(&self) -> Mat {
+        self.u.col_block(0, self.r)
+    }
+
+    /// Dense `Sigma` (d, d) — for diagnostics and the Theorem-1 bound checks.
+    pub fn sigma(&self) -> Mat {
+        let ut = Mat::from_fn(self.dim(), self.dim(), |i, j| self.u[(i, j)] * self.taus[j]);
+        a_bt(&ut, &self.u)
+    }
+
+    /// Eigengap `tau_r - tau_{r+1}`.
+    pub fn gap(&self) -> f64 {
+        self.taus[self.r - 1] - self.taus[self.r]
+    }
+
+    /// Intrinsic dimension of this covariance.
+    pub fn intdim(&self) -> f64 {
+        intdim(&self.taus)
+    }
+
+    /// Draw `n` i.i.d. samples `x ~ N(0, Sigma)` as the rows of an (n, d)
+    /// matrix: `X = G diag(sqrt(taus)) U^T` with `G` standard normal.
+    pub fn sample(&self, n: usize, rng: &mut Pcg64) -> Mat {
+        let d = self.dim();
+        let mut g = rng.normal_mat(n, d);
+        for i in 0..n {
+            let row = g.row_mut(i);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v *= self.taus[j].sqrt();
+            }
+        }
+        a_bt(&g, &self.u)
+    }
+
+    /// Empirical second-moment matrix of a sample block (the node-local
+    /// `X-hat^i` of Eq. (2)).
+    pub fn empirical_cov(x: &Mat) -> Mat {
+        crate::linalg::gemm::syrk_scaled(x, x.rows() as f64)
+    }
+}
+
+/// Dense sanity product used in tests: `U diag(t) U^T`.
+#[allow(dead_code)]
+fn udut(u: &Mat, t: &[f64]) -> Mat {
+    let ut = Mat::from_fn(u.rows(), u.cols(), |i, j| u[(i, j)] * t[j]);
+    matmul(&ut, &u.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eig::eigengap;
+    use crate::linalg::subspace::dist2;
+
+    #[test]
+    fn m1_spectrum_shape() {
+        let m = SpectrumModel::M1 { r: 4, lambda_lo: 0.5, lambda_hi: 1.0, delta: 0.2 };
+        let t = m.taus(50);
+        assert!((t[0] - 1.0).abs() < 1e-12);
+        assert!((t[3] - 0.5).abs() < 1e-12);
+        assert!((t[4] - 0.3).abs() < 1e-12); // (0.5 - 0.2) * 0.9^0
+        assert!((m.gap(50) - 0.2).abs() < 1e-12);
+        // descending
+        for w in t.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn m2_intdim_close_to_target() {
+        for r_star in [16.0, 24.0, 32.0] {
+            let m = SpectrumModel::M2 { r: 5, r_star, delta: 0.25 };
+            let t = m.taus(250);
+            let id = intdim(&t);
+            // truncation at d slightly reduces the tail mass
+            assert!(
+                (id - r_star).abs() < 1.5,
+                "r_star={r_star} intdim={id}"
+            );
+            assert!((m.gap(250) - 0.25).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sigma_has_designed_spectrum() {
+        let mut rng = Pcg64::seed(1);
+        let model = SpectrumModel::M1 { r: 3, lambda_lo: 0.5, lambda_hi: 1.0, delta: 0.2 };
+        let cov = CovModel::draw(&model, 20, &mut rng);
+        let sig = cov.sigma();
+        let g = eigengap(&sig, 3);
+        assert!((g - 0.2).abs() < 1e-9);
+        let (vals, _) = crate::linalg::eig::sym_eig(&sig);
+        assert!((vals[19] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn principal_subspace_is_top_eigenspace() {
+        let mut rng = Pcg64::seed(2);
+        let model = SpectrumModel::M2 { r: 4, r_star: 12.0, delta: 0.3 };
+        let cov = CovModel::draw(&model, 30, &mut rng);
+        let v1 = cov.principal_subspace();
+        let top = crate::linalg::eig::top_eigvecs(&cov.sigma(), 4).0;
+        assert!(dist2(&v1, &top) < 1e-6);
+    }
+
+    #[test]
+    fn samples_concentrate_to_sigma() {
+        let mut rng = Pcg64::seed(3);
+        let model = SpectrumModel::M1 { r: 2, lambda_lo: 0.5, lambda_hi: 1.0, delta: 0.2 };
+        let cov = CovModel::draw(&model, 10, &mut rng);
+        let x = cov.sample(60_000, &mut rng);
+        let emp = CovModel::empirical_cov(&x);
+        let err = emp.sub(&cov.sigma()).max_abs();
+        assert!(err < 0.05, "concentration err = {err}");
+    }
+
+    #[test]
+    fn empirical_cov_matches_definition() {
+        let mut rng = Pcg64::seed(4);
+        let x = rng.normal_mat(50, 6);
+        let emp = CovModel::empirical_cov(&x);
+        let want = crate::linalg::gemm::at_b(&x, &x).scale(1.0 / 50.0);
+        assert!(emp.sub(&want).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn intdim_bounds() {
+        assert!((intdim(&[1.0, 1.0, 1.0]) - 3.0).abs() < 1e-12);
+        assert!((intdim(&[1.0, 0.0, 0.0]) - 1.0).abs() < 1e-12);
+        let t = [2.0, 1.0, 0.5];
+        let id = intdim(&t);
+        assert!(id > 1.0 && id < 3.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Synthetic-data substrate: the covariance models (M1)/(M2) of §3, the
+//! Gaussian sampler, the heavy-tailed sphere mixture 𝒟ₖ of Eq. (35), and
+//! the Fig-1 cluster mixture (our stand-in for MNIST — see the
+//! substitution ledger in DESIGN.md).
+
+mod cluster;
+mod cov;
+mod sphere;
+
+pub use cluster::ClusterMixture;
+pub use cov::{intdim, CovModel, SpectrumModel};
+pub use sphere::SphereMixture;

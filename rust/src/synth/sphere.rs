@@ -1,0 +1,110 @@
+//! The heavy-tailed discrete sphere mixture 𝒟ₖ of Eq. (35):
+//! `D_k = Unif{y_1, ..., y_k}` with `y_i in sqrt(d) S^{d-1}`.
+//! Used by the non-Gaussian experiment (Fig 7), where the target is the
+//! leading eigenspace of the *second-moment* matrix (no centering).
+
+use crate::linalg::{gemm::syrk_scaled, Mat};
+use crate::rng::Pcg64;
+
+/// A fixed k-atom distribution on the sphere of radius `sqrt(d)`.
+pub struct SphereMixture {
+    /// Atom matrix (k, d); row i is `y_i`.
+    pub atoms: Mat,
+}
+
+impl SphereMixture {
+    /// Draw `k` atoms uniformly on `sqrt(d) S^{d-1}`.
+    pub fn draw(k: usize, d: usize, rng: &mut Pcg64) -> Self {
+        let mut atoms = rng.normal_mat(k, d);
+        for i in 0..k {
+            let row = atoms.row_mut(i);
+            let nrm: f64 = row.iter().map(|x| x * x).sum::<f64>().sqrt();
+            let scale = (d as f64).sqrt() / nrm.max(1e-300);
+            for v in row.iter_mut() {
+                *v *= scale;
+            }
+        }
+        SphereMixture { atoms }
+    }
+
+    pub fn k(&self) -> usize {
+        self.atoms.rows()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.atoms.cols()
+    }
+
+    /// Population second-moment matrix `(1/k) sum_i y_i y_i^T`.
+    pub fn second_moment(&self) -> Mat {
+        syrk_scaled(&self.atoms, self.k() as f64)
+    }
+
+    /// Draw `n` i.i.d. samples (rows), each a uniformly chosen atom.
+    pub fn sample(&self, n: usize, rng: &mut Pcg64) -> Mat {
+        let (k, d) = self.atoms.shape();
+        let mut out = Mat::zeros(n, d);
+        for i in 0..n {
+            let a = rng.next_below(k);
+            out.row_mut(i).copy_from_slice(self.atoms.row(a));
+        }
+        out
+    }
+
+    /// The exact leading eigenspace of the second moment, dimension `r`.
+    pub fn principal_subspace(&self, r: usize) -> Mat {
+        crate::linalg::eig::top_eigvecs(&self.second_moment(), r).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atoms_on_sphere() {
+        let mut rng = Pcg64::seed(1);
+        let mix = SphereMixture::draw(8, 30, &mut rng);
+        for i in 0..8 {
+            let nrm: f64 = mix.atoms.row(i).iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((nrm - 30f64.sqrt()).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn samples_are_atoms() {
+        let mut rng = Pcg64::seed(2);
+        let mix = SphereMixture::draw(4, 10, &mut rng);
+        let x = mix.sample(50, &mut rng);
+        for i in 0..50 {
+            let row = x.row(i);
+            let hit = (0..4).any(|a| {
+                mix.atoms
+                    .row(a)
+                    .iter()
+                    .zip(row)
+                    .all(|(p, q)| (p - q).abs() < 1e-12)
+            });
+            assert!(hit, "sample {i} is not an atom");
+        }
+    }
+
+    #[test]
+    fn empirical_second_moment_concentrates() {
+        let mut rng = Pcg64::seed(3);
+        let mix = SphereMixture::draw(6, 12, &mut rng);
+        let x = mix.sample(40_000, &mut rng);
+        let emp = syrk_scaled(&x, x.rows() as f64);
+        let err = emp.sub(&mix.second_moment()).max_abs();
+        assert!(err < 0.4, "err={err}"); // entries are O(d)=O(12)
+    }
+
+    #[test]
+    fn second_moment_rank_at_most_k() {
+        let mut rng = Pcg64::seed(4);
+        let mix = SphereMixture::draw(3, 15, &mut rng);
+        let (vals, _) = crate::linalg::eig::sym_eig(&mix.second_moment());
+        let nonzero = vals.iter().filter(|v| v.abs() > 1e-8).count();
+        assert!(nonzero <= 3);
+    }
+}

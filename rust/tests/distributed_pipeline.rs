@@ -1,0 +1,203 @@
+//! End-to-end pipeline integration tests: threaded cluster vs library
+//! estimators, communication-accounting invariants, failure injection, and
+//! the application pipelines (embeddings, sensing) wired through the
+//! coordinator.
+
+use std::sync::Arc;
+
+use deigen::align;
+use deigen::coordinator::{
+    run_cluster, AggregationRule, ClusterConfig, NetworkModel, NodeBehavior,
+    WorkerData,
+};
+use deigen::linalg::subspace::{dist2, is_orthonormal};
+use deigen::linalg::Mat;
+use deigen::rng::Pcg64;
+use deigen::runtime::NativeEngine;
+use deigen::synth::{CovModel, SpectrumModel};
+
+fn pca_workers(
+    seed: u64,
+    d: usize,
+    r: usize,
+    m: usize,
+    n: usize,
+) -> (Mat, Vec<WorkerData>) {
+    let mut rng = Pcg64::seed(seed);
+    let model = SpectrumModel::M1 { r, lambda_lo: 0.5, lambda_hi: 1.0, delta: 0.2 };
+    let cov = CovModel::draw(&model, d, &mut rng);
+    let workers = (0..m)
+        .map(|i| WorkerData {
+            observation: CovModel::empirical_cov(&cov.sample(n, &mut rng.split(i as u64))),
+            behavior: NodeBehavior::Honest,
+        })
+        .collect();
+    (cov.principal_subspace(), workers)
+}
+
+#[test]
+fn cluster_single_round_equals_library_algorithm1() {
+    let (truth, workers) = pca_workers(1, 40, 4, 10, 300);
+    let cfg = ClusterConfig { r: 4, seed: 3, ..Default::default() };
+    let res = run_cluster(workers, Arc::new(NativeEngine::default()), &cfg);
+    let lib = align::procrustes_fix(&res.local_panels);
+    assert!(res.estimate.sub(&lib).max_abs() < 1e-10);
+    assert!(dist2(&res.estimate, &truth) < 0.15);
+}
+
+#[test]
+fn refinement_improves_or_matches_single_round() {
+    let (truth, workers) = pca_workers(2, 40, 4, 12, 120);
+    let obs: Vec<Mat> = workers.iter().map(|w| w.observation.clone()).collect();
+    let cfg0 = ClusterConfig { r: 4, seed: 5, ..Default::default() };
+    let r0 = run_cluster(workers, Arc::new(NativeEngine::default()), &cfg0);
+    let workers2: Vec<WorkerData> = obs
+        .into_iter()
+        .map(|o| WorkerData { observation: o, behavior: NodeBehavior::Honest })
+        .collect();
+    let cfg2 = ClusterConfig { r: 4, refine_rounds: 3, seed: 5, ..Default::default() };
+    let r2 = run_cluster(workers2, Arc::new(NativeEngine::default()), &cfg2);
+    let d0 = dist2(&r0.estimate, &truth);
+    let d2 = dist2(&r2.estimate, &truth);
+    assert!(d2 <= d0 + 0.03, "refined {d2} vs single {d0}");
+}
+
+#[test]
+fn communication_scales_linearly_in_m_single_round() {
+    let mut per_node = Vec::new();
+    for &m in &[4usize, 8, 16] {
+        let (_, workers) = pca_workers(3, 32, 4, m, 100);
+        let cfg = ClusterConfig { r: 4, seed: 1, ..Default::default() };
+        let res = run_cluster(workers, Arc::new(NativeEngine::default()), &cfg);
+        per_node.push(res.comm.bytes_up as f64 / m as f64);
+        assert_eq!(res.comm.rounds, 1);
+    }
+    // per-node upload must be independent of m (the single-round property)
+    assert!((per_node[0] - per_node[2]).abs() < 1e-9, "{per_node:?}");
+}
+
+#[test]
+fn refinement_comm_scales_with_rounds() {
+    let mut totals = Vec::new();
+    for &k in &[1usize, 2, 4] {
+        let (_, workers) = pca_workers(4, 32, 4, 6, 100);
+        let cfg = ClusterConfig { r: 4, refine_rounds: k, seed: 1, ..Default::default() };
+        let res = run_cluster(workers, Arc::new(NativeEngine::default()), &cfg);
+        assert_eq!(res.comm.rounds, 1 + k);
+        totals.push(res.comm.bytes_up + res.comm.bytes_down);
+    }
+    assert!(totals[0] < totals[1] && totals[1] < totals[2]);
+}
+
+#[test]
+fn wan_simulated_time_dominated_by_latency_per_round() {
+    let (_, workers) = pca_workers(5, 32, 4, 8, 100);
+    let cfg = ClusterConfig {
+        r: 4,
+        refine_rounds: 4,
+        network: NetworkModel::wan(),
+        seed: 1,
+        ..Default::default()
+    };
+    let res = run_cluster(workers, Arc::new(NativeEngine::default()), &cfg);
+    // 5 rounds x 50 ms = 250 ms of pure latency; bytes add a little more
+    assert!(res.sim_time_s >= 0.25, "{}", res.sim_time_s);
+    assert!(res.sim_time_s < 1.0);
+}
+
+#[test]
+fn byzantine_majority_attack_defeats_mean_but_not_median_reference() {
+    // 5 of 16 byzantine: mean aggregation degrades noticeably more than
+    // coordinate-median aggregation
+    let (truth, mut workers) = pca_workers(6, 40, 3, 16, 400);
+    for w in workers.iter_mut().skip(1).take(5) {
+        w.behavior = NodeBehavior::Byzantine;
+    }
+    let obs: Vec<(Mat, NodeBehavior)> = workers
+        .iter()
+        .map(|w| (w.observation.clone(), w.behavior))
+        .collect();
+    let cfg_mean = ClusterConfig { r: 3, seed: 2, ..Default::default() };
+    let res_mean = run_cluster(workers, Arc::new(NativeEngine::default()), &cfg_mean);
+
+    let workers2: Vec<WorkerData> = obs
+        .into_iter()
+        .map(|(o, b)| WorkerData { observation: o, behavior: b })
+        .collect();
+    let cfg_med = ClusterConfig {
+        r: 3,
+        aggregation: AggregationRule::CoordinateMedian,
+        seed: 2,
+        ..Default::default()
+    };
+    let res_med = run_cluster(workers2, Arc::new(NativeEngine::default()), &cfg_med);
+
+    let dm = dist2(&res_mean.estimate, &truth);
+    let dr = dist2(&res_med.estimate, &truth);
+    assert!(dr < dm, "median {dr} should beat mean {dm} under attack");
+    assert!(dr < 0.25, "median should stay accurate: {dr}");
+}
+
+#[test]
+fn estimates_always_orthonormal_across_configs() {
+    for seed in 0..6u64 {
+        let mut rng = Pcg64::seed(7000 + seed);
+        let d = 16 + rng.next_below(40);
+        let r = 1 + rng.next_below(5.min(d / 3));
+        let m = 2 + rng.next_below(10);
+        let (_, workers) = pca_workers(seed + 10, d, r, m, 150);
+        let cfg = ClusterConfig {
+            r,
+            refine_rounds: rng.next_below(3),
+            seed,
+            ..Default::default()
+        };
+        let res = run_cluster(workers, Arc::new(NativeEngine::default()), &cfg);
+        assert!(
+            is_orthonormal(&res.estimate, 1e-7),
+            "seed {seed} d={d} r={r} m={m}"
+        );
+    }
+}
+
+#[test]
+fn sensing_pipeline_through_coordinator() {
+    // quadratic sensing local D matrices as worker observations
+    let mut rng = Pcg64::seed(42);
+    let (d, r, m, n) = (40usize, 2usize, 12usize, 12 * 40 * 2);
+    let inst = deigen::sensing::SensingInstance::draw(d, r, 0.0, &mut rng);
+    let workers: Vec<WorkerData> = (0..m)
+        .map(|i| {
+            let mut node_rng = rng.split(i as u64);
+            let (a, y) = inst.measure(n, &mut node_rng);
+            WorkerData {
+                observation: deigen::sensing::spectral_matrix(&a, &y),
+                behavior: NodeBehavior::Honest,
+            }
+        })
+        .collect();
+    let cfg = ClusterConfig { r, refine_rounds: 5, seed: 9, ..Default::default() };
+    let res = run_cluster(workers, Arc::new(NativeEngine::default()), &cfg);
+    let leak = inst.leakage(&res.estimate);
+    assert!(leak < 0.5, "distributed sensing init too weak: {leak}");
+}
+
+#[test]
+fn embeddings_alignment_stays_near_central_embedding() {
+    let mut rng = Pcg64::seed(77);
+    let g = deigen::graph::sbm(100, 2, 0.3, 0.03, &mut rng);
+    let z_central = deigen::graph::hope_embedding(&g, 8, 0.02);
+    let locals: Vec<Mat> = (0..8)
+        .map(|_| deigen::graph::hope_embedding(&g.censor(0.1, &mut rng), 8, 0.02))
+        .collect();
+    let mut acc = Mat::zeros(100, 8);
+    for z in &locals {
+        acc.axpy(
+            1.0 / 8.0,
+            &deigen::linalg::procrustes::procrustes_align(z, &locals[0]),
+        );
+    }
+    let aligned = deigen::linalg::procrustes::procrustes_align(&acc, &z_central);
+    let rel = aligned.sub(&z_central).fro_norm() / z_central.fro_norm();
+    assert!(rel < 0.4, "aligned embedding too far from central: {rel}");
+}

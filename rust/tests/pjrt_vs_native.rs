@@ -1,0 +1,115 @@
+//! Cross-engine integration tests: the PJRT executables (AOT-compiled from
+//! the JAX/Pallas stack) must agree with the from-scratch native engine on
+//! every artifact shape. This is the key correctness seam of the
+//! three-layer design: L1/L2 numerics (f32, Newton–Schulz, Pallas tiling)
+//! vs the independent rust implementation (f64, Householder/Jacobi).
+//!
+//! Requires `make artifacts`; tests skip gracefully when artifacts are
+//! missing (CI without Python).
+
+use deigen::linalg::gemm::syrk_scaled;
+use deigen::linalg::procrustes::procrustes_align;
+use deigen::linalg::subspace::{dist2, is_orthonormal};
+use deigen::linalg::Mat;
+use deigen::rng::Pcg64;
+use deigen::runtime::{Manifest, PjrtEngine};
+use deigen::synth::{CovModel, SpectrumModel};
+
+fn engine_or_skip() -> Option<PjrtEngine> {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(PjrtEngine::load_default().expect("PJRT engine should load"))
+}
+
+#[test]
+fn gram_artifact_matches_native_syrk() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let mut rng = Pcg64::seed(1);
+    let x = rng.normal_mat(500, 64);
+    let pjrt = engine.gram(&x).unwrap();
+    let native = syrk_scaled(&x, 500.0);
+    let err = pjrt.sub(&native).max_abs();
+    assert!(err < 1e-3, "gram mismatch {err}"); // f32 artifact vs f64 native
+}
+
+#[test]
+fn procrustes_artifact_matches_native() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let mut rng = Pcg64::seed(2);
+    for _ in 0..3 {
+        let vref = rng.haar_stiefel(64, 8);
+        let z = rng.haar_orthogonal(8);
+        let noisy = deigen::linalg::gemm::matmul(&vref, &z)
+            .add(&rng.normal_mat(64, 8).scale(0.05));
+        let v = deigen::linalg::qr::orthonormalize(&noisy);
+        let pjrt = engine.procrustes(&v, &vref).unwrap();
+        let native = procrustes_align(&v, &vref);
+        let err = pjrt.sub(&native).max_abs();
+        assert!(err < 5e-3, "procrustes mismatch {err}");
+    }
+}
+
+#[test]
+fn local_eig_artifact_finds_same_subspace() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let mut rng = Pcg64::seed(3);
+    let model = SpectrumModel::M1 { r: 8, lambda_lo: 0.5, lambda_hi: 1.0, delta: 0.2 };
+    let cov = CovModel::draw(&model, 64, &mut rng);
+    let x = cov.sample(500, &mut rng);
+    let v0 = rng.normal_mat(64, 8);
+
+    let (v_pjrt, ritz) = engine.local_eig(&x, &v0).unwrap();
+    assert!(is_orthonormal(&v_pjrt, 1e-3));
+    assert_eq!(ritz.len(), 8);
+
+    // native gold standard: dense eigensolver on the same empirical cov
+    let c = CovModel::empirical_cov(&x);
+    let v_dense = deigen::linalg::eig::top_eigvecs(&c, 8).0;
+    let d = dist2(&v_pjrt, &v_dense);
+    assert!(d < 5e-2, "subspace mismatch {d}");
+
+    // Ritz values within the empirical spectrum range
+    let (vals, _) = deigen::linalg::eig::sym_eig(&c);
+    let (lo, hi) = (vals[64 - 8] - 0.05, vals[63] + 0.05);
+    for &t in &ritz {
+        assert!(t > lo && t < hi, "ritz {t} outside [{lo}, {hi}]");
+    }
+}
+
+#[test]
+fn local_eig_cov_artifact_all_shapes() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let manifest = Manifest::load(Manifest::default_dir()).unwrap();
+    let mut rng = Pcg64::seed(4);
+    for (d, r) in manifest.local_eig_cov_shapes() {
+        let model = SpectrumModel::M1 { r, lambda_lo: 0.5, lambda_hi: 1.0, delta: 0.2 };
+        let cov = CovModel::draw(&model, d, &mut rng);
+        let sigma = cov.sigma();
+        let v0 = rng.normal_mat(d, r);
+        let (v, _) = engine.local_eig_cov(&sigma, &v0).unwrap();
+        let truth = cov.principal_subspace();
+        let dist = dist2(&v, &truth);
+        assert!(dist < 1e-2, "({d},{r}): dist {dist}");
+    }
+}
+
+#[test]
+fn pjrt_rejects_unknown_shapes() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let mut rng = Pcg64::seed(5);
+    let x = rng.normal_mat(7, 7);
+    assert!(engine.gram(&x).is_err());
+    assert!(!engine.supports_cov_shape(7, 3));
+}
+
+#[test]
+fn pjrt_deterministic_across_calls() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let mut rng = Pcg64::seed(6);
+    let x = rng.normal_mat(500, 64);
+    let a = engine.gram(&x).unwrap();
+    let b = engine.gram(&x).unwrap();
+    assert!(a.sub(&b).max_abs() == 0.0);
+}
