@@ -163,7 +163,7 @@ pub fn apply_rotations(locals: &[Mat], zs: &[Mat]) -> Vec<Mat> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::subspace::{dist2, is_orthonormal};
+    use crate::linalg::subspace::dist2;
     use crate::rng::Pcg64;
 
     /// Build m noisy rotated copies of a ground-truth panel.
@@ -189,13 +189,41 @@ mod tests {
     fn outputs_orthonormal() {
         let mut rng = Pcg64::seed(1);
         let (_, locals) = noisy_locals(&mut rng, 30, 4, 8, 0.1);
-        for est in [
-            procrustes_fix(&locals),
-            iterative_refinement(&locals, 3),
-            naive_average(&locals),
-            projector_average(&locals),
+        for (name, est) in [
+            ("procrustes_fix", procrustes_fix(&locals)),
+            ("iterative_refinement", iterative_refinement(&locals, 3)),
+            ("naive_average", naive_average(&locals)),
+            ("projector_average", projector_average(&locals)),
         ] {
-            assert!(is_orthonormal(&est, 1e-8));
+            crate::testkit::check::assert_orthonormal(
+                &est,
+                crate::testkit::tol::FACTOR,
+                name,
+            );
+        }
+    }
+
+    /// Every per-node rotation Algorithm 1 applies must pass the testkit's
+    /// polar-factor optimality certificate against the reference panel.
+    #[test]
+    fn rotations_individually_certified_optimal() {
+        use crate::testkit::{check, tol};
+        let mut rng = Pcg64::seed(21);
+        let (_, locals) = noisy_locals(&mut rng, 25, 3, 6, 0.1);
+        let zs = rotations(&locals, &locals[0]);
+        for (i, (v, z)) in locals.iter().zip(&zs).enumerate() {
+            let cert = check::procrustes_certificate(v, &locals[0], z);
+            assert!(cert < tol::ITER, "node {i}: certificate residual {cert:.2e}");
+        }
+        // and applying them is exactly the aligned-average input set
+        let applied = apply_rotations(&locals, &zs);
+        for (v, a) in locals.iter().zip(&applied) {
+            check::assert_close(
+                &crate::linalg::procrustes::procrustes_align(v, &locals[0]),
+                a,
+                tol::EXACT,
+                "apply_rotations consistency",
+            );
         }
     }
 

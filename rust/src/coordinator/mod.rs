@@ -17,5 +17,5 @@ mod netsim;
 mod protocol;
 
 pub use cluster::{run_cluster, ClusterConfig, ClusterResult, NodeBehavior, WorkerData};
-pub use netsim::{CommStats, NetworkModel};
+pub use netsim::{CommSnapshot, CommStats, NetworkModel};
 pub use protocol::{AggregationRule, Message};

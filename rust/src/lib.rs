@@ -16,6 +16,8 @@
 //!   explicit communication model.
 //! - [`runtime`] — PJRT loading/execution of the AOT artifacts.
 //! - [`experiments`] — regeneration of every figure/table in the paper.
+//! - [`testkit`] — seeded generators, independent reference oracles and
+//!   invariant checkers the test suites pin every kernel against.
 
 pub mod align;
 pub mod benchutil;
@@ -32,6 +34,7 @@ pub mod sensing;
 pub mod sketch;
 pub mod stream;
 pub mod synth;
+pub mod testkit;
 
 /// Crate version (mirrors Cargo.toml).
 pub fn version() -> &'static str {

@@ -93,10 +93,19 @@ mod tests {
 
     #[test]
     fn cholesky_reconstructs() {
+        use crate::testkit::{check, oracle, tol};
         let mut rng = Pcg64::seed(1);
         for &n in &[1usize, 3, 10, 30] {
             let a = random_spd(&mut rng, n);
             let l = cholesky(&a).expect("SPD");
+            // reconstruction checked through the oracle product, and
+            // cross-checked against the production a_bt kernel
+            check::assert_close(
+                &oracle::a_bt(&l, &l),
+                &a,
+                tol::dim_scaled(tol::FACTOR, n) * (n as f64),
+                &format!("cholesky reconstruction n={n}"),
+            );
             let rec = a_bt(&l, &l);
             assert!(rec.sub(&a).max_abs() < 1e-8 * (n as f64), "n={n}");
         }

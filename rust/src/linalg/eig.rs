@@ -210,6 +210,40 @@ mod tests {
         a
     }
 
+    /// The production tred2/tql2 solver must agree with the testkit's
+    /// independent cyclic-Jacobi oracle: same spectrum, same leading
+    /// invariant subspace.
+    #[test]
+    fn matches_jacobi_oracle() {
+        use crate::testkit::{check, oracle, tol};
+        let mut rng = Pcg64::seed(0xe16);
+        for &n in &[2usize, 5, 16, 33] {
+            let a = random_sym(&mut rng, n);
+            let (vals, _) = sym_eig(&a);
+            let (ovals, _) = oracle::jacobi_eig(&a);
+            let scale = vals.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+            for (g, o) in vals.iter().zip(&ovals) {
+                assert!(
+                    (g - o).abs() < tol::ITER * scale,
+                    "n={n}: {g} vs oracle {o}"
+                );
+            }
+            // leading subspace agreement (use a gapped instance so the
+            // subspace is well-defined)
+            let q = rng.haar_orthogonal(n);
+            let evs: Vec<f64> =
+                (0..n).map(|i| if i < 2.min(n) { 1.0 } else { 0.3 }).collect();
+            let g = matmul(&Mat::from_fn(n, n, |i, j| q[(i, j)] * evs[j]), &q.transpose());
+            let r = 2.min(n);
+            let top = top_eigvecs(&g, r).0;
+            let otop = oracle::top_eigvecs(&g, r).0;
+            assert!(
+                check::sin_theta(&top, &otop) < tol::ITER,
+                "n={n}: leading subspace disagrees with oracle"
+            );
+        }
+    }
+
     #[test]
     fn reconstructs_matrix() {
         let mut rng = Pcg64::seed(1);

@@ -9,8 +9,10 @@
 
 use super::mat::Mat;
 
-/// Size (in multiply-adds) above which `matmul` parallelizes across threads.
-const PAR_THRESHOLD: usize = 1 << 21; // ~2M flops
+/// Size (in multiply-adds) above which `matmul` parallelizes across
+/// threads. Public so the testkit's adversarial shape sweep can straddle
+/// it without duplicating the value.
+pub const PAR_THRESHOLD: usize = 1 << 21; // ~2M flops
 
 /// Number of worker threads for the parallel path.
 fn num_threads() -> usize {
@@ -270,9 +272,66 @@ pub fn matvec_t(a: &Mat, x: &[f64]) -> Vec<f64> {
 mod tests {
     use super::*;
     use crate::rng::Pcg64;
+    use crate::testkit::{gen, oracle, tol};
 
     fn randmat(rng: &mut Pcg64, r: usize, c: usize) -> Mat {
         Mat::from_fn(r, c, |_, _| rng.next_f64() * 2.0 - 1.0)
+    }
+
+    /// Property: every product kernel agrees with the independent testkit
+    /// oracle on the adversarial shape sweep — zero dimensions, vectors,
+    /// tall-skinny/wide panels, and sizes straddling `PAR_THRESHOLD` so
+    /// both the serial and the threaded path are exercised.
+    #[test]
+    fn property_matmul_matches_oracle_on_adversarial_shapes() {
+        let mut rng = Pcg64::seed(0xad5);
+        for &(m, k, n) in &gen::gemm_shapes() {
+            let a = randmat(&mut rng, m, k);
+            let b = randmat(&mut rng, k, n);
+            let want = oracle::matmul(&a, &b);
+            let got = matmul(&a, &b);
+            assert_eq!(got.shape(), (m, n));
+            let t = tol::dim_scaled(tol::KERNEL, k);
+            assert!(
+                got.sub(&want).max_abs() < t,
+                "matmul ({m},{k},{n}): {}",
+                got.sub(&want).max_abs()
+            );
+        }
+    }
+
+    #[test]
+    fn property_atb_abt_match_oracle_on_adversarial_shapes() {
+        let mut rng = Pcg64::seed(0xad6);
+        for &(m, k, n) in &gen::gemm_shapes() {
+            // A^T B with A (k, m), B (k, n)
+            let a = randmat(&mut rng, k, m);
+            let b = randmat(&mut rng, k, n);
+            let got = at_b(&a, &b);
+            let want = oracle::at_b(&a, &b);
+            let t = tol::dim_scaled(tol::KERNEL, k);
+            assert!(got.sub(&want).max_abs() < t, "at_b ({m},{k},{n})");
+            // A B^T with A (m, k), B (n, k)
+            let a = randmat(&mut rng, m, k);
+            let b = randmat(&mut rng, n, k);
+            let got = a_bt(&a, &b);
+            let want = oracle::a_bt(&a, &b);
+            assert!(got.sub(&want).max_abs() < t, "a_bt ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn property_syrk_matches_oracle_across_paths() {
+        // shapes chosen to hit both the serial branch and the threaded
+        // branch (n * d * d >= PAR_THRESHOLD with d >= 2 * threads)
+        let mut rng = Pcg64::seed(0xad7);
+        for &(n, d) in &[(1usize, 1usize), (7, 3), (50, 20), (300, 90)] {
+            let x = randmat(&mut rng, n, d);
+            let got = syrk_scaled(&x, n as f64);
+            let want = oracle::gram_scaled(&x, n as f64);
+            let t = tol::dim_scaled(tol::KERNEL, n);
+            assert!(got.sub(&want).max_abs() < t, "syrk ({n},{d})");
+        }
     }
 
     #[test]

@@ -104,6 +104,20 @@ mod tests {
         assert!(dist2(&v, &vd) < 1e-5);
     }
 
+    /// Orthogonal iteration must land on the same invariant subspace as
+    /// the testkit's independent Jacobi oracle.
+    #[test]
+    fn matches_jacobi_oracle_subspace() {
+        use crate::testkit::{check, oracle, tol};
+        let mut rng = Pcg64::seed(12);
+        let (c, _) = gapped(&mut rng, 28, 3, 0.3);
+        let v0 = rng.normal_mat(28, 3);
+        let (v, _) = orth_iter(&c, &v0, 80);
+        let vo = oracle::top_eigvecs(&c, 3).0;
+        let d = check::sin_theta(&v, &vo);
+        assert!(d < 10.0 * tol::ITER, "oracle subspace distance {d:.2e}");
+    }
+
     #[test]
     fn ritz_values_approximate_eigenvalues() {
         let mut rng = Pcg64::seed(3);

@@ -59,6 +59,34 @@ mod tests {
     use super::*;
     use crate::rng::Pcg64;
 
+    /// Both production routes must (a) agree with the brute-force oracle
+    /// and (b) pass the polar-factor optimality certificate
+    /// `Z in O_r  &&  Z^T (V^T V_ref) symmetric PSD`.
+    #[test]
+    fn rotation_matches_oracle_and_passes_certificate() {
+        use crate::testkit::{check, gen, oracle, tol};
+        for seed in 0..5u64 {
+            let vref = gen::haar_panel(24, 4, 100 + seed);
+            let v = gen::noisy_copies(&vref, 1, 0.1, 200 + seed).pop().unwrap();
+            let z = procrustes_rotation(&v, &vref);
+            let z_oracle = oracle::procrustes_rotation(&v, &vref);
+            check::assert_close(&z, &z_oracle, tol::ITER, &format!("seed {seed}: rotation"));
+            assert!(
+                check::procrustes_certificate(&v, &vref, &z) < tol::ITER,
+                "seed {seed}: certificate violated"
+            );
+            // the Newton–Schulz route must satisfy the same certificate
+            let z_ns = {
+                let g = at_b(&v, &vref);
+                polar_newton_schulz(&g, 40)
+            };
+            assert!(
+                check::procrustes_certificate(&v, &vref, &z_ns) < tol::ITER,
+                "seed {seed}: Newton–Schulz certificate violated"
+            );
+        }
+    }
+
     #[test]
     fn polar_of_orthogonal_is_itself() {
         let mut rng = Pcg64::seed(1);

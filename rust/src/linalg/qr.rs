@@ -85,6 +85,26 @@ mod tests {
     use crate::linalg::gemm::{at_b, matmul};
     use crate::rng::Pcg64;
 
+    /// Reconstruction and orthonormality checked through the testkit
+    /// oracles (oracle product + orthonormality residual), not through
+    /// the very kernels under test.
+    #[test]
+    fn qr_certified_by_oracle() {
+        use crate::testkit::{check, oracle, tol};
+        let mut rng = Pcg64::seed(0x9c);
+        for &(m, n) in &[(6usize, 6usize), (25, 4), (64, 16)] {
+            let a = rng.normal_mat(m, n);
+            let (q, r) = thin_qr(&a);
+            check::assert_orthonormal(&q, tol::FACTOR, &format!("thin_qr Q ({m},{n})"));
+            check::assert_close(
+                &oracle::matmul(&q, &r),
+                &a,
+                tol::dim_scaled(tol::FACTOR, m),
+                &format!("QR reconstruction ({m},{n})"),
+            );
+        }
+    }
+
     #[test]
     fn qr_reconstructs() {
         let mut rng = Pcg64::seed(1);

@@ -47,6 +47,24 @@ mod tests {
     use crate::linalg::gemm::matmul;
     use crate::rng::Pcg64;
 
+    /// `dist2` (cross-Gram singular-value route) must match the testkit's
+    /// definition-level oracle (Jacobi eigendecomposition of the explicit
+    /// projector difference).
+    #[test]
+    fn dist2_matches_definition_oracle() {
+        use crate::testkit::{check, gen, tol};
+        for seed in 0..6u64 {
+            let u = gen::haar_panel(18, 3, 300 + seed);
+            let v = gen::haar_panel(18, 3, 400 + seed);
+            let got = dist2(&u, &v);
+            let want = check::sin_theta(&u, &v);
+            assert!(
+                (got - want).abs() < tol::ITER,
+                "seed {seed}: dist2 {got} vs oracle {want}"
+            );
+        }
+    }
+
     #[test]
     fn identical_subspaces_zero_distance() {
         let mut rng = Pcg64::seed(1);

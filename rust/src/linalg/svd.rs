@@ -173,6 +173,28 @@ mod tests {
     use crate::linalg::gemm::{at_b, matmul};
     use crate::rng::Pcg64;
 
+    /// Singular values must match `sqrt(eig(A^T A))` computed by the
+    /// testkit's independent Jacobi oracle.
+    #[test]
+    fn singular_values_match_jacobi_oracle() {
+        use crate::testkit::{oracle, tol};
+        let mut rng = Pcg64::seed(0x51d);
+        for &(m, n) in &[(4usize, 4usize), (12, 5), (30, 9)] {
+            let a = rng.normal_mat(m, n);
+            let (_, s, _) = svd(&a);
+            let (vals, _) = oracle::jacobi_eig(&oracle::at_b(&a, &a));
+            let mut want: Vec<f64> = vals.iter().map(|&v| v.max(0.0).sqrt()).collect();
+            want.reverse(); // ascending eigenvalues -> descending singulars
+            let scale = want[0].max(1.0);
+            for (g, w) in s.iter().zip(&want) {
+                assert!(
+                    (g - w).abs() < tol::ITER * scale,
+                    "({m},{n}): {g} vs oracle {w}"
+                );
+            }
+        }
+    }
+
     #[test]
     fn svd_reconstructs() {
         let mut rng = Pcg64::seed(1);

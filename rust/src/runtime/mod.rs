@@ -8,6 +8,11 @@
 //! from the L3 hot path with zero Python involvement. [`NativeEngine`]
 //! implements the identical algorithm in pure rust for arbitrary shapes;
 //! the two are cross-checked in `rust/tests/pjrt_vs_native.rs`.
+//!
+//! The real PJRT engine requires the `xla` bindings and is gated behind
+//! the `pjrt` cargo feature; default (offline) builds get an
+//! API-identical stub whose constructors return errors, and everything
+//! runs on the native engine.
 
 mod engine;
 mod manifest;

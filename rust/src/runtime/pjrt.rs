@@ -1,154 +1,236 @@
 //! PJRT execution engine: loads the HLO-text artifacts produced by
 //! `python/compile/aot.py`, compiles them once on the PJRT CPU client, and
-//! serves typed calls from the coordinator hot path. This is the
-//! production composition proof of the three-layer design — the L1 Pallas
-//! kernels and L2 JAX graph run here as native XLA code with no Python.
+//! serves typed calls from the coordinator hot path.
+//!
+//! The real engine needs the `xla` PJRT bindings, which cannot be vendored
+//! offline; it is compiled only under the `pjrt` cargo feature. The
+//! default build gets an **API-identical stub** whose constructors return
+//! a descriptive error, so every caller (CLI, examples, integration
+//! tests) compiles unchanged and degrades to the native engine at
+//! runtime. `rust/tests/pjrt_vs_native.rs` skips its cross-engine checks
+//! when the engine is unavailable and still pins the native engine to the
+//! testkit oracles at the artifact shapes.
 
-use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
+mod real {
+    use std::collections::HashMap;
+
+    use anyhow::{anyhow, Context, Result};
+
+    use crate::linalg::Mat;
+
+    use super::super::manifest::{ArtifactEntry, Manifest};
+
+    /// Compiled-executable cache keyed by artifact key.
+    pub struct PjrtEngine {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    }
+
+    // Safety: PJRT requires implementations to be thread-safe and the CPU
+    // client has no thread affinity; the rust wrapper types only lose the
+    // auto traits because they hold raw pointers. `SharedPjrtSolver`
+    // additionally serializes all calls behind a Mutex.
+    unsafe impl Send for PjrtEngine {}
+
+    impl PjrtEngine {
+        /// Create a CPU PJRT client and load the manifest from `dir`.
+        pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(PjrtEngine { client, manifest, cache: HashMap::new() })
+        }
+
+        /// Load from the default artifact directory (`$DEIGEN_ARTIFACTS`
+        /// or `./artifacts`).
+        pub fn load_default() -> Result<Self> {
+            Self::load(Manifest::default_dir())
+        }
+
+        /// PJRT platform string (diagnostics).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Does a `local_eig_cov` artifact exist for this (d, r)?
+        pub fn supports_cov_shape(&self, d: usize, r: usize) -> bool {
+            self.manifest
+                .find("local_eig_cov", &[vec![d, d], vec![d, r]])
+                .is_some()
+        }
+
+        fn executable(&mut self, entry: &ArtifactEntry) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.cache.contains_key(&entry.key) {
+                let path = self.manifest.path(entry);
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .with_context(|| format!("parsing HLO text {path:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {}", entry.key))?;
+                self.cache.insert(entry.key.clone(), exe);
+            }
+            Ok(&self.cache[&entry.key])
+        }
+
+        fn entry(&self, name: &str, inputs: &[Vec<usize>]) -> Result<ArtifactEntry> {
+            self.manifest
+                .find(name, inputs)
+                .cloned()
+                .ok_or_else(|| anyhow!("no artifact for {name} with shapes {inputs:?} (see aot.py SHAPE_MANIFEST)"))
+        }
+
+        fn literal(m: &Mat) -> Result<xla::Literal> {
+            let flat = m.to_f32();
+            xla::Literal::vec1(&flat)
+                .reshape(&[m.rows() as i64, m.cols() as i64])
+                .context("reshaping input literal")
+        }
+
+        fn run(&mut self, entry: &ArtifactEntry, inputs: &[&Mat]) -> Result<Vec<xla::Literal>> {
+            let lits: Vec<xla::Literal> =
+                inputs.iter().map(|m| Self::literal(m)).collect::<Result<_>>()?;
+            let exe = self.executable(entry)?;
+            let result = exe.execute::<xla::Literal>(&lits)?[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            // aot.py lowers with return_tuple=True: output is always a tuple.
+            result.to_tuple().context("untupling result")
+        }
+
+        fn mat_from(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
+            let v = lit.to_vec::<f32>().context("reading f32 output")?;
+            if v.len() != rows * cols {
+                return Err(anyhow!("output size {} != {rows}x{cols}", v.len()));
+            }
+            Ok(Mat::from_f32(rows, cols, &v))
+        }
+
+        /// `local_eig` graph: samples (n, d) + init (d, r) -> (V (d, r), ritz).
+        pub fn local_eig(&mut self, x: &Mat, v0: &Mat) -> Result<(Mat, Vec<f64>)> {
+            let (n, d) = x.shape();
+            let (d2, r) = v0.shape();
+            if d != d2 {
+                return Err(anyhow!("x/v0 dims disagree"));
+            }
+            let entry = self.entry("local_eig", &[vec![n, d], vec![d, r]])?;
+            let out = self.run(&entry, &[x, v0])?;
+            let v = Self::mat_from(&out[0], d, r)?;
+            let ritz = out[1].to_vec::<f32>()?.iter().map(|&x| x as f64).collect();
+            Ok((v, ritz))
+        }
+
+        /// `local_eig_cov` graph: symmetric (d, d) + init (d, r) -> (V, ritz).
+        pub fn local_eig_cov(&mut self, c: &Mat, v0: &Mat) -> Result<(Mat, Vec<f64>)> {
+            let d = c.rows();
+            let (d2, r) = v0.shape();
+            if !c.is_square() || d != d2 {
+                return Err(anyhow!("bad shapes for local_eig_cov"));
+            }
+            let entry = self.entry("local_eig_cov", &[vec![d, d], vec![d, r]])?;
+            let out = self.run(&entry, &[c, v0])?;
+            let v = Self::mat_from(&out[0], d, r)?;
+            let ritz = out[1].to_vec::<f32>()?.iter().map(|&x| x as f64).collect();
+            Ok((v, ritz))
+        }
+
+        /// `procrustes` graph: align `v` (d, r) with `v_ref` (d, r).
+        pub fn procrustes(&mut self, v: &Mat, v_ref: &Mat) -> Result<Mat> {
+            let (d, r) = v.shape();
+            if v_ref.shape() != (d, r) {
+                return Err(anyhow!("procrustes shape mismatch"));
+            }
+            let entry = self.entry("procrustes", &[vec![d, r], vec![d, r]])?;
+            let out = self.run(&entry, &[v, v_ref])?;
+            Self::mat_from(&out[0], d, r)
+        }
+
+        /// `gram` graph: (n, d) samples -> (d, d) second-moment matrix.
+        pub fn gram(&mut self, x: &Mat) -> Result<Mat> {
+            let (n, d) = x.shape();
+            let entry = self.entry("gram", &[vec![n, d]])?;
+            let out = self.run(&entry, &[x])?;
+            Self::mat_from(&out[0], d, d)
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod real {
+    use anyhow::{anyhow, Result};
+
+    use crate::linalg::Mat;
+
+    const UNAVAILABLE: &str = "PJRT engine unavailable: built without the `pjrt` \
+         feature (the xla PJRT bindings are not vendored offline); \
+         use the native engine instead";
+
+    /// Offline stub of the PJRT engine. Constructors always return an
+    /// error, so no instance can exist; the methods keep the real
+    /// signatures so every call site compiles unchanged.
+    pub struct PjrtEngine {
+        // no constructor ever succeeds in stub builds; the field exists
+        // only to keep the type non-trivially constructible from outside
+        #[allow(dead_code)]
+        unconstructible: std::convert::Infallible,
+    }
+
+    impl PjrtEngine {
+        /// Always fails in stub builds.
+        pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+            let _ = dir;
+            Err(anyhow!(UNAVAILABLE))
+        }
+
+        /// Always fails in stub builds.
+        pub fn load_default() -> Result<Self> {
+            Self::load(super::super::manifest::Manifest::default_dir())
+        }
+
+        /// Platform string (never reachable on a live instance).
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        /// No artifact is servable without the real engine.
+        pub fn supports_cov_shape(&self, _d: usize, _r: usize) -> bool {
+            false
+        }
+
+        /// Stub: always an error.
+        pub fn local_eig(&mut self, _x: &Mat, _v0: &Mat) -> Result<(Mat, Vec<f64>)> {
+            Err(anyhow!(UNAVAILABLE))
+        }
+
+        /// Stub: always an error.
+        pub fn local_eig_cov(&mut self, _c: &Mat, _v0: &Mat) -> Result<(Mat, Vec<f64>)> {
+            Err(anyhow!(UNAVAILABLE))
+        }
+
+        /// Stub: always an error.
+        pub fn procrustes(&mut self, _v: &Mat, _v_ref: &Mat) -> Result<Mat> {
+            Err(anyhow!(UNAVAILABLE))
+        }
+
+        /// Stub: always an error.
+        pub fn gram(&mut self, _x: &Mat) -> Result<Mat> {
+            Err(anyhow!(UNAVAILABLE))
+        }
+    }
+}
+
+pub use real::PjrtEngine;
+
 use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::Result;
 
 use crate::linalg::Mat;
 use crate::rng::Pcg64;
 
 use super::engine::LocalSolver;
-use super::manifest::{ArtifactEntry, Manifest};
-
-/// Compiled-executable cache keyed by artifact key.
-pub struct PjrtEngine {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-}
-
-// Safety: PJRT requires implementations to be thread-safe and the CPU
-// client has no thread affinity; the rust wrapper types only lose the auto
-// traits because they hold raw pointers. `SharedPjrtSolver` additionally
-// serializes all calls behind a Mutex.
-unsafe impl Send for PjrtEngine {}
-
-impl PjrtEngine {
-    /// Create a CPU PJRT client and load the manifest from `dir`.
-    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(PjrtEngine { client, manifest, cache: HashMap::new() })
-    }
-
-    /// Load from the default artifact directory (`$DEIGEN_ARTIFACTS` or
-    /// `./artifacts`).
-    pub fn load_default() -> Result<Self> {
-        Self::load(Manifest::default_dir())
-    }
-
-    /// PJRT platform string (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Does a `local_eig_cov` artifact exist for this (d, r)?
-    pub fn supports_cov_shape(&self, d: usize, r: usize) -> bool {
-        self.manifest
-            .find("local_eig_cov", &[vec![d, d], vec![d, r]])
-            .is_some()
-    }
-
-    fn executable(&mut self, entry: &ArtifactEntry) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.cache.contains_key(&entry.key) {
-            let path = self.manifest.path(entry);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parsing HLO text {path:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", entry.key))?;
-            self.cache.insert(entry.key.clone(), exe);
-        }
-        Ok(&self.cache[&entry.key])
-    }
-
-    fn entry(&self, name: &str, inputs: &[Vec<usize>]) -> Result<ArtifactEntry> {
-        self.manifest
-            .find(name, inputs)
-            .cloned()
-            .ok_or_else(|| anyhow!("no artifact for {name} with shapes {inputs:?} (see aot.py SHAPE_MANIFEST)"))
-    }
-
-    fn literal(m: &Mat) -> Result<xla::Literal> {
-        let flat = m.to_f32();
-        xla::Literal::vec1(&flat)
-            .reshape(&[m.rows() as i64, m.cols() as i64])
-            .context("reshaping input literal")
-    }
-
-    fn run(&mut self, entry: &ArtifactEntry, inputs: &[&Mat]) -> Result<Vec<xla::Literal>> {
-        let lits: Vec<xla::Literal> =
-            inputs.iter().map(|m| Self::literal(m)).collect::<Result<_>>()?;
-        let exe = self.executable(entry)?;
-        let result = exe.execute::<xla::Literal>(&lits)?[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        // aot.py lowers with return_tuple=True: output is always a tuple.
-        result.to_tuple().context("untupling result")
-    }
-
-    fn mat_from(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
-        let v = lit.to_vec::<f32>().context("reading f32 output")?;
-        if v.len() != rows * cols {
-            return Err(anyhow!("output size {} != {rows}x{cols}", v.len()));
-        }
-        Ok(Mat::from_f32(rows, cols, &v))
-    }
-
-    /// `local_eig` graph: samples (n, d) + init (d, r) -> (V (d, r), ritz).
-    pub fn local_eig(&mut self, x: &Mat, v0: &Mat) -> Result<(Mat, Vec<f64>)> {
-        let (n, d) = x.shape();
-        let (d2, r) = v0.shape();
-        if d != d2 {
-            return Err(anyhow!("x/v0 dims disagree"));
-        }
-        let entry = self.entry("local_eig", &[vec![n, d], vec![d, r]])?;
-        let out = self.run(&entry, &[x, v0])?;
-        let v = Self::mat_from(&out[0], d, r)?;
-        let ritz = out[1].to_vec::<f32>()?.iter().map(|&x| x as f64).collect();
-        Ok((v, ritz))
-    }
-
-    /// `local_eig_cov` graph: symmetric (d, d) + init (d, r) -> (V, ritz).
-    pub fn local_eig_cov(&mut self, c: &Mat, v0: &Mat) -> Result<(Mat, Vec<f64>)> {
-        let d = c.rows();
-        let (d2, r) = v0.shape();
-        if !c.is_square() || d != d2 {
-            return Err(anyhow!("bad shapes for local_eig_cov"));
-        }
-        let entry = self.entry("local_eig_cov", &[vec![d, d], vec![d, r]])?;
-        let out = self.run(&entry, &[c, v0])?;
-        let v = Self::mat_from(&out[0], d, r)?;
-        let ritz = out[1].to_vec::<f32>()?.iter().map(|&x| x as f64).collect();
-        Ok((v, ritz))
-    }
-
-    /// `procrustes` graph: align `v` (d, r) with `v_ref` (d, r).
-    pub fn procrustes(&mut self, v: &Mat, v_ref: &Mat) -> Result<Mat> {
-        let (d, r) = v.shape();
-        if v_ref.shape() != (d, r) {
-            return Err(anyhow!("procrustes shape mismatch"));
-        }
-        let entry = self.entry("procrustes", &[vec![d, r], vec![d, r]])?;
-        let out = self.run(&entry, &[v, v_ref])?;
-        Self::mat_from(&out[0], d, r)
-    }
-
-    /// `gram` graph: (n, d) samples -> (d, d) second-moment matrix.
-    pub fn gram(&mut self, x: &Mat) -> Result<Mat> {
-        let (n, d) = x.shape();
-        let entry = self.entry("gram", &[vec![n, d]])?;
-        let out = self.run(&entry, &[x])?;
-        Self::mat_from(&out[0], d, d)
-    }
-}
 
 /// Thread-shareable [`LocalSolver`] over a [`PjrtEngine`]: serializes all
 /// PJRT calls behind a mutex so worker threads can share one compiled

@@ -31,10 +31,16 @@ fn f64_to_f16_bits(x: f64) -> u16 {
     let f = x as f32;
     let bits = f.to_bits();
     let sign = ((bits >> 16) & 0x8000) as u16;
-    let mut exp = ((bits >> 23) & 0xff) as i32 - 127 + 15;
+    let raw_exp = (bits >> 23) & 0xff;
+    let mut exp = raw_exp as i32 - 127 + 15;
     let mut man = bits & 0x7f_ffff;
+    if raw_exp == 0xff {
+        // inf stays inf; NaN must stay NaN (not collapse to inf) — keep a
+        // quiet-NaN payload bit
+        return if man != 0 { sign | 0x7e00 } else { sign | 0x7c00 };
+    }
     if exp >= 0x1f {
-        // overflow -> inf
+        // finite overflow -> saturate to inf
         return sign | 0x7c00;
     }
     if exp <= 0 {
@@ -107,13 +113,33 @@ pub fn quantize_panel(m: &Mat, codec: Codec) -> QuantizedPanel {
             QuantizedPanel { rows, cols, codec, data, lo: 0.0, hi: 0.0 }
         }
         Codec::Int8 => {
-            let lo = m.as_slice().iter().copied().fold(f64::INFINITY, f64::min);
-            let hi = m.as_slice().iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            // range over the FINITE entries only: a single inf/NaN must
+            // not collapse the quantization range for the whole panel
+            let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+            for &v in m.as_slice() {
+                if v.is_finite() {
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+            }
+            if !(lo.is_finite() && hi.is_finite()) {
+                // no finite entry at all — degenerate zero range
+                lo = 0.0;
+                hi = 0.0;
+            }
             let scale = if hi > lo { 255.0 / (hi - lo) } else { 0.0 };
             let data = m
                 .as_slice()
                 .iter()
-                .map(|&v| ((v - lo) * scale).round().clamp(0.0, 255.0) as u8)
+                .map(|&v| {
+                    if v.is_nan() {
+                        // NaN has no order; encode at the bottom of range
+                        0u8
+                    } else {
+                        // clamp saturates +-inf to the finite range ends
+                        ((v.clamp(lo, hi) - lo) * scale).round().clamp(0.0, 255.0) as u8
+                    }
+                })
                 .collect();
             QuantizedPanel { rows, cols, codec, data, lo, hi }
         }
@@ -151,6 +177,100 @@ impl QuantizedPanel {
 mod tests {
     use super::*;
     use crate::rng::Pcg64;
+
+    #[test]
+    fn f16_roundtrip_subnormals() {
+        // f16 subnormal range is (0, 2^-14); smallest subnormal is 2^-24
+        let min_sub = 2.0f64.powi(-24);
+        let max_sub = 2.0f64.powi(-14) - 2.0f64.powi(-24);
+        for &v in &[min_sub, 3.0 * min_sub, 1e-7, 5e-6, max_sub, -min_sub, -2e-5] {
+            let back = f16_bits_to_f64(f64_to_f16_bits(v));
+            // subnormal quantum is 2^-24; round-trip error bounded by half
+            assert!(
+                (back - v).abs() <= 0.5 * min_sub,
+                "{v:e} -> {back:e}"
+            );
+            assert_eq!(back.signum(), v.signum(), "{v:e} lost its sign");
+        }
+        // below half the smallest subnormal: flush to (signed) zero
+        assert_eq!(f16_bits_to_f64(f64_to_f16_bits(1e-9)), 0.0);
+        assert!((0.0f64).eq(&f16_bits_to_f64(f64_to_f16_bits(0.0))));
+    }
+
+    #[test]
+    fn f16_roundtrip_inf_and_nan() {
+        assert_eq!(f16_bits_to_f64(f64_to_f16_bits(f64::INFINITY)), f64::INFINITY);
+        assert_eq!(
+            f16_bits_to_f64(f64_to_f16_bits(f64::NEG_INFINITY)),
+            f64::NEG_INFINITY
+        );
+        // NaN must survive as NaN, not collapse to inf
+        assert!(f16_bits_to_f64(f64_to_f16_bits(f64::NAN)).is_nan());
+        // finite overflow saturates to the correctly-signed infinity
+        assert_eq!(f16_bits_to_f64(f64_to_f16_bits(1e10)), f64::INFINITY);
+        assert_eq!(f16_bits_to_f64(f64_to_f16_bits(-1e10)), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn f16_panel_roundtrip_with_nonfinite_entries() {
+        let mut p = Mat::from_fn(4, 3, |i, j| (i as f64 - 1.0) * 0.25 + j as f64 * 0.125);
+        p[(0, 0)] = f64::INFINITY;
+        p[(1, 1)] = f64::NEG_INFINITY;
+        p[(2, 2)] = f64::NAN;
+        let back = dequantize_panel(&quantize_panel(&p, Codec::F16));
+        assert_eq!(back[(0, 0)], f64::INFINITY);
+        assert_eq!(back[(1, 1)], f64::NEG_INFINITY);
+        assert!(back[(2, 2)].is_nan());
+        // the finite entries are unaffected by the non-finite ones
+        assert!((back[(3, 0)] - p[(3, 0)]).abs() < 1e-3);
+    }
+
+    #[test]
+    fn int8_constant_panel_degenerate_range_roundtrips_exactly() {
+        for &c in &[0.0f64, 1.25, -3.5] {
+            let p = Mat::from_fn(6, 4, |_, _| c);
+            let q = quantize_panel(&p, Codec::Int8);
+            assert_eq!(q.lo, q.hi, "constant panel must have lo == hi");
+            let back = dequantize_panel(&q);
+            assert_eq!(back, p, "constant {c} must round-trip exactly");
+        }
+    }
+
+    #[test]
+    fn int8_nonfinite_entries_do_not_poison_the_range() {
+        let mut p = Mat::from_fn(5, 2, |i, j| (i * 2 + j) as f64 * 0.1);
+        p[(0, 0)] = f64::INFINITY;
+        p[(0, 1)] = f64::NEG_INFINITY;
+        p[(1, 0)] = f64::NAN;
+        let q = quantize_panel(&p, Codec::Int8);
+        // range comes from the finite entries only: {0.3 .. 0.9}
+        assert!((q.lo - 0.3).abs() < 1e-12, "lo {}", q.lo);
+        assert!((q.hi - 0.9).abs() < 1e-12, "hi {}", q.hi);
+        let back = dequantize_panel(&q);
+        // inf saturates to the range ends; NaN lands on a finite value
+        assert!((back[(0, 0)] - q.hi).abs() < 1e-12);
+        assert_eq!(back[(0, 1)], q.lo);
+        assert!(back[(1, 0)].is_finite());
+        // the finite entries keep the usual quantization guarantee
+        let step = (q.hi - q.lo) / 255.0;
+        for i in 1..5 {
+            for j in 0..2 {
+                if i == 1 && j == 0 {
+                    continue;
+                }
+                assert!((back[(i, j)] - p[(i, j)]).abs() <= 0.5 * step + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn int8_all_nonfinite_panel_is_harmless() {
+        let p = Mat::from_fn(3, 3, |_, _| f64::NAN);
+        let q = quantize_panel(&p, Codec::Int8);
+        assert_eq!((q.lo, q.hi), (0.0, 0.0));
+        let back = dequantize_panel(&q);
+        assert!(back.as_slice().iter().all(|v| v.is_finite()));
+    }
 
     #[test]
     fn f16_roundtrip_special_values() {

@@ -20,19 +20,33 @@ use crate::synth::CovModel;
 
 /// Single-stream Oja iteration: `V <- orth(V + eta_t x (x^T V))`.
 pub struct OjaStream {
-    /// Current orthonormal (d, r) iterate.
+    /// Current (d, r) iterate. Only orthonormal right after a periodic QR
+    /// or a [`OjaStream::reset`]; read final estimates via
+    /// [`OjaStream::finish`], which always re-orthonormalizes. Prefer
+    /// `reset` over writing this field directly — `reset` also restarts
+    /// the QR cadence.
     pub v: Mat,
     /// Samples consumed.
     pub t: usize,
     /// Learning-rate scale: `eta_t = eta0 / (t0 + t)`.
     pub eta0: f64,
     pub t0: f64,
+    /// Updates applied since the last orthonormalization. Tracked
+    /// explicitly (not as `t % 8`) so the QR cadence stays correct after
+    /// a mid-stream `reset` and so `finish` knows whether the panel is
+    /// already orthonormal.
+    dirty: usize,
 }
+
+/// Batch size of the periodic re-orthonormalization (QR is O(d r^2) vs
+/// the update's O(d r); batching amortizes it without letting the panel
+/// drift far from the Stiefel manifold).
+const QR_EVERY: usize = 8;
 
 impl OjaStream {
     /// Initialize from a random orthonormal panel.
     pub fn new(d: usize, r: usize, eta0: f64, rng: &mut Pcg64) -> Self {
-        OjaStream { v: rng.haar_stiefel(d, r), t: 0, eta0, t0: 10.0 }
+        OjaStream { v: rng.haar_stiefel(d, r), t: 0, eta0, t0: 10.0, dirty: 0 }
     }
 
     /// Consume one sample (a d-vector).
@@ -50,14 +64,24 @@ impl OjaStream {
                 row[j] += xi * w[j];
             }
         }
-        // re-orthonormalization every step keeps the analysis simple; for
-        // throughput one can batch (QR is O(d r^2) vs update's O(d r))
-        if self.t % 8 == 0 {
+        self.dirty += 1;
+        if self.dirty >= QR_EVERY {
             self.v = orthonormalize(&self.v);
+            self.dirty = 0;
         }
     }
 
-    /// Final orthonormal estimate.
+    /// Replace the iterate with an (orthonormal) panel from the
+    /// coordinator — the broadcast step of the distributed variant.
+    pub fn reset(&mut self, v: Mat) {
+        self.v = v;
+        self.dirty = 0;
+    }
+
+    /// Final orthonormal estimate: unconditionally re-orthonormalizes, so
+    /// the result is orthonormal for **every** stream length (not only
+    /// multiples of the QR batch size) and even if a caller wrote the
+    /// `pub v` field directly instead of going through [`OjaStream::reset`].
     pub fn finish(&self) -> Mat {
         orthonormalize(&self.v)
     }
@@ -109,7 +133,7 @@ pub fn distributed_oja(
             bytes += 2 * m * panel_bytes;
             sync_rounds += 1;
             for st in streams.iter_mut() {
-                st.v = combined.clone();
+                st.reset(combined.clone());
             }
         }
     }
@@ -129,6 +153,43 @@ mod tests {
     fn cov(rng: &mut Pcg64, d: usize, r: usize) -> CovModel {
         let model = SpectrumModel::M1 { r, lambda_lo: 0.5, lambda_hi: 1.0, delta: 0.3 };
         CovModel::draw(&model, d, rng)
+    }
+
+    #[test]
+    fn finish_orthonormal_for_every_stream_length() {
+        // regression: lengths with t % 8 != 0 used to depend on finish()
+        // alone; verify the contract for a whole range of lengths,
+        // including 0 and lengths crossing a reset
+        let mut rng = Pcg64::seed(41);
+        let c = cov(&mut rng, 12, 2);
+        for len in 0..20usize {
+            let mut oja = OjaStream::new(12, 2, 4.0, &mut rng);
+            for _ in 0..len {
+                let x = c.sample(1, &mut rng);
+                oja.update(x.row(0));
+            }
+            crate::testkit::check::assert_orthonormal(
+                &oja.finish(),
+                crate::testkit::tol::FACTOR,
+                &format!("oja finish at len {len}"),
+            );
+        }
+        // reset mid-batch, then a few more updates: still orthonormal
+        let mut oja = OjaStream::new(12, 2, 4.0, &mut rng);
+        for _ in 0..3 {
+            let x = c.sample(1, &mut rng);
+            oja.update(x.row(0));
+        }
+        oja.reset(rng.haar_stiefel(12, 2));
+        for _ in 0..5 {
+            let x = c.sample(1, &mut rng);
+            oja.update(x.row(0));
+        }
+        crate::testkit::check::assert_orthonormal(
+            &oja.finish(),
+            crate::testkit::tol::FACTOR,
+            "oja finish after reset",
+        );
     }
 
     #[test]

@@ -1,0 +1,119 @@
+//! Invariant checkers: the properties every estimate in this codebase must
+//! satisfy, computed through the [`super::oracle`] implementations so a
+//! broken production kernel cannot vouch for itself.
+
+use crate::linalg::Mat;
+
+use super::oracle;
+
+/// Orthonormality residual `max |V^T V - I|` (0 for a perfectly
+/// orthonormal panel), computed with the oracle product.
+pub fn orthonormality_residual(v: &Mat) -> f64 {
+    let r = v.cols();
+    oracle::at_b(v, v).sub(&Mat::eye(r)).max_abs()
+}
+
+/// Panic (with context) unless `v` has orthonormal columns to within `tol`.
+pub fn assert_orthonormal(v: &Mat, tol: f64, ctx: &str) {
+    let res = orthonormality_residual(v);
+    assert!(
+        res <= tol,
+        "{ctx}: panel {}x{} not orthonormal (residual {res:.3e} > tol {tol:.1e})",
+        v.rows(),
+        v.cols()
+    );
+}
+
+/// Subspace sin-Θ distance `||U U^T - V V^T||_2` between equal-rank
+/// orthonormal panels, computed from the *definition*: the explicit d x d
+/// projector difference is eigendecomposed with the Jacobi oracle (the
+/// production `linalg::subspace::dist2` instead goes through singular
+/// values of the r x r cross-Gram — entirely different route).
+pub fn sin_theta(u: &Mat, v: &Mat) -> f64 {
+    assert_eq!(u.shape(), v.shape(), "sin_theta: shape mismatch");
+    let diff = oracle::a_bt(u, u).sub(&oracle::a_bt(v, v));
+    let (vals, _) = oracle::jacobi_eig(&diff);
+    vals.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+}
+
+/// Procrustes optimality certificate for a claimed rotation `z`:
+/// `z` solves `argmin_{Z in O_r} ||V Z - V_ref||_F` **iff**
+/// (a) `z` is orthogonal and (b) `z^T (V^T V_ref)` is symmetric positive
+/// semidefinite (the polar-factor characterization, Higham 1988).
+/// Returns the largest violation of (a)+(b); 0 means certified optimal.
+pub fn procrustes_certificate(v: &Mat, v_ref: &Mat, z: &Mat) -> f64 {
+    let r = v.cols();
+    assert_eq!(v.shape(), v_ref.shape());
+    assert_eq!(z.shape(), (r, r));
+    // (a) orthogonality of the rotation
+    let ortho = orthonormality_residual(z);
+    // (b) H = Z^T G symmetric PSD, G = V^T V_ref
+    let g = oracle::at_b(v, v_ref);
+    let h = oracle::at_b(z, &g);
+    let mut asym = 0.0f64;
+    for i in 0..r {
+        for j in (i + 1)..r {
+            asym = asym.max((h[(i, j)] - h[(j, i)]).abs());
+        }
+    }
+    let mut hs = h.clone();
+    hs.symmetrize();
+    let (vals, _) = oracle::jacobi_eig(&hs);
+    let neg = vals.first().copied().unwrap_or(0.0).min(0.0).abs();
+    ortho.max(asym).max(neg)
+}
+
+/// Panic unless two matrices agree entrywise to within `tol`.
+pub fn assert_close(a: &Mat, b: &Mat, tol: f64, ctx: &str) {
+    assert_eq!(a.shape(), b.shape(), "{ctx}: shape {:?} vs {:?}", a.shape(), b.shape());
+    let err = a.sub(b).max_abs();
+    assert!(
+        err <= tol,
+        "{ctx}: matrices differ (max abs {err:.3e} > tol {tol:.1e})"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::gen;
+
+    #[test]
+    fn residual_zero_for_identity_positive_for_scaled() {
+        assert_eq!(orthonormality_residual(&Mat::eye(5)), 0.0);
+        let q = gen::haar_panel(12, 4, 3);
+        assert!(orthonormality_residual(&q) < 1e-10);
+        assert!(orthonormality_residual(&q.scale(1.5)) > 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not orthonormal")]
+    fn assert_orthonormal_panics_on_violation() {
+        let q = gen::haar_panel(10, 3, 4).scale(2.0);
+        assert_orthonormal(&q, 1e-8, "checker test");
+    }
+
+    #[test]
+    fn sin_theta_extremes() {
+        // identical spans (different bases): distance ~ 0
+        let u = gen::haar_panel(14, 3, 5);
+        let z = gen::haar_orthogonal(3, 6);
+        let v = crate::linalg::gemm::matmul(&u, &z);
+        assert!(sin_theta(&u, &v) < 1e-9);
+        // orthogonal coordinate spans: distance exactly 1
+        let e12 = Mat::from_fn(6, 2, |i, j| if i == j { 1.0 } else { 0.0 });
+        let e34 = Mat::from_fn(6, 2, |i, j| if i == j + 2 { 1.0 } else { 0.0 });
+        assert!((sin_theta(&e12, &e34) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn certificate_accepts_oracle_rotation_rejects_junk() {
+        let vref = gen::haar_panel(20, 4, 7);
+        let v = gen::noisy_copies(&vref, 1, 0.1, 8).pop().unwrap();
+        let z = crate::testkit::oracle::procrustes_rotation(&v, &vref);
+        assert!(procrustes_certificate(&v, &vref, &z) < 1e-9);
+        // an arbitrary other rotation must fail the certificate
+        let bad = gen::haar_orthogonal(4, 99);
+        assert!(procrustes_certificate(&v, &vref, &bad) > 1e-3);
+    }
+}

@@ -1,0 +1,225 @@
+//! Deterministic seeded generators for test instances: spiked covariances
+//! with a *known* leading eigenspace, Haar-random orthonormal panels,
+//! noisy panel families with the rotation ambiguity Algorithm 1 resolves,
+//! planted-partition graphs, and the adversarial shape sweep the GEMM
+//! property tests run over.
+//!
+//! Every generator takes an explicit `seed` and derives all randomness
+//! from a fresh [`Pcg64`] stream, so a failing test names the exact
+//! instance that broke it and reruns bit-identically on any machine and
+//! thread count.
+
+use crate::graph::Graph;
+use crate::linalg::gemm::{a_bt, matmul};
+use crate::linalg::qr::orthonormalize;
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+
+/// The threaded-GEMM size threshold, re-exported from `linalg::gemm` so
+/// the shape sweep below straddles the real serial/parallel boundary even
+/// if the kernel is retuned.
+pub use crate::linalg::gemm::PAR_THRESHOLD;
+
+/// A population covariance with a planted leading eigenspace.
+pub struct SpikedCov {
+    /// Full Haar-random eigenbasis (d, d); column `i` pairs with `taus[i]`.
+    pub basis: Mat,
+    /// Eigenvalues, descending.
+    pub taus: Vec<f64>,
+    /// Planted subspace dimension.
+    pub r: usize,
+}
+
+impl SpikedCov {
+    /// Ambient dimension.
+    pub fn dim(&self) -> usize {
+        self.basis.rows()
+    }
+
+    /// The planted leading eigenbasis (d, r) — the ground truth every
+    /// estimate is scored against.
+    pub fn truth(&self) -> Mat {
+        self.basis.col_block(0, self.r)
+    }
+
+    /// Eigengap `tau_r - tau_{r+1}` (positive by construction).
+    pub fn gap(&self) -> f64 {
+        self.taus[self.r - 1] - self.taus[self.r]
+    }
+
+    /// Dense covariance `Sigma = U diag(taus) U^T`.
+    pub fn sigma(&self) -> Mat {
+        let d = self.dim();
+        let ut = Mat::from_fn(d, d, |i, j| self.basis[(i, j)] * self.taus[j]);
+        a_bt(&ut, &self.basis)
+    }
+
+    /// `n` i.i.d. Gaussian samples `x ~ N(0, Sigma)` as rows of (n, d).
+    pub fn sample(&self, n: usize, rng: &mut Pcg64) -> Mat {
+        let d = self.dim();
+        let mut g = rng.normal_mat(n, d);
+        for i in 0..n {
+            for (j, v) in g.row_mut(i).iter_mut().enumerate() {
+                *v *= self.taus[j].sqrt();
+            }
+        }
+        a_bt(&g, &self.basis)
+    }
+}
+
+/// Spiked covariance: `r` leading eigenvalues at `lambda_top`, trailing
+/// eigenvalues decaying geometrically from `lambda_tail` with ratio 0.9.
+/// Requires `lambda_top > lambda_tail > 0` so the eigengap is
+/// `lambda_top - lambda_tail > 0` and the planted subspace is unique.
+pub fn spiked_covariance(d: usize, r: usize, lambda_top: f64, lambda_tail: f64, seed: u64) -> SpikedCov {
+    assert!(r >= 1 && r < d, "need 1 <= r < d");
+    assert!(
+        lambda_top > lambda_tail && lambda_tail > 0.0,
+        "need lambda_top > lambda_tail > 0 for a planted gap"
+    );
+    let mut rng = Pcg64::seed_stream(seed, 0x5e_ed);
+    let basis = rng.haar_orthogonal(d);
+    let taus: Vec<f64> = (0..d)
+        .map(|i| {
+            if i < r {
+                lambda_top
+            } else {
+                lambda_tail * 0.9f64.powi((i - r) as i32)
+            }
+        })
+        .collect();
+    SpikedCov { basis, taus, r }
+}
+
+/// Haar-random (d, r) orthonormal panel from a fixed seed.
+pub fn haar_panel(d: usize, r: usize, seed: u64) -> Mat {
+    Pcg64::seed_stream(seed, 0x9a_e1).haar_stiefel(d, r)
+}
+
+/// Haar-random (n, n) orthogonal matrix from a fixed seed.
+pub fn haar_orthogonal(n: usize, seed: u64) -> Mat {
+    Pcg64::seed_stream(seed, 0x9a_e2).haar_orthogonal(n)
+}
+
+/// `m` orthonormal panels spanning (approximately) the same subspace as
+/// `truth`, each rotated by an independent Haar `Z_i in O_r` and perturbed
+/// by Gaussian noise of scale `noise` before re-orthonormalization — the
+/// exact rotation-ambiguity setting of the paper's Eq. (3) discussion.
+pub fn noisy_copies(truth: &Mat, m: usize, noise: f64, seed: u64) -> Vec<Mat> {
+    let (d, r) = truth.shape();
+    let mut rng = Pcg64::seed_stream(seed, 0x9a_e3);
+    (0..m)
+        .map(|_| {
+            let z = rng.haar_orthogonal(r);
+            let noisy = matmul(truth, &z).add(&rng.normal_mat(d, r).scale(noise));
+            orthonormalize(&noisy)
+        })
+        .collect()
+}
+
+/// Planted-partition (stochastic block model) graph: `k` equal communities
+/// over `n` nodes, within-community edge probability `p_in`, across
+/// `p_out`. Labels record the planted partition.
+pub fn planted_partition(n: usize, k: usize, p_in: f64, p_out: f64, seed: u64) -> Graph {
+    assert!(k >= 1 && n >= k);
+    let mut rng = Pcg64::seed_stream(seed, 0x9a_e4);
+    let labels: Vec<usize> = (0..n).map(|i| i * k / n).collect();
+    let mut edges = Vec::new();
+    for u in 0..n {
+        for v in (u + 1)..n {
+            let p = if labels[u] == labels[v] { p_in } else { p_out };
+            if rng.bernoulli(p) {
+                edges.push((u, v));
+            }
+        }
+    }
+    Graph { n, edges, labels }
+}
+
+/// Adversarial (m, k, n) GEMM shapes: degenerate zero dimensions, single
+/// rows/columns, tall-skinny and wide panels, and sizes straddling the
+/// threaded-path threshold so both the serial and parallel kernels are
+/// exercised by every sweep.
+pub fn gemm_shapes() -> Vec<(usize, usize, usize)> {
+    vec![
+        // zero dimensions — every kernel must return well-shaped zeros
+        (0, 0, 0),
+        (0, 5, 3),
+        (5, 0, 3),
+        (3, 4, 0),
+        // minimal and vector-like
+        (1, 1, 1),
+        (1, 64, 1),
+        (1, 7, 64),
+        (64, 1, 64),
+        // tall-skinny and wide (the panel shapes of Algorithm 1)
+        (200, 3, 2),
+        (2, 3, 200),
+        (300, 8, 8),
+        // odd, non-power-of-two interior sizes
+        (17, 9, 13),
+        (33, 65, 31),
+        // straddling PAR_THRESHOLD = 2^21 multiply-adds:
+        // 127^3 = 2'048'383 < 2^21 (serial), 128^3 = 2^21 (parallel)
+        (127, 127, 127),
+        (128, 128, 128),
+        (129, 128, 127),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::check::orthonormality_residual;
+
+    #[test]
+    fn spiked_cov_deterministic_and_gapped() {
+        let a = spiked_covariance(24, 3, 1.0, 0.4, 7);
+        let b = spiked_covariance(24, 3, 1.0, 0.4, 7);
+        assert_eq!(a.sigma(), b.sigma());
+        assert!((a.gap() - 0.6).abs() < 1e-12);
+        assert!(orthonormality_residual(&a.truth()) < 1e-10);
+        let c = spiked_covariance(24, 3, 1.0, 0.4, 8);
+        assert!(a.sigma().sub(&c.sigma()).max_abs() > 1e-3, "seeds must differ");
+    }
+
+    #[test]
+    fn haar_panel_deterministic_orthonormal() {
+        let p = haar_panel(30, 5, 11);
+        assert_eq!(p, haar_panel(30, 5, 11));
+        assert!(orthonormality_residual(&p) < 1e-10);
+    }
+
+    #[test]
+    fn noisy_copies_share_the_span_approximately() {
+        let truth = haar_panel(25, 3, 1);
+        let fam = noisy_copies(&truth, 6, 0.02, 2);
+        assert_eq!(fam.len(), 6);
+        for v in &fam {
+            assert!(orthonormality_residual(v) < 1e-9);
+            assert!(crate::testkit::check::sin_theta(v, &truth) < 0.2);
+        }
+    }
+
+    #[test]
+    fn planted_partition_deterministic_and_labeled() {
+        let g = planted_partition(60, 3, 0.4, 0.05, 5);
+        let h = planted_partition(60, 3, 0.4, 0.05, 5);
+        assert_eq!(g.edges, h.edges);
+        for c in 0..3 {
+            assert_eq!(g.labels.iter().filter(|&&l| l == c).count(), 20);
+        }
+    }
+
+    #[test]
+    fn gemm_shapes_straddle_par_threshold() {
+        // keep the documented threshold in sync with linalg::gemm
+        let shapes = gemm_shapes();
+        assert!(shapes.iter().any(|&(m, k, n)| m * k * n >= PAR_THRESHOLD));
+        assert!(shapes.iter().any(|&(m, k, n)| {
+            let f = m * k * n;
+            f > 0 && f < PAR_THRESHOLD
+        }));
+        assert!(shapes.iter().any(|&(m, k, n)| m * k * n == 0));
+    }
+}

@@ -1,0 +1,88 @@
+//! Verification substrate (DESIGN.md S10): everything the test suites use
+//! to pin the production kernels to *independent* ground truth.
+//!
+//! Three pieces:
+//!
+//! - [`gen`] — deterministic seeded generators: spiked covariances with a
+//!   planted leading eigenspace, Haar panels, noisy rotated panel
+//!   families, planted-partition graphs, and the adversarial GEMM shape
+//!   sweep. All randomness derives from an explicit seed; no test depends
+//!   on wall-clock or thread count.
+//! - [`oracle`] — reference re-implementations with **no shared code
+//!   paths** with `linalg`: textbook i-j-k matmul, a cyclic-Jacobi
+//!   symmetric eigensolver (vs the production tred2/tql2), and a
+//!   brute-force Procrustes solve via the cross-Gram's full SVD.
+//! - [`check`] — invariant checkers built on the oracles: orthonormality
+//!   residual, definition-level subspace sin-Θ distance, and the
+//!   polar-factor optimality certificate for Procrustes rotations.
+//!
+//! ## Tolerance policy
+//!
+//! Tests share the [`tol`] constants instead of inventing ad-hoc
+//! thresholds, so a tolerance change is one diff reviewed in one place:
+//!
+//! | constant         | use                                                |
+//! |------------------|----------------------------------------------------|
+//! | [`tol::EXACT`]   | algebraic identities, no iteration involved        |
+//! | [`tol::KERNEL`]  | blocked/threaded kernel vs naive oracle            |
+//! | [`tol::FACTOR`]  | direct factorizations (QR, Cholesky, reconstruct)  |
+//! | [`tol::ITER`]    | iterative solvers run to convergence               |
+//! | [`tol::STAT`]    | statistical assertions on finite seeded samples    |
+
+pub mod check;
+pub mod gen;
+pub mod oracle;
+
+pub use check::{
+    assert_close, assert_orthonormal, orthonormality_residual,
+    procrustes_certificate, sin_theta,
+};
+pub use gen::{
+    gemm_shapes, haar_orthogonal, haar_panel, noisy_copies,
+    planted_partition, spiked_covariance, SpikedCov,
+};
+
+/// Shared numeric tolerances (see the module docs for the policy table).
+pub mod tol {
+    /// Algebraic identities computed directly in f64 (no iteration):
+    /// transposes, axpy algebra, exact reductions on small inputs.
+    pub const EXACT: f64 = 1e-12;
+
+    /// Agreement between a blocked/threaded kernel and its naive oracle —
+    /// same arithmetic in a different order, so only rounding differs.
+    pub const KERNEL: f64 = 1e-9;
+
+    /// Direct factorizations and their reconstructions (Householder QR,
+    /// Cholesky): backward error grows mildly with dimension.
+    pub const FACTOR: f64 = 1e-8;
+
+    /// Iterative solvers run to convergence (QL/Jacobi eigensolvers,
+    /// orthogonal iteration, Newton–Schulz): answers agree to well below
+    /// any decision threshold but not to the last few ulps.
+    pub const ITER: f64 = 1e-6;
+
+    /// Statistical assertions on finite samples with fixed seeds
+    /// (concentration, estimator-accuracy comparisons).
+    pub const STAT: f64 = 0.25;
+
+    /// Scale a base tolerance by `sqrt(n)` for n-dimensional reductions
+    /// whose rounding error accumulates with problem size.
+    pub fn dim_scaled(base: f64, n: usize) -> f64 {
+        base * (n.max(1) as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tolerances_are_ordered() {
+        assert!(tol::EXACT < tol::KERNEL);
+        assert!(tol::KERNEL < tol::FACTOR);
+        assert!(tol::FACTOR < tol::ITER);
+        assert!(tol::ITER < tol::STAT);
+        assert!(tol::dim_scaled(tol::KERNEL, 100) > tol::KERNEL);
+        assert_eq!(tol::dim_scaled(tol::KERNEL, 0), tol::KERNEL);
+    }
+}

@@ -1,0 +1,230 @@
+//! Reference oracles: independent re-implementations of the numeric
+//! operations the production kernels are tested against.
+//!
+//! Nothing in this module calls into `linalg::{gemm, eig, svd, qr}` — the
+//! whole point is an implementation with no shared code paths (different
+//! loop orders, a different eigenvalue algorithm, a different Procrustes
+//! route), so agreement between a kernel and its oracle is evidence of
+//! correctness rather than of a shared bug. Oracles favor clarity over
+//! speed; keep problem sizes in tests modest (d ≲ 64 for eigensolves).
+
+use crate::linalg::Mat;
+
+/// Naive dense product `C = A B` — textbook i-j-k dot-product order (the
+/// blocked kernels stream with i-k-j order, so even the summation order
+/// differs; agreement is checked to a tolerance, not bitwise).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "oracle matmul: inner dims differ");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    Mat::from_fn(m, n, |i, j| {
+        let mut acc = 0.0;
+        for l in 0..k {
+            acc += a[(i, l)] * b[(l, j)];
+        }
+        acc
+    })
+}
+
+/// Oracle `A^T B` via explicit transposition + [`matmul`].
+pub fn at_b(a: &Mat, b: &Mat) -> Mat {
+    matmul(&a.transpose(), b)
+}
+
+/// Oracle `A B^T` via explicit transposition + [`matmul`].
+pub fn a_bt(a: &Mat, b: &Mat) -> Mat {
+    matmul(a, &b.transpose())
+}
+
+/// Oracle scaled Gram matrix `(1/scale) X^T X`.
+pub fn gram_scaled(x: &Mat, scale: f64) -> Mat {
+    at_b(x, x).scale(1.0 / scale)
+}
+
+/// Full eigendecomposition of a symmetric matrix by the **cyclic Jacobi
+/// rotation method** (Golub & Van Loan §8.5) — a completely different
+/// algorithm from the production tred2/tql2 solver in `linalg::eig`.
+///
+/// Returns `(eigenvalues ascending, eigenvectors)` with eigenvector `k`
+/// in column `k`. Quadratically convergent; `MAX_SWEEPS` is generous.
+pub fn jacobi_eig(a: &Mat) -> (Vec<f64>, Mat) {
+    assert!(a.is_square(), "jacobi_eig needs a square matrix");
+    let n = a.rows();
+    if n == 0 {
+        return (vec![], Mat::zeros(0, 0));
+    }
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut v = Mat::eye(n);
+    let fro = m.fro_norm().max(f64::MIN_POSITIVE);
+
+    const MAX_SWEEPS: usize = 100;
+    for _ in 0..MAX_SWEEPS {
+        // total off-diagonal mass; converged when negligible vs ||A||_F
+        let mut off = 0.0;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += m[(p, q)] * m[(p, q)];
+            }
+        }
+        if off.sqrt() <= 1e-14 * fro {
+            break;
+        }
+        for p in 0..n.saturating_sub(1) {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                // symmetric Schur 2x2: rotation angle zeroing m[(p, q)]
+                let theta = (m[(q, q)] - m[(p, p)]) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    -1.0 / (-theta + (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // M <- J^T M J with J the (p, q) plane rotation
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| m[(i, i)].partial_cmp(&m[(j, j)]).unwrap());
+    let vals: Vec<f64> = order.iter().map(|&i| m[(i, i)]).collect();
+    let vecs = Mat::from_fn(n, n, |i, j| v[(i, order[j])]);
+    (vals, vecs)
+}
+
+/// Leading-r eigenbasis (largest eigenvalues, descending) of a symmetric
+/// matrix, via [`jacobi_eig`].
+pub fn top_eigvecs(a: &Mat, r: usize) -> (Mat, Vec<f64>) {
+    let n = a.rows();
+    assert!(r <= n);
+    let (vals, vecs) = jacobi_eig(a);
+    let v = Mat::from_fn(n, r, |i, j| vecs[(i, n - 1 - j)]);
+    let lam = (0..r).map(|j| vals[n - 1 - j]).collect();
+    (v, lam)
+}
+
+/// Spectral norm of an arbitrary matrix: `sqrt(lambda_max(A^T A))` by the
+/// Jacobi eigensolver (no power iteration, no shared code with
+/// `linalg::svd::spectral_norm`).
+pub fn spectral_norm(a: &Mat) -> f64 {
+    if a.rows() == 0 || a.cols() == 0 {
+        return 0.0;
+    }
+    let (vals, _) = jacobi_eig(&at_b(a, a));
+    vals.last().copied().unwrap_or(0.0).max(0.0).sqrt()
+}
+
+/// Brute-force orthogonal Procrustes rotation: the `Z in O_r` minimizing
+/// `||V Z - V_ref||_F`, computed from the full SVD of the cross-Gram
+/// `G = V^T V_ref` assembled via the Jacobi eigensolver:
+/// `G^T G = W diag(s^2) W^T`, `Z = U W^T = G W diag(1/s) W^T`.
+///
+/// Requires `G` nonsingular (true for every non-degenerate alignment the
+/// algorithms encounter); asserts on a numerically rank-deficient gram.
+pub fn procrustes_rotation(v: &Mat, v_ref: &Mat) -> Mat {
+    assert_eq!(v.shape(), v_ref.shape(), "oracle procrustes: shape mismatch");
+    let g = at_b(v, v_ref); // r x r
+    let r = g.rows();
+    let (vals, w) = jacobi_eig(&at_b(&g, &g));
+    let s: Vec<f64> = vals.iter().map(|&x| x.max(0.0).sqrt()).collect();
+    let s_max = s.iter().cloned().fold(0.0f64, f64::max).max(f64::MIN_POSITIVE);
+    for &si in &s {
+        assert!(
+            si > 1e-12 * s_max,
+            "oracle procrustes: cross-Gram numerically singular (s = {s:?})"
+        );
+    }
+    // Z = G W diag(1/s) W^T
+    let gw = matmul(&g, &w);
+    let gws = Mat::from_fn(r, r, |i, j| gw[(i, j)] / s[j]);
+    a_bt(&gws, &w)
+}
+
+/// Oracle alignment `V Z` with `Z` from [`procrustes_rotation`].
+pub fn procrustes_align(v: &Mat, v_ref: &Mat) -> Mat {
+    matmul(v, &procrustes_rotation(v, v_ref))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn oracle_matmul_identity_and_known_product() {
+        let a = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let i3 = Mat::eye(3);
+        assert_eq!(matmul(&a, &i3), a);
+        let b = Mat::from_vec(3, 1, vec![1.0, 0.0, -1.0]);
+        let c = matmul(&a, &b);
+        assert_eq!(c[(0, 0)], -2.0);
+        assert_eq!(c[(1, 0)], -2.0);
+    }
+
+    #[test]
+    fn jacobi_recovers_known_spectrum() {
+        let mut rng = Pcg64::seed(1);
+        let q = rng.haar_orthogonal(6);
+        let d = [7.0, 3.0, 1.0, 0.5, -1.0, -4.0];
+        let a = a_bt(&matmul(&q, &Mat::from_diag(&d)), &q);
+        let (vals, vecs) = jacobi_eig(&a);
+        let mut want = d.to_vec();
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (got, want) in vals.iter().zip(&want) {
+            assert!((got - want).abs() < 1e-10, "{got} vs {want}");
+        }
+        // eigenvectors orthonormal and reconstructing
+        let vtv = at_b(&vecs, &vecs);
+        assert!(vtv.sub(&Mat::eye(6)).max_abs() < 1e-10);
+        let rec = a_bt(&matmul(&vecs, &Mat::from_diag(&vals)), &vecs);
+        assert!(rec.sub(&a).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn jacobi_trivial_sizes() {
+        let (v0, m0) = jacobi_eig(&Mat::zeros(0, 0));
+        assert!(v0.is_empty());
+        assert_eq!(m0.shape(), (0, 0));
+        let (v1, _) = jacobi_eig(&Mat::from_diag(&[3.5]));
+        assert_eq!(v1, vec![3.5]);
+    }
+
+    #[test]
+    fn spectral_norm_of_diagonal() {
+        let a = Mat::from_diag(&[-5.0, 2.0, 1.0]);
+        assert!((spectral_norm(&a) - 5.0).abs() < 1e-10);
+        assert_eq!(spectral_norm(&Mat::zeros(4, 0)), 0.0);
+    }
+
+    #[test]
+    fn procrustes_oracle_fixes_pure_rotation_exactly() {
+        let mut rng = Pcg64::seed(2);
+        let vref = rng.haar_stiefel(20, 4);
+        let z = rng.haar_orthogonal(4);
+        let v = matmul(&vref, &z);
+        let aligned = procrustes_align(&v, &vref);
+        assert!(aligned.sub(&vref).max_abs() < 1e-9);
+    }
+}

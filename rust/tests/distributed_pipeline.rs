@@ -10,11 +10,12 @@ use deigen::coordinator::{
     run_cluster, AggregationRule, ClusterConfig, NetworkModel, NodeBehavior,
     WorkerData,
 };
-use deigen::linalg::subspace::{dist2, is_orthonormal};
+use deigen::linalg::subspace::dist2;
 use deigen::linalg::Mat;
 use deigen::rng::Pcg64;
 use deigen::runtime::NativeEngine;
 use deigen::synth::{CovModel, SpectrumModel};
+use deigen::testkit::{check, tol};
 
 fn pca_workers(
     seed: u64,
@@ -41,8 +42,12 @@ fn cluster_single_round_equals_library_algorithm1() {
     let cfg = ClusterConfig { r: 4, seed: 3, ..Default::default() };
     let res = run_cluster(workers, Arc::new(NativeEngine::default()), &cfg);
     let lib = align::procrustes_fix(&res.local_panels);
-    assert!(res.estimate.sub(&lib).max_abs() < 1e-10);
+    check::assert_close(&res.estimate, &lib, 1e-10, "cluster vs library Alg1");
+    check::assert_orthonormal(&res.estimate, tol::FACTOR, "cluster estimate");
     assert!(dist2(&res.estimate, &truth) < 0.15);
+    // metric cross-check: production dist2 vs the definition-level oracle
+    let oracle_dist = check::sin_theta(&res.estimate, &truth);
+    assert!((dist2(&res.estimate, &truth) - oracle_dist).abs() < tol::ITER);
 }
 
 #[test]
@@ -153,9 +158,10 @@ fn estimates_always_orthonormal_across_configs() {
             ..Default::default()
         };
         let res = run_cluster(workers, Arc::new(NativeEngine::default()), &cfg);
-        assert!(
-            is_orthonormal(&res.estimate, 1e-7),
-            "seed {seed} d={d} r={r} m={m}"
+        check::assert_orthonormal(
+            &res.estimate,
+            1e-7,
+            &format!("seed {seed} d={d} r={r} m={m}"),
         );
     }
 }

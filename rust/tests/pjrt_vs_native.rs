@@ -4,24 +4,46 @@
 //! three-layer design: L1/L2 numerics (f32, Newton–Schulz, Pallas tiling)
 //! vs the independent rust implementation (f64, Householder/Jacobi).
 //!
-//! Requires `make artifacts`; tests skip gracefully when artifacts are
-//! missing (CI without Python).
+//! Requires `make artifacts` AND a build with the `pjrt` feature; the
+//! cross-engine tests skip gracefully when either is missing (CI without
+//! Python, offline builds with the stub engine). The suite still earns
+//! its keep in those environments: the second half pins the **native**
+//! engine to the testkit oracles at the exact artifact shapes, so the
+//! gold standard the PJRT side is compared against is itself verified.
 
 use deigen::linalg::gemm::syrk_scaled;
 use deigen::linalg::procrustes::procrustes_align;
 use deigen::linalg::subspace::{dist2, is_orthonormal};
-use deigen::linalg::Mat;
 use deigen::rng::Pcg64;
-use deigen::runtime::{Manifest, PjrtEngine};
+use deigen::runtime::{LocalSolver, Manifest, NativeEngine, PjrtEngine};
 use deigen::synth::{CovModel, SpectrumModel};
+use deigen::testkit::{check, gen, oracle, tol};
+
+/// The (d, r) shapes `aot.py` bakes `local_eig_cov` artifacts for.
+const ARTIFACT_SHAPES: &[(usize, usize)] = &[(64, 8), (128, 16)];
 
 fn engine_or_skip() -> Option<PjrtEngine> {
     if !Manifest::default_dir().join("manifest.json").exists() {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");
         return None;
     }
-    Some(PjrtEngine::load_default().expect("PJRT engine should load"))
+    match PjrtEngine::load_default() {
+        Ok(engine) => Some(engine),
+        Err(e) if !cfg!(feature = "pjrt") => {
+            // stub build: cross-engine comparison is impossible by
+            // construction; the native-vs-oracle tests below still run
+            eprintln!("skipping: PJRT engine unavailable ({e:#})");
+            None
+        }
+        // real-engine build with artifacts present: a load failure is a
+        // regression, not a skip — fail loudly
+        Err(e) => panic!("PJRT engine failed to load with `pjrt` enabled: {e:#}"),
+    }
 }
+
+// ---------------------------------------------------------------------
+// PJRT vs native (skip without artifacts + the `pjrt` feature)
+// ---------------------------------------------------------------------
 
 #[test]
 fn gram_artifact_matches_native_syrk() {
@@ -112,4 +134,80 @@ fn pjrt_deterministic_across_calls() {
     let a = engine.gram(&x).unwrap();
     let b = engine.gram(&x).unwrap();
     assert!(a.sub(&b).max_abs() == 0.0);
+}
+
+// ---------------------------------------------------------------------
+// native engine vs testkit oracles at the artifact shapes (always run)
+// ---------------------------------------------------------------------
+
+/// Without the `pjrt` feature the stub engine must refuse to load with a
+/// descriptive error instead of panicking or pretending to work.
+#[test]
+fn stub_engine_fails_loudly_not_silently() {
+    if cfg!(feature = "pjrt") {
+        return; // real engine: behavior covered by the tests above
+    }
+    match PjrtEngine::load_default() {
+        Ok(_) => panic!("stub PjrtEngine must not construct"),
+        Err(e) => {
+            let msg = format!("{e:#}");
+            assert!(
+                msg.contains("pjrt"),
+                "stub error should name the missing feature: {msg}"
+            );
+        }
+    }
+}
+
+/// The native gram (SYRK) path at the gram artifact shape (500, 64),
+/// pinned to the oracle Gram.
+#[test]
+fn native_gram_matches_oracle_at_artifact_shape() {
+    let mut rng = Pcg64::seed(7);
+    let x = rng.normal_mat(500, 64);
+    check::assert_close(
+        &syrk_scaled(&x, 500.0),
+        &oracle::gram_scaled(&x, 500.0),
+        tol::dim_scaled(tol::KERNEL, 500),
+        "native gram at artifact shape (500, 64)",
+    );
+}
+
+/// The native local eigensolver at every artifact (d, r): must find the
+/// planted subspace of a spiked covariance, judged by the oracle sin-Θ.
+#[test]
+fn native_engine_matches_oracle_at_artifact_shapes() {
+    for &(d, r) in ARTIFACT_SHAPES {
+        let cov = gen::spiked_covariance(d, r, 1.0, 0.5, 8000 + d as u64);
+        let sigma = cov.sigma();
+        let mut rng = Pcg64::seed(9000 + d as u64);
+        let v = NativeEngine::default().leading_subspace(&sigma, r, &mut rng);
+        check::assert_orthonormal(&v, tol::FACTOR, &format!("native panel ({d},{r})"));
+        let dist = check::sin_theta(&v, &cov.truth());
+        assert!(
+            dist < 100.0 * tol::ITER,
+            "({d},{r}): native engine missed the planted subspace ({dist:.2e})"
+        );
+    }
+}
+
+/// The native Procrustes solve at the procrustes artifact shape (64, 8):
+/// oracle agreement plus the optimality certificate.
+#[test]
+fn native_procrustes_certified_at_artifact_shape() {
+    let (d, r) = (64usize, 8usize);
+    let truth = gen::haar_panel(d, r, 42);
+    let pair = gen::noisy_copies(&truth, 2, 0.05, 43);
+    let (v, vref) = (&pair[0], &pair[1]);
+    let z = deigen::linalg::procrustes::procrustes_rotation(v, vref);
+    assert!(
+        check::procrustes_certificate(v, vref, &z) < tol::ITER,
+        "certificate violated at artifact shape"
+    );
+    check::assert_close(
+        &z,
+        &oracle::procrustes_rotation(v, vref),
+        tol::ITER,
+        "native rotation vs oracle at artifact shape",
+    );
 }
