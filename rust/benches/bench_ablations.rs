@@ -3,7 +3,7 @@
 //! 1. **Federated single round vs decentralized gossip** (§1.2's third
 //!    distributed flavor): accuracy and communication of Algorithm 1's one
 //!    round vs ring/complete gossip until mixed.
-//! 2. **Panel compression**: f32 vs f16 vs int8 uploads — accuracy cost of
+//! 2. **Panel compression**: f64 vs f16 vs int8 uploads — accuracy cost of
 //!    shrinking the paper's already-small (d, r) messages.
 //! 3. **Frequent Directions** ([25]): shipping mergeable sketches instead
 //!    of eigenbasis panels — the related-work alternative pipeline.
@@ -15,6 +15,7 @@
 use deigen::align;
 use deigen::benchutil::{bench, fmt_time, header, quick_mode};
 use deigen::coordinator::gossip::{gossip_align, spread, Topology};
+use deigen::coordinator::WireCodec;
 use deigen::linalg::subspace::dist2;
 use deigen::linalg::Mat;
 use deigen::rng::Pcg64;
@@ -41,7 +42,7 @@ fn main() {
             solver.leading_subspace(&CovModel::empirical_cov(x), r, &mut node_rng)
         })
         .collect();
-    let panel_bytes = 4 * d * r;
+    let panel_bytes = 8 * d * r; // raw-f64 wire size of one (d, r) panel
 
     // --- 1. federated vs gossip ------------------------------------------
     println!("\n[1] federated single round vs gossip  (d={d} r={r} m={m} n={n})");
@@ -52,7 +53,7 @@ fn main() {
         m * panel_bytes
     );
     for (name, topo) in [("ring", Topology::Ring), ("complete", Topology::Complete)] {
-        let res = gossip_align(panels.clone(), &topo, 40, 1e-3, None);
+        let res = gossip_align(panels.clone(), &topo, 40, 1e-3, WireCodec::F64, None);
         let worst = res
             .panels
             .iter()
@@ -69,7 +70,7 @@ fn main() {
 
     // --- 2. panel compression ---------------------------------------------
     println!("\n[2] upload compression");
-    println!("  f32 (baseline) : dist {:.4}   {} B/panel", dist2(&fed, &truth), panel_bytes);
+    println!("  f64 (baseline) : dist {:.4}   {} B/panel", dist2(&fed, &truth), panel_bytes);
     for codec in [Codec::F16, Codec::Int8] {
         let compressed: Vec<Mat> = panels
             .iter()
@@ -127,6 +128,6 @@ fn main() {
         );
     }
     println!("\n  takeaways: one federated round matches gossip-until-mixed at a fraction");
-    println!("  of the bytes; f16 halves upload size for free; FD sketches trade bytes");
-    println!("  for bias; shift-invert wins local solves only when the gap is tiny.");
+    println!("  of the bytes; f16 cuts upload size 4x for free (int8: 8x); FD sketches");
+    println!("  trade bytes for bias; shift-invert wins local solves only at tiny gaps.");
 }

@@ -46,10 +46,7 @@ fn main() {
             let wan = NetworkModel::wan();
             let dc = NetworkModel::datacenter();
             // recompute simulated times from the snapshot
-            let sim = |net: &NetworkModel| {
-                out.comm.rounds as f64 * net.latency_s
-                    + (out.comm.bytes_up + out.comm.bytes_down) as f64 / net.bandwidth_bps
-            };
+            let sim = |net: &NetworkModel| out.comm.simulated_time(net);
             println!(
                 "  {m:>2}   {refine:>6}   {:>12}   {:>10}B   {:>10}B   {:>8}   {:>8}",
                 fmt_time(res.median_s),
@@ -62,10 +59,11 @@ fn main() {
     }
 
     // the communication comparison the single-round design wins:
-    // uploading panels (4dr bytes) vs uploading raw local covariances
-    // (4d^2 bytes, what a "send everything to the leader" design needs)
-    let panel = 4 * d * r;
-    let cov_bytes = 4 * d * d;
+    // uploading panels (8dr bytes raw-f64) vs uploading raw local
+    // covariances (8d^2 bytes, what a "send everything to the leader"
+    // design needs) — and the wire codecs shrink the panel side further
+    let panel = 8 * d * r;
+    let cov_bytes = 8 * d * d;
     println!(
         "\n  per-node upload: aligned panel {panel} B vs raw covariance {cov_bytes} B ({}x saving)",
         cov_bytes / panel

@@ -1,0 +1,60 @@
+//! Wire-codec encode/decode throughput: how fast each [`WireCodec`] turns
+//! a (d, r) panel into wire bytes and back, and what it costs on the
+//! wire. The decode column is the leader's per-panel cost in round 1, so
+//! it bounds how far transport compression can be pushed before the
+//! leader becomes compute-bound instead of bandwidth-bound.
+//! Run: `cargo bench --bench bench_wire`
+
+use deigen::benchutil::{bench, fmt_time, header};
+use deigen::coordinator::WireCodec;
+use deigen::rng::Pcg64;
+
+/// Human bytes-per-second formatting.
+fn fmt_rate(bps: f64) -> String {
+    if bps >= 1e9 {
+        format!("{:.2}GB/s", bps / 1e9)
+    } else if bps >= 1e6 {
+        format!("{:.2}MB/s", bps / 1e6)
+    } else {
+        format!("{:.0}kB/s", bps / 1e3)
+    }
+}
+
+fn main() {
+    header("wire codec encode/decode");
+    let mut rng = Pcg64::seed(9);
+    for &(d, r) in &[(256usize, 8usize), (512, 16)] {
+        let panel = rng.haar_stiefel(d, r);
+        let raw = 8 * d * r;
+        println!("\n  panel {d}x{r} ({raw} B raw)");
+        println!("  codec    wire bytes   ratio      encode            decode");
+        for codec in [
+            WireCodec::F64,
+            WireCodec::F16,
+            WireCodec::Int8,
+            WireCodec::FdSketch { l: r / 2 },
+        ] {
+            let encoded = codec.encode(&panel);
+            let wire = encoded.wire_bytes();
+            let enc = bench(&format!("{} encode {d}x{r}", codec.name()), 2, 9, || {
+                std::hint::black_box(codec.encode(&panel));
+            });
+            let dec = bench(&format!("{} decode {d}x{r}", codec.name()), 2, 9, || {
+                std::hint::black_box(encoded.decode());
+            });
+            println!(
+                "  {:<6}   {:>8} B   {:>5.2}x   {:>9} ({:>9})   {:>9} ({:>9})",
+                codec.name(),
+                wire,
+                raw as f64 / wire as f64,
+                fmt_time(enc.median_s),
+                fmt_rate(raw as f64 / enc.median_s.max(1e-12)),
+                fmt_time(dec.median_s),
+                fmt_rate(raw as f64 / dec.median_s.max(1e-12)),
+            );
+        }
+    }
+    println!("\n  quantizers encode at memory speed; the FD sketch pays a d x d");
+    println!("  eigendecomposition on decode — cheap for the leader, but the reason");
+    println!("  it is the aggressive (not the default) end of the sweep.");
+}

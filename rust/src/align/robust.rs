@@ -22,10 +22,13 @@ pub fn robust_reference_index(locals: &[Mat]) -> usize {
             .map(|j| procrustes_distance(&locals[j], &locals[i]))
             .collect();
         dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let med = if dists.is_empty() {
-            0.0
-        } else {
-            dists[dists.len() / 2]
+        // true median: for even-length lists average the two middle
+        // elements — taking the upper middle alone biases the score
+        // upward exactly when half the distances are adversarial
+        let med = match dists.len() {
+            0 => 0.0,
+            len if len % 2 == 1 => dists[len / 2],
+            len => 0.5 * (dists[len / 2 - 1] + dists[len / 2]),
         };
         if med < best.0 {
             best = (med, i);
@@ -101,6 +104,33 @@ mod tests {
         // byzantine panels are indices 9, 10, 11
         let idx = robust_reference_index(&locals);
         assert!(idx < 9, "picked byzantine reference {idx}");
+    }
+
+    #[test]
+    fn robust_reference_with_even_honest_count() {
+        // 4 honest + 1 byzantine: every honest node scores an even number
+        // of distances (4), so the reference pick exercises the two-middle
+        // average; the reference must still be an honest node
+        for seed in 0..5u64 {
+            let mut rng = Pcg64::seed(100 + seed);
+            let (_, locals) = honest_and_byzantine(&mut rng, 24, 3, 4, 1, 0.05);
+            let idx = robust_reference_index(&locals);
+            assert!(idx < 4, "seed {seed}: picked byzantine reference {idx}");
+        }
+    }
+
+    #[test]
+    fn true_median_keeps_honest_reference_at_half_adversarial_distances() {
+        // 3 honest + 2 byzantine: an honest node's sorted distance list is
+        // [s, s, L, L]. The upper-middle pick scores it L — the same as a
+        // byzantine node — while the true median (s + L)/2 keeps honest
+        // nodes strictly ahead.
+        for seed in 0..5u64 {
+            let mut rng = Pcg64::seed(200 + seed);
+            let (_, locals) = honest_and_byzantine(&mut rng, 30, 3, 3, 2, 0.03);
+            let idx = robust_reference_index(&locals);
+            assert!(idx < 3, "seed {seed}: picked byzantine reference {idx}");
+        }
     }
 
     #[test]

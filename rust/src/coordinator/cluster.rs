@@ -12,8 +12,11 @@
 //!   the aligned panel; repeated `refine_rounds` times with the averaged
 //!   result as the next reference.
 //!
-//! All traffic is metered by [`CommStats`]; Byzantine workers (the §4
-//! threat model) upload arbitrary orthonormal panels.
+//! Panels are encoded with the negotiated [`WireCodec`] at the channel
+//! boundary in both directions, and all payload traffic is metered by
+//! [`CommStats`] at its *encoded* size (control messages are metered
+//! separately); Byzantine workers (the §4 threat model) upload arbitrary
+//! orthonormal panels.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -24,7 +27,7 @@ use crate::rng::Pcg64;
 use crate::runtime::LocalSolver;
 
 use super::netsim::{CommSnapshot, CommStats, NetworkModel};
-use super::protocol::{AggregationRule, Message};
+use super::protocol::{AggregationRule, Message, WireCodec};
 
 /// Per-worker input.
 pub struct WorkerData {
@@ -54,6 +57,9 @@ pub struct ClusterConfig {
     pub aggregation: AggregationRule,
     /// Latency/bandwidth model for the simulated-time report.
     pub network: NetworkModel,
+    /// Wire encoding for every panel crossing a channel (both
+    /// directions); negotiated once per run.
+    pub codec: WireCodec,
     /// Master seed (worker i derives stream i).
     pub seed: u64,
 }
@@ -65,6 +71,7 @@ impl Default for ClusterConfig {
             refine_rounds: 0,
             aggregation: AggregationRule::Mean,
             network: NetworkModel::datacenter(),
+            codec: WireCodec::F64,
             seed: 0,
         }
     }
@@ -74,7 +81,9 @@ impl Default for ClusterConfig {
 pub struct ClusterResult {
     /// The final orthonormal (d, r) estimate.
     pub estimate: Mat,
-    /// The raw local panels as received in round 1 (diagnostics/baselines).
+    /// The local panels as received (decoded) in round 1
+    /// (diagnostics/baselines). Lossy codecs make these approximations
+    /// of the workers' exact panels.
     pub local_panels: Vec<Mat>,
     /// Communication accounting.
     pub comm: CommSnapshot,
@@ -112,8 +121,9 @@ pub fn run_cluster(
         let solver_i = Arc::clone(&solver);
         let seed = config.seed;
         let r = config.r;
+        let codec = config.codec;
         handles.push(std::thread::spawn(move || {
-            worker_main(i, data, solver_i, up, rx, stats_i, seed, r);
+            worker_main(i, data, solver_i, up, rx, stats_i, seed, r, codec);
         }));
     }
     drop(to_leader);
@@ -122,7 +132,7 @@ pub fn run_cluster(
     let mut panels: Vec<Option<Mat>> = vec![None; m];
     for _ in 0..m {
         match leader_rx.recv().expect("worker hung up early") {
-            Message::LocalEstimate { node, panel, .. } => panels[node] = Some(panel),
+            Message::LocalEstimate { node, panel, .. } => panels[node] = Some(panel.decode()),
             other => panic!("unexpected message in round 1: {other:?}"),
         }
     }
@@ -136,9 +146,10 @@ pub fn run_cluster(
     } else {
         let mut reference = local_panels[0].clone();
         for round in 1..=config.refine_rounds {
-            // broadcast reference
+            // broadcast reference (encoded once, metered per link)
+            let encoded = config.codec.encode(&reference);
             for tx in &to_workers {
-                let msg = Message::Reference { round, panel: reference.clone() };
+                let msg = Message::Reference { round, panel: encoded.clone() };
                 stats.record_down(msg.wire_bytes());
                 tx.send(msg).expect("worker gone");
             }
@@ -146,12 +157,20 @@ pub fn run_cluster(
             let mut aligned: Vec<Option<Mat>> = vec![None; m];
             for _ in 0..m {
                 match leader_rx.recv().expect("worker hung up mid-round") {
-                    Message::Aligned { node, panel, .. } => aligned[node] = Some(panel),
+                    Message::Aligned { node, panel, .. } => aligned[node] = Some(panel.decode()),
                     other => panic!("unexpected message in refinement: {other:?}"),
                 }
             }
             stats.bump_round();
-            let aligned: Vec<Mat> = aligned.into_iter().map(Option::unwrap).collect();
+            let mut aligned: Vec<Mat> = aligned.into_iter().map(Option::unwrap).collect();
+            // span-only codecs (FD sketch) lose the worker-side alignment
+            // in transit — the decoded basis is arbitrary — so the leader
+            // re-aligns before aggregating entry-wise
+            if !config.codec.preserves_representative() {
+                for p in aligned.iter_mut() {
+                    *p = crate::linalg::procrustes::procrustes_align(p, &reference);
+                }
+            }
             reference = match config.aggregation {
                 AggregationRule::Mean => align::mean_qr(&aligned),
                 AggregationRule::CoordinateMedian => align::median_qr(&aligned),
@@ -161,9 +180,12 @@ pub fn run_cluster(
     };
 
     // --- shutdown --------------------------------------------------------
+    // Done is control traffic: metered separately so it cannot inflate
+    // the payload meters or the simulated wall-clock
     for tx in &to_workers {
         let msg = Message::Done;
-        stats.record_down(msg.wire_bytes());
+        debug_assert!(msg.is_control());
+        stats.record_ctrl(msg.wire_bytes());
         let _ = tx.send(msg);
     }
     for h in handles {
@@ -185,6 +207,7 @@ fn worker_main(
     stats: Arc<CommStats>,
     seed: u64,
     r: usize,
+    codec: WireCodec,
 ) {
     let mut rng = Pcg64::seed_stream(seed, id as u64 + 1);
     let d = data.observation.rows();
@@ -194,21 +217,23 @@ fn worker_main(
         NodeBehavior::Honest => solver.leading_subspace(&data.observation, r, &mut rng),
         NodeBehavior::Byzantine => rng.haar_stiefel(d, r),
     };
-    let msg = Message::LocalEstimate { node: id, panel: panel.clone(), ritz: vec![] };
+    let msg = Message::LocalEstimate { node: id, panel: codec.encode(&panel), ritz: vec![] };
     stats.record_up(msg.wire_bytes());
     up.send(msg).expect("leader gone");
 
-    // refinement rounds (if any)
+    // refinement rounds (if any); the worker aligns its *exact* local
+    // panel against the decoded broadcast reference
     while let Ok(msg) = rx.recv() {
         match msg {
             Message::Reference { round, panel: reference } => {
                 let aligned = match data.behavior {
-                    NodeBehavior::Honest => {
-                        crate::linalg::procrustes::procrustes_align(&panel, &reference)
-                    }
+                    NodeBehavior::Honest => crate::linalg::procrustes::procrustes_align(
+                        &panel,
+                        &reference.decode(),
+                    ),
                     NodeBehavior::Byzantine => rng.haar_stiefel(d, r),
                 };
-                let reply = Message::Aligned { node: id, round, panel: aligned };
+                let reply = Message::Aligned { node: id, round, panel: codec.encode(&aligned) };
                 stats.record_up(reply.wire_bytes());
                 up.send(reply).expect("leader gone");
             }
@@ -259,10 +284,14 @@ mod tests {
         // sin-theta oracle on this estimate
         let oracle_dist = check::sin_theta(&res.estimate, &truth);
         assert!((dist2(&res.estimate, &truth) - oracle_dist).abs() < tol::ITER);
-        // protocol shape: m uploads, 1 round, only Done downstream
+        // protocol shape: m uploads, 1 round, no payload downstream —
+        // the Done shutdown is control traffic, metered separately
         assert_eq!(res.comm.msgs_up, 8);
         assert_eq!(res.comm.rounds, 1);
-        assert_eq!(res.comm.msgs_down, 8); // Done x m
+        assert_eq!(res.comm.msgs_down, 0);
+        assert_eq!(res.comm.bytes_down, 0);
+        assert_eq!(res.comm.msgs_ctrl, 8); // Done x m
+        assert_eq!(res.comm.bytes_ctrl, 8 * super::super::protocol::HEADER_BYTES);
         // cross-check against the library-level estimator on the same panels
         let lib = crate::align::procrustes_fix(&res.local_panels);
         assert!(dist2(&res.estimate, &lib) < 1e-6);
@@ -277,8 +306,9 @@ mod tests {
         assert!(dist2(&res.estimate, &truth) < 0.2);
         // rounds: 1 (collect) + 3 (refine)
         assert_eq!(res.comm.rounds, 4);
-        // downstream: 3 broadcasts x 6 workers + 6 Done
-        assert_eq!(res.comm.msgs_down, 3 * 6 + 6);
+        // downstream payload: 3 broadcasts x 6 workers; Done is control
+        assert_eq!(res.comm.msgs_down, 3 * 6);
+        assert_eq!(res.comm.msgs_ctrl, 6);
         // upstream: 6 local + 3 x 6 aligned
         assert_eq!(res.comm.msgs_up, 6 + 18);
     }
@@ -290,9 +320,38 @@ mod tests {
         let (_, workers) = make_workers(&mut rng, 32, 4, 5, 0.02);
         let cfg = ClusterConfig { r: 4, seed: 1, ..Default::default() };
         let res = run_cluster(workers, Arc::new(NativeEngine::default()), &cfg);
-        let panel_bytes = 4 * 32 * 4 + super::super::protocol::HEADER_BYTES;
+        // default codec is raw f64: 8 bytes per panel entry
+        let panel_bytes = 8 * 32 * 4 + super::super::protocol::HEADER_BYTES;
         assert_eq!(res.comm.bytes_up, 5 * panel_bytes);
         assert!(res.sim_time_s > 0.0);
+    }
+
+    // (the int8 bytes_up-ratio pin lives in the integration suite:
+    // tests/distributed_pipeline.rs::int8_wire_codec_cuts_upload_8x_within_stat_tolerance)
+
+    #[test]
+    fn lossy_codecs_keep_refinement_working() {
+        // FdSketch decodes to an arbitrary basis for the span, exercising
+        // the leader-side re-alignment path
+        for codec in [WireCodec::F16, WireCodec::Int8, WireCodec::FdSketch { l: 4 }] {
+            let mut rng = Pcg64::seed(7);
+            let (truth, workers) = make_workers(&mut rng, 20, 2, 6, 0.05);
+            let cfg = ClusterConfig {
+                r: 2,
+                refine_rounds: 2,
+                codec,
+                seed: 17,
+                ..Default::default()
+            };
+            let res = run_cluster(workers, Arc::new(NativeEngine::default()), &cfg);
+            check::assert_orthonormal(&res.estimate, tol::FACTOR, "lossy refined estimate");
+            assert!(
+                dist2(&res.estimate, &truth) < 0.2,
+                "{}: {}",
+                codec.name(),
+                dist2(&res.estimate, &truth)
+            );
+        }
     }
 
     #[test]

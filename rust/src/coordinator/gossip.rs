@@ -15,7 +15,7 @@ use crate::linalg::subspace::dist2;
 use crate::linalg::Mat;
 
 use super::netsim::CommStats;
-use super::protocol::HEADER_BYTES;
+use super::protocol::{WireCodec, WirePanel, HEADER_BYTES};
 
 /// Communication topology for gossip.
 #[derive(Clone, Debug)]
@@ -84,24 +84,36 @@ pub fn spread(panels: &[Mat]) -> f64 {
 }
 
 /// Run synchronous gossip alignment for `rounds` rounds (or until the
-/// spread drops below `tol`, if `tol > 0`). Panels are consumed.
+/// spread drops below `tol`, if `tol > 0`). Panels are consumed. Every
+/// exchanged panel crosses the (simulated) wire through `codec`, so a
+/// lossy codec both shrinks the byte count and perturbs mixing.
 pub fn gossip_align(
     mut panels: Vec<Mat>,
     topology: &Topology,
     rounds: usize,
     tol: f64,
+    codec: WireCodec,
     stats: Option<&CommStats>,
 ) -> GossipResult {
     let m = panels.len();
     assert!(m >= 1);
-    let (d, r) = panels[0].shape();
-    let panel_bytes = HEADER_BYTES + 4 * d * r;
     let mut bytes = 0usize;
     let mut trace = Vec::with_capacity(rounds);
     let mut executed = 0;
 
     for _ in 0..rounds {
         let snapshot = panels.clone();
+        // encode each node's outgoing panel once per round; receivers see
+        // only the decoded version. Raw f64 is lossless by construction,
+        // so the fast path skips the encode/decode copies and only
+        // computes the wire sizes.
+        let (sizes, decoded): (Vec<usize>, Option<Vec<Mat>>) = if codec == WireCodec::F64 {
+            (snapshot.iter().map(|p| 8 * p.rows() * p.cols()).collect(), None)
+        } else {
+            let wire: Vec<WirePanel> = snapshot.iter().map(|p| codec.encode(p)).collect();
+            let dec: Vec<Mat> = wire.iter().map(WirePanel::decode).collect();
+            (wire.iter().map(WirePanel::wire_bytes).collect(), Some(dec))
+        };
         for i in 0..m {
             let nbrs = topology.neighbors(i, m);
             if nbrs.is_empty() {
@@ -109,12 +121,14 @@ pub fn gossip_align(
             }
             let mut acc = panels[i].clone();
             for &j in &nbrs {
-                // receiving j's panel costs one message
-                bytes += panel_bytes;
+                // receiving j's panel costs one message at encoded size
+                let msg_bytes = HEADER_BYTES + sizes[j];
+                bytes += msg_bytes;
                 if let Some(s) = stats {
-                    s.record_up(panel_bytes);
+                    s.record_up(msg_bytes);
                 }
-                acc.axpy(1.0, &procrustes_align(&snapshot[j], &snapshot[i]));
+                let incoming = decoded.as_ref().map_or(&snapshot[j], |d| &d[j]);
+                acc.axpy(1.0, &procrustes_align(incoming, &snapshot[i]));
             }
             panels[i] = orthonormalize(&acc.scale(1.0 / (nbrs.len() + 1) as f64));
         }
@@ -163,7 +177,7 @@ mod tests {
         let mut rng = Pcg64::seed(1);
         let (_, panels) = noisy_panels(&mut rng, 24, 3, 8);
         let before = spread(&panels);
-        let res = gossip_align(panels, &Topology::Ring, 10, 0.0, None);
+        let res = gossip_align(panels, &Topology::Ring, 10, 0.0, WireCodec::F64, None);
         let after = *res.spread_per_round.last().unwrap();
         assert!(after < before, "spread {before} -> {after}");
     }
@@ -172,7 +186,7 @@ mod tests {
     fn complete_graph_mixes_in_one_round() {
         let mut rng = Pcg64::seed(2);
         let (truth, panels) = noisy_panels(&mut rng, 20, 2, 6);
-        let res = gossip_align(panels, &Topology::Complete, 1, 0.0, None);
+        let res = gossip_align(panels, &Topology::Complete, 1, 0.0, WireCodec::F64, None);
         // all nodes should now be near the truth AND near each other
         assert!(res.spread_per_round[0] < 0.1);
         for p in &res.panels {
@@ -184,8 +198,8 @@ mod tests {
     fn ring_needs_more_rounds_than_complete() {
         let mut rng = Pcg64::seed(3);
         let (_, panels) = noisy_panels(&mut rng, 24, 3, 12);
-        let ring = gossip_align(panels.clone(), &Topology::Ring, 30, 1e-3, None);
-        let comp = gossip_align(panels, &Topology::Complete, 30, 1e-3, None);
+        let ring = gossip_align(panels.clone(), &Topology::Ring, 30, 1e-3, WireCodec::F64, None);
+        let comp = gossip_align(panels, &Topology::Complete, 30, 1e-3, WireCodec::F64, None);
         assert!(
             ring.rounds > comp.rounds,
             "ring {} vs complete {}",
@@ -198,9 +212,26 @@ mod tests {
     fn bytes_accounting_matches_topology() {
         let mut rng = Pcg64::seed(4);
         let (_, panels) = noisy_panels(&mut rng, 16, 2, 6);
-        let res = gossip_align(panels, &Topology::Ring, 3, 0.0, None);
-        // 6 nodes x 2 neighbors x 3 rounds messages
-        let expected = 6 * 2 * 3 * (HEADER_BYTES + 4 * 16 * 2);
+        let res = gossip_align(panels, &Topology::Ring, 3, 0.0, WireCodec::F64, None);
+        // 6 nodes x 2 neighbors x 3 rounds messages of raw-f64 panels
+        let expected = 6 * 2 * 3 * (HEADER_BYTES + 8 * 16 * 2);
         assert_eq!(res.bytes, expected);
+    }
+
+    #[test]
+    fn int8_gossip_shrinks_bytes_and_still_mixes() {
+        let mut rng = Pcg64::seed(5);
+        let (_, panels) = noisy_panels(&mut rng, 40, 4, 8);
+        let before = spread(&panels);
+        let f64_res = gossip_align(panels.clone(), &Topology::Ring, 8, 0.0, WireCodec::F64, None);
+        let i8_res = gossip_align(panels, &Topology::Ring, 8, 0.0, WireCodec::Int8, None);
+        assert!(
+            6 * i8_res.bytes <= f64_res.bytes,
+            "int8 {} vs f64 {}",
+            i8_res.bytes,
+            f64_res.bytes
+        );
+        let after = *i8_res.spread_per_round.last().unwrap();
+        assert!(after < before, "int8 gossip stopped mixing: {before} -> {after}");
     }
 }

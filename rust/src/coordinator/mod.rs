@@ -6,10 +6,13 @@
 //! round of worker→leader traffic (each worker ships its (d, r) panel)
 //! suffices to match the centralized error rate. This module makes that
 //! claim measurable: workers run as real OS threads exchanging typed
-//! messages over channels; every message is metered (bytes, rounds) and a
+//! messages over channels; panels are encoded with a negotiated
+//! [`WireCodec`] (f64/f16/int8/FD sketch) at the channel boundary; every
+//! payload message is metered at its encoded size (bytes, rounds) and a
 //! configurable latency/bandwidth model converts traffic into simulated
 //! wall-clock, so the benches can print the paper's communication
-//! comparisons exactly.
+//! comparisons exactly. Control messages are metered separately and never
+//! inflate the payload numbers.
 
 mod cluster;
 pub mod gossip;
@@ -18,4 +21,4 @@ mod protocol;
 
 pub use cluster::{run_cluster, ClusterConfig, ClusterResult, NodeBehavior, WorkerData};
 pub use netsim::{CommSnapshot, CommStats, NetworkModel};
-pub use protocol::{AggregationRule, Message};
+pub use protocol::{AggregationRule, Message, WireCodec, WirePanel, HEADER_BYTES};

@@ -34,16 +34,26 @@ impl NetworkModel {
 }
 
 /// Thread-safe communication meter shared by all links of a cluster run.
+///
+/// Data traffic (panel payloads) and control traffic (`Done` and other
+/// no-payload envelopes) are metered separately: the paper's
+/// communication claims are about payload volume, and a handful of
+/// fixed-size control envelopes must not inflate `bytes_down` or the
+/// simulated wall-clock.
 #[derive(Debug, Default)]
 pub struct CommStats {
-    /// Total worker -> leader bytes.
+    /// Total worker -> leader payload bytes.
     pub bytes_up: AtomicUsize,
-    /// Total leader -> worker bytes.
+    /// Total leader -> worker payload bytes.
     pub bytes_down: AtomicUsize,
-    /// Worker -> leader messages.
+    /// Worker -> leader payload messages.
     pub msgs_up: AtomicUsize,
-    /// Leader -> worker messages.
+    /// Leader -> worker payload messages.
     pub msgs_down: AtomicUsize,
+    /// Control (no-payload) messages, either direction.
+    pub msgs_ctrl: AtomicUsize,
+    /// Control-message envelope bytes, either direction.
+    pub bytes_ctrl: AtomicUsize,
     /// Synchronous communication rounds completed.
     pub rounds: AtomicUsize,
 }
@@ -63,10 +73,18 @@ impl CommStats {
         self.msgs_down.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a control (no-payload) message; kept out of the data meters
+    /// and the simulated-time model.
+    pub fn record_ctrl(&self, bytes: usize) {
+        self.bytes_ctrl.fetch_add(bytes, Ordering::Relaxed);
+        self.msgs_ctrl.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn bump_round(&self) {
         self.rounds.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Total payload bytes (control traffic excluded).
     pub fn total_bytes(&self) -> usize {
         self.bytes_up.load(Ordering::Relaxed) + self.bytes_down.load(Ordering::Relaxed)
     }
@@ -75,13 +93,10 @@ impl CommStats {
         self.rounds.load(Ordering::Relaxed)
     }
 
-    /// Simulated wall-clock under `net`, assuming per-round barrier
-    /// synchronization: each round costs one latency plus the serialized
-    /// per-link volume of its widest link. We use the conservative
-    /// aggregate `rounds * latency + total_bytes / bandwidth`.
+    /// Simulated wall-clock under `net` — see
+    /// [`CommSnapshot::simulated_time`], the single home of the formula.
     pub fn simulated_time(&self, net: &NetworkModel) -> f64 {
-        self.rounds_done() as f64 * net.latency_s
-            + self.total_bytes() as f64 / net.bandwidth_bps
+        self.snapshot().simulated_time(net)
     }
 
     /// Snapshot into a plain struct for reporting.
@@ -91,6 +106,8 @@ impl CommStats {
             bytes_down: self.bytes_down.load(Ordering::Relaxed),
             msgs_up: self.msgs_up.load(Ordering::Relaxed),
             msgs_down: self.msgs_down.load(Ordering::Relaxed),
+            msgs_ctrl: self.msgs_ctrl.load(Ordering::Relaxed),
+            bytes_ctrl: self.bytes_ctrl.load(Ordering::Relaxed),
             rounds: self.rounds_done(),
         }
     }
@@ -103,7 +120,21 @@ pub struct CommSnapshot {
     pub bytes_down: usize,
     pub msgs_up: usize,
     pub msgs_down: usize,
+    pub msgs_ctrl: usize,
+    pub bytes_ctrl: usize,
     pub rounds: usize,
+}
+
+impl CommSnapshot {
+    /// Simulated wall-clock under `net`, assuming per-round barrier
+    /// synchronization: each round costs one latency plus the serialized
+    /// per-link volume of its widest link. We use the conservative
+    /// aggregate `rounds * latency + payload_bytes / bandwidth`; control
+    /// envelopes piggyback on round teardown and cost nothing here.
+    pub fn simulated_time(&self, net: &NetworkModel) -> f64 {
+        self.rounds as f64 * net.latency_s
+            + (self.bytes_up + self.bytes_down) as f64 / net.bandwidth_bps
+    }
 }
 
 #[cfg(test)]
@@ -122,13 +153,29 @@ mod tests {
         s.record_up(100);
         s.record_up(50);
         s.record_down(10);
+        s.record_ctrl(32);
         s.bump_round();
         let snap = s.snapshot();
         assert_eq!(snap.bytes_up, 150);
         assert_eq!(snap.bytes_down, 10);
         assert_eq!(snap.msgs_up, 2);
+        assert_eq!(snap.msgs_ctrl, 1);
+        assert_eq!(snap.bytes_ctrl, 32);
         assert_eq!(snap.rounds, 1);
+        // control traffic is excluded from payload totals
         assert_eq!(s.total_bytes(), 160);
+    }
+
+    #[test]
+    fn control_traffic_does_not_move_simulated_time() {
+        let net = NetworkModel { latency_s: 0.01, bandwidth_bps: 1000.0 };
+        let s = CommStats::new();
+        s.record_up(500);
+        s.bump_round();
+        let before = s.simulated_time(&net);
+        s.record_ctrl(32);
+        s.record_ctrl(32);
+        assert_eq!(s.simulated_time(&net), before);
     }
 
     #[test]

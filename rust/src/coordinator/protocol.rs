@@ -1,39 +1,181 @@
-//! Wire protocol between workers and the leader. Message payloads are
-//! `Mat` panels; `wire_bytes` gives the f32-on-the-wire size used by the
-//! communication accounting (the paper transmits single-precision panels;
-//! 4 bytes/entry + a fixed header).
+//! Wire protocol between workers and the leader. Panel-carrying messages
+//! hold a [`WirePanel`] — the panel in a negotiated wire encoding
+//! ([`WireCodec`]) — and `wire_bytes` gives the *encoded* size, so the
+//! communication accounting in `netsim` meters what actually crosses the
+//! link rather than the in-memory f64 representation.
 
+use crate::linalg::eig::top_eigvecs;
+use crate::linalg::gemm::syrk_scaled;
 use crate::linalg::Mat;
+use crate::sketch::{
+    dequantize_panel, quantize_panel, Codec, FrequentDirections, QuantizedPanel,
+};
 
 /// Fixed per-message envelope overhead (type tag + shape + node id), bytes.
 pub const HEADER_BYTES: usize = 32;
+
+/// Negotiated encoding for every panel that crosses the wire. Selected
+/// once per cluster run (`ClusterConfig::codec`) and applied at the
+/// channel boundary in both directions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireCodec {
+    /// Raw f64 entries (8 B/entry) — the lossless baseline.
+    F64,
+    /// IEEE binary16 (2 B/entry + 16 B codec header) — ~4x smaller,
+    /// near-lossless for orthonormal panels whose entries are O(1/sqrt(d)).
+    F16,
+    /// Per-panel linear 8-bit quantization (1 B/entry + 16 B codec
+    /// header) — ~8x smaller.
+    Int8,
+    /// Frequent Directions sketch of the panel columns: ships an
+    /// (l', d) sketch (l' <= l rows survive the shrink) instead of the
+    /// (d, r) panel. Compresses only for `l < r` and is aggressively
+    /// lossy there — the far end of the accuracy-vs-bytes sweep.
+    FdSketch { l: usize },
+}
+
+impl WireCodec {
+    /// Parse a CLI/config spelling: `f64 | f16 | int8 | fd<l>` (e.g. `fd4`).
+    pub fn parse(s: &str) -> Result<WireCodec, String> {
+        match s {
+            "f64" => Ok(WireCodec::F64),
+            "f16" => Ok(WireCodec::F16),
+            "int8" => Ok(WireCodec::Int8),
+            other => match other.strip_prefix("fd").and_then(|l| l.parse::<usize>().ok()) {
+                Some(l) if l >= 2 => Ok(WireCodec::FdSketch { l }),
+                Some(_) => Err(format!("codec '{other}': FD sketch needs l >= 2")),
+                None => Err(format!("unknown codec '{other}' (f64|f16|int8|fd<l>)")),
+            },
+        }
+    }
+
+    /// Short name for reports and CSV columns.
+    pub fn name(&self) -> String {
+        match self {
+            WireCodec::F64 => "f64".to_string(),
+            WireCodec::F16 => "f16".to_string(),
+            WireCodec::Int8 => "int8".to_string(),
+            WireCodec::FdSketch { l } => format!("fd{l}"),
+        }
+    }
+
+    /// Does decoding recover the transmitted matrix *entries* (up to
+    /// quantization noise)? Entry-wise codecs do; the FD sketch returns
+    /// only an arbitrary orthonormal basis for the transmitted span, so
+    /// a receiver that aggregates panels entry-wise (the refinement
+    /// leader) must re-align decoded panels first.
+    pub fn preserves_representative(&self) -> bool {
+        !matches!(self, WireCodec::FdSketch { .. })
+    }
+
+    /// Encode a panel for the wire.
+    pub fn encode(&self, panel: &Mat) -> WirePanel {
+        match *self {
+            WireCodec::F64 => WirePanel::F64(panel.clone()),
+            WireCodec::F16 => WirePanel::Quant(quantize_panel(panel, Codec::F16)),
+            WireCodec::Int8 => WirePanel::Quant(quantize_panel(panel, Codec::Int8)),
+            WireCodec::FdSketch { l } => {
+                let (d, r) = panel.shape();
+                let mut fd = FrequentDirections::new(l.max(2), d);
+                // Columns go in leading-first with geometrically decaying
+                // weights: an orthonormal panel has a flat spectrum, so
+                // unweighted FD would shed every direction in one shrink;
+                // the weights make the sketch keep the leading columns.
+                // Decode recovers only the span and re-orthonormalizes,
+                // so the weights never need to be undone.
+                for j in 0..r {
+                    let w = 0.75f64.powi(j as i32);
+                    let col: Vec<f64> = panel.col(j).iter().map(|v| w * v).collect();
+                    fd.insert(&col);
+                }
+                WirePanel::Fd { rows: d, cols: r, sketch: fd.sketch_matrix() }
+            }
+        }
+    }
+}
+
+/// A panel as it crosses the wire: the encoded payload plus enough
+/// metadata to decode back to a dense (rows, cols) panel.
+#[derive(Clone, Debug)]
+pub enum WirePanel {
+    F64(Mat),
+    Quant(QuantizedPanel),
+    /// FD sketch of the panel columns; `sketch` is (l', rows).
+    Fd { rows: usize, cols: usize, sketch: Mat },
+}
+
+impl WirePanel {
+    /// Shape of the decoded panel.
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            WirePanel::F64(m) => m.shape(),
+            WirePanel::Quant(q) => (q.rows, q.cols),
+            WirePanel::Fd { rows, cols, .. } => (*rows, *cols),
+        }
+    }
+
+    /// Decode to a dense panel. FD sketches decode through the top-r
+    /// eigenbasis of the sketch Gram `B^T B ~= V V^T` — a basis for the
+    /// sketched span rather than the original entries, which is exactly
+    /// what the Procrustes-alignment estimators consume.
+    pub fn decode(&self) -> Mat {
+        match self {
+            WirePanel::F64(m) => m.clone(),
+            WirePanel::Quant(q) => dequantize_panel(q),
+            WirePanel::Fd { rows, cols, sketch } => {
+                let r = (*cols).min(*rows);
+                if sketch.rows() == 0 {
+                    // fully-shrunk sketch: fall back to the truncated identity
+                    return Mat::from_fn(*rows, *cols, |i, j| if i == j { 1.0 } else { 0.0 });
+                }
+                top_eigvecs(&syrk_scaled(sketch, 1.0), r).0
+            }
+        }
+    }
+
+    /// Encoded payload bytes on the wire.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            WirePanel::F64(m) => 8 * m.rows() * m.cols(),
+            WirePanel::Quant(q) => q.wire_bytes(),
+            WirePanel::Fd { sketch, .. } => 8 * sketch.rows() * sketch.cols(),
+        }
+    }
+}
 
 /// Messages of the distributed protocol.
 #[derive(Clone, Debug)]
 pub enum Message {
     /// Worker -> leader: local leading-eigenbasis panel `V̂₁⁽ⁱ⁾` (+ Ritz values).
-    LocalEstimate { node: usize, panel: Mat, ritz: Vec<f64> },
+    LocalEstimate { node: usize, panel: WirePanel, ritz: Vec<f64> },
     /// Leader -> worker: reference panel to align against (Remark 2 /
     /// Algorithm 2 broadcast).
-    Reference { round: usize, panel: Mat },
+    Reference { round: usize, panel: WirePanel },
     /// Worker -> leader: locally aligned panel `V̂₁⁽ⁱ⁾ Zᵢ` (Remark 2 path).
-    Aligned { node: usize, round: usize, panel: Mat },
+    Aligned { node: usize, round: usize, panel: WirePanel },
     /// Leader -> worker: the protocol is finished.
     Done,
 }
 
 impl Message {
-    /// Bytes on the wire: header + f32 payload.
+    /// Exact bytes on the wire: envelope + encoded payload (+ f64 Ritz
+    /// values for local estimates).
     pub fn wire_bytes(&self) -> usize {
         match self {
             Message::LocalEstimate { panel, ritz, .. } => {
-                HEADER_BYTES + 4 * panel.rows() * panel.cols() + 4 * ritz.len()
+                HEADER_BYTES + panel.wire_bytes() + 8 * ritz.len()
             }
             Message::Reference { panel, .. } | Message::Aligned { panel, .. } => {
-                HEADER_BYTES + 4 * panel.rows() * panel.cols()
+                HEADER_BYTES + panel.wire_bytes()
             }
             Message::Done => HEADER_BYTES,
         }
+    }
+
+    /// Control messages carry no payload and are metered separately from
+    /// the data traffic (they do not contribute to `sim_time_s`).
+    pub fn is_control(&self) -> bool {
+        matches!(self, Message::Done)
     }
 }
 
@@ -49,17 +191,89 @@ pub enum AggregationRule {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::subspace::dist2;
+    use crate::rng::Pcg64;
+    use crate::testkit::{check, tol};
 
     #[test]
-    fn wire_bytes_scales_with_panel() {
-        let m = Message::Reference { round: 0, panel: Mat::zeros(64, 8) };
-        assert_eq!(m.wire_bytes(), HEADER_BYTES + 4 * 64 * 8);
+    fn wire_bytes_scales_with_panel_and_codec() {
+        let panel = Mat::zeros(64, 8);
+        let m = Message::Reference { round: 0, panel: WireCodec::F64.encode(&panel) };
+        assert_eq!(m.wire_bytes(), HEADER_BYTES + 8 * 64 * 8);
         let e = Message::LocalEstimate {
             node: 1,
-            panel: Mat::zeros(64, 8),
+            panel: WireCodec::F64.encode(&panel),
             ritz: vec![0.0; 8],
         };
-        assert_eq!(e.wire_bytes(), HEADER_BYTES + 4 * 64 * 8 + 32);
+        assert_eq!(e.wire_bytes(), HEADER_BYTES + 8 * 64 * 8 + 64);
         assert_eq!(Message::Done.wire_bytes(), HEADER_BYTES);
+        assert!(Message::Done.is_control() && !e.is_control());
+
+        // the quantized payloads carry a 16-byte codec header (range/meta)
+        let f16 = Message::Reference { round: 0, panel: WireCodec::F16.encode(&panel) };
+        assert_eq!(f16.wire_bytes(), HEADER_BYTES + 2 * 64 * 8 + 16);
+        let i8m = Message::Reference { round: 0, panel: WireCodec::Int8.encode(&panel) };
+        assert_eq!(i8m.wire_bytes(), HEADER_BYTES + 64 * 8 + 16);
+    }
+
+    #[test]
+    fn codec_parse_round_trips() {
+        for s in ["f64", "f16", "int8", "fd4", "fd12"] {
+            assert_eq!(WireCodec::parse(s).unwrap().name(), s);
+        }
+        assert!(WireCodec::parse("fd1").is_err());
+        assert!(WireCodec::parse("fdx").is_err());
+        assert!(WireCodec::parse("f32").is_err());
+    }
+
+    #[test]
+    fn f64_codec_is_lossless() {
+        let mut rng = Pcg64::seed(1);
+        let p = rng.haar_stiefel(30, 4);
+        let back = WireCodec::F64.encode(&p).decode();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn lossy_codecs_decode_close_in_subspace() {
+        let mut rng = Pcg64::seed(2);
+        let p = rng.haar_stiefel(40, 4);
+        for codec in [WireCodec::F16, WireCodec::Int8] {
+            let wire = codec.encode(&p);
+            assert_eq!(wire.shape(), (40, 4));
+            let back = wire.decode();
+            assert!(
+                dist2(&crate::linalg::qr::orthonormalize(&back), &p) < 0.05,
+                "{} decode drifted",
+                codec.name()
+            );
+        }
+    }
+
+    #[test]
+    fn fd_codec_is_span_exact_when_l_exceeds_r() {
+        // with l > r the sketch buffer never shrinks: the decoded panel
+        // spans exactly the original columns
+        let mut rng = Pcg64::seed(3);
+        let p = rng.haar_stiefel(24, 3);
+        let wire = WireCodec::FdSketch { l: 6 }.encode(&p);
+        assert_eq!(wire.shape(), (24, 3));
+        // 3 weighted rows of dimension 24 on the wire
+        assert_eq!(wire.wire_bytes(), 8 * 3 * 24);
+        let back = wire.decode();
+        check::assert_orthonormal(&back, tol::ITER, "FD decode");
+        assert!(dist2(&back, &p) < tol::ITER, "{}", dist2(&back, &p));
+    }
+
+    #[test]
+    fn fd_codec_compresses_and_degrades_gracefully_when_l_below_r() {
+        let mut rng = Pcg64::seed(4);
+        let p = rng.haar_stiefel(32, 8);
+        let full = WireCodec::F64.encode(&p).wire_bytes();
+        let wire = WireCodec::FdSketch { l: 4 }.encode(&p);
+        assert!(wire.wire_bytes() < full, "{} !< {full}", wire.wire_bytes());
+        let back = wire.decode();
+        assert_eq!(back.shape(), (32, 8));
+        check::assert_orthonormal(&back, tol::ITER, "lossy FD decode");
     }
 }

@@ -11,15 +11,17 @@ mod figs_apps;
 mod figs_intdim;
 mod figs_pca;
 mod tables;
+mod wire;
 
 use anyhow::{anyhow, Result};
 
 use crate::config::RunOptions;
 
-/// Every runnable experiment, in paper order.
+/// Every runnable experiment: the paper's figures/tables in paper order,
+/// plus the wire-codec sweep this reproduction adds.
 pub const ALL: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9",
-    "fig10", "table1", "table2",
+    "fig10", "table1", "table2", "wire",
 ];
 
 /// Dispatch a single experiment by name.
@@ -38,6 +40,7 @@ pub fn run(name: &str, opts: &RunOptions) -> Result<()> {
         "fig10" => figs_apps::fig10(opts),
         "table1" => tables::table1(opts),
         "table2" => figs_apps::table2(opts),
+        "wire" => wire::wire(opts),
         "all" => {
             for n in ALL {
                 println!("\n================ {n} ================");

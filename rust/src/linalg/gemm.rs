@@ -178,43 +178,36 @@ pub fn syrk_scaled(x: &Mat, scale: f64) -> Mat {
     let inv = 1.0 / scale;
     let nt = num_threads();
     if n * d * d >= PAR_THRESHOLD && nt > 1 && d >= 2 * nt {
-        // parallel: thread t computes an interleaved set of upper-triangle rows
-        let cols = d;
-        let c_rows: Vec<Vec<f64>> = std::thread::scope(|scope| {
+        // parallel: thread t computes an interleaved set of upper-triangle
+        // rows, each returned with its row index
+        let c_rows: Vec<(usize, Vec<f64>)> = std::thread::scope(|scope| {
             let handles: Vec<_> = (0..nt)
                 .map(|t| {
                     scope.spawn(move || {
-                        let mut out = vec![0.0; 0];
                         let mut rows = Vec::new();
                         for i in (t..d).step_by(nt) {
-                            let mut row = vec![0.0; cols];
+                            let mut row = vec![0.0; d];
                             for s in 0..n {
                                 let xr = x.row(s);
                                 let xi = xr[i];
                                 if xi == 0.0 {
                                     continue;
                                 }
-                                for (j, item) in row.iter_mut().enumerate().take(cols).skip(i) {
+                                for (j, item) in row.iter_mut().enumerate().take(d).skip(i) {
                                     *item += xi * xr[j];
                                 }
                             }
                             rows.push((i, row));
                         }
-                        out.clear();
                         rows
                     })
                 })
                 .collect();
-            handles.into_iter().flat_map(|h| h.join().unwrap()).map(|(i, row)| {
-                let mut full = row;
-                full.insert(0, i as f64); // tag row index in slot 0
-                full
-            }).collect()
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
         });
-        for tagged in c_rows {
-            let i = tagged[0] as usize;
+        for (i, row) in c_rows {
             for j in i..d {
-                c[(i, j)] = tagged[j + 1] * inv;
+                c[(i, j)] = row[j] * inv;
             }
         }
     } else {

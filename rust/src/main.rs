@@ -15,7 +15,7 @@ use std::sync::Arc;
 use deigen::config::{Cli, RunOptions};
 use deigen::coordinator::{
     run_cluster, AggregationRule, ClusterConfig, NetworkModel, NodeBehavior,
-    WorkerData,
+    WireCodec, WorkerData,
 };
 use deigen::linalg::subspace::dist2;
 use deigen::rng::Pcg64;
@@ -26,10 +26,12 @@ const USAGE: &str = "usage:
   deigen exp <name|all> [--quick] [--seed S] [--out DIR] [--trials T]
   deigen cluster [--m M] [--n N] [--d D] [--r R] [--refine K] [--pjrt]
                  [--byzantine B] [--median] [--wan] [--seed S]
+                 [--codec f64|f16|int8|fd<l>]
   deigen plot <csv> [--x COL] [--y COL[,COL..]] [--group COL[,COL..]]
               [--linear-x] [--linear-y]
   deigen info
-experiments: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 table1 table2";
+experiments: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 table1
+             table2 wire";
 
 fn main() -> ExitCode {
     match real_main() {
@@ -76,9 +78,14 @@ fn cluster_demo(cli: &Cli) -> anyhow::Result<()> {
     let refine = cli.get_usize("refine", 0).map_err(|e| anyhow::anyhow!(e))?;
     let byz = cli.get_usize("byzantine", 0).map_err(|e| anyhow::anyhow!(e))?;
     let seed = cli.get_u64("seed", 20200504).map_err(|e| anyhow::anyhow!(e))?;
+    let codec = WireCodec::parse(&cli.get_str("codec", "f64"))
+        .map_err(|e| anyhow::anyhow!(e))?;
 
-    println!("cluster: m={m} n={n} d={d} r={r} refine={refine} byzantine={byz} engine={}",
-        if use_pjrt { "pjrt" } else { "native" });
+    println!(
+        "cluster: m={m} n={n} d={d} r={r} refine={refine} byzantine={byz} codec={} engine={}",
+        codec.name(),
+        if use_pjrt { "pjrt" } else { "native" }
+    );
 
     let mut rng = Pcg64::seed(seed);
     let model = SpectrumModel::M1 { r, lambda_lo: 0.5, lambda_hi: 1.0, delta: 0.2 };
@@ -112,6 +119,7 @@ fn cluster_demo(cli: &Cli) -> anyhow::Result<()> {
         } else {
             NetworkModel::datacenter()
         },
+        codec,
         seed,
     };
 
@@ -132,12 +140,15 @@ fn cluster_demo(cli: &Cli) -> anyhow::Result<()> {
 
     println!("estimate dist2 to truth: {:.4}", dist2(&res.estimate, &truth));
     println!(
-        "comm: rounds={} up={}B ({} msgs) down={}B ({} msgs); simulated net time {:.4}s; wall {:?}",
+        "comm: rounds={} up={}B ({} msgs) down={}B ({} msgs) ctrl={}B ({} msgs); \
+         simulated net time {:.4}s; wall {:?}",
         res.comm.rounds,
         res.comm.bytes_up,
         res.comm.msgs_up,
         res.comm.bytes_down,
         res.comm.msgs_down,
+        res.comm.bytes_ctrl,
+        res.comm.msgs_ctrl,
         res.sim_time_s,
         wall,
     );

@@ -18,6 +18,8 @@ mod engine;
 mod manifest;
 #[allow(clippy::module_inception)]
 mod pjrt;
+#[cfg(feature = "pjrt")]
+pub(crate) mod xla_shim;
 
 pub use engine::{LocalSolver, NativeEngine, ShiftInvertEngine};
 pub use manifest::{ArtifactEntry, Manifest};

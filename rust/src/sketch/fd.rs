@@ -51,19 +51,23 @@ impl FrequentDirections {
     }
 
     /// The FD shrink step: SVD the buffer, subtract the (l/2)-th squared
-    /// singular value from all squared singular values, rebuild.
+    /// singular value (0-indexed, in descending order) from all squared
+    /// singular values, rebuild.
     fn shrink(&mut self) {
         let d = self.dim();
         // eigendecompose B^T B = V diag(s^2) V^T (d x d; fine for the
         // moderate d of our experiments), then B <- diag(s') V^T
         let btb = syrk_scaled(&self.b, 1.0);
         let (vals, vecs) = sym_eig(&btb);
-        // take the top l-1 directions, shrink by the median energy
-        let mut s2: Vec<f64> = (0..self.l.min(d))
-            .map(|j| vals[d - 1 - j].max(0.0))
-            .collect();
-        let delta = s2[self.l / 2 - 1.min(self.l / 2)].min(*s2.last().unwrap_or(&0.0));
-        let delta = if self.l / 2 < s2.len() { s2[self.l / 2] } else { delta };
+        // B (l, d) has min(l, d) singular values; beyond that they are
+        // identically zero
+        let rank_cap = self.l.min(d);
+        let mut s2: Vec<f64> =
+            (0..rank_cap).map(|j| vals[d - 1 - j].max(0.0)).collect();
+        // the shrink quantile is the (l/2)-th squared singular value;
+        // when l/2 >= min(l, d) — possible whenever l > d — that
+        // singular value is exactly zero and nothing shrinks
+        let delta = if self.l / 2 < rank_cap { s2[self.l / 2] } else { 0.0 };
         for v in s2.iter_mut() {
             *v = (*v - delta).max(0.0);
         }
@@ -107,10 +111,17 @@ impl FrequentDirections {
         crate::linalg::eig::top_eigvecs(&self.covariance_estimate(), r).0
     }
 
-    /// Wire size of the sketch in bytes (f32 entries) — for the
+    /// Wire size of the full sketch buffer in bytes (raw f64 entries,
+    /// matching the coordinator's wire accounting) — for the
     /// communication-accuracy trade-off bench.
     pub fn wire_bytes(&self) -> usize {
-        4 * self.l * self.dim()
+        8 * self.l * self.dim()
+    }
+
+    /// The non-zero part of the sketch buffer as a (filled, d) matrix —
+    /// what the wire codec actually ships.
+    pub fn sketch_matrix(&self) -> Mat {
+        Mat::from_fn(self.filled, self.dim(), |i, j| self.b[(i, j)])
     }
 }
 
@@ -179,9 +190,56 @@ mod tests {
     }
 
     #[test]
+    fn fd_guarantee_property_against_oracle() {
+        // the FD guarantee `0 <= x^T (A^T A - B^T B) x <= ||A||_F^2 / (l - k)`
+        // (here with k = l/2, the quantile the shrink uses), checked
+        // against the testkit's independent Jacobi eigensolver — including
+        // l > d shapes, where the old shrink picked its quantile from a
+        // buffer of length min(l, d) with an l-based index
+        use crate::testkit::oracle;
+        let mut rng = Pcg64::seed(7);
+        for &(n, d, l) in &[
+            (200usize, 12usize, 8usize), // l < d, even
+            (120, 6, 9),                 // l > d, odd
+            (90, 3, 8),                  // l > 2d: old index was out of bounds
+            (150, 10, 21),               // l > 2d, odd
+        ] {
+            let x = rng.normal_mat(n, d);
+            let mut fd = FrequentDirections::new(l, d);
+            fd.insert_all(&x);
+            let diff = oracle::gram_scaled(&x, 1.0).sub(&fd.covariance_estimate());
+            let (vals, _) = oracle::jacobi_eig(&diff);
+            let fro2: f64 = x.as_slice().iter().map(|v| v * v).sum();
+            let lo = vals.iter().copied().fold(f64::INFINITY, f64::min);
+            let hi = vals.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            // lower bound: A^T A - B^T B is PSD (FD only underestimates)
+            assert!(lo >= -1e-8 * fro2, "({n},{d},{l}): not PSD, min eig {lo}");
+            // upper bound with k = l/2
+            let bound = fro2 / ((l - l / 2) as f64);
+            assert!(hi <= bound * (1.0 + 1e-9), "({n},{d},{l}): {hi} > {bound}");
+        }
+    }
+
+    #[test]
+    fn sketch_matrix_exposes_filled_rows_only() {
+        let mut rng = Pcg64::seed(8);
+        let mut fd = FrequentDirections::new(10, 6);
+        let x = rng.normal_mat(3, 6);
+        fd.insert_all(&x);
+        let b = fd.sketch_matrix();
+        assert_eq!(b.shape(), (3, 6));
+        // no shrink has happened yet: rows are the inserted samples
+        for i in 0..3 {
+            for j in 0..6 {
+                assert_eq!(b[(i, j)], x[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
     fn sketch_smaller_than_data() {
         let fd = FrequentDirections::new(8, 100);
-        assert_eq!(fd.wire_bytes(), 4 * 8 * 100);
-        assert!(fd.wire_bytes() < 4 * 1000 * 100); // vs shipping 1000 samples
+        assert_eq!(fd.wire_bytes(), 8 * 8 * 100);
+        assert!(fd.wire_bytes() < 8 * 1000 * 100); // vs shipping 1000 samples
     }
 }

@@ -15,6 +15,7 @@ pub enum Codec {
 }
 
 /// An encoded panel plus metadata to decode it.
+#[derive(Clone, Debug)]
 pub struct QuantizedPanel {
     pub rows: usize,
     pub cols: usize,

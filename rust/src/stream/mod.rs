@@ -93,7 +93,8 @@ pub struct StreamingResult {
     pub estimate: Mat,
     /// Synchronization (communication) rounds performed.
     pub sync_rounds: usize,
-    /// Total bytes shipped across all syncs (f32 panels).
+    /// Total bytes shipped across all syncs (raw-f64 panels, matching the
+    /// coordinator's wire accounting).
     pub bytes: usize,
 }
 
@@ -119,7 +120,7 @@ pub fn distributed_oja(
 
     let mut sync_rounds = 0;
     let mut bytes = 0;
-    let panel_bytes = 4 * d * r;
+    let panel_bytes = 8 * d * r;
 
     for s in 0..n {
         for (i, stream) in streams.iter_mut().enumerate() {

@@ -8,7 +8,7 @@ use std::sync::Arc;
 use deigen::align;
 use deigen::coordinator::{
     run_cluster, AggregationRule, ClusterConfig, NetworkModel, NodeBehavior,
-    WorkerData,
+    WireCodec, WorkerData,
 };
 use deigen::linalg::subspace::dist2;
 use deigen::linalg::Mat;
@@ -163,6 +163,66 @@ fn estimates_always_orthonormal_across_configs() {
             1e-7,
             &format!("seed {seed} d={d} r={r} m={m}"),
         );
+    }
+}
+
+#[test]
+fn int8_wire_codec_cuts_upload_8x_within_stat_tolerance() {
+    // the compressed-protocol acceptance pin: on the same seed and
+    // observations, Int8 transport reports bytes_up at most 1/6 of the
+    // raw-f64 run (the actual ratio is ~8x minus headers), while the
+    // single-round estimate's sin-theta to ground truth stays within
+    // tol::STAT of the uncompressed estimate's
+    let (truth, workers) = pca_workers(8, 48, 4, 10, 300);
+    let obs: Vec<Mat> = workers.iter().map(|w| w.observation.clone()).collect();
+    let cfg64 = ClusterConfig { r: 4, seed: 21, ..Default::default() };
+    let r64 = run_cluster(workers, Arc::new(NativeEngine::default()), &cfg64);
+    let workers2: Vec<WorkerData> = obs
+        .into_iter()
+        .map(|o| WorkerData { observation: o, behavior: NodeBehavior::Honest })
+        .collect();
+    let cfg8 = ClusterConfig { r: 4, codec: WireCodec::Int8, seed: 21, ..Default::default() };
+    let r8 = run_cluster(workers2, Arc::new(NativeEngine::default()), &cfg8);
+
+    assert!(
+        6 * r8.comm.bytes_up <= r64.comm.bytes_up,
+        "int8 bytes_up {} not <= 1/6 of f64 {}",
+        r8.comm.bytes_up,
+        r64.comm.bytes_up
+    );
+    // fewer bytes -> strictly less simulated time on a finite-bandwidth link
+    assert!(r8.sim_time_s < r64.sim_time_s);
+    let (d8, d64) = (dist2(&r8.estimate, &truth), dist2(&r64.estimate, &truth));
+    assert!((d8 - d64).abs() <= tol::STAT, "int8 {d8} vs f64 {d64}");
+    check::assert_orthonormal(&r8.estimate, tol::FACTOR, "int8 estimate");
+    // the metric itself cross-checked against the definition-level oracle
+    assert!((d8 - check::sin_theta(&r8.estimate, &truth)).abs() < tol::ITER);
+    // identical protocol shape: compression changes bytes, not rounds
+    assert_eq!(r8.comm.rounds, r64.comm.rounds);
+    assert_eq!(r8.comm.msgs_up, r64.comm.msgs_up);
+}
+
+#[test]
+fn codec_sweep_preserves_single_round_accuracy_ordering() {
+    // f16 is near-lossless and fd with l > r is span-exact on the wire;
+    // every codec keeps the single-round estimate orthonormal and close
+    // to the f64 estimate
+    let (truth, workers) = pca_workers(9, 40, 4, 8, 300);
+    let obs: Vec<Mat> = workers.iter().map(|w| w.observation.clone()).collect();
+    let cfg = ClusterConfig { r: 4, seed: 33, ..Default::default() };
+    let base = run_cluster(workers, Arc::new(NativeEngine::default()), &cfg);
+    let d_base = dist2(&base.estimate, &truth);
+    for codec in [WireCodec::F16, WireCodec::Int8, WireCodec::FdSketch { l: 6 }] {
+        let ws: Vec<WorkerData> = obs
+            .iter()
+            .map(|o| WorkerData { observation: o.clone(), behavior: NodeBehavior::Honest })
+            .collect();
+        let cfg = ClusterConfig { r: 4, codec, seed: 33, ..Default::default() };
+        let res = run_cluster(ws, Arc::new(NativeEngine::default()), &cfg);
+        check::assert_orthonormal(&res.estimate, 1e-7, &codec.name());
+        let d = dist2(&res.estimate, &truth);
+        assert!((d - d_base).abs() <= tol::STAT, "{}: {d} vs f64 {d_base}", codec.name());
+        assert!(res.comm.bytes_up <= base.comm.bytes_up, "{} grew the upload", codec.name());
     }
 }
 
