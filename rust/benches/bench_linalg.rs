@@ -1,11 +1,14 @@
 //! Microbenchmarks for the native linalg substrate — the L3 hot paths
-//! profiled in EXPERIMENTS.md §Perf: GEMM/SYRK (covariance formation),
-//! QR, the symmetric eigensolver, Jacobi SVD and the two polar routes.
-//! Run: `cargo bench --bench bench_linalg` (add `-- --quick` to smoke).
+//! profiled in EXPERIMENTS.md §Perf: packed GEMM vs the naive oracle,
+//! SYRK (covariance formation), per-call pool fan-out overhead, QR, the
+//! symmetric eigensolver, Jacobi SVD and the two polar routes.
+//! Run: `cargo bench --bench bench_linalg` (add `-- --quick` to smoke,
+//! `-- --json BENCH_linalg.json` for machine-readable output).
 
-use deigen::benchutil::{bench, header, report};
+use deigen::benchutil::{bench, gflops, header, report, JsonSink};
 use deigen::linalg::eig::sym_eig;
 use deigen::linalg::gemm::{matmul, matmul_naive, syrk_scaled};
+use deigen::linalg::pool;
 use deigen::linalg::procrustes::{polar_newton_schulz, polar_svd};
 use deigen::linalg::qr::thin_qr;
 use deigen::linalg::svd::svd;
@@ -13,6 +16,7 @@ use deigen::rng::Pcg64;
 
 fn main() {
     header("linalg substrate");
+    let mut sink = JsonSink::from_args();
     let mut rng = Pcg64::seed(1);
 
     for &n in &[64usize, 128, 256] {
@@ -23,50 +27,94 @@ fn main() {
             std::hint::black_box(matmul(&a, &b));
         });
         report(&r);
-        println!("      -> {:.2} GFLOP/s", flops / r.median_s / 1e9);
+        println!("      -> {:.2} GFLOP/s", gflops(&r, flops));
+        sink.record(&r, Some(flops));
     }
 
-    // blocked vs naive at one size (the §Perf before/after anchor)
-    let a = rng.normal_mat(192, 192);
-    let b = rng.normal_mat(192, 192);
-    let rb = bench("matmul blocked 192", 2, 9, || {
+    // packed vs naive at the §Perf anchor size (the acceptance gate is
+    // >= 2x median GFLOP/s for the packed kernel at 256^3)
+    let a = rng.normal_mat(256, 256);
+    let b = rng.normal_mat(256, 256);
+    let flops = 2.0 * 256f64.powi(3);
+    let rb = bench("matmul packed 256x256x256", 2, 9, || {
         std::hint::black_box(matmul(&a, &b));
     });
-    let rn = bench("matmul naive   192", 2, 9, || {
+    let rn = bench("matmul naive  256x256x256", 2, 9, || {
         std::hint::black_box(matmul_naive(&a, &b));
     });
     report(&rb);
     report(&rn);
-    println!("      -> blocked/naive speedup: {:.2}x", rn.median_s / rb.median_s);
+    println!(
+        "      -> packed/naive speedup: {:.2}x ({:.2} vs {:.2} GFLOP/s)",
+        rn.median_s / rb.median_s,
+        gflops(&rb, flops),
+        gflops(&rn, flops)
+    );
+    sink.record(&rb, Some(flops));
+    sink.record(&rn, Some(flops));
+
+    // per-call fan-out overhead: repeated calls at a shape that sits
+    // exactly at PAR_THRESHOLD (128^3 = 2^21), so every call takes the
+    // pooled path. The persistent pool prices a repeat call at the work
+    // itself; the old thread::scope path paid ~50us x threads of spawn
+    // tax per call, visible as pooled slower than forced-serial here.
+    let a = rng.normal_mat(128, 128);
+    let b = rng.normal_mat(128, 128);
+    let flops = 2.0 * 128f64.powi(3);
+    let rp = bench("matmul 128^3 pooled, repeated calls", 4, 15, || {
+        std::hint::black_box(matmul(&a, &b));
+    });
+    let rs = pool::with_threads(1, || {
+        bench("matmul 128^3 forced single-thread", 4, 15, || {
+            std::hint::black_box(matmul(&a, &b));
+        })
+    });
+    report(&rp);
+    report(&rs);
+    println!(
+        "      -> pooled speedup over forced-serial: {:.2}x (>= 1x means no spawn tax)",
+        rs.median_s / rp.median_s
+    );
+    sink.record(&rp, Some(flops));
+    sink.record(&rs, Some(flops));
 
     for &(n, d) in &[(500usize, 100usize), (1000, 300)] {
         let x = rng.normal_mat(n, d);
+        // upper-triangle SYRK: ~n*d^2 multiply-adds instead of 2*n*d^2
+        let flops = (n * d * d) as f64;
         let r = bench(&format!("syrk (cov) n={n} d={d}"), 1, 7, || {
             std::hint::black_box(syrk_scaled(&x, n as f64));
         });
         report(&r);
+        sink.record(&r, Some(flops));
     }
 
     for &(m, k) in &[(300usize, 16usize), (300, 64)] {
         let x = rng.normal_mat(m, k);
-        report(&bench(&format!("thin_qr {m}x{k}"), 2, 9, || {
+        let r = bench(&format!("thin_qr {m}x{k}"), 2, 9, || {
             std::hint::black_box(thin_qr(&x));
-        }));
+        });
+        report(&r);
+        sink.record(&r, None);
     }
 
     for &d in &[100usize, 250] {
         let mut s = rng.normal_mat(d, d);
         s.symmetrize();
-        report(&bench(&format!("sym_eig d={d}"), 1, 5, || {
+        let r = bench(&format!("sym_eig d={d}"), 1, 5, || {
             std::hint::black_box(sym_eig(&s));
-        }));
+        });
+        report(&r);
+        sink.record(&r, None);
     }
 
     for &(m, k) in &[(64usize, 16usize), (128, 32)] {
         let x = rng.normal_mat(m, k);
-        report(&bench(&format!("jacobi svd {m}x{k}"), 2, 7, || {
+        let r = bench(&format!("jacobi svd {m}x{k}"), 2, 7, || {
             std::hint::black_box(svd(&x));
-        }));
+        });
+        report(&r);
+        sink.record(&r, None);
     }
 
     for &r in &[8usize, 16, 32] {
@@ -80,5 +128,9 @@ fn main() {
         });
         report(&rs);
         report(&rn);
+        sink.record(&rs, None);
+        sink.record(&rn, None);
     }
+
+    sink.finish();
 }

@@ -1,8 +1,10 @@
 //! Bench harness substrate (DESIGN.md S12). Criterion is not available
 //! offline, so `cargo bench` targets are `harness = false` binaries built
 //! on this module: warmup + repeated timing, median / MAD / min reporting,
-//! and a `--quick` mode (via the `DEIGEN_BENCH_QUICK` env var or argv) that
-//! shrinks iteration counts for smoke runs.
+//! a `--quick` mode (via the `DEIGEN_BENCH_QUICK` env var or argv) that
+//! shrinks iteration counts for smoke runs, and a `--json <path>` sink
+//! ([`JsonSink`]) emitting machine-readable results (name, median_s,
+//! GFLOP/s) so CI can archive throughput without parsing console output.
 
 use std::time::Instant;
 
@@ -91,6 +93,87 @@ pub fn header(title: &str) {
     println!("\n=== {title} ({}) ===", if quick_mode() { "quick" } else { "full" });
 }
 
+/// GFLOP/s at the median for a given flop count per iteration.
+pub fn gflops(r: &BenchResult, flops: f64) -> f64 {
+    flops / r.median_s.max(1e-12) / 1e9
+}
+
+/// Escape a string for a JSON string literal. Non-ASCII passes through
+/// raw (valid JSON — the file is UTF-8); quotes, backslashes and control
+/// characters get standard escapes.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Machine-readable result sink: collects rows and, when the bench was
+/// invoked with `--json <path>`, writes them as a JSON array on
+/// [`JsonSink::finish`]. Without the flag every call is a no-op, so
+/// benches can record unconditionally.
+pub struct JsonSink {
+    path: Option<String>,
+    rows: Vec<String>,
+}
+
+impl JsonSink {
+    /// Sink configured from argv (`--json <path>`).
+    pub fn from_args() -> Self {
+        let args: Vec<String> = std::env::args().collect();
+        let path = args
+            .iter()
+            .position(|a| a == "--json")
+            .and_then(|i| args.get(i + 1))
+            .cloned();
+        JsonSink::with_path(path)
+    }
+
+    /// Sink writing to an explicit path (`None` disables output).
+    pub fn with_path(path: Option<String>) -> Self {
+        JsonSink { path, rows: Vec::new() }
+    }
+
+    /// Record one result; pass the per-iteration flop count when the
+    /// benchmark has a meaningful GFLOP/s (products, factorizations).
+    pub fn record(&mut self, r: &BenchResult, flops: Option<f64>) {
+        if self.path.is_none() {
+            return;
+        }
+        let gf = flops
+            .map(|f| format!("{:.3}", gflops(r, f)))
+            .unwrap_or_else(|| "null".to_string());
+        self.rows.push(format!(
+            "  {{\"name\": \"{}\", \"median_s\": {:.9}, \"mad_s\": {:.9}, \"min_s\": {:.9}, \
+             \"iters\": {}, \"gflops\": {}}}",
+            json_escape(&r.name),
+            r.median_s,
+            r.mad_s,
+            r.min_s,
+            r.iters,
+            gf
+        ));
+    }
+
+    /// Write the collected rows; returns the path written, if any.
+    pub fn finish(&self) -> Option<&str> {
+        let path = self.path.as_deref()?;
+        let body = format!("[\n{}\n]\n", self.rows.join(",\n"));
+        std::fs::write(path, body).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("  wrote {path}");
+        Some(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,5 +194,62 @@ mod tests {
         assert!(fmt_time(2.5e-3).ends_with("ms"));
         assert!(fmt_time(2.5e-6).ends_with("us"));
         assert!(fmt_time(2.5e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn gflops_scales_with_time() {
+        let r = BenchResult {
+            name: "x".into(),
+            median_s: 0.5,
+            mad_s: 0.0,
+            min_s: 0.5,
+            iters: 1,
+        };
+        assert!((gflops(&r, 1e9) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_sink_writes_parseable_rows() {
+        let path = std::env::temp_dir().join("deigen_bench_sink_test.json");
+        let path_s = path.to_string_lossy().into_owned();
+        let mut sink = JsonSink::with_path(Some(path_s.clone()));
+        let r = BenchResult {
+            name: "matmul 8x8x8".into(),
+            median_s: 1e-3,
+            mad_s: 1e-5,
+            min_s: 9e-4,
+            iters: 7,
+        };
+        sink.record(&r, Some(2.0 * 8.0 * 8.0 * 8.0));
+        // names with non-ASCII and JSON-special characters must survive
+        let hostile = BenchResult { name: "sin-Θ \"quoted\" \\ tab\t".into(), ..r.clone() };
+        sink.record(&hostile, None);
+        assert_eq!(sink.finish(), Some(path_s.as_str()));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::io::parse_json(&text).expect("sink output must be valid JSON");
+        let rows = parsed.as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("name").and_then(|v| v.as_str()), Some("matmul 8x8x8"));
+        assert!(rows[0].get("gflops").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert_eq!(
+            rows[1].get("name").and_then(|v| v.as_str()),
+            Some("sin-Θ \"quoted\" \\ tab\t")
+        );
+        assert_eq!(rows[1].get("gflops"), Some(&crate::io::Json::Null));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn disabled_sink_is_noop() {
+        let mut sink = JsonSink::with_path(None);
+        let r = BenchResult {
+            name: "y".into(),
+            median_s: 1.0,
+            mad_s: 0.0,
+            min_s: 1.0,
+            iters: 1,
+        };
+        sink.record(&r, None);
+        assert_eq!(sink.finish(), None);
     }
 }

@@ -1,8 +1,13 @@
-//! Thread-per-worker federated cluster.
+//! Pool-driven federated cluster.
 //!
 //! Each worker owns its local observation `X̂ⁱ`, runs a [`LocalSolver`]
 //! (native or PJRT) to produce its leading-eigenbasis panel, and speaks the
-//! [`Message`] protocol with the leader over channels. Two protocol modes:
+//! [`Message`] protocol with the leader. Worker compute fans out over the
+//! persistent `linalg::pool` — the runtime spawns no threads of its own
+//! (the old thread-per-worker actors paid an OS spawn per worker per run),
+//! and each worker's GEMMs run inline inside its pool job, which is the
+//! right parallelism granularity: across workers, not within one solve.
+//! Two protocol modes:
 //!
 //! - **single round** (`refine_rounds == 0`): the paper's headline
 //!   Algorithm 1 — one worker→leader panel upload, all alignment on the
@@ -12,17 +17,17 @@
 //!   the aligned panel; repeated `refine_rounds` times with the averaged
 //!   result as the next reference.
 //!
-//! Panels are encoded with the negotiated [`WireCodec`] at the channel
-//! boundary in both directions, and all payload traffic is metered by
-//! [`CommStats`] at its *encoded* size (control messages are metered
-//! separately); Byzantine workers (the §4 threat model) upload arbitrary
-//! orthonormal panels.
+//! Panels still cross an explicit [`Message`] boundary: workers *encode*
+//! with the negotiated [`WireCodec`] and the leader *decodes*, in both
+//! directions, and all payload traffic is metered by [`CommStats`] at its
+//! encoded size (control messages are metered separately); Byzantine
+//! workers (the §4 threat model) upload arbitrary orthonormal panels.
+//! Per-worker rng streams make runs bit-reproducible for any pool size.
 
-use std::sync::mpsc;
 use std::sync::Arc;
 
 use crate::align;
-use crate::linalg::Mat;
+use crate::linalg::{pool, Mat};
 use crate::rng::Pcg64;
 use crate::runtime::LocalSolver;
 
@@ -98,8 +103,21 @@ fn aggregate(panels: &[Mat], rule: AggregationRule, reference: &Mat) -> Mat {
     }
 }
 
+/// Per-worker state carried across protocol rounds. Each worker keeps its
+/// own seeded rng stream (bit-reproducible for any pool size) and, after
+/// round 1, its *exact* local panel — refinement aligns the exact panel,
+/// not the lossily-decoded copy the leader received.
+struct WorkerState {
+    id: usize,
+    behavior: NodeBehavior,
+    observation: Mat,
+    rng: Pcg64,
+    panel: Option<Mat>,
+}
+
 /// Run the full protocol over `workers` (consumed). Returns the estimate
-/// plus communication metrics. Panics propagate from worker threads.
+/// plus communication metrics. Worker compute runs as jobs on the
+/// persistent worker pool; panics propagate from worker jobs.
 pub fn run_cluster(
     workers: Vec<WorkerData>,
     solver: Arc<dyn LocalSolver>,
@@ -108,36 +126,62 @@ pub fn run_cluster(
     assert!(!workers.is_empty());
     let m = workers.len();
     let stats = Arc::new(CommStats::new());
-    let (to_leader, leader_rx) = mpsc::channel::<Message>();
+    let r = config.r;
+    let codec = config.codec;
 
-    // spawn workers
-    let mut to_workers = Vec::with_capacity(m);
-    let mut handles = Vec::with_capacity(m);
-    for (i, data) in workers.into_iter().enumerate() {
-        let (tx, rx) = mpsc::channel::<Message>();
-        to_workers.push(tx);
-        let up = to_leader.clone();
-        let stats_i = Arc::clone(&stats);
-        let solver_i = Arc::clone(&solver);
-        let seed = config.seed;
-        let r = config.r;
-        let codec = config.codec;
-        handles.push(std::thread::spawn(move || {
-            worker_main(i, data, solver_i, up, rx, stats_i, seed, r, codec);
-        }));
-    }
-    drop(to_leader);
+    let mut states: Vec<WorkerState> = workers
+        .into_iter()
+        .enumerate()
+        .map(|(i, data)| WorkerState {
+            id: i,
+            behavior: data.behavior,
+            observation: data.observation,
+            rng: Pcg64::seed_stream(config.seed, i as u64 + 1),
+            panel: None,
+        })
+        .collect();
 
-    // --- round 1: collect local estimates -------------------------------
-    let mut panels: Vec<Option<Mat>> = vec![None; m];
-    for _ in 0..m {
-        match leader_rx.recv().expect("worker hung up early") {
-            Message::LocalEstimate { node, panel, .. } => panels[node] = Some(panel.decode()),
-            other => panic!("unexpected message in round 1: {other:?}"),
-        }
+    // --- round 1: local solves fan out on the pool, one upload each ------
+    let mut uploads: Vec<Option<Message>> = (0..m).map(|_| None).collect();
+    {
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = states
+            .iter_mut()
+            .zip(uploads.iter_mut())
+            .map(|(st, slot)| {
+                let solver = Arc::clone(&solver);
+                let stats = Arc::clone(&stats);
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let d = st.observation.rows();
+                    // local solve (or junk for Byzantine nodes)
+                    let panel = match st.behavior {
+                        NodeBehavior::Honest => {
+                            solver.leading_subspace(&st.observation, r, &mut st.rng)
+                        }
+                        NodeBehavior::Byzantine => st.rng.haar_stiefel(d, r),
+                    };
+                    let msg = Message::LocalEstimate {
+                        node: st.id,
+                        panel: codec.encode(&panel),
+                        ritz: vec![],
+                    };
+                    stats.record_up(msg.wire_bytes());
+                    *slot = Some(msg);
+                    st.panel = Some(panel);
+                });
+                job
+            })
+            .collect();
+        pool::run_scoped(jobs);
     }
     stats.bump_round();
-    let local_panels: Vec<Mat> = panels.into_iter().map(Option::unwrap).collect();
+    // the leader decodes what crossed the wire
+    let local_panels: Vec<Mat> = uploads
+        .into_iter()
+        .map(|msg| match msg.expect("worker produced no upload") {
+            Message::LocalEstimate { panel, .. } => panel.decode(),
+            other => panic!("unexpected message in round 1: {other:?}"),
+        })
+        .collect();
 
     // --- alignment -------------------------------------------------------
     let estimate = if config.refine_rounds == 0 {
@@ -146,23 +190,50 @@ pub fn run_cluster(
     } else {
         let mut reference = local_panels[0].clone();
         for round in 1..=config.refine_rounds {
-            // broadcast reference (encoded once, metered per link)
+            // broadcast the reference (encoded once, metered per link);
+            // workers decode, align their exact round-1 panel, and upload
+            // the encoded result — all as one pool job per worker
             let encoded = config.codec.encode(&reference);
-            for tx in &to_workers {
-                let msg = Message::Reference { round, panel: encoded.clone() };
-                stats.record_down(msg.wire_bytes());
-                tx.send(msg).expect("worker gone");
-            }
-            // collect aligned panels
-            let mut aligned: Vec<Option<Mat>> = vec![None; m];
-            for _ in 0..m {
-                match leader_rx.recv().expect("worker hung up mid-round") {
-                    Message::Aligned { node, panel, .. } => aligned[node] = Some(panel.decode()),
-                    other => panic!("unexpected message in refinement: {other:?}"),
-                }
-            }
+            let mut replies: Vec<Option<Message>> = (0..m).map(|_| None).collect();
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = states
+                .iter_mut()
+                .zip(replies.iter_mut())
+                .map(|(st, slot)| {
+                    let msg = Message::Reference { round, panel: encoded.clone() };
+                    stats.record_down(msg.wire_bytes());
+                    let stats = Arc::clone(&stats);
+                    let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                        let Message::Reference { panel: reference, .. } = msg else {
+                            unreachable!()
+                        };
+                        let d = st.observation.rows();
+                        let aligned = match st.behavior {
+                            NodeBehavior::Honest => crate::linalg::procrustes::procrustes_align(
+                                st.panel.as_ref().expect("round-1 panel missing"),
+                                &reference.decode(),
+                            ),
+                            NodeBehavior::Byzantine => st.rng.haar_stiefel(d, r),
+                        };
+                        let reply = Message::Aligned {
+                            node: st.id,
+                            round,
+                            panel: codec.encode(&aligned),
+                        };
+                        stats.record_up(reply.wire_bytes());
+                        *slot = Some(reply);
+                    });
+                    job
+                })
+                .collect();
+            pool::run_scoped(jobs);
             stats.bump_round();
-            let mut aligned: Vec<Mat> = aligned.into_iter().map(Option::unwrap).collect();
+            let mut aligned: Vec<Mat> = replies
+                .into_iter()
+                .map(|msg| match msg.expect("worker produced no aligned panel") {
+                    Message::Aligned { panel, .. } => panel.decode(),
+                    other => panic!("unexpected message in refinement: {other:?}"),
+                })
+                .collect();
             // span-only codecs (FD sketch) lose the worker-side alignment
             // in transit — the decoded basis is arbitrary — so the leader
             // re-aligns before aggregating entry-wise
@@ -180,67 +251,18 @@ pub fn run_cluster(
     };
 
     // --- shutdown --------------------------------------------------------
-    // Done is control traffic: metered separately so it cannot inflate
-    // the payload meters or the simulated wall-clock
-    for tx in &to_workers {
+    // the protocol still ends with one Done per worker link; it is
+    // control traffic, metered separately so it cannot inflate the
+    // payload meters or the simulated wall-clock
+    for _ in 0..m {
         let msg = Message::Done;
         debug_assert!(msg.is_control());
         stats.record_ctrl(msg.wire_bytes());
-        let _ = tx.send(msg);
-    }
-    for h in handles {
-        h.join().expect("worker panicked");
     }
 
     let comm = stats.snapshot();
     let sim_time_s = stats.simulated_time(&config.network);
     ClusterResult { estimate, local_panels, comm, sim_time_s }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn worker_main(
-    id: usize,
-    data: WorkerData,
-    solver: Arc<dyn LocalSolver>,
-    up: mpsc::Sender<Message>,
-    rx: mpsc::Receiver<Message>,
-    stats: Arc<CommStats>,
-    seed: u64,
-    r: usize,
-    codec: WireCodec,
-) {
-    let mut rng = Pcg64::seed_stream(seed, id as u64 + 1);
-    let d = data.observation.rows();
-
-    // local solve (or junk for Byzantine nodes)
-    let panel = match data.behavior {
-        NodeBehavior::Honest => solver.leading_subspace(&data.observation, r, &mut rng),
-        NodeBehavior::Byzantine => rng.haar_stiefel(d, r),
-    };
-    let msg = Message::LocalEstimate { node: id, panel: codec.encode(&panel), ritz: vec![] };
-    stats.record_up(msg.wire_bytes());
-    up.send(msg).expect("leader gone");
-
-    // refinement rounds (if any); the worker aligns its *exact* local
-    // panel against the decoded broadcast reference
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            Message::Reference { round, panel: reference } => {
-                let aligned = match data.behavior {
-                    NodeBehavior::Honest => crate::linalg::procrustes::procrustes_align(
-                        &panel,
-                        &reference.decode(),
-                    ),
-                    NodeBehavior::Byzantine => rng.haar_stiefel(d, r),
-                };
-                let reply = Message::Aligned { node: id, round, panel: codec.encode(&aligned) };
-                stats.record_up(reply.wire_bytes());
-                up.send(reply).expect("leader gone");
-            }
-            Message::Done => break,
-            other => panic!("worker {id}: unexpected {other:?}"),
-        }
-    }
 }
 
 #[cfg(test)]

@@ -83,9 +83,13 @@ impl WireCodec {
                 // the weights make the sketch keep the leading columns.
                 // Decode recovers only the span and re-orthonormalizes,
                 // so the weights never need to be undone.
+                let mut col = vec![0.0; d];
                 for j in 0..r {
                     let w = 0.75f64.powi(j as i32);
-                    let col: Vec<f64> = panel.col(j).iter().map(|v| w * v).collect();
+                    panel.col_into(j, &mut col);
+                    for v in col.iter_mut() {
+                        *v *= w;
+                    }
                     fd.insert(&col);
                 }
                 WirePanel::Fd { rows: d, cols: r, sketch: fd.sketch_matrix() }

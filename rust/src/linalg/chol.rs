@@ -68,8 +68,9 @@ pub fn spd_solve(a: &Mat, b: &Mat) -> Option<Mat> {
     let n = a.rows();
     assert_eq!(b.rows(), n);
     let mut x = Mat::zeros(n, b.cols());
+    let mut col = vec![0.0; n];
     for j in 0..b.cols() {
-        let col = b.col(j);
+        b.col_into(j, &mut col);
         let sol = backward_sub(&l, &forward_sub(&l, &col));
         x.set_col(j, &sol);
     }

@@ -1,26 +1,367 @@
-//! Dense matrix products: blocked, cache-aware, optionally multi-threaded.
+//! Dense matrix products: packed, cache-blocked, register-tiled, pooled.
 //!
 //! No BLAS is available offline, so this module IS the BLAS of the native
-//! engine. The kernels use transpose-packing of the right operand plus
-//! register-tiled inner loops; `matmul` fans out across `std::thread::scope`
-//! threads above a size threshold. Correctness is pinned to a naive
-//! triple-loop oracle in the unit tests; throughput is tracked in
+//! engine. All large products (`matmul`, `at_b`, `a_bt`, `syrk_scaled`)
+//! funnel into one packed GEMM core in the BLIS style: panels of A and B
+//! are packed into contiguous `MC x KC` / `KC x NC` buffers (straight
+//! from the strided source — transposed operands are packed, never
+//! materialized), and a branch-free `MR x NR` = 4x8 microkernel with a
+//! register-resident accumulator block drives the flops; the slice-indexed
+//! fixed-size loops auto-vectorize to packed FMA lanes. Tiny products
+//! take a direct loop (packing would cost more than the multiply), and
+//! products above [`PAR_THRESHOLD`] fan out over the persistent worker
+//! pool (`linalg::pool`) — no per-call thread spawns anywhere.
+//!
+//! Determinism: every path accumulates each output element over `k` in
+//! ascending order (within and across `KC` blocks), and the parallel
+//! paths partition *output* elements only, so results are bit-identical
+//! for any thread count and any partition (the testkit relies on this).
+//!
+//! Correctness is pinned to a naive triple-loop oracle ([`matmul_naive`]
+//! and the independent `testkit::oracle`) over an adversarial shape sweep
+//! that includes edge tiles (`m, n, k` not multiples of the tile sizes)
+//! and `KC`-crossing depths; throughput is tracked in
 //! `rust/benches/bench_linalg.rs` (EXPERIMENTS.md §Perf).
 
-use super::mat::Mat;
+use std::cell::RefCell;
 
-/// Size (in multiply-adds) above which `matmul` parallelizes across
-/// threads. Public so the testkit's adversarial shape sweep can straddle
-/// it without duplicating the value.
+use super::mat::Mat;
+use super::pool;
+
+/// Size (in multiply-adds) above which products parallelize across the
+/// worker pool. Public so the testkit's adversarial shape sweep can
+/// straddle it without duplicating the value.
 pub const PAR_THRESHOLD: usize = 1 << 21; // ~2M flops
 
-/// Number of worker threads for the parallel path.
-fn num_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+/// Below this many multiply-adds the packed kernel's pack/unpack traffic
+/// costs more than it saves; such products take a direct loop. This is
+/// also the `a_bt` crossover: small products use its dot-product form,
+/// larger ones pack `B` straight from the strided (transposed) source.
+const DIRECT_THRESHOLD: usize = 1 << 13;
+
+/// Microkernel tile: MR rows x NR columns of C held in registers.
+/// 4 x 8 f64 accumulators = 8 AVX2 (or 4 AVX-512) vector registers.
+const MR: usize = 4;
+const NR: usize = 8;
+/// Cache-block sizes: A panels are MC x KC (L2-resident), B panels
+/// KC x NC streamed through NR-wide L1-resident micro-panels.
+const MC: usize = 64;
+const KC: usize = 256;
+const NC: usize = 512;
+
+/// An operand of the packed core: a `Mat` read as-is or logically
+/// transposed. Packing reads through the view, so `A^T B` and `A B^T`
+/// never materialize the transpose.
+#[derive(Clone, Copy)]
+enum View<'a> {
+    /// Logical element `(i, j)` = `m[(i, j)]`.
+    N(&'a Mat),
+    /// Logical element `(i, j)` = `m[(j, i)]`.
+    T(&'a Mat),
 }
 
-/// Naive triple-loop product — the oracle the blocked kernels are tested
-/// against. Exposed for tests/benches only.
+impl View<'_> {
+    #[inline]
+    fn rows(&self) -> usize {
+        match self {
+            View::N(m) => m.rows(),
+            View::T(m) => m.cols(),
+        }
+    }
+
+    #[inline]
+    fn cols(&self) -> usize {
+        match self {
+            View::N(m) => m.cols(),
+            View::T(m) => m.rows(),
+        }
+    }
+}
+
+/// Per-thread reusable packing buffers. Thread-local so the persistent
+/// pool workers keep their buffers warm across calls and the packed core
+/// allocates nothing in steady state.
+struct PackBufs {
+    a: Vec<f64>,
+    b: Vec<f64>,
+}
+
+thread_local! {
+    static PACK_BUFS: RefCell<PackBufs> =
+        RefCell::new(PackBufs { a: Vec::new(), b: Vec::new() });
+}
+
+fn ensure_len(v: &mut Vec<f64>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0.0);
+    }
+}
+
+/// Pack the `ib x kb` block of `a` at `(i0, k0)` into MR-row micro-panels:
+/// `buf[p*MR*kb + k*MR + r]` holds logical `A[i0 + p*MR + r][k0 + k]`,
+/// zero-padded to a multiple of MR rows so the microkernel never branches.
+fn pack_a(a: View, i0: usize, ib: usize, k0: usize, kb: usize, buf: &mut [f64]) {
+    let panels = ib.div_ceil(MR);
+    match a {
+        View::N(m) => {
+            for p in 0..panels {
+                let base = p * MR * kb;
+                for r in 0..MR {
+                    let i = i0 + p * MR + r;
+                    if i < i0 + ib {
+                        // contiguous read along the source row
+                        let src = &m.row(i)[k0..k0 + kb];
+                        for (k, &v) in src.iter().enumerate() {
+                            buf[base + k * MR + r] = v;
+                        }
+                    } else {
+                        for k in 0..kb {
+                            buf[base + k * MR + r] = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+        View::T(m) => {
+            // logical A[i][k] = m[(k, i)]: contiguous in i for fixed k
+            for p in 0..panels {
+                let base = p * MR * kb;
+                let i = i0 + p * MR;
+                let valid = (ib - p * MR).min(MR);
+                for k in 0..kb {
+                    let src = m.row(k0 + k);
+                    let dst = &mut buf[base + k * MR..base + (k + 1) * MR];
+                    for (r, d) in dst.iter_mut().enumerate().take(valid) {
+                        *d = src[i + r];
+                    }
+                    for d in dst.iter_mut().skip(valid) {
+                        *d = 0.0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pack the `kb x jb` block of `b` at `(k0, j0)` into NR-column
+/// micro-panels: `buf[p*NR*kb + k*NR + c]` holds logical
+/// `B[k0 + k][j0 + p*NR + c]`, zero-padded to a multiple of NR columns.
+fn pack_b(b: View, k0: usize, kb: usize, j0: usize, jb: usize, buf: &mut [f64]) {
+    let panels = jb.div_ceil(NR);
+    match b {
+        View::N(m) => {
+            for p in 0..panels {
+                let base = p * NR * kb;
+                let j = j0 + p * NR;
+                let valid = (jb - p * NR).min(NR);
+                for k in 0..kb {
+                    let src = m.row(k0 + k);
+                    let dst = &mut buf[base + k * NR..base + (k + 1) * NR];
+                    for (c, d) in dst.iter_mut().enumerate().take(valid) {
+                        *d = src[j + c];
+                    }
+                    for d in dst.iter_mut().skip(valid) {
+                        *d = 0.0;
+                    }
+                }
+            }
+        }
+        View::T(m) => {
+            // logical B[k][j] = m[(j, k)]: contiguous read along source rows
+            for p in 0..panels {
+                let base = p * NR * kb;
+                for c in 0..NR {
+                    let j = j0 + p * NR + c;
+                    if j < j0 + jb {
+                        let src = &m.row(j)[k0..k0 + kb];
+                        for (k, &v) in src.iter().enumerate() {
+                            buf[base + k * NR + c] = v;
+                        }
+                    } else {
+                        for k in 0..kb {
+                            buf[base + k * NR + c] = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The register-tiled microkernel: `acc += Apanel * Bpanel` over `kb`
+/// depth steps. `acc` is an MR x NR block the compiler keeps in vector
+/// registers; the fixed-size array indexing is bounds-check-free and
+/// auto-vectorizes to packed mul/add (FMA where the target has it).
+#[inline(always)]
+fn micro_kernel(kb: usize, apanel: &[f64], bpanel: &[f64], acc: &mut [[f64; NR]; MR]) {
+    debug_assert!(apanel.len() >= kb * MR && bpanel.len() >= kb * NR);
+    for k in 0..kb {
+        let ak: &[f64; MR] = (&apanel[k * MR..(k + 1) * MR]).try_into().unwrap();
+        let bk: &[f64; NR] = (&bpanel[k * NR..(k + 1) * NR]).try_into().unwrap();
+        for i in 0..MR {
+            let ai = ak[i];
+            for j in 0..NR {
+                acc[i][j] += ai * bk[j];
+            }
+        }
+    }
+}
+
+/// Packed-core GEMM over output rows `rows` of `C = A B`, accumulating
+/// into `c_chunk` (the row-major slice of exactly those rows, leading
+/// dimension `ldc = n`). `c_chunk` must be zeroed (or hold a partial
+/// accumulation) on entry.
+fn gemm_block(a: View, b: View, rows: std::ops::Range<usize>, c_chunk: &mut [f64], ldc: usize) {
+    let k = a.cols();
+    let n = b.cols();
+    debug_assert_eq!(c_chunk.len(), (rows.end - rows.start) * ldc);
+    PACK_BUFS.with(|bufs| {
+        let mut bufs = bufs.borrow_mut();
+        let PackBufs { a: apack, b: bpack } = &mut *bufs;
+        let kc_max = k.min(KC);
+        ensure_len(apack, MC * kc_max);
+        ensure_len(bpack, n.min(NC).div_ceil(NR) * NR * kc_max);
+        let mut j0 = 0;
+        while j0 < n {
+            let jb = (n - j0).min(NC);
+            let jpanels = jb.div_ceil(NR);
+            let mut k0 = 0;
+            while k0 < k {
+                let kb = (k - k0).min(KC);
+                pack_b(b, k0, kb, j0, jb, bpack);
+                let mut i0 = rows.start;
+                while i0 < rows.end {
+                    let ib = (rows.end - i0).min(MC);
+                    pack_a(a, i0, ib, k0, kb, apack);
+                    let ipanels = ib.div_ceil(MR);
+                    for jp in 0..jpanels {
+                        let bpanel = &bpack[jp * NR * kb..(jp * NR + NR) * kb];
+                        let jvalid = (jb - jp * NR).min(NR);
+                        for ip in 0..ipanels {
+                            let apanel = &apack[ip * MR * kb..(ip * MR + MR) * kb];
+                            let ivalid = (ib - ip * MR).min(MR);
+                            let mut acc = [[0.0f64; NR]; MR];
+                            micro_kernel(kb, apanel, bpanel, &mut acc);
+                            for di in 0..ivalid {
+                                let row = i0 - rows.start + ip * MR + di;
+                                let off = row * ldc + j0 + jp * NR;
+                                let crow = &mut c_chunk[off..off + jvalid];
+                                let arow = &acc[di];
+                                for (cv, av) in crow.iter_mut().zip(arow) {
+                                    *cv += av;
+                                }
+                            }
+                        }
+                    }
+                    i0 += ib;
+                }
+                k0 += kb;
+            }
+            j0 += jb;
+        }
+    });
+}
+
+/// Direct (unpacked) loops for products too small to amortize packing.
+/// Each variant accumulates every element over `k` in ascending order —
+/// the same order as the packed core — into the pre-zeroed `c`.
+fn gemm_direct(a: View, b: View, c: &mut Mat) {
+    match (a, b) {
+        (View::N(am), View::N(bm)) => {
+            // i-k-j AXPY: streams B rows and C rows contiguously
+            for i in 0..am.rows() {
+                let arow = am.row(i);
+                let crow = c.row_mut(i);
+                for (l, &aval) in arow.iter().enumerate() {
+                    let brow = bm.row(l);
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += aval * bv;
+                    }
+                }
+            }
+        }
+        (View::T(am), View::N(bm)) => {
+            // C = A^T B with A stored (k, m): stream paired rows of A and B
+            for l in 0..am.rows() {
+                let arow = am.row(l);
+                let brow = bm.row(l);
+                for (i, &aval) in arow.iter().enumerate() {
+                    let crow = c.row_mut(i);
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += aval * bv;
+                    }
+                }
+            }
+        }
+        (View::N(am), View::T(bm)) => {
+            // C = A B^T: both operands row-contiguous in the dot form
+            for i in 0..am.rows() {
+                let arow = am.row(i);
+                let crow = c.row_mut(i);
+                for (j, cv) in crow.iter_mut().enumerate() {
+                    let brow = bm.row(j);
+                    let mut acc = 0.0;
+                    for (av, bv) in arow.iter().zip(brow) {
+                        acc += av * bv;
+                    }
+                    *cv = acc;
+                }
+            }
+        }
+        (View::T(am), View::T(bm)) => {
+            // C = A^T B^T — unused by the public wrappers, kept total
+            let k = am.rows();
+            for i in 0..c.rows() {
+                let crow = c.row_mut(i);
+                for (j, cv) in crow.iter_mut().enumerate() {
+                    let mut acc = 0.0;
+                    for l in 0..k {
+                        acc += am[(l, i)] * bm[(j, l)];
+                    }
+                    *cv = acc;
+                }
+            }
+        }
+    }
+}
+
+/// Shared dispatcher: zero `c`, then pick direct / packed-serial /
+/// packed-parallel by problem size.
+fn gemm_into_views(a: View, b: View, c: &mut Mat) {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    debug_assert_eq!(k, b.rows());
+    debug_assert_eq!(c.shape(), (m, n), "output shape mismatch");
+    c.as_mut_slice().fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let work = m * k * n;
+    if work < DIRECT_THRESHOLD {
+        gemm_direct(a, b, c);
+        return;
+    }
+    if work >= PAR_THRESHOLD && pool::num_threads() > 1 {
+        let plan = pool::chunk_plan(m);
+        if plan.len() > 1 {
+            // chunk_plan emits equal-size row ranges (the last may be
+            // short), so chunks_mut with the first range's size yields
+            // exactly the matching disjoint row-major slices
+            let per_rows = plan[0].end - plan[0].start;
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(plan.len());
+            for (range, chunk) in plan.into_iter().zip(c.as_mut_slice().chunks_mut(per_rows * n))
+            {
+                debug_assert_eq!(chunk.len(), (range.end - range.start) * n);
+                jobs.push(Box::new(move || gemm_block(a, b, range, chunk, n)));
+            }
+            pool::run_scoped(jobs);
+            return;
+        }
+    }
+    gemm_block(a, b, 0..m, c.as_mut_slice(), n);
+}
+
+/// Naive triple-loop product — the oracle the packed kernels are tested
+/// against and the §Perf before/after baseline. Exposed for tests/benches.
 pub fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols(), b.rows(), "inner dimensions differ");
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
@@ -38,205 +379,200 @@ pub fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// `C = A * B` — blocked; fans out across threads only when more than one
-/// core is available AND the problem is large (thread spawns cost ~50us).
+/// `C = A * B`.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.cols(), b.rows(), "inner dimensions differ");
-    let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    let mut c = Mat::zeros(m, n);
-    if m * k * n >= PAR_THRESHOLD && num_threads() > 1 {
-        matmul_into_parallel(a, b, &mut c);
-    } else {
-        matmul_into(a, b, &mut c);
-    }
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    matmul_into(a, b, &mut c);
     c
 }
 
-/// Single-threaded blocked kernel writing into a pre-allocated output.
-fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
-    let (m, k) = (a.rows(), a.cols());
-    // i-k-j loop order: streams B rows and C rows contiguously; unrolled by 4
-    // over j via the iterator. Blocking over k keeps the active strip of B in
-    // cache for tall A.
-    const BK: usize = 256;
-    let mut k0 = 0;
-    while k0 < k {
-        let k1 = (k0 + BK).min(k);
-        for i in 0..m {
-            let arow = a.row(i);
-            for l in k0..k1 {
-                let aval = arow[l];
-                if aval == 0.0 {
-                    continue;
-                }
-                let brow = b.row(l);
-                let crow = c.row_mut(i);
-                // slice-zip AXPY: bounds-check-free, auto-vectorizes to
-                // packed FMA lanes (measured faster than manual unrolling)
-                for (cv, &bv) in crow.iter_mut().zip(brow) {
-                    *cv += aval * bv;
-                }
-            }
-        }
-        k0 = k1;
-    }
+/// `C = A * B` into a pre-allocated output (overwrites `c`). The no-alloc
+/// building block iterative solvers reuse across steps.
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions differ");
+    assert_eq!(c.shape(), (a.rows(), b.cols()), "matmul_into: output shape mismatch");
+    gemm_into_views(View::N(a), View::N(b), c);
 }
 
-/// Parallel kernel: splits output rows across threads.
-fn matmul_into_parallel(a: &Mat, b: &Mat, c: &mut Mat) {
-    let m = a.rows();
-    let n = b.cols();
-    let nt = num_threads().min(m.max(1));
-    let rows_per = m.div_ceil(nt);
-    let c_slice = c.as_mut_slice();
-    std::thread::scope(|scope| {
-        let mut rest = c_slice;
-        let mut i0 = 0;
-        for _ in 0..nt {
-            if i0 >= m {
-                break;
-            }
-            let i1 = (i0 + rows_per).min(m);
-            let (chunk, tail) = rest.split_at_mut((i1 - i0) * n);
-            rest = tail;
-            let (lo, hi) = (i0, i1);
-            scope.spawn(move || {
-                // each thread computes rows [lo, hi) into its chunk
-                for (ri, i) in (lo..hi).enumerate() {
-                    let arow = a.row(i);
-                    let crow = &mut chunk[ri * n..(ri + 1) * n];
-                    for (l, &aval) in arow.iter().enumerate() {
-                        if aval == 0.0 {
-                            continue;
-                        }
-                        let brow = b.row(l);
-                        for j in 0..n {
-                            crow[j] += aval * brow[j];
+/// `A^T * B` without materializing the transpose (packed straight from
+/// the strided source).
+pub fn at_b(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.cols(), b.cols());
+    at_b_into(a, b, &mut c);
+    c
+}
+
+/// `C = A^T * B` into a pre-allocated output (overwrites `c`).
+pub fn at_b_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.rows(), b.rows(), "A^T B: row counts differ");
+    assert_eq!(c.shape(), (a.cols(), b.cols()), "at_b_into: output shape mismatch");
+    gemm_into_views(View::T(a), View::N(b), c);
+}
+
+/// `A * B^T`. Small products keep the dot-product form (both operands are
+/// row-contiguous there); large ones go through the packed kernel, which
+/// packs `B^T` panels straight from `B`'s rows — no transpose copy.
+pub fn a_bt(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.rows());
+    a_bt_into(a, b, &mut c);
+    c
+}
+
+/// `C = A * B^T` into a pre-allocated output (overwrites `c`).
+pub fn a_bt_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols(), b.cols(), "A B^T: col counts differ");
+    assert_eq!(c.shape(), (a.rows(), b.rows()), "a_bt_into: output shape mismatch");
+    gemm_into_views(View::N(a), View::T(b), c);
+}
+
+/// Packed-core SYRK over rows `[i0, i0 + nrows)` of the *upper triangle*
+/// of `C = X^T X` (unscaled), accumulating into `c_chunk`. Tiles whose
+/// column range lies entirely below the diagonal are skipped before any
+/// flops; diagonal-crossing tiles are computed in full and masked at
+/// write-back.
+///
+/// NOTE: this mirrors [`gemm_block`]'s blocking skeleton (pack-buffer
+/// sizing, KC/NC loops, panel slicing) with the triangle skip and write
+/// mask layered in — a change to the tile constants or the `ensure_len`
+/// sizing formulas must be applied to BOTH functions.
+fn syrk_rows(x: &Mat, i0: usize, c_chunk: &mut [f64], ldc: usize) {
+    let d = ldc;
+    let nrows = c_chunk.len() / ldc;
+    let k = x.rows();
+    let a = View::T(x);
+    let b = View::N(x);
+    PACK_BUFS.with(|bufs| {
+        let mut bufs = bufs.borrow_mut();
+        let PackBufs { a: apack, b: bpack } = &mut *bufs;
+        let kc_max = k.min(KC);
+        ensure_len(apack, MC * kc_max);
+        ensure_len(bpack, d.min(NC).div_ceil(NR) * NR * kc_max);
+        let mut k0 = 0;
+        while k0 < k {
+            let kb = (k - k0).min(KC);
+            let mut j0 = 0;
+            while j0 < d {
+                let jb = (d - j0).min(NC);
+                // whole B panel strictly left of every needed column
+                if j0 + jb <= i0 {
+                    j0 += jb;
+                    continue;
+                }
+                pack_b(b, k0, kb, j0, jb, bpack);
+                let jpanels = jb.div_ceil(NR);
+                let mut r0 = i0;
+                while r0 < i0 + nrows {
+                    let ib = (i0 + nrows - r0).min(MC);
+                    pack_a(a, r0, ib, k0, kb, apack);
+                    let ipanels = ib.div_ceil(MR);
+                    for jp in 0..jpanels {
+                        let cj0 = j0 + jp * NR;
+                        let bpanel = &bpack[jp * NR * kb..(jp * NR + NR) * kb];
+                        let jvalid = (jb - jp * NR).min(NR);
+                        for ip in 0..ipanels {
+                            let ri0 = r0 + ip * MR;
+                            // tile entirely below the diagonal: skip
+                            if cj0 + NR <= ri0 {
+                                continue;
+                            }
+                            let apanel = &apack[ip * MR * kb..(ip * MR + MR) * kb];
+                            let ivalid = (ib - ip * MR).min(MR);
+                            let mut acc = [[0.0f64; NR]; MR];
+                            micro_kernel(kb, apanel, bpanel, &mut acc);
+                            for di in 0..ivalid {
+                                let gi = ri0 + di;
+                                let off = (gi - i0) * ldc + cj0;
+                                let arow = &acc[di];
+                                for dj in 0..jvalid {
+                                    if cj0 + dj >= gi {
+                                        c_chunk[off + dj] += arow[dj];
+                                    }
+                                }
+                            }
                         }
                     }
+                    r0 += ib;
                 }
-            });
-            i0 = i1;
+                j0 += jb;
+            }
+            k0 += kb;
         }
     });
 }
 
-/// `A^T * B` without materializing the transpose.
-pub fn at_b(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.rows(), b.rows(), "A^T B: row counts differ");
-    let (k, m, n) = (a.rows(), a.cols(), b.cols());
-    let mut c = Mat::zeros(m, n);
-    for l in 0..k {
-        let arow = a.row(l);
-        let brow = b.row(l);
-        for i in 0..m {
-            let aval = arow[i];
-            if aval == 0.0 {
-                continue;
-            }
-            let crow = c.row_mut(i);
-            for j in 0..n {
-                crow[j] += aval * brow[j];
-            }
-        }
-    }
-    c
-}
-
-/// `A * B^T`. For small problems the dot-product form is used directly;
-/// large problems materialize `B^T` once and go through the vectorizing
-/// AXPY kernel (a serial dot-product reduction cannot be auto-vectorized
-/// without reassociation, so the transpose pays for itself quickly).
-pub fn a_bt(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.cols(), b.cols(), "A B^T: col counts differ");
-    let (m, k, n) = (a.rows(), a.cols(), b.rows());
-    if m * k * n >= 1 << 16 {
-        return matmul(a, &b.transpose());
-    }
-    let mut c = Mat::zeros(m, n);
-    for i in 0..m {
-        let arow = a.row(i);
-        let crow = c.row_mut(i);
-        for j in 0..n {
-            let brow = b.row(j);
-            let mut acc = 0.0;
-            for l in 0..k {
-                acc += arow[l] * brow[l];
-            }
-            crow[j] = acc;
-        }
-    }
-    c
-}
-
 /// Symmetric rank-k update: `C = (1/scale) X^T X` for `X` (n, d) — the
-/// covariance-formation hot spot. Exploits symmetry (computes the upper
-/// triangle, mirrors) and parallelizes over column strips for large d.
+/// covariance-formation hot spot. Computes only the upper triangle
+/// (packed kernel with below-diagonal tile skipping), mirrors at the end,
+/// and parallelizes over interleaved row blocks on the worker pool so the
+/// shortening triangle rows stay balanced at any `d`, including
+/// `d < 2 * num_threads()`.
 pub fn syrk_scaled(x: &Mat, scale: f64) -> Mat {
-    let (n, d) = x.shape();
+    let d = x.cols();
     let mut c = Mat::zeros(d, d);
+    syrk_scaled_into(x, scale, &mut c);
+    c
+}
+
+/// `C = (1/scale) X^T X` into a pre-allocated output (overwrites `c`).
+pub fn syrk_scaled_into(x: &Mat, scale: f64, c: &mut Mat) {
+    let (n, d) = x.shape();
+    assert_eq!(c.shape(), (d, d), "syrk_scaled_into: output shape mismatch");
+    c.as_mut_slice().fill(0.0);
+    if d == 0 || n == 0 {
+        return;
+    }
     let inv = 1.0 / scale;
-    let nt = num_threads();
-    if n * d * d >= PAR_THRESHOLD && nt > 1 && d >= 2 * nt {
-        // parallel: thread t computes an interleaved set of upper-triangle
-        // rows, each returned with its row index
-        let c_rows: Vec<(usize, Vec<f64>)> = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..nt)
-                .map(|t| {
-                    scope.spawn(move || {
-                        let mut rows = Vec::new();
-                        for i in (t..d).step_by(nt) {
-                            let mut row = vec![0.0; d];
-                            for s in 0..n {
-                                let xr = x.row(s);
-                                let xi = xr[i];
-                                if xi == 0.0 {
-                                    continue;
-                                }
-                                for (j, item) in row.iter_mut().enumerate().take(d).skip(i) {
-                                    *item += xi * xr[j];
-                                }
-                            }
-                            rows.push((i, row));
-                        }
-                        rows
-                    })
-                })
-                .collect();
-            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
-        });
-        for (i, row) in c_rows {
-            for j in i..d {
-                c[(i, j)] = row[j] * inv;
-            }
-        }
-    } else {
+    let work = n * d * d;
+    if work < DIRECT_THRESHOLD {
+        // direct upper-triangle accumulation, branch-free inner loop
         for s in 0..n {
             let xr = x.row(s);
             for i in 0..d {
                 let xi = xr[i];
-                if xi == 0.0 {
-                    continue;
-                }
-                let crow = c.row_mut(i);
-                for j in i..d {
-                    crow[j] += xi * xr[j];
+                let crow = &mut c.row_mut(i)[i..];
+                for (cv, &xv) in crow.iter_mut().zip(&xr[i..]) {
+                    *cv += xi * xv;
                 }
             }
         }
-        for i in 0..d {
-            for j in i..d {
-                c[(i, j)] *= inv;
+    } else {
+        let nblocks = d.div_ceil(MC);
+        let njobs = if work >= PAR_THRESHOLD { pool::num_threads().min(nblocks) } else { 1 };
+        if njobs <= 1 {
+            let c_slice = c.as_mut_slice();
+            syrk_rows(x, 0, c_slice, d);
+        } else {
+            // round-robin MC-row blocks across jobs: row i of the upper
+            // triangle carries d - i columns, so interleaving balances
+            let mut per_job: Vec<Vec<(usize, &mut [f64])>> =
+                (0..njobs).map(|_| Vec::new()).collect();
+            for (bi, chunk) in c.as_mut_slice().chunks_mut(MC * d).enumerate() {
+                per_job[bi % njobs].push((bi * MC, chunk));
             }
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = per_job
+                .into_iter()
+                .map(|blocks| {
+                    let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                        for (i0, chunk) in blocks {
+                            syrk_rows(x, i0, chunk, d);
+                        }
+                    });
+                    job
+                })
+                .collect();
+            pool::run_scoped(jobs);
         }
     }
-    // mirror to the lower triangle
+    // scale the upper triangle, mirror to the lower
     for i in 0..d {
-        for j in (i + 1)..d {
-            c[(j, i)] = c[(i, j)];
+        for j in i..d {
+            let v = c[(i, j)] * inv;
+            c[(i, j)] = v;
+            if j > i {
+                c[(j, i)] = v;
+            }
         }
     }
-    c
 }
 
 /// Matrix-vector product `A x`.
@@ -264,6 +600,7 @@ pub fn matvec_t(a: &Mat, x: &[f64]) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::pool;
     use crate::rng::Pcg64;
     use crate::testkit::{gen, oracle, tol};
 
@@ -273,8 +610,9 @@ mod tests {
 
     /// Property: every product kernel agrees with the independent testkit
     /// oracle on the adversarial shape sweep — zero dimensions, vectors,
-    /// tall-skinny/wide panels, and sizes straddling `PAR_THRESHOLD` so
-    /// both the serial and the threaded path are exercised.
+    /// tall-skinny/wide panels, edge tiles (m, n, k not multiples of the
+    /// micro/cache tile sizes), `KC`-crossing depths, and sizes straddling
+    /// `PAR_THRESHOLD` so both the serial and the pooled path run.
     #[test]
     fn property_matmul_matches_oracle_on_adversarial_shapes() {
         let mut rng = Pcg64::seed(0xad5);
@@ -313,10 +651,43 @@ mod tests {
         }
     }
 
+    /// The whole adversarial sweep (including edge tiles and KC/NC
+    /// crossings) forced through the single-thread path must be
+    /// bit-identical to the default plan — the partition changes only
+    /// *where* elements are computed, never their summation order.
+    #[test]
+    fn property_full_sweep_single_thread_forced_is_bit_identical() {
+        let mut rng = Pcg64::seed(0xadb);
+        for &(m, k, n) in &gen::gemm_shapes() {
+            let a = randmat(&mut rng, m, k);
+            let b = randmat(&mut rng, k, n);
+            let want = matmul(&a, &b);
+            let got = pool::with_threads(1, || matmul(&a, &b));
+            assert_eq!(got, want, "({m},{k},{n}): forced nt=1 differs");
+        }
+    }
+
+    /// The packed kernels must be bit-identical under any thread plan:
+    /// forced single-thread, the default, and oversubscription far beyond
+    /// the row count. The partition changes only *where* elements are
+    /// computed, never their summation order.
+    #[test]
+    fn property_thread_plan_never_changes_results() {
+        let mut rng = Pcg64::seed(0xad8);
+        for &(m, k, n) in &[(128usize, 128usize, 128usize), (129, 300, 65), (37, 257, 19)] {
+            let a = randmat(&mut rng, m, k);
+            let b = randmat(&mut rng, k, n);
+            let base = matmul(&a, &b);
+            let forced1 = pool::with_threads(1, || matmul(&a, &b));
+            let over = pool::with_threads(64, || matmul(&a, &b));
+            assert_eq!(base, forced1, "({m},{k},{n}): nt=1 differs");
+            assert_eq!(base, over, "({m},{k},{n}): nt=64 differs");
+        }
+    }
+
     #[test]
     fn property_syrk_matches_oracle_across_paths() {
-        // shapes chosen to hit both the serial branch and the threaded
-        // branch (n * d * d >= PAR_THRESHOLD with d >= 2 * threads)
+        // shapes hitting the direct, packed-serial and pooled branches
         let mut rng = Pcg64::seed(0xad7);
         for &(n, d) in &[(1usize, 1usize), (7, 3), (50, 20), (300, 90)] {
             let x = randmat(&mut rng, n, d);
@@ -324,6 +695,29 @@ mod tests {
             let want = oracle::gram_scaled(&x, n as f64);
             let t = tol::dim_scaled(tol::KERNEL, n);
             assert!(got.sub(&want).max_abs() < t, "syrk ({n},{d})");
+        }
+    }
+
+    /// `syrk_scaled` under forced thread plans, including oversubscription
+    /// with `d < 2 * nt` (64 threads, d = 90 < 128): the interleaved
+    /// row-block partition must cap jobs at the block count and stay
+    /// bit-identical to the single-thread result.
+    #[test]
+    fn syrk_thread_plans_agree_even_oversubscribed() {
+        let mut rng = Pcg64::seed(0xad9);
+        let x = randmat(&mut rng, 300, 90); // 300*90*90 > PAR_THRESHOLD
+        let base = pool::with_threads(1, || syrk_scaled(&x, 300.0));
+        for nt in [2usize, 5, 64] {
+            let got = pool::with_threads(nt, || syrk_scaled(&x, 300.0));
+            assert_eq!(base, got, "nt={nt} differs");
+        }
+        // small-d symmetry sanity under oversubscription
+        let y = randmat(&mut rng, 40, 5);
+        let g = pool::with_threads(64, || syrk_scaled(&y, 40.0));
+        for i in 0..5 {
+            for j in 0..5 {
+                assert_eq!(g[(i, j)], g[(j, i)]);
+            }
         }
     }
 
@@ -350,6 +744,25 @@ mod tests {
     }
 
     #[test]
+    fn into_variants_match_allocating_kernels() {
+        let mut rng = Pcg64::seed(8);
+        let a = randmat(&mut rng, 40, 70);
+        let b = randmat(&mut rng, 70, 30);
+        let mut c = Mat::from_fn(40, 30, |_, _| 123.0); // stale contents overwritten
+        matmul_into(&a, &b, &mut c);
+        assert_eq!(c, matmul(&a, &b));
+        let mut g = Mat::from_fn(30, 30, |_, _| -7.0);
+        at_b_into(&b, &b, &mut g);
+        assert_eq!(g, at_b(&b, &b));
+        let mut h = Mat::from_fn(40, 40, |_, _| 0.5);
+        a_bt_into(&a, &a, &mut h);
+        assert_eq!(h, a_bt(&a, &a));
+        let mut s = Mat::from_fn(70, 70, |_, _| 9.0);
+        syrk_scaled_into(&a, 40.0, &mut s);
+        assert_eq!(s, syrk_scaled(&a, 40.0));
+    }
+
+    #[test]
     fn at_b_matches_transpose_matmul() {
         let mut rng = Pcg64::seed(3);
         let a = randmat(&mut rng, 20, 7);
@@ -367,6 +780,18 @@ mod tests {
         let got = a_bt(&a, &b);
         let want = matmul(&a, &b.transpose());
         assert!(got.sub(&want).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn a_bt_large_path_avoids_transpose_and_matches_oracle() {
+        // well above the dot-product crossover: exercises the packed
+        // T-view packing (no B^T materialization) on an edge-tile shape
+        let mut rng = Pcg64::seed(9);
+        let a = randmat(&mut rng, 61, 130);
+        let b = randmat(&mut rng, 45, 130);
+        let got = a_bt(&a, &b);
+        let want = oracle::a_bt(&a, &b);
+        assert!(got.sub(&want).max_abs() < tol::dim_scaled(tol::KERNEL, 130));
     }
 
     #[test]

@@ -110,8 +110,19 @@ impl Mat {
 
     /// Copy of column `j`.
     pub fn col(&self, j: usize) -> Vec<f64> {
+        let mut out = vec![0.0; self.rows];
+        self.col_into(j, &mut out);
+        out
+    }
+
+    /// Copy column `j` into a caller-owned buffer — the no-alloc variant
+    /// for hot paths that read columns in a loop.
+    pub fn col_into(&self, j: usize, out: &mut [f64]) {
         debug_assert!(j < self.cols);
-        (0..self.rows).map(|i| self[(i, j)]).collect()
+        assert_eq!(out.len(), self.rows, "col_into: buffer length != rows");
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.data[i * self.cols + j];
+        }
     }
 
     /// Set column `j` from a slice.
@@ -136,9 +147,27 @@ impl Mat {
         m
     }
 
-    /// Transpose (allocates).
+    /// Transpose (allocates). Cache-blocked: source and destination are
+    /// walked in TB x TB tiles so each tile's rows and columns stay
+    /// resident together, instead of the column-strided full-height scans
+    /// a naive element loop does.
     pub fn transpose(&self) -> Mat {
-        Mat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+        const TB: usize = 32; // two 32x32 f64 tiles = 16 KiB, L1-resident
+        let (r, c) = (self.rows, self.cols);
+        let mut out = Mat::zeros(c, r);
+        for i0 in (0..r).step_by(TB) {
+            let i1 = (i0 + TB).min(r);
+            for j0 in (0..c).step_by(TB) {
+                let j1 = (j0 + TB).min(c);
+                for i in i0..i1 {
+                    let src = &self.data[i * c..i * c + c];
+                    for j in j0..j1 {
+                        out.data[j * r + i] = src[j];
+                    }
+                }
+            }
+        }
+        out
     }
 
     /// `self + other`.
@@ -159,6 +188,13 @@ impl Mat {
     pub fn scale(&self, s: f64) -> Mat {
         let data = self.data.iter().map(|a| a * s).collect();
         Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// In-place `self *= s` — the no-alloc variant for solver loops.
+    pub fn scale_in_place(&mut self, s: f64) {
+        for v in &mut self.data {
+            *v *= s;
+        }
     }
 
     /// In-place `self += alpha * other`.
@@ -212,6 +248,12 @@ impl Mat {
     pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Self {
         assert_eq!(data.len(), rows * cols);
         Mat { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+    }
+
+    /// Consume the matrix, returning its row-major buffer (capacity
+    /// intact) — how [`super::workspace::Workspace`] recycles storage.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
     }
 }
 
@@ -278,6 +320,47 @@ mod tests {
         let m = Mat::from_fn(3, 5, |i, j| (i * 5 + j) as f64);
         assert_eq!(m.transpose().transpose(), m);
         assert_eq!(m.transpose()[(4, 2)], m[(2, 4)]);
+    }
+
+    #[test]
+    fn blocked_transpose_matches_definition_at_edge_tiles() {
+        // shapes that are not multiples of the 32-wide tile, including
+        // single-row/column strips and a tile-boundary straddler
+        for &(r, c) in &[(1usize, 1usize), (1, 70), (70, 1), (31, 33), (32, 32), (65, 40)] {
+            let m = Mat::from_fn(r, c, |i, j| (i * 1009 + j * 31) as f64);
+            let t = m.transpose();
+            assert_eq!(t.shape(), (c, r));
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(t[(j, i)], m[(i, j)], "({r},{c}) at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn col_into_matches_col() {
+        let m = Mat::from_fn(5, 4, |i, j| (i * 4 + j) as f64);
+        let mut buf = vec![-1.0; 5];
+        for j in 0..4 {
+            m.col_into(j, &mut buf);
+            assert_eq!(buf, m.col(j));
+        }
+    }
+
+    #[test]
+    fn scale_in_place_matches_scale() {
+        let m = Mat::from_fn(3, 3, |i, j| (i + 2 * j) as f64);
+        let mut n = m.clone();
+        n.scale_in_place(2.5);
+        assert_eq!(n, m.scale(2.5));
+    }
+
+    #[test]
+    fn into_vec_roundtrip() {
+        let m = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f64);
+        let v = m.clone().into_vec();
+        assert_eq!(Mat::from_vec(2, 3, v), m);
     }
 
     #[test]

@@ -1,19 +1,24 @@
 //! From-scratch dense linear-algebra substrate (the "BLAS/LAPACK" of the
 //! native engine). See DESIGN.md S1. Everything the paper's algorithms
-//! need: blocked matrix products, Householder QR, a symmetric eigensolver,
-//! one-sided Jacobi SVD, polar/Procrustes solvers and subspace metrics —
-//! validated module-by-module against naive oracles and algebraic
-//! identities.
+//! need: packed register-tiled matrix products over a persistent worker
+//! pool, Householder QR, a symmetric eigensolver, one-sided Jacobi SVD,
+//! polar/Procrustes solvers and subspace metrics — validated
+//! module-by-module against naive oracles and algebraic identities.
+//! Iterative solvers reuse scratch through [`workspace::Workspace`] and
+//! the `_into` kernel variants instead of allocating per step.
 
 pub mod chol;
 pub mod eig;
 pub mod gemm;
 pub mod mat;
 pub mod orthiter;
+pub mod pool;
 pub mod procrustes;
 pub mod qr;
 pub mod shiftinvert;
 pub mod subspace;
 pub mod svd;
+pub mod workspace;
 
 pub use mat::Mat;
+pub use workspace::Workspace;

@@ -2,11 +2,19 @@
 //! (`python/compile/model.py::local_eigsolve`). The native engine uses this
 //! for arbitrary-shape sweeps; integration tests pin it against both the
 //! dense eigensolver (`sym_eig`) and the PJRT artifacts.
+//!
+//! The inner loop is allocation-free: the power step and the QR
+//! re-orthonormalization write into [`Workspace`]-owned buffers via the
+//! `_into` kernels, so a 30-step solve performs O(1) allocations instead
+//! of O(steps). The `_ws` entry points accept a caller-owned workspace so
+//! sweep loops and the coordinator's refinement rounds share buffers
+//! across solves too.
 
 use super::eig::top_eigvecs;
-use super::gemm::{at_b, matmul};
+use super::gemm::{at_b_into, matmul_into};
 use super::mat::Mat;
-use super::qr::orthonormalize;
+use super::qr::orthonormalize_into;
+use super::workspace::Workspace;
 
 /// Leading-r eigenbasis of symmetric `c` by orthogonal iteration from the
 /// initial panel `v0` (d, r). Returns `(V, ritz)` with `ritz[j] = v_j^T C v_j`.
@@ -15,16 +23,25 @@ use super::qr::orthonormalize;
 /// `steps` accordingly (the AOT artifact bakes 30, matching
 /// `model.DEFAULT_STEPS`).
 pub fn orth_iter(c: &Mat, v0: &Mat, steps: usize) -> (Mat, Vec<f64>) {
+    let mut ws = Workspace::new();
+    orth_iter_ws(c, v0, steps, &mut ws)
+}
+
+/// [`orth_iter`] with caller-owned scratch.
+pub fn orth_iter_ws(c: &Mat, v0: &Mat, steps: usize, ws: &mut Workspace) -> (Mat, Vec<f64>) {
     assert!(c.is_square());
     assert_eq!(c.rows(), v0.rows());
-    let mut v = orthonormalize(v0);
+    let (d, r) = v0.shape();
+    let mut v = ws.take_mat(d, r);
+    orthonormalize_into(v0, &mut v, ws);
+    let mut cv = ws.take_mat(d, r);
     for _ in 0..steps {
-        v = orthonormalize(&matmul(c, &v));
+        matmul_into(c, &v, &mut cv);
+        orthonormalize_into(&cv, &mut v, ws);
     }
-    let cv = matmul(c, &v);
-    let ritz: Vec<f64> = (0..v.cols())
-        .map(|j| (0..v.rows()).map(|i| v[(i, j)] * cv[(i, j)]).sum())
-        .collect();
+    matmul_into(c, &v, &mut cv);
+    let ritz = ritz_values(&v, &cv);
+    ws.put_mat(cv);
     (v, ritz)
 }
 
@@ -32,27 +49,61 @@ pub fn orth_iter(c: &Mat, v0: &Mat, steps: usize) -> (Mat, Vec<f64>) {
 /// (`||V_k^T V_{k+1}|| ~ I` to `tol`) or `max_steps` is reached.
 /// Returns `(V, ritz, steps_taken)`.
 pub fn orth_iter_adaptive(c: &Mat, v0: &Mat, tol: f64, max_steps: usize) -> (Mat, Vec<f64>, usize) {
-    let mut v = orthonormalize(v0);
-    let r = v.cols();
+    let mut ws = Workspace::new();
+    orth_iter_adaptive_ws(c, v0, tol, max_steps, &mut ws)
+}
+
+/// [`orth_iter_adaptive`] with caller-owned scratch.
+pub fn orth_iter_adaptive_ws(
+    c: &Mat,
+    v0: &Mat,
+    tol: f64,
+    max_steps: usize,
+    ws: &mut Workspace,
+) -> (Mat, Vec<f64>, usize) {
+    let (d, r) = v0.shape();
+    let mut v = ws.take_mat(d, r);
+    orthonormalize_into(v0, &mut v, ws);
+    let mut vn = ws.take_mat(d, r);
+    let mut cv = ws.take_mat(d, r);
+    let mut g = ws.take_mat(r, r);
+    let mut gg = ws.take_mat(r, r);
     let mut taken = 0;
     for step in 0..max_steps {
-        let vn = orthonormalize(&matmul(c, &v));
-        let g = at_b(&v, &vn);
+        matmul_into(c, &v, &mut cv);
+        orthonormalize_into(&cv, &mut vn, ws);
+        at_b_into(&v, &vn, &mut g);
         // movement = deviation of singular values of V^T V_new from 1;
         // cheap surrogate: ||I - G^T G||_max
-        let gg = at_b(&g, &g);
-        let movement = gg.sub(&Mat::eye(r)).max_abs();
-        v = vn;
+        at_b_into(&g, &g, &mut gg);
+        let mut movement = 0.0f64;
+        for i in 0..r {
+            for (j, &x) in gg.row(i).iter().enumerate() {
+                let target = if i == j { 1.0 } else { 0.0 };
+                movement = movement.max((x - target).abs());
+            }
+        }
+        std::mem::swap(&mut v, &mut vn);
         taken = step + 1;
         if movement < tol {
             break;
         }
     }
-    let cv = matmul(c, &v);
-    let ritz: Vec<f64> = (0..r)
-        .map(|j| (0..v.rows()).map(|i| v[(i, j)] * cv[(i, j)]).sum())
-        .collect();
+    matmul_into(c, &v, &mut cv);
+    let ritz = ritz_values(&v, &cv);
+    ws.put_mat(vn);
+    ws.put_mat(cv);
+    ws.put_mat(g);
+    ws.put_mat(gg);
     (v, ritz, taken)
+}
+
+/// Rayleigh quotients `ritz[j] = v_j^T (C v_j)` from the panel and its
+/// precomputed image.
+fn ritz_values(v: &Mat, cv: &Mat) -> Vec<f64> {
+    (0..v.cols())
+        .map(|j| (0..v.rows()).map(|i| v[(i, j)] * cv[(i, j)]).sum())
+        .collect()
 }
 
 /// Exact leading-r eigenbasis via the dense eigensolver (gold standard for
@@ -64,6 +115,7 @@ pub fn leading_eigvecs_dense(c: &Mat, r: usize) -> Mat {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::gemm::matmul;
     use crate::linalg::subspace::{dist2, is_orthonormal};
     use crate::rng::Pcg64;
 
@@ -142,5 +194,26 @@ mod tests {
         let (v, _, steps) = orth_iter_adaptive(&c, &v0, 1e-12, 500);
         assert!(steps < 500);
         assert!(dist2(&v, &v1) < 1e-6);
+    }
+
+    /// A caller-owned workspace reused across solves of different shapes
+    /// must give bit-identical results to per-call workspaces.
+    #[test]
+    fn shared_workspace_across_solves_is_bit_identical() {
+        let mut rng = Pcg64::seed(5);
+        let mut ws = Workspace::new();
+        for &(d, r) in &[(24usize, 3usize), (16, 5), (24, 3)] {
+            let (c, _) = gapped(&mut rng, d, r, 0.3);
+            let v0 = rng.normal_mat(d, r);
+            let (v_shared, ritz_shared) = orth_iter_ws(&c, &v0, 40, &mut ws);
+            let (v_fresh, ritz_fresh) = orth_iter(&c, &v0, 40);
+            assert_eq!(v_shared, v_fresh, "({d},{r})");
+            assert_eq!(ritz_shared, ritz_fresh, "({d},{r})");
+            let (va, ra, sa) = orth_iter_adaptive_ws(&c, &v0, 1e-10, 200, &mut ws);
+            let (vb, rb, sb) = orth_iter_adaptive(&c, &v0, 1e-10, 200);
+            assert_eq!(va, vb, "({d},{r}) adaptive");
+            assert_eq!(ra, rb);
+            assert_eq!(sa, sb);
+        }
     }
 }

@@ -1,0 +1,450 @@
+//! Persistent worker pool for the numeric substrate (DESIGN.md S1).
+//!
+//! The old kernels paid a `std::thread::scope` spawn (~50us/thread) on
+//! *every* parallel `matmul`/`syrk_scaled` call; the mid-size shapes the
+//! paper's figures sweep cross `PAR_THRESHOLD` thousands of times per
+//! experiment, so the spawn tax dominated the parallel speedup. This
+//! module spawns the workers once (lazily, on first parallel call) and
+//! feeds them from a chunked task queue; GEMM, SYRK and the coordinator's
+//! worker solves all share the same pool.
+//!
+//! Design rules:
+//!
+//! - **Spawn once.** `num_threads() - 1` daemon workers (the submitting
+//!   thread executes one job itself, then help-drains the queue until
+//!   its batch clears, so `n` jobs use `n` threads and an oversized
+//!   batch never idles the caller's core).
+//! - **Scoped borrows.** [`run_scoped`] accepts non-`'static` jobs and
+//!   blocks until every job has finished, so jobs may borrow stack data;
+//!   the lifetime erasure is sound because the borrow cannot outlive the
+//!   call (see the SAFETY note in `run_scoped`).
+//! - **No nested fan-out.** A job that itself calls `run_scoped` runs its
+//!   sub-jobs inline. This makes the pool trivially deadlock-free (no
+//!   worker ever blocks on work only another worker could do) and gives
+//!   the right granularity anyway: the coordinator parallelizes across
+//!   workers, each of whose local GEMMs then run serial.
+//! - **Reproducible thread counts.** `DEIGEN_NUM_THREADS` is read once
+//!   (cached in a `OnceLock`) so CI and benches pin their parallelism;
+//!   [`with_threads`] scopes a thread-count override for tests that force
+//!   the single-thread path or oversubscription (`nt > rows`).
+//! - **Panics propagate.** A panicking job is caught on the worker and
+//!   re-thrown on the submitting thread after all jobs finish, so no
+//!   borrow is released while a sibling job is still running.
+//!
+//! Determinism: the pool never changes *what* is computed, only *where*.
+//! Kernels partition output elements so that each element's summation
+//! order is independent of the partition — results are bit-identical for
+//! any thread count (the testkit relies on this).
+
+use std::any::Any;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// A type-erased job as it sits in the queue. Jobs are always the wrapped
+/// closures built by [`run_scoped`]: they catch their own panics and
+/// report to their latch, so they never unwind into the worker loop.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+}
+
+struct Pool {
+    shared: Arc<Shared>,
+    /// Spawned worker threads (the caller is thread `workers + 1`).
+    workers: usize,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+/// Hard cap on configured parallelism — protects against a stray
+/// `DEIGEN_NUM_THREADS=100000` while still allowing deliberate
+/// oversubscription tests.
+const MAX_THREADS: usize = 64;
+
+/// The environment/default thread count, resolved once per process.
+static DEFAULT_THREADS: OnceLock<usize> = OnceLock::new();
+
+thread_local! {
+    /// Scoped override installed by [`with_threads`].
+    static THREAD_OVERRIDE: Cell<Option<usize>> = const { Cell::new(None) };
+    /// Set while this thread is executing a pool job (or an inline job of
+    /// an active `run_scoped`): nested fan-out runs inline instead.
+    static IN_POOL_JOB: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Number of worker threads parallel kernels plan for. Resolution order:
+/// a [`with_threads`] override on this thread, else `DEIGEN_NUM_THREADS`
+/// (read once per process and cached), else `available_parallelism`
+/// capped at 16.
+pub fn num_threads() -> usize {
+    if let Some(n) = THREAD_OVERRIDE.with(|c| c.get()) {
+        return n;
+    }
+    default_threads()
+}
+
+fn default_threads() -> usize {
+    *DEFAULT_THREADS.get_or_init(|| {
+        match std::env::var("DEIGEN_NUM_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
+            Some(n) if n >= 1 => n.min(MAX_THREADS),
+            // unset, unparsable, or 0: fall back to the machine
+            _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16),
+        }
+    })
+}
+
+/// Run `f` with the planner's thread count forced to `n` on this thread
+/// (clamped to `1..=64`). The pool keeps its spawned workers; only the
+/// number of jobs the chunk planners create changes. This is how tests
+/// force the single-thread path (`n = 1`) and oversubscription
+/// (`n` far above the row count) deterministically.
+pub fn with_threads<T>(n: usize, f: impl FnOnce() -> T) -> T {
+    let n = n.clamp(1, MAX_THREADS);
+    let prev = THREAD_OVERRIDE.with(|c| c.replace(Some(n)));
+    // restore on unwind too, so a panicking test cannot leak its override
+    struct Restore(Option<usize>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            THREAD_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(prev);
+    f()
+}
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let shared =
+            Arc::new(Shared { queue: Mutex::new(VecDeque::new()), available: Condvar::new() });
+        // pool capacity follows the process default (env-resolved), not
+        // any per-thread override: overrides only reshape job plans
+        let workers = default_threads().saturating_sub(1);
+        for _ in 0..workers {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("deigen-pool".into())
+                .spawn(move || worker_loop(sh))
+                .expect("failed to spawn pool worker");
+        }
+        Pool { shared, workers }
+    })
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    IN_POOL_JOB.with(|f| f.set(true));
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                q = sh.available.wait(q).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+/// Completion latch: counts outstanding jobs and carries the first panic.
+struct Latch {
+    state: Mutex<LatchState>,
+    done: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+impl Latch {
+    fn new(remaining: usize) -> Self {
+        Latch { state: Mutex::new(LatchState { remaining, panic: None }), done: Condvar::new() }
+    }
+
+    fn is_clear(&self) -> bool {
+        self.state.lock().unwrap().remaining == 0
+    }
+
+    fn job_finished(&self, panic: Option<Box<dyn Any + Send>>) {
+        let mut s = self.state.lock().unwrap();
+        s.remaining -= 1;
+        if s.panic.is_none() {
+            s.panic = panic;
+        }
+        if s.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) -> Option<Box<dyn Any + Send>> {
+        let mut s = self.state.lock().unwrap();
+        while s.remaining > 0 {
+            s = self.done.wait(s).unwrap();
+        }
+        s.panic.take()
+    }
+}
+
+/// Execute every job, in parallel on the persistent pool, and return once
+/// all have finished. Jobs may borrow stack data (`'scope` need not be
+/// `'static`). The first job runs inline on the calling thread; panics
+/// from any job are re-thrown here after the whole batch completes.
+///
+/// Callers are expected to chunk their work into at most
+/// [`num_threads()`] jobs; passing more is correct but queues the excess.
+pub fn run_scoped<'scope>(jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+    let n = jobs.len();
+    if n == 0 {
+        return;
+    }
+    let nested = IN_POOL_JOB.with(|f| f.get());
+    if n == 1 || nested || pool().workers == 0 {
+        // single job, nested fan-out, or a single-threaded pool: run
+        // everything inline. Semantics match the parallel path: every
+        // job runs, and the first panic is re-thrown once all finished
+        // (jobs of an outer batch keep their borrows valid because this
+        // call completes before returning).
+        let mut first_panic: Option<Box<dyn Any + Send>> = None;
+        for job in jobs {
+            if let Err(p) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)) {
+                first_panic.get_or_insert(p);
+            }
+        }
+        if let Some(p) = first_panic {
+            std::panic::resume_unwind(p);
+        }
+        return;
+    }
+
+    let latch = Arc::new(Latch::new(n - 1));
+    let mut jobs = jobs.into_iter();
+    let inline_job = jobs.next().unwrap();
+    {
+        let sh = &pool().shared;
+        let mut q = sh.queue.lock().unwrap();
+        for job in jobs {
+            let latch = Arc::clone(&latch);
+            let wrapped: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                latch.job_finished(result.err());
+            });
+            // SAFETY: lifetime erasure to put a `'scope` job in the
+            // 'static queue. Sound because this function does not return
+            // until the latch has counted every queued job as finished
+            // (even if the inline job panics, we wait first), so no
+            // borrow held by a job can outlive its referent.
+            let wrapped: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(wrapped)
+            };
+            q.push_back(wrapped);
+        }
+        sh.available.notify_all();
+    }
+
+    // the caller is a full participant: run one job here, flagged so any
+    // nested fan-out inside it stays inline
+    let inline_result =
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_flagged(inline_job)));
+
+    // help-drain the queue while this batch is outstanding instead of
+    // idling: a popped job may belong to any batch — each is
+    // self-contained (catches its own panic, reports to its own latch),
+    // so running it here only helps. When the queue is empty the
+    // remaining jobs of this batch are already executing on workers.
+    while !latch.is_clear() {
+        let job = pool().shared.queue.lock().unwrap().pop_front();
+        match job {
+            Some(job) => run_flagged(job),
+            None => break,
+        }
+    }
+
+    // wait for the queued jobs BEFORE propagating any panic: borrows must
+    // stay alive until every sibling job is done with them
+    let queued_panic = latch.wait();
+    if let Err(p) = inline_result {
+        std::panic::resume_unwind(p);
+    }
+    if let Some(p) = queued_panic {
+        std::panic::resume_unwind(p);
+    }
+}
+
+/// Run `job` with this thread marked as executing pool work, so any
+/// nested fan-out inside it stays inline. Only called on submitting
+/// threads (pool workers set the flag permanently in `worker_loop`).
+fn run_flagged(job: impl FnOnce()) {
+    IN_POOL_JOB.with(|f| f.set(true));
+    struct Unflag;
+    impl Drop for Unflag {
+        fn drop(&mut self) {
+            IN_POOL_JOB.with(|f| f.set(false));
+        }
+    }
+    let _unflag = Unflag;
+    job();
+}
+
+/// Split `0..len` into at most `min(num_threads(), len)` contiguous
+/// chunks of near-equal size. Returns an empty plan for `len == 0`.
+/// Oversubscription (`num_threads() > len`) degrades gracefully to one
+/// element per chunk.
+pub fn chunk_plan(len: usize) -> Vec<std::ops::Range<usize>> {
+    if len == 0 {
+        return Vec::new();
+    }
+    let nt = num_threads().min(len).max(1);
+    let per = len.div_ceil(nt);
+    let mut out = Vec::with_capacity(nt);
+    let mut lo = 0;
+    while lo < len {
+        let hi = (lo + per).min(len);
+        out.push(lo..hi);
+        lo = hi;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn run_scoped_executes_all_jobs_over_borrowed_data() {
+        let mut parts = vec![0u64; 8];
+        {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = parts
+                .iter_mut()
+                .enumerate()
+                .map(|(i, slot)| {
+                    let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                        *slot = (i as u64 + 1) * 10;
+                    });
+                    job
+                })
+                .collect();
+            run_scoped(jobs);
+        }
+        assert_eq!(parts, vec![10, 20, 30, 40, 50, 60, 70, 80]);
+    }
+
+    #[test]
+    fn run_scoped_handles_empty_and_single() {
+        run_scoped(Vec::new());
+        let hit = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![Box::new(|| {
+            hit.fetch_add(1, Ordering::SeqCst);
+        })];
+        run_scoped(jobs);
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn nested_fan_out_runs_inline_and_completes() {
+        let outer = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                let outer = &outer;
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    // a job that fans out again: must run inline, not deadlock
+                    let inner = AtomicUsize::new(0);
+                    let sub: Vec<Box<dyn FnOnce() + Send + '_>> = (0..3)
+                        .map(|_| {
+                            let inner = &inner;
+                            let j: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                                inner.fetch_add(1, Ordering::SeqCst);
+                            });
+                            j
+                        })
+                        .collect();
+                    run_scoped(sub);
+                    outer.fetch_add(inner.load(Ordering::SeqCst), Ordering::SeqCst);
+                });
+                job
+            })
+            .collect();
+        run_scoped(jobs);
+        assert_eq!(outer.load(Ordering::SeqCst), 12);
+    }
+
+    #[test]
+    fn panic_in_job_propagates_after_batch_completes() {
+        let done = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|i| {
+                    let done = &done;
+                    let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                        if i == 2 {
+                            panic!("boom from job 2");
+                        }
+                        done.fetch_add(1, Ordering::SeqCst);
+                    });
+                    job
+                })
+                .collect();
+            run_scoped(jobs);
+        }));
+        assert!(result.is_err(), "panic must propagate to the caller");
+        assert_eq!(done.load(Ordering::SeqCst), 3, "non-panicking jobs still ran");
+    }
+
+    #[test]
+    fn with_threads_overrides_and_restores() {
+        let base = num_threads();
+        with_threads(1, || {
+            assert_eq!(num_threads(), 1);
+            with_threads(37, || assert_eq!(num_threads(), 37));
+            assert_eq!(num_threads(), 1);
+        });
+        assert_eq!(num_threads(), base);
+        // clamped to the [1, 64] range
+        with_threads(0, || assert_eq!(num_threads(), 1));
+        with_threads(100_000, || assert_eq!(num_threads(), 64));
+    }
+
+    #[test]
+    fn chunk_plan_covers_range_without_overlap() {
+        with_threads(3, || {
+            let plan = chunk_plan(10);
+            assert!(plan.len() <= 3);
+            let mut covered = Vec::new();
+            for r in &plan {
+                covered.extend(r.clone());
+            }
+            assert_eq!(covered, (0..10).collect::<Vec<_>>());
+        });
+        // oversubscription: nt far above len caps at one element per job
+        with_threads(64, || {
+            let plan = chunk_plan(3);
+            assert_eq!(plan.len(), 3);
+            assert!(plan.iter().all(|r| r.len() == 1));
+        });
+        assert!(chunk_plan(0).is_empty());
+    }
+
+    #[test]
+    fn forced_single_thread_runs_inline() {
+        // with nt=1 the planners emit one chunk, which run_scoped
+        // executes on the calling thread — observable via thread id
+        with_threads(1, || {
+            let plan = chunk_plan(100);
+            assert_eq!(plan.len(), 1);
+            let caller = std::thread::current().id();
+            let mut ran_on = None;
+            {
+                let slot = &mut ran_on;
+                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![Box::new(move || {
+                    *slot = Some(std::thread::current().id());
+                })];
+                run_scoped(jobs);
+            }
+            assert_eq!(ran_on, Some(caller));
+        });
+    }
+}

@@ -8,15 +8,17 @@
 //! computes on the accelerator (and is faster for well-conditioned
 //! cross-Grams — see `bench_alignment`).
 
-use super::gemm::{at_b, matmul};
+use super::gemm::{a_bt, at_b, at_b_into, matmul, matmul_into};
 use super::mat::Mat;
 use super::svd::svd;
+use super::workspace::Workspace;
 
-/// Exact orthogonal polar factor of a square matrix via SVD: `U V^T`.
+/// Exact orthogonal polar factor of a square matrix via SVD: `U V^T`
+/// (computed as `A B^T` — no transpose materialization).
 pub fn polar_svd(a: &Mat) -> Mat {
     assert!(a.is_square(), "polar factor needs a square matrix");
     let (u, _, v) = svd(a);
-    matmul(&u, &v.transpose())
+    a_bt(&u, &v)
 }
 
 /// Orthogonal polar factor via the Newton–Schulz iteration
@@ -24,16 +26,34 @@ pub fn polar_svd(a: &Mat) -> Mat {
 /// convergence for sigma(Y0) in (0, sqrt(3)); `iters` ~ 18 reaches f64
 /// roundoff for near-orthogonal inputs (the Procrustes case).
 pub fn polar_newton_schulz(a: &Mat, iters: usize) -> Mat {
+    let mut ws = Workspace::new();
+    polar_newton_schulz_ws(a, iters, &mut ws)
+}
+
+/// [`polar_newton_schulz`] with caller-owned scratch: the Gram and the
+/// half-step product ping-pong between two workspace buffers, so the
+/// iteration allocates nothing.
+pub fn polar_newton_schulz_ws(a: &Mat, iters: usize, ws: &mut Workspace) -> Mat {
     assert!(a.is_square());
     let r = a.rows();
     let fro = a.fro_norm().max(1e-300);
     let mut y = a.scale(1.0 / fro);
-    let eye3 = Mat::eye(r).scale(3.0);
+    let mut g = ws.take_mat(r, r);
+    let mut yn = ws.take_mat(r, r);
     for _ in 0..iters {
-        let g = at_b(&y, &y);
-        let t = eye3.sub(&g);
-        y = matmul(&y, &t).scale(0.5);
+        at_b_into(&y, &y, &mut g);
+        // g <- 3 I - Y^T Y, in place
+        for i in 0..r {
+            for (j, v) in g.row_mut(i).iter_mut().enumerate() {
+                *v = if i == j { 3.0 - *v } else { -*v };
+            }
+        }
+        matmul_into(&y, &g, &mut yn);
+        yn.scale_in_place(0.5);
+        std::mem::swap(&mut y, &mut yn);
     }
+    ws.put_mat(g);
+    ws.put_mat(yn);
     y
 }
 
@@ -104,6 +124,19 @@ mod tests {
             let exact = polar_svd(&a);
             let ns = polar_newton_schulz(&a, 40);
             assert!(exact.sub(&ns).max_abs() < 1e-8, "noise={noise}");
+        }
+    }
+
+    #[test]
+    fn newton_schulz_shared_workspace_bit_identical() {
+        let mut rng = Pcg64::seed(11);
+        let mut ws = Workspace::new();
+        for r in [3usize, 6, 3] {
+            let q = rng.haar_orthogonal(r);
+            let a = q.add(&rng.normal_mat(r, r).scale(0.05));
+            let shared = polar_newton_schulz_ws(&a, 18, &mut ws);
+            let fresh = polar_newton_schulz(&a, 18);
+            assert_eq!(shared, fresh, "r={r}");
         }
     }
 

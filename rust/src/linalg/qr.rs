@@ -1,21 +1,84 @@
 //! Householder QR factorization (thin variant) — used for the final
 //! re-orthonormalization step of Algorithm 1 (`qr(V̄)`), random orthogonal
 //! generation, and as the orthonormalizer inside the native eigensolver.
+//!
+//! The factorization is allocation-aware: reflectors live in one flat
+//! [`Workspace`] buffer (the old code allocated a `Vec` per column), and
+//! the `_into` variants write into caller-owned outputs so iterative
+//! solvers (`orth_iter`) re-orthonormalize every step without touching
+//! the allocator.
 
 use super::mat::Mat;
+use super::workspace::Workspace;
 
 /// Thin QR via Householder reflections: `A = Q R` with `Q` (m, n)
 /// orthonormal columns and `R` (n, n) upper triangular. Requires `m >= n`.
 pub fn thin_qr(a: &Mat) -> (Mat, Mat) {
     let (m, n) = a.shape();
+    let mut q = Mat::zeros(m, n);
+    let mut rr = Mat::zeros(n, n);
+    let mut ws = Workspace::new();
+    thin_qr_into(a, &mut q, &mut rr, &mut ws);
+    (q, rr)
+}
+
+/// Thin QR into pre-allocated `q` (m, n) and `rr` (n, n), with all
+/// scratch (working copy of `A`, flat reflector storage) drawn from `ws`.
+pub fn thin_qr_into(a: &Mat, q: &mut Mat, rr: &mut Mat, ws: &mut Workspace) {
+    let (m, n) = a.shape();
     assert!(m >= n, "thin_qr requires rows >= cols (got {m}x{n})");
-    let mut r = a.clone();
-    // Householder vectors stored column-by-column (v[k..m] for column k).
-    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    assert_eq!(q.shape(), (m, n), "thin_qr_into: Q shape mismatch");
+    assert_eq!(rr.shape(), (n, n), "thin_qr_into: R shape mismatch");
+    let (r, vs, vnorm2s) = factor(a, ws);
+    accumulate_q(&vs, &vnorm2s, q);
+    // copy the leading upper triangle of the reduced matrix into R
+    for i in 0..n {
+        let src = r.row(i);
+        let dst = rr.row_mut(i);
+        for (j, d) in dst.iter_mut().enumerate() {
+            *d = if j >= i { src[j] } else { 0.0 };
+        }
+    }
+    ws.put_mat(r);
+    ws.put_vec(vs);
+    ws.put_vec(vnorm2s);
+}
+
+/// Orthonormalize the columns of `a` (thin Q factor only).
+pub fn orthonormalize(a: &Mat) -> Mat {
+    let mut q = Mat::zeros(a.rows(), a.cols());
+    let mut ws = Workspace::new();
+    orthonormalize_into(a, &mut q, &mut ws);
+    q
+}
+
+/// Thin Q factor of `a` into the pre-allocated `q` (m, n) — the no-alloc
+/// building block of `orth_iter`'s inner loop. Skips materializing `R`.
+pub fn orthonormalize_into(a: &Mat, q: &mut Mat, ws: &mut Workspace) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "orthonormalize requires rows >= cols (got {m}x{n})");
+    assert_eq!(q.shape(), (m, n), "orthonormalize_into: Q shape mismatch");
+    let (r, vs, vnorm2s) = factor(a, ws);
+    accumulate_q(&vs, &vnorm2s, q);
+    ws.put_mat(r);
+    ws.put_vec(vs);
+    ws.put_vec(vnorm2s);
+}
+
+/// Reduce a working copy of `a` to upper-triangular form, returning the
+/// reduced matrix plus the reflectors. Reflector `k` occupies the flat
+/// slot `vs[k*m .. k*m + (m-k)]`; `vnorm2s[k]` caches `v^T v` (`0.0`
+/// marks a skipped/zero column).
+fn factor(a: &Mat, ws: &mut Workspace) -> (Mat, Vec<f64>, Vec<f64>) {
+    let (m, n) = a.shape();
+    let mut r = ws.take_mat(m, n);
+    r.as_mut_slice().copy_from_slice(a.as_slice());
+    let mut vs = ws.take_vec(m * n);
+    let mut vnorm2s = ws.take_vec(n);
 
     for k in 0..n {
         // build the reflector for column k
-        let mut v = vec![0.0; m - k];
+        let v = &mut vs[k * m..k * m + (m - k)];
         let mut norm2 = 0.0;
         for i in k..m {
             let x = r[(i, k)];
@@ -24,14 +87,14 @@ pub fn thin_qr(a: &Mat) -> (Mat, Mat) {
         }
         let norm = norm2.sqrt();
         if norm == 0.0 {
-            vs.push(vec![0.0; m - k]);
+            vnorm2s[k] = 0.0;
             continue;
         }
         let alpha = if v[0] >= 0.0 { -norm } else { norm };
         v[0] -= alpha;
         let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        vnorm2s[k] = vnorm2;
         if vnorm2 == 0.0 {
-            vs.push(v);
             r[(k, k)] = alpha;
             continue;
         }
@@ -46,17 +109,24 @@ pub fn thin_qr(a: &Mat) -> (Mat, Mat) {
                 r[(i, j)] -= beta * v[i - k];
             }
         }
-        vs.push(v);
     }
+    (r, vs, vnorm2s)
+}
 
-    // accumulate thin Q by applying reflectors (in reverse) to I(m, n)
-    let mut q = Mat::from_fn(m, n, |i, j| if i == j { 1.0 } else { 0.0 });
+/// Accumulate thin Q by applying the stored reflectors (in reverse) to
+/// the thin identity, written into the caller's `q` (m, n).
+fn accumulate_q(vs: &[f64], vnorm2s: &[f64], q: &mut Mat) {
+    let (m, n) = q.shape();
+    q.as_mut_slice().fill(0.0);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
     for k in (0..n).rev() {
-        let v = &vs[k];
-        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        let vnorm2 = vnorm2s[k];
         if vnorm2 == 0.0 {
             continue;
         }
+        let v = &vs[k * m..k * m + (m - k)];
         for j in 0..n {
             let mut dot = 0.0;
             for i in k..m {
@@ -68,15 +138,6 @@ pub fn thin_qr(a: &Mat) -> (Mat, Mat) {
             }
         }
     }
-
-    // zero the strictly-lower part of R and truncate to n x n
-    let rr = Mat::from_fn(n, n, |i, j| if j >= i { r[(i, j)] } else { 0.0 });
-    (q, rr)
-}
-
-/// Orthonormalize the columns of `a` (thin Q factor only).
-pub fn orthonormalize(a: &Mat) -> Mat {
-    thin_qr(a).0
 }
 
 #[cfg(test)]
@@ -160,5 +221,25 @@ mod tests {
         // span check: residual of projecting A onto span(Q) is zero
         let proj = matmul(&q, &at_b(&q, &a));
         assert!(proj.sub(&a).max_abs() < 1e-9);
+    }
+
+    /// A shared workspace reused across calls (different shapes, stale
+    /// contents) must give bit-identical results to fresh allocation.
+    #[test]
+    fn workspace_reuse_is_bit_identical() {
+        let mut rng = Pcg64::seed(5);
+        let mut ws = Workspace::new();
+        for &(m, n) in &[(20usize, 6usize), (9, 9), (33, 5), (20, 6)] {
+            let a = rng.normal_mat(m, n);
+            let mut q = Mat::zeros(m, n);
+            let mut r = Mat::zeros(n, n);
+            thin_qr_into(&a, &mut q, &mut r, &mut ws);
+            let (q_fresh, r_fresh) = thin_qr(&a);
+            assert_eq!(q, q_fresh, "({m},{n}): Q differs under reuse");
+            assert_eq!(r, r_fresh, "({m},{n}): R differs under reuse");
+            let mut q2 = Mat::from_fn(m, n, |_, _| 42.0); // stale output
+            orthonormalize_into(&a, &mut q2, &mut ws);
+            assert_eq!(q2, q_fresh, "({m},{n}): orthonormalize_into differs");
+        }
     }
 }

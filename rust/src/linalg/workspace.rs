@@ -1,0 +1,127 @@
+//! Reusable scratch buffers for iterative solvers (DESIGN.md S1).
+//!
+//! `orth_iter`'s power step, `thin_qr`'s reflector storage and
+//! `polar_newton_schulz`'s Gram/product temporaries all used to allocate
+//! fresh `Mat`s on *every* iteration — thousands of short-lived heap
+//! allocations per local solve. A [`Workspace`] is a small pool of `f64`
+//! buffers that callers check out (as a `Mat` or a raw `Vec`) and return
+//! when done; capacity is retained across checkouts, so a solver's steady
+//! state allocates nothing.
+//!
+//! The pool is deliberately dumb: it hands back the first free buffer
+//! with enough capacity, set to the requested length with contents
+//! UNSPECIFIED (stale data from the previous checkout — every caller
+//! must fully overwrite, which the `_into` kernels do). Workspaces are
+//! cheap to construct, are not thread-safe, and are meant to live on one
+//! solver's stack; the public solver entry points construct one
+//! internally, and the `_ws` variants accept a caller-owned workspace so
+//! repeated solves (the coordinator's refinement rounds, sweep loops)
+//! share buffers too.
+
+use super::mat::Mat;
+
+/// A pool of reusable `f64` buffers for no-alloc solver loops.
+#[derive(Default)]
+pub struct Workspace {
+    free: Vec<Vec<f64>>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Workspace::default()
+    }
+
+    /// Number of buffers currently checked in (for tests/diagnostics).
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+
+    fn take_buf(&mut self, len: usize) -> Vec<f64> {
+        // first-fit: the first free buffer whose capacity already covers
+        // the request; otherwise recycle any buffer (growing it once
+        // retains the larger capacity for next time). No zeroing — the
+        // hot loops this serves would only overwrite it again.
+        let mut buf = match self.free.iter().position(|b| b.capacity() >= len) {
+            Some(i) => self.free.swap_remove(i),
+            None => self.free.pop().unwrap_or_default(),
+        };
+        if buf.len() < len {
+            buf.resize(len, 0.0);
+        } else {
+            buf.truncate(len);
+        }
+        buf
+    }
+
+    /// Check out a `(rows, cols)` matrix with UNSPECIFIED contents —
+    /// every caller must fully overwrite (the `_into` kernels do).
+    pub fn take_mat(&mut self, rows: usize, cols: usize) -> Mat {
+        Mat::from_vec(rows, cols, self.take_buf(rows * cols))
+    }
+
+    /// Check out a raw buffer of length `len` (contents unspecified).
+    pub fn take_vec(&mut self, len: usize) -> Vec<f64> {
+        self.take_buf(len)
+    }
+
+    /// Return a matrix's buffer to the pool.
+    pub fn put_mat(&mut self, m: Mat) {
+        self.free.push(m.into_vec());
+    }
+
+    /// Return a raw buffer to the pool.
+    pub fn put_vec(&mut self, v: Vec<f64>) {
+        self.free.push(v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_are_recycled_not_reallocated() {
+        let mut ws = Workspace::new();
+        let m = ws.take_mat(8, 8);
+        let ptr = m.as_slice().as_ptr();
+        ws.put_mat(m);
+        assert_eq!(ws.pooled(), 1);
+        // same-or-smaller request reuses the same allocation
+        let m2 = ws.take_mat(4, 4);
+        assert_eq!(m2.as_slice().as_ptr(), ptr);
+        assert_eq!(m2.shape(), (4, 4));
+        ws.put_mat(m2);
+    }
+
+    #[test]
+    fn best_fit_prefers_large_enough_buffer() {
+        let mut ws = Workspace::new();
+        ws.put_vec(vec![0.0; 4]);
+        ws.put_vec(vec![0.0; 100]);
+        let v = ws.take_vec(50);
+        assert!(v.capacity() >= 100, "should have picked the 100-cap buffer");
+        assert_eq!(v.len(), 50);
+        // the small buffer is still pooled
+        assert_eq!(ws.pooled(), 1);
+    }
+
+    #[test]
+    fn growth_when_no_buffer_fits() {
+        let mut ws = Workspace::new();
+        ws.put_vec(vec![0.0; 4]);
+        let v = ws.take_vec(64);
+        assert_eq!(v.len(), 64);
+        assert_eq!(ws.pooled(), 0, "the too-small buffer was recycled by growth");
+    }
+
+    #[test]
+    fn take_mat_shapes_and_roundtrip() {
+        let mut ws = Workspace::new();
+        let mut m = ws.take_mat(3, 5);
+        m[(2, 4)] = 7.0;
+        assert_eq!(m.shape(), (3, 5));
+        ws.put_mat(m);
+        let m = ws.take_mat(5, 3);
+        assert_eq!(m.shape(), (5, 3));
+    }
+}

@@ -8,7 +8,7 @@
 //! ||A||_F^2 / (l - k)` for all unit `x` and any `k < l`.
 
 use crate::linalg::eig::sym_eig;
-use crate::linalg::gemm::syrk_scaled;
+use crate::linalg::gemm::{syrk_scaled, syrk_scaled_into};
 use crate::linalg::Mat;
 
 /// A Frequent Directions sketch of a stream of d-dimensional rows.
@@ -20,13 +20,18 @@ pub struct FrequentDirections {
     filled: usize,
     /// Sketch size l.
     l: usize,
+    /// Gram scratch (d, d), allocated lazily on the first shrink and
+    /// reused after: a long stream shrinks every `l - filled` inserts,
+    /// and this was the hot allocation. Empty until then, so short
+    /// streams (and the panel codec's r <= l case) never pay for it.
+    gram: Mat,
 }
 
 impl FrequentDirections {
     /// New sketch with `l` rows over dimension `d` (`l >= 2`).
     pub fn new(l: usize, d: usize) -> Self {
         assert!(l >= 2);
-        FrequentDirections { b: Mat::zeros(l, d), filled: 0, l }
+        FrequentDirections { b: Mat::zeros(l, d), filled: 0, l, gram: Mat::zeros(0, 0) }
     }
 
     pub fn dim(&self) -> usize {
@@ -56,9 +61,14 @@ impl FrequentDirections {
     fn shrink(&mut self) {
         let d = self.dim();
         // eigendecompose B^T B = V diag(s^2) V^T (d x d; fine for the
-        // moderate d of our experiments), then B <- diag(s') V^T
-        let btb = syrk_scaled(&self.b, 1.0);
-        let (vals, vecs) = sym_eig(&btb);
+        // moderate d of our experiments), then B <- diag(s') V^T. The
+        // Gram goes into the reusable scratch — allocated on the first
+        // shrink, then no per-shrink allocation.
+        if self.gram.shape() != (d, d) {
+            self.gram = Mat::zeros(d, d);
+        }
+        syrk_scaled_into(&self.b, 1.0, &mut self.gram);
+        let (vals, vecs) = sym_eig(&self.gram);
         // B (l, d) has min(l, d) singular values; beyond that they are
         // identically zero
         let rank_cap = self.l.min(d);
@@ -71,18 +81,22 @@ impl FrequentDirections {
         for v in s2.iter_mut() {
             *v = (*v - delta).max(0.0);
         }
-        let mut nb = Mat::zeros(self.l, d);
+        // rebuild B in place: row `kept` <- s' * (eigvec d-1-j); `vecs`
+        // is an independent matrix, so overwriting `b` as we go is safe
         let mut kept = 0;
         for (j, &e2) in s2.iter().enumerate() {
             if e2 > 0.0 {
                 let s = e2.sqrt();
-                for c in 0..d {
-                    nb[(kept, c)] = s * vecs[(c, d - 1 - j)];
+                let row = self.b.row_mut(kept);
+                for (c, rv) in row.iter_mut().enumerate() {
+                    *rv = s * vecs[(c, d - 1 - j)];
                 }
                 kept += 1;
             }
         }
-        self.b = nb;
+        for i in kept..self.l {
+            self.b.row_mut(i).fill(0.0);
+        }
         self.filled = kept;
     }
 

@@ -137,9 +137,11 @@ pub fn planted_partition(n: usize, k: usize, p_in: f64, p_out: f64, seed: u64) -
 }
 
 /// Adversarial (m, k, n) GEMM shapes: degenerate zero dimensions, single
-/// rows/columns, tall-skinny and wide panels, and sizes straddling the
-/// threaded-path threshold so both the serial and parallel kernels are
-/// exercised by every sweep.
+/// rows/columns, tall-skinny and wide panels, edge tiles for the packed
+/// kernel (m, n, k not multiples of the MR=4 / NR=8 micro-tile or the
+/// MC=64 / KC=256 / NC=512 cache blocks), depths crossing one or more KC
+/// blocks, and sizes straddling the threaded-path threshold so both the
+/// serial and pooled kernels are exercised by every sweep.
 pub fn gemm_shapes() -> Vec<(usize, usize, usize)> {
     vec![
         // zero dimensions — every kernel must return well-shaped zeros
@@ -159,6 +161,17 @@ pub fn gemm_shapes() -> Vec<(usize, usize, usize)> {
         // odd, non-power-of-two interior sizes
         (17, 9, 13),
         (33, 65, 31),
+        // packed-kernel edge tiles: one past MC=64 rows (partial MR tile),
+        // one short of a full NR=8 column panel, and both at once
+        (65, 40, 40),
+        (40, 40, 63),
+        (67, 35, 61),
+        // KC-crossing depths: k = 257 leaves a 1-deep tail block,
+        // k = 513 = 2*KC + 1 crosses two block boundaries
+        (24, 257, 19),
+        (9, 513, 12),
+        // NC-crossing width: n = 515 leaves a partial 3-wide B panel
+        (12, 40, 515),
         // straddling PAR_THRESHOLD = 2^21 multiply-adds:
         // 127^3 = 2'048'383 < 2^21 (serial), 128^3 = 2^21 (parallel)
         (127, 127, 127),
