@@ -1,0 +1,102 @@
+//! Benchmarks for the blocked spectral backend (DESIGN.md S1): the
+//! full-spectrum blocked-vs-naive anchor, the top-r-vs-full anchor at the
+//! dispatch-relevant shape, and an end-to-end Frequent-Directions shrink
+//! probe (the FD sketch shrinks through the same backend on every buffer
+//! fill). Run: `cargo bench --bench bench_eig` (add `-- --quick` to
+//! smoke, `-- --json BENCH_eig.json` for machine-readable output).
+//! Under a blanket `cargo bench` that already carries bench_linalg's
+//! `--json` flag, pass `--json-eig <path>` as well — it takes
+//! precedence here, so one blanket invocation emits both artifacts
+//! without either bench clobbering the other's file.
+//!
+//! Quick mode shrinks the problem sizes as well as the iteration counts:
+//! a d = 1024 naive eigensolve has no place in a CI smoke run.
+
+use deigen::benchutil::{bench, header, quick_mode, report, JsonSink};
+use deigen::linalg::eig::{sym_eig, sym_eig_naive, sym_eig_top_r, top_eigvals};
+use deigen::linalg::gemm::matmul;
+use deigen::linalg::Mat;
+use deigen::rng::Pcg64;
+use deigen::sketch::FrequentDirections;
+
+fn gapped_sym(rng: &mut Pcg64, d: usize, r: usize) -> Mat {
+    // planted leading block with a clean gap, trailing geometric decay —
+    // the covariance shape every layer of the pipeline feeds the solver
+    let q = rng.haar_orthogonal(d);
+    let evs: Vec<f64> = (0..d)
+        .map(|i| if i < r { 1.0 - 0.02 * i as f64 } else { 0.5 * 0.99f64.powi((i - r) as i32) })
+        .collect();
+    let scaled = Mat::from_fn(d, d, |i, j| q[(i, j)] * evs[j]);
+    matmul(&scaled, &q.transpose())
+}
+
+fn main() {
+    header("blocked spectral backend");
+    // `--json-eig` wins over `--json` so a blanket `cargo bench` run can
+    // route this bench and bench_linalg to different files
+    let args: Vec<String> = std::env::args().collect();
+    let json_path = ["--json-eig", "--json"].iter().find_map(|flag| {
+        args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1)).cloned()
+    });
+    let mut sink = JsonSink::with_path(json_path);
+    let mut rng = Pcg64::seed(0xe16);
+    let quick = quick_mode();
+
+    // --- full-spectrum anchor: blocked vs the retained scalar path ---
+    // the acceptance claim is that the blocked path wins at d >= 256
+    let d_full = if quick { 192 } else { 512 };
+    let a = gapped_sym(&mut rng, d_full, 16);
+    let rb = bench(&format!("sym_eig blocked d={d_full}"), 1, 5, || {
+        std::hint::black_box(sym_eig(&a));
+    });
+    let rn = bench(&format!("sym_eig naive   d={d_full}"), 1, 5, || {
+        std::hint::black_box(sym_eig_naive(&a));
+    });
+    report(&rb);
+    report(&rn);
+    println!(
+        "      -> blocked/naive speedup: {:.2}x (claim: blocked wins at d >= 256)",
+        rn.median_s / rb.median_s
+    );
+    sink.record(&rb, None);
+    sink.record(&rn, None);
+
+    // --- top-r vs full anchor at the headline shape d=1024 / r=16 ---
+    let (d_top, r_top) = if quick { (256, 16) } else { (1024, 16) };
+    let c = gapped_sym(&mut rng, d_top, r_top);
+    let rt = bench(&format!("sym_eig_top_r d={d_top} r={r_top}"), 1, 5, || {
+        std::hint::black_box(sym_eig_top_r(&c, r_top));
+    });
+    let rf = bench(&format!("sym_eig full  d={d_top}"), 1, 3, || {
+        std::hint::black_box(sym_eig(&c));
+    });
+    let rv = bench(&format!("top_eigvals   d={d_top} k={r_top}"), 1, 5, || {
+        std::hint::black_box(top_eigvals(&c, r_top));
+    });
+    report(&rt);
+    report(&rf);
+    report(&rv);
+    println!(
+        "      -> top-r speedup over full: {:.2}x (values-only: {:.2}x)",
+        rf.median_s / rt.median_s,
+        rf.median_s / rv.median_s
+    );
+    sink.record(&rt, None);
+    sink.record(&rf, None);
+    sink.record(&rv, None);
+
+    // --- FD-shrink end-to-end probe: stream n rows through a sketch ---
+    // every l-th insert triggers a shrink, i.e. an l x l eigensolve plus
+    // the U^T B rebuild GEMM — the sketch codec's hot loop
+    let (n_rows, d_fd, l_fd) = if quick { (256, 128, 32) } else { (2048, 512, 64) };
+    let x = rng.normal_mat(n_rows, d_fd);
+    let rs = bench(&format!("fd shrink stream n={n_rows} d={d_fd} l={l_fd}"), 1, 5, || {
+        let mut fd = FrequentDirections::new(l_fd, d_fd);
+        fd.insert_all(&x);
+        std::hint::black_box(fd.covariance_estimate());
+    });
+    report(&rs);
+    sink.record(&rs, None);
+
+    sink.finish();
+}

@@ -61,7 +61,10 @@ pub fn pca_trial(
         panels.push(solver.leading_subspace(&c, r, &mut node_rng));
     }
 
-    let central = crate::linalg::eig::top_eigvecs(&avg_cov, r).0;
+    // centralized baseline (the paper's `eigs` reference): the dedicated
+    // top-r spectral path — bisection + inverse iteration on the blocked
+    // tridiagonalization — instead of a full d x d decomposition
+    let central = crate::linalg::eig::sym_eig_top_r(&avg_cov, r).0;
     let a1 = align::procrustes_fix(&panels);
 
     TrialErrors {

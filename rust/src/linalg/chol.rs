@@ -61,6 +61,45 @@ pub fn backward_sub(l: &Mat, y: &[f64]) -> Vec<f64> {
     x
 }
 
+/// Solve `L L^T x = b` **in place** using a precomputed Cholesky factor —
+/// the no-alloc building block for solvers that factor once and solve
+/// every iteration (shift-and-invert hoists its factorization through
+/// this).
+pub fn chol_solve_in_place(l: &Mat, b: &mut [f64]) {
+    let n = l.rows();
+    assert_eq!(b.len(), n, "chol_solve_in_place: length mismatch");
+    // forward: L y = b (overwrites b with y)
+    for i in 0..n {
+        let lr = l.row(i);
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= lr[k] * b[k];
+        }
+        b[i] = sum / lr[i];
+    }
+    // backward: L^T x = y (overwrites with x)
+    for i in (0..n).rev() {
+        let mut sum = b[i];
+        for k in (i + 1)..n {
+            sum -= l[(k, i)] * b[k];
+        }
+        b[i] = sum / l[(i, i)];
+    }
+}
+
+/// Solve `L L^T X = B` column-by-column into the pre-allocated `x`,
+/// with `col` as the per-column scratch (length n).
+pub fn chol_solve_into(l: &Mat, b: &Mat, x: &mut Mat, col: &mut [f64]) {
+    let n = l.rows();
+    assert_eq!(b.rows(), n);
+    assert_eq!(x.shape(), b.shape(), "chol_solve_into: output shape mismatch");
+    for j in 0..b.cols() {
+        b.col_into(j, col);
+        chol_solve_in_place(l, col);
+        x.set_col(j, col);
+    }
+}
+
 /// Solve the SPD system `A X = B` column-by-column via Cholesky.
 /// Returns `None` if `A` is not positive definite.
 pub fn spd_solve(a: &Mat, b: &Mat) -> Option<Mat> {
@@ -69,11 +108,7 @@ pub fn spd_solve(a: &Mat, b: &Mat) -> Option<Mat> {
     assert_eq!(b.rows(), n);
     let mut x = Mat::zeros(n, b.cols());
     let mut col = vec![0.0; n];
-    for j in 0..b.cols() {
-        b.col_into(j, &mut col);
-        let sol = backward_sub(&l, &forward_sub(&l, &col));
-        x.set_col(j, &sol);
-    }
+    chol_solve_into(&l, b, &mut x, &mut col);
     Some(x)
 }
 
@@ -126,6 +161,28 @@ mod tests {
         let x = spd_solve(&a, &b).unwrap();
         let res = matmul(&a, &x).sub(&b).max_abs();
         assert!(res < 1e-8, "residual {res}");
+    }
+
+    #[test]
+    fn factored_solves_match_spd_solve() {
+        let mut rng = Pcg64::seed(4);
+        let a = random_spd(&mut rng, 12);
+        let b = rng.normal_mat(12, 3);
+        let want = spd_solve(&a, &b).unwrap();
+        let l = cholesky(&a).unwrap();
+        // in-place vector solve, column by column
+        for j in 0..3 {
+            let mut col = b.col(j);
+            chol_solve_in_place(&l, &mut col);
+            for i in 0..12 {
+                assert_eq!(col[i], want[(i, j)], "col {j} row {i}");
+            }
+        }
+        // matrix solve into a stale output
+        let mut x = Mat::from_fn(12, 3, |_, _| 99.0);
+        let mut scratch = vec![0.0; 12];
+        chol_solve_into(&l, &b, &mut x, &mut scratch);
+        assert_eq!(x, want);
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! From-scratch dense linear-algebra substrate (the "BLAS/LAPACK" of the
 //! native engine). See DESIGN.md S1. Everything the paper's algorithms
 //! need: packed register-tiled matrix products over a persistent worker
-//! pool, Householder QR, a symmetric eigensolver, one-sided Jacobi SVD,
+//! pool, Householder QR, a blocked symmetric eigensolver with a
+//! dedicated top-r spectral path, one-sided Jacobi SVD,
 //! polar/Procrustes solvers and subspace metrics — validated
 //! module-by-module against naive oracles and algebraic identities.
 //! Iterative solvers reuse scratch through [`workspace::Workspace`] and

@@ -8,17 +8,57 @@
 //! computes on the accelerator (and is faster for well-conditioned
 //! cross-Grams — see `bench_alignment`).
 
+use super::eig::sym_eig;
 use super::gemm::{a_bt, at_b, at_b_into, matmul, matmul_into};
 use super::mat::Mat;
 use super::svd::svd;
 use super::workspace::Workspace;
 
-/// Exact orthogonal polar factor of a square matrix via SVD: `U V^T`
-/// (computed as `A B^T` — no transpose materialization).
+/// Gram-route safety threshold: the eigensolver polar path is used only
+/// when `lambda_min(A^T A) >= GRAM_SAFE_RELCOND * lambda_max(A^T A)`,
+/// i.e. `cond(A) <= 100`. Procrustes cross-Grams of correlated panels sit
+/// far inside this; near-singular inputs fall back to the Jacobi SVD,
+/// whose accuracy does not square the condition number.
+const GRAM_SAFE_RELCOND: f64 = 1e-4;
+
+/// Exact orthogonal polar factor of a square matrix: `U V^T` from
+/// `A = U S V^T`.
+///
+/// Well-conditioned inputs (the r x r Procrustes cross-Grams — the hot
+/// path) go through the blocked spectral backend: `A^T A = V S^2 V^T`,
+/// polar `= A V S^{-1} V^T`, finished with one Newton–Schulz step that
+/// pins the orthogonality of the result to roundoff. Inputs failing the
+/// `GRAM_SAFE_RELCOND` conditioning check take the one-sided Jacobi SVD
+/// route, which never squares the spectrum.
 pub fn polar_svd(a: &Mat) -> Mat {
     assert!(a.is_square(), "polar factor needs a square matrix");
-    let (u, _, v) = svd(a);
-    a_bt(&u, &v)
+    let r = a.rows();
+    if r == 0 {
+        return Mat::zeros(0, 0);
+    }
+    let gram = at_b(a, a);
+    let (vals, v) = sym_eig(&gram);
+    let lmax = vals[r - 1].max(0.0);
+    if lmax > 0.0 && vals[0] >= GRAM_SAFE_RELCOND * lmax {
+        // A V S^{-1}: scale the columns of A V by the inverse singular
+        // values (ascending eigenvalues -> S^2), then close with V^T
+        let av = matmul(a, &v);
+        let avs = Mat::from_fn(r, r, |i, j| av[(i, j)] / vals[j].sqrt());
+        let y = a_bt(&avs, &v);
+        // one Newton–Schulz polish: Y <- 0.5 Y (3 I - Y^T Y) squares the
+        // distance to the orthogonal manifold (eps * cond^2 -> roundoff)
+        let mut g = at_b(&y, &y);
+        for i in 0..r {
+            for (j, val) in g.row_mut(i).iter_mut().enumerate() {
+                *val = if i == j { 3.0 - *val } else { -*val };
+            }
+        }
+        let mut out = matmul(&y, &g);
+        out.scale_in_place(0.5);
+        return out;
+    }
+    let (u, _, vt) = svd(a);
+    a_bt(&u, &vt)
 }
 
 /// Orthogonal polar factor via the Newton–Schulz iteration
@@ -105,6 +145,32 @@ mod tests {
                 "seed {seed}: Newton–Schulz certificate violated"
             );
         }
+    }
+
+    /// The Gram-eigensolver polar route must agree with the raw Jacobi
+    /// SVD route on well-conditioned inputs, and near-singular inputs
+    /// must still come out orthogonal (the conditioning fallback).
+    #[test]
+    fn gram_route_matches_svd_route_and_falls_back_safely() {
+        use crate::linalg::svd::svd;
+        let mut rng = Pcg64::seed(21);
+        for r in [2usize, 6, 16] {
+            let q = rng.haar_orthogonal(r);
+            let a = q.add(&rng.normal_mat(r, r).scale(0.05));
+            let got = polar_svd(&a);
+            let (u, _, v) = svd(&a);
+            let want = crate::linalg::gemm::a_bt(&u, &v);
+            assert!(got.sub(&want).max_abs() < 1e-9, "r={r}");
+        }
+        // nearly rank-deficient: two almost-parallel columns
+        let mut a = Mat::zeros(3, 3);
+        for i in 0..3 {
+            a[(i, 0)] = 1.0 + i as f64;
+            a[(i, 1)] = (1.0 + i as f64) * (1.0 + 1e-9);
+            a[(i, 2)] = (i * i) as f64;
+        }
+        let p = polar_svd(&a);
+        assert!(at_b(&p, &p).sub(&Mat::eye(3)).max_abs() < 1e-8);
     }
 
     #[test]

@@ -6,15 +6,23 @@
 //! above `lambda_1`, which amplifies the gap ratio from
 //! `lambda_{r+1}/lambda_r` to `(sigma - lambda_r)/(sigma - lambda_{r+1})`
 //! — far fewer iterations for small eigengaps, at the price of an SPD
-//! solve per step (our Cholesky substrate).
+//! solve per step (our Cholesky substrate). The factorization of
+//! `sigma I - C` is hoisted out of the iteration: Cholesky once, then a
+//! pair of triangular solves per step through the cached factor, with the
+//! panel and per-column scratch drawn from a [`Workspace`] so the loop
+//! allocates nothing.
 
-use super::chol::spd_solve;
+use super::chol::{chol_solve_into, cholesky};
 use super::gemm::matvec;
 use super::mat::Mat;
-use super::qr::orthonormalize;
+use super::qr::orthonormalize_into;
+use super::workspace::Workspace;
 
 /// Estimate `lambda_1(C)` by a few power-iteration steps (used to pick the
-/// shift).
+/// shift). Returns the true Rayleigh quotient `x^T C x / x^T x` of the
+/// final iterate, so the estimate is scale-correct for any `iters >= 1`
+/// (the first iterate is deliberately unnormalized; dividing by `x^T x`
+/// is what keeps a small `iters` from inflating the estimate).
 pub fn lambda_max_estimate(c: &Mat, iters: usize) -> f64 {
     let n = c.rows();
     let mut x: Vec<f64> = (0..n).map(|i| 1.0 + ((i * 7919) % 13) as f64 * 0.01).collect();
@@ -25,7 +33,9 @@ pub fn lambda_max_estimate(c: &Mat, iters: usize) -> f64 {
         if nrm == 0.0 {
             return 0.0;
         }
-        lam = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let xx: f64 = x.iter().map(|v| v * v).sum();
+        let xy: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        lam = xy / xx;
         x = y.into_iter().map(|v| v / nrm).collect();
     }
     lam
@@ -38,6 +48,7 @@ pub fn lambda_max_estimate(c: &Mat, iters: usize) -> f64 {
 pub fn shift_invert_iter(c: &Mat, v0: &Mat, steps: usize) -> Option<Mat> {
     let n = c.rows();
     assert_eq!(v0.rows(), n);
+    let r = v0.cols();
     // Shift just above lambda_1: the closer sigma is to lambda_1, the
     // better the inverse amplifies the gap. Start aggressive (0.5% above
     // the power-iteration estimate) and back off geometrically whenever
@@ -52,13 +63,20 @@ pub fn shift_invert_iter(c: &Mat, v0: &Mat, steps: usize) -> Option<Mat> {
         let shifted = Mat::from_fn(n, n, |i, j| {
             (if i == j { sigma } else { 0.0 }) - c[(i, j)]
         });
-        if let Some(l) = super::chol::cholesky(&shifted) {
-            let _ = l; // PD confirmed; redo the solves via spd_solve below
-            let mut v = orthonormalize(v0);
+        if let Some(l) = cholesky(&shifted) {
+            // PD confirmed: iterate against the cached factor — one
+            // Cholesky for the whole run instead of one per step
+            let mut ws = Workspace::new();
+            let mut v = ws.take_mat(n, r);
+            orthonormalize_into(v0, &mut v, &mut ws);
+            let mut w = ws.take_mat(n, r);
+            let mut col = ws.take_vec(n);
             for _ in 0..steps {
-                let w = spd_solve(&shifted, &v)?;
-                v = orthonormalize(&w);
+                chol_solve_into(&l, &v, &mut w, &mut col);
+                orthonormalize_into(&w, &mut v, &mut ws);
             }
+            ws.put_mat(w);
+            ws.put_vec(col);
             return Some(v);
         }
         eps *= 2.0;
@@ -89,6 +107,24 @@ mod tests {
         let (c, _) = tiny_gap_cov(&mut rng, 30, 2, 0.3);
         let lam = lambda_max_estimate(&c, 100);
         assert!((lam - 1.0).abs() < 1e-3, "{lam}");
+    }
+
+    /// Regression: with few iterations the first iterate is unnormalized,
+    /// and the old `x . y` estimate returned `||x||^2`-inflated values.
+    /// The Rayleigh quotient is scale-correct from the very first step and
+    /// can never exceed `lambda_1` for a symmetric matrix.
+    #[test]
+    fn lambda_max_small_iters_not_scale_inflated() {
+        let mut rng = Pcg64::seed(7);
+        let (c, _) = tiny_gap_cov(&mut rng, 30, 2, 0.3); // lambda_1 = 1
+        for iters in [1usize, 2, 3] {
+            let lam = lambda_max_estimate(&c, iters);
+            assert!(
+                lam <= 1.0 + 1e-9,
+                "iters={iters}: Rayleigh quotient {lam} exceeds lambda_1"
+            );
+            assert!(lam > 0.0, "iters={iters}: {lam}");
+        }
     }
 
     #[test]

@@ -2,20 +2,33 @@
 //! `dist_2(U, V) = ||U U^T - V V^T||_2` (spectral norm of the projector
 //! difference = sin of the largest principal angle) and occasionally the
 //! Frobenius analogue. Both are computed from the singular values of the
-//! r x r cross-Gram `U^T V` — no d x d projector is ever materialized.
+//! r x r cross-Gram `G = U^T V` — no d x d projector is ever
+//! materialized. The singular values themselves come from the symmetric
+//! eigensolver on `G^T G` (the blocked spectral backend) instead of a
+//! one-sided Jacobi SVD: for orthonormal panels `G^T G` is a PSD
+//! contraction, so the Gram formulation is numerically safe here — the
+//! squared cosines live in [0, 1] and the metrics only consume `1 - c^2`,
+//! which the squaring cannot degrade at the tolerances these diagnostics
+//! are held to (`testkit::tol::ITER`).
 
+use super::eig::sym_eig;
 use super::gemm::at_b;
 use super::mat::Mat;
-use super::svd::svd;
 
 /// Cosines of the principal angles between the column spans of two
-/// orthonormal panels (descending; length r).
+/// orthonormal panels (descending; length r), via the symmetric
+/// eigendecomposition of the cross-Gram's Gram: `cos_j =
+/// sqrt(lambda_j(G^T G))`.
 pub fn principal_angle_cosines(u: &Mat, v: &Mat) -> Vec<f64> {
     assert_eq!(u.rows(), v.rows(), "ambient dims differ");
     assert_eq!(u.cols(), v.cols(), "subspace dims differ");
     let g = at_b(u, v);
-    let (_, s, _) = svd(&g);
-    s.into_iter().map(|x| x.min(1.0)).collect()
+    let (vals, _) = sym_eig(&at_b(&g, &g));
+    // ascending eigenvalues -> descending cosines, clipped into [0, 1]
+    vals.into_iter()
+        .rev()
+        .map(|x| x.max(0.0).sqrt().min(1.0))
+        .collect()
 }
 
 /// Spectral subspace distance `||U U^T - V V^T||_2 = sin(theta_max)
@@ -62,6 +75,25 @@ mod tests {
                 (got - want).abs() < tol::ITER,
                 "seed {seed}: dist2 {got} vs oracle {want}"
             );
+        }
+    }
+
+    /// The Gram-eigensolver route for the principal-angle cosines must
+    /// match the one-sided Jacobi SVD of the cross-Gram itself.
+    #[test]
+    fn cosines_match_jacobi_svd_route() {
+        use crate::linalg::svd::svd;
+        let mut rng = Pcg64::seed(0xc05);
+        for &(d, r) in &[(12usize, 3usize), (30, 5), (50, 8)] {
+            let u = rng.haar_stiefel(d, r);
+            let v = rng.haar_stiefel(d, r);
+            let got = principal_angle_cosines(&u, &v);
+            let g = crate::linalg::gemm::at_b(&u, &v);
+            let (_, want, _) = svd(&g);
+            assert_eq!(got.len(), r);
+            for (c, s) in got.iter().zip(&want) {
+                assert!((c - s.min(1.0)).abs() < 1e-8, "({d},{r}): {c} vs {s}");
+            }
         }
     }
 

@@ -21,6 +21,6 @@ mod pjrt;
 #[cfg(feature = "pjrt")]
 pub(crate) mod xla_shim;
 
-pub use engine::{LocalSolver, NativeEngine, ShiftInvertEngine};
+pub use engine::{DirectEigEngine, LocalSolver, NativeEngine, ShiftInvertEngine};
 pub use manifest::{ArtifactEntry, Manifest};
 pub use pjrt::{PjrtEngine, SharedPjrtSolver};

@@ -8,7 +8,7 @@
 //! ||A||_F^2 / (l - k)` for all unit `x` and any `k < l`.
 
 use crate::linalg::eig::sym_eig;
-use crate::linalg::gemm::{syrk_scaled, syrk_scaled_into};
+use crate::linalg::gemm::{a_bt_into, at_b_into, syrk_scaled};
 use crate::linalg::Mat;
 
 /// A Frequent Directions sketch of a stream of d-dimensional rows.
@@ -20,18 +20,27 @@ pub struct FrequentDirections {
     filled: usize,
     /// Sketch size l.
     l: usize,
-    /// Gram scratch (d, d), allocated lazily on the first shrink and
-    /// reused after: a long stream shrinks every `l - filled` inserts,
-    /// and this was the hot allocation. Empty until then, so short
-    /// streams (and the panel codec's r <= l case) never pay for it.
+    /// Small-side Gram scratch (l, l), allocated lazily on the first
+    /// shrink and reused after: a long stream shrinks every `l - filled`
+    /// inserts, and this was the hot allocation. Empty until then, so
+    /// short streams (and the panel codec's r <= l case) never pay for
+    /// it.
     gram: Mat,
+    /// Rebuild scratch (l, d) holding `U^T B` (lazy, reused like `gram`).
+    proj: Mat,
 }
 
 impl FrequentDirections {
     /// New sketch with `l` rows over dimension `d` (`l >= 2`).
     pub fn new(l: usize, d: usize) -> Self {
         assert!(l >= 2);
-        FrequentDirections { b: Mat::zeros(l, d), filled: 0, l, gram: Mat::zeros(0, 0) }
+        FrequentDirections {
+            b: Mat::zeros(l, d),
+            filled: 0,
+            l,
+            gram: Mat::zeros(0, 0),
+            proj: Mat::zeros(0, 0),
+        }
     }
 
     pub fn dim(&self) -> usize {
@@ -58,38 +67,49 @@ impl FrequentDirections {
     /// The FD shrink step: SVD the buffer, subtract the (l/2)-th squared
     /// singular value (0-indexed, in descending order) from all squared
     /// singular values, rebuild.
+    ///
+    /// Works entirely on the small side of `B` (l, d): eigendecompose the
+    /// l x l outer Gram `B B^T = U diag(s^2) U^T` through the blocked
+    /// spectral backend, then rebuild the shrunk rows as
+    /// `(s'_j / s_j) u_j^T B` with one `U^T B` GEMM — the right singular
+    /// vectors `v_j = B^T u_j / s_j` are never materialized, and the old
+    /// d x d eigensolve (the per-shrink hot spot for l << d) is gone.
+    /// The d-sized scratch (`proj`) and the Gram are lazy and reused;
+    /// the remaining per-shrink allocations are all l x l.
     fn shrink(&mut self) {
         let d = self.dim();
-        // eigendecompose B^T B = V diag(s^2) V^T (d x d; fine for the
-        // moderate d of our experiments), then B <- diag(s') V^T. The
-        // Gram goes into the reusable scratch — allocated on the first
-        // shrink, then no per-shrink allocation.
-        if self.gram.shape() != (d, d) {
-            self.gram = Mat::zeros(d, d);
+        if self.gram.shape() != (self.l, self.l) {
+            self.gram = Mat::zeros(self.l, self.l);
         }
-        syrk_scaled_into(&self.b, 1.0, &mut self.gram);
+        a_bt_into(&self.b, &self.b, &mut self.gram);
         let (vals, vecs) = sym_eig(&self.gram);
         // B (l, d) has min(l, d) singular values; beyond that they are
-        // identically zero
+        // identically zero (B B^T has rank <= min(l, d))
         let rank_cap = self.l.min(d);
-        let mut s2: Vec<f64> =
-            (0..rank_cap).map(|j| vals[d - 1 - j].max(0.0)).collect();
+        let s2raw: Vec<f64> =
+            (0..rank_cap).map(|j| vals[self.l - 1 - j].max(0.0)).collect();
         // the shrink quantile is the (l/2)-th squared singular value;
         // when l/2 >= min(l, d) — possible whenever l > d — that
         // singular value is exactly zero and nothing shrinks
-        let delta = if self.l / 2 < rank_cap { s2[self.l / 2] } else { 0.0 };
-        for v in s2.iter_mut() {
-            *v = (*v - delta).max(0.0);
+        let delta = if self.l / 2 < rank_cap { s2raw[self.l / 2] } else { 0.0 };
+        // proj = U^T B with U in descending-eigenvalue order: row j of
+        // proj is s_j * v_j^T
+        if self.proj.shape() != (self.l, d) {
+            self.proj = Mat::zeros(self.l, d);
         }
-        // rebuild B in place: row `kept` <- s' * (eigvec d-1-j); `vecs`
-        // is an independent matrix, so overwriting `b` as we go is safe
+        let desc = Mat::from_fn(self.l, self.l, |i, j| vecs[(i, self.l - 1 - j)]);
+        at_b_into(&desc, &self.b, &mut self.proj);
+        // rebuild B in place: row `kept` <- (s'_j / s_j) * proj row j
         let mut kept = 0;
-        for (j, &e2) in s2.iter().enumerate() {
-            if e2 > 0.0 {
-                let s = e2.sqrt();
+        for (j, &s2) in s2raw.iter().enumerate() {
+            let shrunk = (s2 - delta).max(0.0);
+            if shrunk > 0.0 {
+                // shrunk > 0 implies s2 > delta >= 0, so the scale is finite
+                let scale = (shrunk / s2).sqrt();
+                let src = self.proj.row(j);
                 let row = self.b.row_mut(kept);
-                for (c, rv) in row.iter_mut().enumerate() {
-                    *rv = s * vecs[(c, d - 1 - j)];
+                for (rv, &pv) in row.iter_mut().zip(src) {
+                    *rv = scale * pv;
                 }
                 kept += 1;
             }

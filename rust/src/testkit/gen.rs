@@ -136,6 +136,80 @@ pub fn planted_partition(n: usize, k: usize, p_in: f64, p_out: f64, seed: u64) -
     Graph { n, edges, labels }
 }
 
+/// Adversarial eigenvalue spectra for the symmetric-eigensolver property
+/// suite, parameterized by ambient dimension `d` and the leading-block
+/// size `r` the top-r path is asked for. Each entry is `(name, evs)`;
+/// rotate `diag(evs)` by a Haar basis to get the test matrix. The
+/// families target exactly the regimes where a tridiagonal
+/// bisection/inverse-iteration path can go wrong:
+///
+/// - `clustered-top`: the leading r eigenvalues differ only at ~1e-9 —
+///   inverse iteration must orthogonalize within the cluster;
+/// - `repeated-top`: exactly equal leading eigenvalues (degenerate
+///   invariant subspace, any orthonormal basis is correct);
+/// - `tiny-rel-gap`: `lambda_{r+1}/lambda_r = 1 - 1e-6`;
+/// - `rank-deficient-psd`: a PSD Gram with `d - r` exact zeros (the FD
+///   shrink regime);
+/// - `geometric-decay`: eigenvalues spanning ~25 orders of magnitude;
+/// - `indefinite-mirror`: signed spectrum with `+/-` pairs, so "top r"
+///   means largest *algebraic*, not largest magnitude.
+pub fn adversarial_spectra(d: usize, r: usize) -> Vec<(&'static str, Vec<f64>)> {
+    assert!(r >= 2 && r < d, "need 2 <= r < d");
+    vec![
+        (
+            "clustered-top",
+            (0..d)
+                .map(|i| {
+                    if i < r {
+                        1.0 - 1e-9 * i as f64
+                    } else {
+                        0.5 * 0.95f64.powi((i - r) as i32)
+                    }
+                })
+                .collect(),
+        ),
+        (
+            "repeated-top",
+            (0..d).map(|i| if i < r { 1.0 } else { 0.4 }).collect(),
+        ),
+        (
+            "tiny-rel-gap",
+            (0..d)
+                .map(|i| {
+                    if i < r {
+                        1.0
+                    } else {
+                        (1.0 - 1e-6) * 0.9f64.powi((i - r) as i32)
+                    }
+                })
+                .collect(),
+        ),
+        (
+            "rank-deficient-psd",
+            (0..d)
+                .map(|i| if i < r { 1.0 - 0.1 * i as f64 } else { 0.0 })
+                .collect(),
+        ),
+        (
+            "geometric-decay",
+            (0..d).map(|i| 0.3f64.powi(i as i32)).collect(),
+        ),
+        (
+            "indefinite-mirror",
+            (0..d)
+                .map(|i| {
+                    let mag = 1.0 + 0.1 * (i / 2) as f64;
+                    if i % 2 == 0 {
+                        mag
+                    } else {
+                        -mag
+                    }
+                })
+                .collect(),
+        ),
+    ]
+}
+
 /// Adversarial (m, k, n) GEMM shapes: degenerate zero dimensions, single
 /// rows/columns, tall-skinny and wide panels, edge tiles for the packed
 /// kernel (m, n, k not multiples of the MR=4 / NR=8 micro-tile or the

@@ -38,8 +38,8 @@ pub use check::{
     procrustes_certificate, sin_theta,
 };
 pub use gen::{
-    gemm_shapes, haar_orthogonal, haar_panel, noisy_copies,
-    planted_partition, spiked_covariance, SpikedCov,
+    adversarial_spectra, gemm_shapes, haar_orthogonal, haar_panel,
+    noisy_copies, planted_partition, spiked_covariance, SpikedCov,
 };
 
 /// Shared numeric tolerances (see the module docs for the policy table).

@@ -103,6 +103,87 @@ fn eigensolver_vs_jacobi_oracle_on_spiked_instances() {
     }
 }
 
+/// Adversarial-spectrum eigensolver suite: clustered eigenvalues, exactly
+/// repeated eigenvalues, tiny `lambda_r / lambda_{r+1}` gaps,
+/// rank-deficient PSD Grams, extreme decay and indefinite mirrors — both
+/// the full blocked solver and the dedicated top-r path pinned to the
+/// independent cyclic-Jacobi oracle.
+#[test]
+fn eigensolver_adversarial_spectra_vs_jacobi_oracle() {
+    use deigen::linalg::eig::{sym_eig, sym_eig_top_r};
+    let (d, r) = (48usize, 4usize);
+    for (name, evs) in gen::adversarial_spectra(d, r) {
+        let q = gen::haar_orthogonal(d, 0x5bec + name.len() as u64);
+        let scaled = Mat::from_fn(d, d, |i, j| q[(i, j)] * evs[j]);
+        let a = matmul(&scaled, &q.transpose());
+        let (vals, vecs) = sym_eig(&a);
+        let (ovals, _) = oracle::jacobi_eig(&a);
+        let scale = ovals.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        for (g, o) in vals.iter().zip(&ovals) {
+            assert!(
+                (g - o).abs() < tol::ITER * scale,
+                "{name}: eigenvalue {g} vs oracle {o}"
+            );
+        }
+        check::assert_orthonormal(&vecs, tol::FACTOR, &format!("{name}: full basis"));
+        let (v, lam) = sym_eig_top_r(&a, r);
+        check::assert_orthonormal(&v, tol::FACTOR, &format!("{name}: top-r panel"));
+        for (j, &l) in lam.iter().enumerate() {
+            assert!(
+                (l - ovals[d - 1 - j]).abs() < tol::ITER * scale,
+                "{name}: top eigenvalue {j}: {l} vs {}",
+                ovals[d - 1 - j]
+            );
+        }
+        // residual certificate A V = V diag(lam) — basis-independent, so
+        // it holds even where a cluster makes individual vectors arbitrary
+        let av = matmul(&a, &v);
+        let vl = Mat::from_fn(d, r, |i, j| v[(i, j)] * lam[j]);
+        assert!(
+            av.sub(&vl).max_abs() < 100.0 * tol::ITER * scale.max(1.0),
+            "{name}: top-r residual {:.2e}",
+            av.sub(&vl).max_abs()
+        );
+        // where the spectrum has a clean gap at r, the top-r panel must
+        // span the oracle's leading subspace
+        let mut sorted = evs.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        if sorted[r - 1] - sorted[r] > 1e-3 * scale {
+            let otop = oracle::top_eigvecs(&a, r).0;
+            assert!(
+                check::sin_theta(&v, &otop) < 10.0 * tol::ITER,
+                "{name}: leading subspace disagrees with oracle"
+            );
+        }
+    }
+}
+
+/// Acceptance gate for the blocked backend: at a dimension where the
+/// trailing matvec and the rank-2b GEMMs actually fan out over the pool,
+/// a forced single-thread run must be bit-identical to a multi-thread
+/// run, for both the full solver and the top-r path.
+#[test]
+fn eigensolver_thread_plans_bit_identical_at_pooled_sizes() {
+    use deigen::linalg::eig::{sym_eig, sym_eig_top_r};
+    use deigen::linalg::pool;
+    let d = 384; // rows^2 and n2^2 * nb both clear the parallel thresholds
+    let mut rng = Pcg64::seed(0xb17_5eed);
+    let mut a = rng.normal_mat(d, d);
+    a.symmetrize();
+    let (vals1, vecs1) = pool::with_threads(1, || sym_eig(&a));
+    let (vals4, vecs4) = pool::with_threads(4, || sym_eig(&a));
+    assert_eq!(vals1, vals4, "eigenvalues differ across thread plans");
+    assert_eq!(
+        vecs1.as_slice(),
+        vecs4.as_slice(),
+        "eigenvectors differ across thread plans"
+    );
+    let (v1, lam1) = pool::with_threads(1, || sym_eig_top_r(&a, 16));
+    let (v4, lam4) = pool::with_threads(4, || sym_eig_top_r(&a, 16));
+    assert_eq!(lam1, lam4, "top-r eigenvalues differ across thread plans");
+    assert_eq!(v1.as_slice(), v4.as_slice(), "top-r panel differs across thread plans");
+}
+
 /// Procrustes rotations: production route == oracle route, and both pass
 /// the polar-factor optimality certificate, across noise levels.
 #[test]
