@@ -15,7 +15,7 @@ use std::sync::Arc;
 
 use deigen::align;
 use deigen::coordinator::{
-    run_cluster, AggregationRule, ClusterConfig, NodeBehavior, WorkerData,
+    run_cluster, AggregationRule, ClusterConfig, NodeBehavior, Shard, WorkerData,
 };
 use deigen::linalg::subspace::dist2;
 use deigen::rng::Pcg64;
@@ -33,7 +33,9 @@ fn make_workers(
         .map(|i| {
             let x = cov.sample(n, &mut rng.split(i as u64));
             WorkerData {
-                observation: CovModel::empirical_cov(&x),
+                // workers hold raw sample shards; the Gram operator plane
+                // solves without forming any d x d covariance
+                shard: Shard::Samples(x),
                 behavior: if i != 0 && i <= byz {
                     // compromise nodes 1..=byz (keep node 0 honest so the
                     // *default-reference* failure mode is probed separately)

@@ -8,9 +8,7 @@
 use std::sync::Arc;
 
 use deigen::benchutil::{bench, fmt_time, header};
-use deigen::coordinator::{
-    run_cluster, ClusterConfig, NetworkModel, NodeBehavior, WorkerData,
-};
+use deigen::coordinator::{run_cluster, ClusterConfig, NetworkModel, WorkerData};
 use deigen::rng::Pcg64;
 use deigen::runtime::NativeEngine;
 use deigen::synth::{CovModel, SpectrumModel};
@@ -18,9 +16,8 @@ use deigen::synth::{CovModel, SpectrumModel};
 fn make_workers(cov: &CovModel, n: usize, m: usize, seed: u64) -> Vec<WorkerData> {
     let mut rng = Pcg64::seed(seed);
     (0..m)
-        .map(|i| WorkerData {
-            observation: CovModel::empirical_cov(&cov.sample(n, &mut rng.split(i as u64))),
-            behavior: NodeBehavior::Honest,
+        .map(|i| {
+            WorkerData::dense(CovModel::empirical_cov(&cov.sample(n, &mut rng.split(i as u64))))
         })
         .collect()
 }

@@ -1,0 +1,105 @@
+//! Benchmarks for the matrix-free operator data plane (DESIGN.md S13):
+//! the GramOp-vs-dense local solve at the headline tall-shard shape
+//! (d = 2048, n = 256 — the regime where forming the d×d covariance
+//! dwarfs the solve), and the sparse KatzOp against the dense power loop
+//! it replaced. Run: `cargo bench --bench bench_ops` (add `-- --quick` to
+//! smoke, `-- --json BENCH_ops.json` for machine-readable output). Under
+//! a blanket `cargo bench` that already carries `--json` for
+//! bench_linalg, pass `--json-ops <path>` — it takes precedence here, so
+//! one blanket invocation emits every artifact without clobbering.
+
+use deigen::benchutil::{bench, header, quick_mode, report, JsonSink};
+use deigen::graph::sbm;
+use deigen::linalg::gemm::{matmul, syrk_scaled};
+use deigen::linalg::symop::{GramOp, KatzOp, SymOp};
+use deigen::rng::Pcg64;
+use deigen::runtime::{LocalSolver, NativeEngine};
+
+fn main() {
+    header("operator data plane");
+    let args: Vec<String> = std::env::args().collect();
+    // `--json-ops` wins over `--json` so a blanket `cargo bench` run can
+    // route this bench and bench_linalg to different files
+    let json_path = ["--json-ops", "--json"].iter().find_map(|flag| {
+        args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1)).cloned()
+    });
+    let mut sink = JsonSink::with_path(json_path);
+    let quick = quick_mode();
+    let mut rng = Pcg64::seed(0x0b5);
+
+    // --- GramOp vs dense local solve: the acceptance anchor -------------
+    // dense path = form X^T X / n (O(n d^2) SYRK) + orthogonal iteration
+    // on the d x d plane (O(d^2 r) per step); GramOp path = two thin
+    // GEMMs per step (O(n d r)), nothing formed. At n << d the dense
+    // route pays ~d/n more per step plus the formation — the claim is
+    // >= 5x end to end at (d, n) = (2048, 256).
+    let (d, n, r) = if quick { (384usize, 96usize, 8usize) } else { (2048, 256, 8) };
+    let x = rng.normal_mat(n, d);
+    let solver = NativeEngine::default();
+    let iters = if quick { 2 } else { 5 };
+    let rd = bench(&format!("dense solve  d={d} n={n} r={r} (SYRK + iter)"), 1, iters, || {
+        let mut solve_rng = Pcg64::seed(7);
+        let c = syrk_scaled(&x, n as f64);
+        std::hint::black_box(solver.leading_subspace(&c, r, &mut solve_rng));
+    });
+    let rg = bench(&format!("GramOp solve d={d} n={n} r={r} (matrix-free)"), 1, iters, || {
+        let mut solve_rng = Pcg64::seed(7);
+        std::hint::black_box(solver.leading_subspace_op(&GramOp::new(&x), r, &mut solve_rng));
+    });
+    report(&rd);
+    report(&rg);
+    let speedup = rd.median_s / rg.median_s;
+    println!(
+        "      -> GramOp/dense local-solve speedup: {speedup:.2}x \
+         (claim: >= 5x at d=2048/n=256)"
+    );
+    sink.record(&rd, None);
+    sink.record(&rg, None);
+
+    // --- KatzOp vs the dense power loop ---------------------------------
+    // dense Katz needs `terms` n x n GEMMs per proximity build (O(n^3)
+    // each); KatzOp runs the whole series per panel product in
+    // O(|E| * r * terms). We time one dense power term and the full
+    // sparse series, then compare the series costs.
+    let (nk, terms, rk) = if quick { (512usize, 24usize, 16usize) } else { (4096, 24, 16) };
+    let mut grng = Pcg64::seed(0x9a_f);
+    // sparse regime: average degree ~12 independent of n
+    let g = sbm(nk, 4, 18.0 / nk as f64, 6.0 / nk as f64, &mut grng);
+    let v = grng.normal_mat(nk, rk);
+    let op = KatzOp::new(g.n, &g.edges, 0.02, terms);
+    let rs = bench(
+        &format!("KatzOp apply n={nk} |E|={} r={rk} terms={terms}", g.m()),
+        1,
+        if quick { 2 } else { 5 },
+        || {
+            std::hint::black_box(op.apply(&v));
+        },
+    );
+    let a = g.adjacency();
+    let rp = bench(&format!("dense Katz power term n={nk}"), 0, if quick { 1 } else { 2 }, || {
+        std::hint::black_box(matmul(&a, &a));
+    });
+    report(&rs);
+    report(&rp);
+    let dense_series = rp.median_s * terms as f64;
+    println!(
+        "      -> full series: KatzOp {:.3}s vs dense ~{:.3}s ({:.0}x) at n={nk}",
+        rs.median_s,
+        dense_series,
+        dense_series / rs.median_s
+    );
+    sink.record(&rs, None);
+    sink.record(&rp, Some(2.0 * (nk as f64).powi(3)));
+
+    // --- end-to-end embedding at graph scale ----------------------------
+    // the workload the dense plane could not represent: HOPE embedding of
+    // an n-node graph without an n x n proximity matrix ever existing
+    let dim = 16usize;
+    let re = bench(&format!("hope_embedding n={nk} dim={dim} (matrix-free)"), 0, 2, || {
+        std::hint::black_box(deigen::graph::hope_embedding(&g, dim, 0.02));
+    });
+    report(&re);
+    sink.record(&re, None);
+
+    sink.finish();
+}

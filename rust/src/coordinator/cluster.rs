@@ -27,19 +27,76 @@
 use std::sync::Arc;
 
 use crate::align;
-use crate::linalg::{pool, Mat};
+use crate::linalg::symop::{GramOp, SymOp};
+use crate::linalg::{pool, Mat, Workspace};
 use crate::rng::Pcg64;
 use crate::runtime::LocalSolver;
 
 use super::netsim::{CommSnapshot, CommStats, NetworkModel};
 use super::protocol::{AggregationRule, Message, WireCodec};
 
+/// What a worker node actually owns — the data plane behind its
+/// observation operator `X̂ⁱ`.
+pub enum Shard {
+    /// A dense symmetric d×d observation (pre-formed covariance, sensing
+    /// matrix, or any externally supplied operator matrix).
+    Dense(Mat),
+    /// A raw (n, d) sample shard; the observation is the Gram operator
+    /// `XᵀX/n`, applied matrix-free — the node never forms (or even has
+    /// memory for) a d×d matrix. This is the paper's PCA case at scale.
+    Samples(Mat),
+}
+
+impl Shard {
+    /// Ambient dimension d of the observation operator.
+    pub fn dim(&self) -> usize {
+        match self {
+            Shard::Dense(c) => c.rows(),
+            Shard::Samples(x) => x.cols(),
+        }
+    }
+}
+
+/// The shard IS the observation operator: local solvers consume it
+/// directly through the `SymOp` data plane.
+impl SymOp for Shard {
+    fn dim(&self) -> usize {
+        Shard::dim(self)
+    }
+
+    fn apply_into(&self, v: &Mat, out: &mut Mat, ws: &mut Workspace) {
+        match self {
+            Shard::Dense(c) => c.apply_into(v, out, ws),
+            Shard::Samples(x) => GramOp::new(x).apply_into(v, out, ws),
+        }
+    }
+
+    fn as_dense(&self) -> Option<&Mat> {
+        match self {
+            Shard::Dense(c) => Some(c),
+            Shard::Samples(_) => None,
+        }
+    }
+}
+
 /// Per-worker input.
 pub struct WorkerData {
-    /// The node's symmetric observation `X̂ⁱ` (d, d).
-    pub observation: Mat,
+    /// The node's observation data plane.
+    pub shard: Shard,
     /// Honest nodes follow the protocol; Byzantine nodes upload junk.
     pub behavior: NodeBehavior,
+}
+
+impl WorkerData {
+    /// Honest worker over a dense symmetric observation.
+    pub fn dense(observation: Mat) -> Self {
+        WorkerData { shard: Shard::Dense(observation), behavior: NodeBehavior::Honest }
+    }
+
+    /// Honest worker over a raw sample shard (matrix-free Gram plane).
+    pub fn samples(x: Mat) -> Self {
+        WorkerData { shard: Shard::Samples(x), behavior: NodeBehavior::Honest }
+    }
 }
 
 /// Worker failure model.
@@ -110,7 +167,7 @@ fn aggregate(panels: &[Mat], rule: AggregationRule, reference: &Mat) -> Mat {
 struct WorkerState {
     id: usize,
     behavior: NodeBehavior,
-    observation: Mat,
+    shard: Shard,
     rng: Pcg64,
     panel: Option<Mat>,
 }
@@ -135,7 +192,7 @@ pub fn run_cluster(
         .map(|(i, data)| WorkerState {
             id: i,
             behavior: data.behavior,
-            observation: data.observation,
+            shard: data.shard,
             rng: Pcg64::seed_stream(config.seed, i as u64 + 1),
             panel: None,
         })
@@ -151,11 +208,13 @@ pub fn run_cluster(
                 let solver = Arc::clone(&solver);
                 let stats = Arc::clone(&stats);
                 let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
-                    let d = st.observation.rows();
-                    // local solve (or junk for Byzantine nodes)
+                    let d = st.shard.dim();
+                    // local solve through the operator data plane (or
+                    // junk for Byzantine nodes); a Samples shard never
+                    // materializes its d×d Gram
                     let panel = match st.behavior {
                         NodeBehavior::Honest => {
-                            solver.leading_subspace(&st.observation, r, &mut st.rng)
+                            solver.leading_subspace_op(&st.shard, r, &mut st.rng)
                         }
                         NodeBehavior::Byzantine => st.rng.haar_stiefel(d, r),
                     };
@@ -206,7 +265,7 @@ pub fn run_cluster(
                         let Message::Reference { panel: reference, .. } = msg else {
                             unreachable!()
                         };
-                        let d = st.observation.rows();
+                        let d = st.shard.dim();
                         let aligned = match st.behavior {
                             NodeBehavior::Honest => crate::linalg::procrustes::procrustes_align(
                                 st.panel.as_ref().expect("round-1 panel missing"),
@@ -288,7 +347,7 @@ mod tests {
             .map(|_| {
                 let mut e = rng.normal_mat(d, d).scale(noise);
                 e.symmetrize();
-                WorkerData { observation: x.add(&e), behavior: NodeBehavior::Honest }
+                WorkerData::dense(x.add(&e))
             })
             .collect();
         (q.col_block(0, r), workers)
@@ -396,14 +455,46 @@ mod tests {
     fn deterministic_given_seed() {
         let mut rng = Pcg64::seed(5);
         let (_, workers) = make_workers(&mut rng, 16, 2, 4, 0.05);
-        let obs: Vec<Mat> = workers.iter().map(|w| w.observation.clone()).collect();
+        let obs: Vec<Mat> = workers
+            .iter()
+            .map(|w| match &w.shard {
+                Shard::Dense(c) => c.clone(),
+                Shard::Samples(x) => x.clone(),
+            })
+            .collect();
         let cfg = ClusterConfig { r: 2, seed: 11, ..Default::default() };
         let r1 = run_cluster(workers, Arc::new(NativeEngine::default()), &cfg);
-        let workers2: Vec<WorkerData> = obs
-            .into_iter()
-            .map(|o| WorkerData { observation: o, behavior: NodeBehavior::Honest })
-            .collect();
+        let workers2: Vec<WorkerData> = obs.into_iter().map(WorkerData::dense).collect();
         let r2 = run_cluster(workers2, Arc::new(NativeEngine::default()), &cfg);
         assert!(r1.estimate.sub(&r2.estimate).max_abs() < 1e-12);
+    }
+
+    /// Sample-sharded workers (Gram operators, never a d×d) land on the
+    /// same estimate as workers fed the materialized covariances — the
+    /// two data planes share a spectrum, so the iterative local solves
+    /// agree to solver tolerance.
+    #[test]
+    fn sample_sharded_workers_match_dense_gram_workers() {
+        let mut rng = Pcg64::seed(6);
+        let (d, r, m, n) = (24usize, 2usize, 6usize, 200usize);
+        let shards: Vec<Mat> = (0..m).map(|_| rng.normal_mat(n, d)).collect();
+        let dense_workers: Vec<WorkerData> = shards
+            .iter()
+            .map(|x| WorkerData::dense(crate::linalg::gemm::syrk_scaled(x, n as f64)))
+            .collect();
+        let sharded_workers: Vec<WorkerData> =
+            shards.into_iter().map(WorkerData::samples).collect();
+        let cfg = ClusterConfig { r, seed: 13, ..Default::default() };
+        let res_d = run_cluster(dense_workers, Arc::new(NativeEngine::default()), &cfg);
+        let res_s = run_cluster(sharded_workers, Arc::new(NativeEngine::default()), &cfg);
+        check::assert_orthonormal(&res_s.estimate, tol::FACTOR, "sharded estimate");
+        assert!(
+            dist2(&res_s.estimate, &res_d.estimate) < tol::ITER,
+            "sharded vs dense plane: {}",
+            dist2(&res_s.estimate, &res_d.estimate)
+        );
+        // identical protocol shape: the data plane changes compute, not
+        // communication
+        assert_eq!(res_s.comm, res_d.comm);
     }
 }

@@ -24,7 +24,10 @@ pub enum Topology {
     Ring,
     /// Complete graph: everyone talks to everyone (upper bound on mixing).
     Complete,
-    /// Static k-regular ring lattice: i talks to i±1..i±k/2.
+    /// Static k-regular ring lattice (circulant graph): i talks to
+    /// i±1..i±⌊k/2⌋, plus — for odd k on an even cycle — the antipodal
+    /// chord i + m/2, which is the standard way a k-regular circulant
+    /// realizes an odd degree.
     KRegular(usize),
 }
 
@@ -49,7 +52,22 @@ impl Topology {
                     if m > 2 * delta {
                         out.push((i + m - delta) % m);
                         out.push((i + delta) % m);
+                    } else if m == 2 * delta {
+                        // ±delta coincide at the antipodal node: one
+                        // neighbor, not zero. Without this, KRegular(2)
+                        // with m = 2 returned an empty list and gossip
+                        // silently never mixed (Ring special-cases m = 2;
+                        // the lattice must too).
+                        out.push((i + delta) % m);
                     }
+                    // m < 2*delta: the offset wraps onto nodes already
+                    // covered by a smaller delta — nothing new to add
+                }
+                // odd k realizes its last unit of degree as the antipodal
+                // chord (only possible on an even cycle that is bigger
+                // than the ±half band)
+                if k % 2 == 1 && k > 1 && m % 2 == 0 && m > 2 * half {
+                    out.push((i + m / 2) % m);
                 }
                 out.sort_unstable();
                 out.dedup();
@@ -87,6 +105,15 @@ pub fn spread(panels: &[Mat]) -> f64 {
 /// spread drops below `tol`, if `tol > 0`). Panels are consumed. Every
 /// exchanged panel crosses the (simulated) wire through `codec`, so a
 /// lossy codec both shrinks the byte count and perturbs mixing.
+///
+/// Metering: peer links are independent point-to-point channels, so each
+/// message is recorded on the peer meters (`record_peer`), and for the
+/// barrier time model the round reports its bottleneck endpoint — the
+/// max over nodes of that node's total incoming bytes (`add_peer_serial`;
+/// a node's ingress serializes its own arrivals, but distinct nodes
+/// receive concurrently). Funneling the mesh through `record_up` would
+/// instead serialize every link through one uplink in `simulated_time`.
+/// The returned `bytes` equals the stats snapshot's `bytes_peer`.
 pub fn gossip_align(
     mut panels: Vec<Mat>,
     topology: &Topology,
@@ -114,25 +141,30 @@ pub fn gossip_align(
             let dec: Vec<Mat> = wire.iter().map(WirePanel::decode).collect();
             (wire.iter().map(WirePanel::wire_bytes).collect(), Some(dec))
         };
+        let mut widest_ingress = 0usize;
         for i in 0..m {
             let nbrs = topology.neighbors(i, m);
             if nbrs.is_empty() {
                 continue;
             }
+            let mut node_in = 0usize;
             let mut acc = panels[i].clone();
             for &j in &nbrs {
                 // receiving j's panel costs one message at encoded size
                 let msg_bytes = HEADER_BYTES + sizes[j];
                 bytes += msg_bytes;
+                node_in += msg_bytes;
                 if let Some(s) = stats {
-                    s.record_up(msg_bytes);
+                    s.record_peer(msg_bytes);
                 }
                 let incoming = decoded.as_ref().map_or(&snapshot[j], |d| &d[j]);
                 acc.axpy(1.0, &procrustes_align(incoming, &snapshot[i]));
             }
+            widest_ingress = widest_ingress.max(node_in);
             panels[i] = orthonormalize(&acc.scale(1.0 / (nbrs.len() + 1) as f64));
         }
         if let Some(s) = stats {
+            s.add_peer_serial(widest_ingress);
             s.bump_round();
         }
         executed += 1;
@@ -170,6 +202,55 @@ mod tests {
         assert_eq!(Topology::Complete.neighbors(2, 4), vec![0, 1, 3]);
         let n = Topology::KRegular(4).neighbors(0, 10);
         assert_eq!(n, vec![1, 2, 8, 9]);
+    }
+
+    /// Odd k adds the antipodal chord on an even cycle instead of being
+    /// silently truncated to k - 1.
+    #[test]
+    fn kregular_odd_k_uses_antipodal_chord() {
+        // KRegular(3) on m = 6: ±1 plus the chord to i + 3
+        assert_eq!(Topology::KRegular(3).neighbors(0, 6), vec![1, 3, 5]);
+        assert_eq!(Topology::KRegular(3).neighbors(2, 6), vec![1, 3, 5]);
+        // chord edges are symmetric: 0 <-> 3
+        assert!(Topology::KRegular(3).neighbors(3, 6).contains(&0));
+        // m = 4, k = 3: band ±1 plus chord = complete graph K4
+        assert_eq!(Topology::KRegular(3).neighbors(0, 4), vec![1, 2, 3]);
+        // odd m cannot host the chord; degree falls back to the even band
+        assert_eq!(Topology::KRegular(3).neighbors(0, 5), vec![1, 4]);
+        // every node reports the same degree (regularity)
+        for k in [3usize, 5] {
+            let deg0 = Topology::KRegular(k).neighbors(0, 12).len();
+            for i in 1..12 {
+                assert_eq!(Topology::KRegular(k).neighbors(i, 12).len(), deg0, "k={k} i={i}");
+            }
+            assert_eq!(deg0, k, "k={k} should be exactly k-regular on m=12");
+        }
+    }
+
+    /// m == 2*delta keeps the single antipodal neighbor: KRegular(2) with
+    /// m = 2 must behave like the Ring pair, not return an empty list.
+    #[test]
+    fn kregular_m_eq_2delta_keeps_antipodal_neighbor() {
+        assert_eq!(Topology::KRegular(2).neighbors(0, 2), vec![1]);
+        assert_eq!(Topology::KRegular(2).neighbors(1, 2), vec![0]);
+        // KRegular(4) on m = 4: delta=1 band plus the delta=2 antipode
+        assert_eq!(Topology::KRegular(4).neighbors(0, 4), vec![1, 2, 3]);
+        // KRegular(6) on m = 6: saturates to the complete graph
+        assert_eq!(Topology::KRegular(6).neighbors(0, 6), vec![1, 2, 3, 4, 5]);
+    }
+
+    /// The regression the bug hid: two-node KRegular(2) gossip actually
+    /// mixes (it used to exchange nothing and report flat spread).
+    #[test]
+    fn kregular2_two_nodes_provably_mix() {
+        let mut rng = Pcg64::seed(6);
+        let (_, panels) = noisy_panels(&mut rng, 16, 2, 2);
+        let before = spread(&panels);
+        assert!(before > 1e-6, "test premise: panels start apart");
+        let res = gossip_align(panels, &Topology::KRegular(2), 6, 0.0, WireCodec::F64, None);
+        let after = *res.spread_per_round.last().unwrap();
+        assert!(after < 0.2 * before, "KRegular(2)/m=2 did not mix: {before} -> {after}");
+        assert!(res.bytes > 0, "no traffic recorded — nodes never talked");
     }
 
     #[test]
@@ -216,6 +297,46 @@ mod tests {
         // 6 nodes x 2 neighbors x 3 rounds messages of raw-f64 panels
         let expected = 6 * 2 * 3 * (HEADER_BYTES + 8 * 16 * 2);
         assert_eq!(res.bytes, expected);
+    }
+
+    /// Peer metering: every link lands on the peer meters (the local
+    /// `bytes` counter reconciles with the snapshot), nothing leaks onto
+    /// the leader's star-link meters, and the barrier time model charges
+    /// the bottleneck ingress per round (one node's incoming volume) —
+    /// not the whole mesh serialized through a single uplink.
+    #[test]
+    fn gossip_metering_reconciles_with_barrier_model() {
+        use crate::coordinator::NetworkModel;
+        let mut rng = Pcg64::seed(7);
+        let (d, r, m, rounds) = (16usize, 2usize, 6usize, 3usize);
+        let (_, panels) = noisy_panels(&mut rng, d, r, m);
+        let stats = CommStats::new();
+        let res =
+            gossip_align(panels, &Topology::Ring, rounds, 0.0, WireCodec::F64, Some(&stats));
+        let snap = stats.snapshot();
+        // reconciliation: the result's byte counter IS the peer meter
+        assert_eq!(res.bytes, snap.bytes_peer);
+        assert_eq!(snap.msgs_peer, m * 2 * rounds);
+        // peer traffic must not masquerade as leader uplink traffic
+        assert_eq!(snap.bytes_up, 0);
+        assert_eq!(snap.msgs_up, 0);
+        assert_eq!(snap.rounds, rounds);
+        // barrier model: per round one latency + one node's ingress (on a
+        // ring every node receives exactly 2 equal f64-panel messages)
+        let link = HEADER_BYTES + 8 * d * r;
+        assert_eq!(snap.peer_serial_bytes, rounds * 2 * link);
+        let net = NetworkModel { latency_s: 0.01, bandwidth_bps: 1e6 };
+        let want =
+            rounds as f64 * net.latency_s + (rounds * 2 * link) as f64 / net.bandwidth_bps;
+        assert!((snap.simulated_time(&net) - want).abs() < 1e-12);
+        // the old record_up funneling would have serialized all m*2 links
+        assert!(snap.simulated_time(&net) < rounds as f64 * 0.01 + (res.bytes as f64) / 1e6);
+        // consistency with the star model: a complete graph's bottleneck
+        // ingress is (m-1) messages, matching what a leader would absorb
+        let (_, panels2) = noisy_panels(&mut rng, d, r, m);
+        let stats2 = CommStats::new();
+        gossip_align(panels2, &Topology::Complete, 1, 0.0, WireCodec::F64, Some(&stats2));
+        assert_eq!(stats2.snapshot().peer_serial_bytes, (m - 1) * link);
     }
 
     #[test]

@@ -19,6 +19,6 @@ pub mod gossip;
 mod netsim;
 mod protocol;
 
-pub use cluster::{run_cluster, ClusterConfig, ClusterResult, NodeBehavior, WorkerData};
+pub use cluster::{run_cluster, ClusterConfig, ClusterResult, NodeBehavior, Shard, WorkerData};
 pub use netsim::{CommSnapshot, CommStats, NetworkModel};
 pub use protocol::{AggregationRule, Message, WireCodec, WirePanel, HEADER_BYTES};

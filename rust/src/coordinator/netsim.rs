@@ -40,6 +40,14 @@ impl NetworkModel {
 /// communication claims are about payload volume, and a handful of
 /// fixed-size control envelopes must not inflate `bytes_down` or the
 /// simulated wall-clock.
+///
+/// Peer-to-peer traffic (gossip) gets its own meters: the up/down meters
+/// describe star links through the leader, and funneling every peer
+/// exchange through them serializes the whole mesh over one uplink in the
+/// simulated-time model. Peer links are independent, so under the
+/// per-round barrier each gossip round costs one latency plus its
+/// bottleneck endpoint — the max over nodes of that node's incoming
+/// bytes; callers report that via [`CommStats::add_peer_serial`].
 #[derive(Debug, Default)]
 pub struct CommStats {
     /// Total worker -> leader payload bytes.
@@ -54,6 +62,14 @@ pub struct CommStats {
     pub msgs_ctrl: AtomicUsize,
     /// Control-message envelope bytes, either direction.
     pub bytes_ctrl: AtomicUsize,
+    /// Total peer-to-peer payload bytes (all links, gossip protocols).
+    pub bytes_peer: AtomicUsize,
+    /// Peer-to-peer payload messages.
+    pub msgs_peer: AtomicUsize,
+    /// Serialized cost of peer traffic under the barrier model: the sum
+    /// over rounds of that round's bottleneck ingress (the max over
+    /// nodes of the node's incoming bytes), in bytes.
+    pub peer_serial_bytes: AtomicUsize,
     /// Synchronous communication rounds completed.
     pub rounds: AtomicUsize,
 }
@@ -80,13 +96,29 @@ impl CommStats {
         self.msgs_ctrl.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one peer-to-peer payload message (gossip link traffic —
+    /// volume meters only; the time model reads [`Self::add_peer_serial`]).
+    pub fn record_peer(&self, bytes: usize) {
+        self.bytes_peer.fetch_add(bytes, Ordering::Relaxed);
+        self.msgs_peer.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Report the bottleneck ingress of a completed round (the max over
+    /// nodes of that node's total incoming bytes); distinct nodes receive
+    /// concurrently, so one round serializes only this much on the wire.
+    pub fn add_peer_serial(&self, bytes: usize) {
+        self.peer_serial_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
     pub fn bump_round(&self) {
         self.rounds.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Total payload bytes (control traffic excluded).
     pub fn total_bytes(&self) -> usize {
-        self.bytes_up.load(Ordering::Relaxed) + self.bytes_down.load(Ordering::Relaxed)
+        self.bytes_up.load(Ordering::Relaxed)
+            + self.bytes_down.load(Ordering::Relaxed)
+            + self.bytes_peer.load(Ordering::Relaxed)
     }
 
     pub fn rounds_done(&self) -> usize {
@@ -108,6 +140,9 @@ impl CommStats {
             msgs_down: self.msgs_down.load(Ordering::Relaxed),
             msgs_ctrl: self.msgs_ctrl.load(Ordering::Relaxed),
             bytes_ctrl: self.bytes_ctrl.load(Ordering::Relaxed),
+            bytes_peer: self.bytes_peer.load(Ordering::Relaxed),
+            msgs_peer: self.msgs_peer.load(Ordering::Relaxed),
+            peer_serial_bytes: self.peer_serial_bytes.load(Ordering::Relaxed),
             rounds: self.rounds_done(),
         }
     }
@@ -122,18 +157,26 @@ pub struct CommSnapshot {
     pub msgs_down: usize,
     pub msgs_ctrl: usize,
     pub bytes_ctrl: usize,
+    pub bytes_peer: usize,
+    pub msgs_peer: usize,
+    pub peer_serial_bytes: usize,
     pub rounds: usize,
 }
 
 impl CommSnapshot {
     /// Simulated wall-clock under `net`, assuming per-round barrier
     /// synchronization: each round costs one latency plus the serialized
-    /// per-link volume of its widest link. We use the conservative
-    /// aggregate `rounds * latency + payload_bytes / bandwidth`; control
-    /// envelopes piggyback on round teardown and cost nothing here.
+    /// per-link volume of its widest link. Star traffic through the
+    /// leader shares one pair of links, so up/down volume serializes in
+    /// aggregate; peer-to-peer nodes receive concurrently, so only the
+    /// per-round bottleneck ingress (`peer_serial_bytes`, reported by
+    /// the gossip loop as the max per-node incoming volume) serializes.
+    /// Control envelopes piggyback on round teardown and cost nothing
+    /// here.
     pub fn simulated_time(&self, net: &NetworkModel) -> f64 {
         self.rounds as f64 * net.latency_s
-            + (self.bytes_up + self.bytes_down) as f64 / net.bandwidth_bps
+            + (self.bytes_up + self.bytes_down + self.peer_serial_bytes) as f64
+                / net.bandwidth_bps
     }
 }
 
@@ -176,6 +219,31 @@ mod tests {
         s.record_ctrl(32);
         s.record_ctrl(32);
         assert_eq!(s.simulated_time(&net), before);
+    }
+
+    /// Peer traffic is metered on its own counters and enters the time
+    /// model only through the per-round widest-link report — never
+    /// through the star-link serialization.
+    #[test]
+    fn peer_traffic_meters_and_time_model() {
+        let net = NetworkModel { latency_s: 0.01, bandwidth_bps: 1000.0 };
+        let s = CommStats::new();
+        // a round of 4 peer messages; the caller reports the bottleneck
+        // ingress (say one node received the 100 B and the 80 B message)
+        for bytes in [100usize, 80, 100, 60] {
+            s.record_peer(bytes);
+        }
+        s.add_peer_serial(180);
+        s.bump_round();
+        let snap = s.snapshot();
+        assert_eq!(snap.msgs_peer, 4);
+        assert_eq!(snap.bytes_peer, 340);
+        assert_eq!(snap.peer_serial_bytes, 180);
+        assert_eq!(snap.bytes_up, 0);
+        // one latency + the bottleneck ingress, NOT 340 B serialized
+        assert!((snap.simulated_time(&net) - (0.01 + 0.18)).abs() < 1e-12);
+        // peer payload counts toward the payload total
+        assert_eq!(s.total_bytes(), 340);
     }
 
     #[test]

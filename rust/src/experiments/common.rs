@@ -1,9 +1,18 @@
 //! Shared infrastructure for the figure/table experiments: the distributed
 //! PCA trial (sample → local covariances → local panels → all estimators),
 //! summary statistics, and log-log slope fits for Table 1.
+//!
+//! The trial runs on either data plane: `Dense` forms each node's d×d
+//! empirical covariance (the historical route, exact for small d), while
+//! `SampleSharded` keeps every node on its raw (n, d) shard — local
+//! solves go through [`GramOp`], the centralized baseline through
+//! [`GramStackOp`], and the projector baseline through the matrix-free
+//! `align::projector_average` — so no d×d matrix is ever allocated
+//! (op-path unit test below proves it with an allocation tripwire).
 
 use crate::align;
 use crate::linalg::subspace::dist2;
+use crate::linalg::symop::{GramOp, GramStackOp};
 use crate::linalg::Mat;
 use crate::rng::Pcg64;
 use crate::runtime::{LocalSolver, NativeEngine};
@@ -19,6 +28,18 @@ pub struct EstimatorSet {
     pub naive: bool,
     /// Evaluate Fan et al. [20] spectral-projector averaging.
     pub projector: bool,
+}
+
+/// Which data plane a PCA trial runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataPlane {
+    /// Each node materializes its d×d empirical covariance (historical
+    /// route; centralized baseline uses the dense top-r eigensolver).
+    Dense,
+    /// Each node keeps its raw (n, d) sample shard and solves through the
+    /// Gram operator; the centralized baseline pools the shards as a
+    /// stacked Gram operator. Nothing d×d is ever allocated.
+    SampleSharded,
 }
 
 /// Subspace distances (dist_2 to the true principal subspace) of one trial.
@@ -39,6 +60,8 @@ pub struct TrialErrors {
 /// One distributed-PCA trial: each of `m` machines draws `n` samples from
 /// `cov`, computes its local panel with the native engine, and every
 /// requested estimator is scored against the true principal subspace.
+/// Runs on the dense plane; see [`pca_trial_on`] for the sample-sharded
+/// variant.
 pub fn pca_trial(
     cov: &CovModel,
     m: usize,
@@ -46,25 +69,56 @@ pub fn pca_trial(
     set: EstimatorSet,
     rng: &mut Pcg64,
 ) -> TrialErrors {
+    pca_trial_on(cov, m, n, set, DataPlane::Dense, rng)
+}
+
+/// [`pca_trial`] with an explicit data plane.
+pub fn pca_trial_on(
+    cov: &CovModel,
+    m: usize,
+    n: usize,
+    set: EstimatorSet,
+    plane: DataPlane,
+    rng: &mut Pcg64,
+) -> TrialErrors {
     let r = cov.r;
     let d = cov.dim();
     let truth = cov.principal_subspace();
     let solver = NativeEngine::default();
 
-    let mut avg_cov = Mat::zeros(d, d);
     let mut panels: Vec<Mat> = Vec::with_capacity(m);
-    for i in 0..m {
-        let mut node_rng = rng.split(i as u64 + 1);
-        let x = cov.sample(n, &mut node_rng);
-        let c = CovModel::empirical_cov(&x);
-        avg_cov.axpy(1.0 / m as f64, &c);
-        panels.push(solver.leading_subspace(&c, r, &mut node_rng));
-    }
-
-    // centralized baseline (the paper's `eigs` reference): the dedicated
-    // top-r spectral path — bisection + inverse iteration on the blocked
-    // tridiagonalization — instead of a full d x d decomposition
-    let central = crate::linalg::eig::sym_eig_top_r(&avg_cov, r).0;
+    let central = match plane {
+        DataPlane::Dense => {
+            let mut avg_cov = Mat::zeros(d, d);
+            for i in 0..m {
+                let mut node_rng = rng.split(i as u64 + 1);
+                let x = cov.sample(n, &mut node_rng);
+                let c = CovModel::empirical_cov(&x);
+                avg_cov.axpy(1.0 / m as f64, &c);
+                panels.push(solver.leading_subspace(&c, r, &mut node_rng));
+            }
+            // centralized baseline (the paper's `eigs` reference): the
+            // dedicated top-r spectral path — bisection + inverse
+            // iteration on the blocked tridiagonalization — instead of a
+            // full d x d decomposition
+            crate::linalg::eig::sym_eig_top_r(&avg_cov, r).0
+        }
+        DataPlane::SampleSharded => {
+            let mut shards: Vec<Mat> = Vec::with_capacity(m);
+            for i in 0..m {
+                let mut node_rng = rng.split(i as u64 + 1);
+                let x = cov.sample(n, &mut node_rng);
+                panels.push(solver.leading_subspace_op(&GramOp::new(&x), r, &mut node_rng));
+                shards.push(x);
+            }
+            // operator-backed centralized baseline: the pooled covariance
+            // (1/(m n)) Σ XᵢᵀXᵢ acts through the stacked Gram operator —
+            // no avg_cov accumulation, no d×d anywhere
+            let pooled = GramStackOp::new(&shards, (m * n) as f64);
+            let mut central_rng = rng.split(0xce17);
+            solver.leading_subspace_op(&pooled, r, &mut central_rng)
+        }
+    };
     let a1 = align::procrustes_fix(&panels);
 
     TrialErrors {
@@ -107,6 +161,11 @@ pub fn median(xs: &[f64]) -> f64 {
 
 /// Least-squares slope of log(y) against log(x) — the empirical rate
 /// exponent used by the Table-1 consistency check.
+///
+/// Degenerate inputs return an explicit `NaN` instead of letting a 0/0 or
+/// x/0 quotient leak ±Inf into the tables: after dropping non-positive
+/// points (logs undefined) a fit needs at least two survivors, and the
+/// x-values must not be (numerically) constant.
 pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
     assert_eq!(xs.len(), ys.len());
     let pts: Vec<(f64, f64)> = xs
@@ -115,12 +174,20 @@ pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
         .filter(|(&x, &y)| x > 0.0 && y > 0.0)
         .map(|(&x, &y)| (x.ln(), y.ln()))
         .collect();
+    if pts.len() < 2 {
+        return f64::NAN;
+    }
     let n = pts.len() as f64;
     let sx: f64 = pts.iter().map(|p| p.0).sum();
     let sy: f64 = pts.iter().map(|p| p.1).sum();
     let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
     let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
-    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+    let denom = n * sxx - sx * sx;
+    // constant x (up to rounding of the log sums) has no defined slope
+    if !denom.is_finite() || denom.abs() <= f64::EPSILON * n * sxx.abs().max(1.0) {
+        return f64::NAN;
+    }
+    (n * sxy - sx * sy) / denom
 }
 
 /// The simplified Theorem-4 rate `f(r_star, n)` of Eq. (36).
@@ -161,6 +228,49 @@ mod tests {
         assert!(!e.algo1.is_nan());
     }
 
+    /// Both data planes draw the same samples (identical rng streams) and
+    /// the operators share the covariances' spectra, so every estimator's
+    /// error must agree to solver tolerance.
+    #[test]
+    fn sharded_plane_matches_dense_plane() {
+        let model = SpectrumModel::M1 { r: 2, lambda_lo: 0.5, lambda_hi: 1.0, delta: 0.2 };
+        let set = EstimatorSet { refine_rounds: 2, naive: true, projector: true };
+        let mut rng_a = Pcg64::seed(3);
+        let cov_a = CovModel::draw(&model, 32, &mut rng_a);
+        let dense = pca_trial_on(&cov_a, 6, 150, set, DataPlane::Dense, &mut rng_a);
+        let mut rng_b = Pcg64::seed(3);
+        let cov_b = CovModel::draw(&model, 32, &mut rng_b);
+        let sharded = pca_trial_on(&cov_b, 6, 150, set, DataPlane::SampleSharded, &mut rng_b);
+        for (a, b, what) in [
+            (dense.central, sharded.central, "central"),
+            (dense.algo1, sharded.algo1, "algo1"),
+            (dense.algo2, sharded.algo2, "algo2"),
+            (dense.naive, sharded.naive, "naive"),
+            (dense.projector, sharded.projector, "projector"),
+            (dense.local1, sharded.local1, "local1"),
+        ] {
+            assert!((a - b).abs() < 1e-4, "{what}: dense {a} vs sharded {b}");
+        }
+    }
+
+    /// The acceptance pin for the operator data plane: a sample-sharded
+    /// trial — local solves, centralized baseline, projector and naive
+    /// baselines, refinement — never allocates a d×d matrix. The tripwire
+    /// panics on any d×d construction while armed (debug builds).
+    #[test]
+    fn sharded_trial_never_materializes_dxd() {
+        let mut rng = Pcg64::seed(4);
+        let model = SpectrumModel::M1 { r: 2, lambda_lo: 0.5, lambda_hi: 1.0, delta: 0.2 };
+        let d = 48;
+        // the model itself owns a d×d eigenbasis — drawn before arming
+        let cov = CovModel::draw(&model, d, &mut rng);
+        let set = EstimatorSet { refine_rounds: 2, naive: true, projector: true };
+        let guard = Mat::forbid_square_allocs(d);
+        let e = pca_trial_on(&cov, 5, 60, set, DataPlane::SampleSharded, &mut rng);
+        drop(guard);
+        assert!(e.algo1.is_finite() && e.central.is_finite() && e.projector.is_finite());
+    }
+
     #[test]
     fn median_and_slope() {
         assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
@@ -169,6 +279,23 @@ mod tests {
         let xs: Vec<f64> = (1..=10).map(|i| i as f64 * 10.0).collect();
         let ys: Vec<f64> = xs.iter().map(|x| x.powf(-0.5)).collect();
         assert!((loglog_slope(&xs, &ys) + 0.5).abs() < 1e-10);
+    }
+
+    /// Degenerate slope fits must say NaN, not ±Inf (the satellite fix:
+    /// these used to leak silently into Table 1).
+    #[test]
+    fn loglog_slope_degenerate_inputs_are_nan() {
+        // fewer than two positive survivors
+        assert!(loglog_slope(&[], &[]).is_nan());
+        assert!(loglog_slope(&[10.0], &[2.0]).is_nan());
+        assert!(loglog_slope(&[-1.0, 0.0, 5.0], &[1.0, 1.0, 2.0]).is_nan());
+        assert!(loglog_slope(&[1.0, 2.0, 3.0], &[0.0, -1.0, 2.0]).is_nan());
+        // constant x: vertical line, slope undefined
+        assert!(loglog_slope(&[7.0, 7.0, 7.0], &[1.0, 2.0, 3.0]).is_nan());
+        // near-constant x after filtering non-positives
+        assert!(loglog_slope(&[5.0, -3.0, 5.0], &[1.0, 9.0, 4.0]).is_nan());
+        // and a healthy fit is still healthy
+        assert!((loglog_slope(&[1.0, 10.0, 100.0], &[2.0, 2.0, 2.0])).abs() < 1e-12);
     }
 
     #[test]

@@ -12,8 +12,7 @@ use anyhow::Result;
 
 use crate::config::RunOptions;
 use crate::coordinator::{
-    run_cluster, ClusterConfig, CommSnapshot, NetworkModel, NodeBehavior,
-    WireCodec, WorkerData,
+    run_cluster, ClusterConfig, CommSnapshot, NetworkModel, WireCodec, WorkerData,
 };
 use crate::io::{CsvWriter, Table};
 use crate::linalg::subspace::dist2;
@@ -56,13 +55,8 @@ pub fn wire(opts: &RunOptions) -> Result<()> {
             .map(|i| CovModel::empirical_cov(&cov.sample(n, &mut rng.split(i as u64 + 1))))
             .collect();
         for (ci, &codec) in codecs.iter().enumerate() {
-            let workers: Vec<WorkerData> = obs
-                .iter()
-                .map(|o| WorkerData {
-                    observation: o.clone(),
-                    behavior: NodeBehavior::Honest,
-                })
-                .collect();
+            let workers: Vec<WorkerData> =
+                obs.iter().map(|o| WorkerData::dense(o.clone())).collect();
             let cfg = ClusterConfig { r, codec, seed: opts.seed, ..Default::default() };
             let res = run_cluster(workers, Arc::new(NativeEngine::default()), &cfg);
             dists[ci].push(dist2(&res.estimate, &truth));

@@ -8,6 +8,39 @@
 use std::fmt;
 use std::ops::{Index, IndexMut};
 
+#[cfg(debug_assertions)]
+thread_local! {
+    /// Dimension whose square matrices are currently forbidden on this
+    /// thread (0 = no guard). See [`Mat::forbid_square_allocs`].
+    static FORBIDDEN_SQUARE: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+/// RAII guard from [`Mat::forbid_square_allocs`]; restores the previous
+/// guard state on drop.
+pub struct SquareAllocGuard {
+    #[cfg(debug_assertions)]
+    prev: usize,
+}
+
+#[cfg(debug_assertions)]
+impl Drop for SquareAllocGuard {
+    fn drop(&mut self) {
+        FORBIDDEN_SQUARE.with(|c| c.set(self.prev));
+    }
+}
+
+/// Debug-build tripwire on every `Mat` construction path; release builds
+/// compile this to nothing.
+#[inline]
+fn debug_square_guard(rows: usize, cols: usize) {
+    #[cfg(debug_assertions)]
+    if rows == cols && rows > 0 && FORBIDDEN_SQUARE.with(|c| c.get()) == rows {
+        panic!("forbidden {rows}x{cols} matrix materialized while a square-alloc guard is active");
+    }
+    #[cfg(not(debug_assertions))]
+    let _ = (rows, cols);
+}
+
 /// Dense row-major `f64` matrix.
 #[derive(Clone, PartialEq)]
 pub struct Mat {
@@ -17,8 +50,27 @@ pub struct Mat {
 }
 
 impl Mat {
+    /// Test-only tripwire for the matrix-free data plane: while the
+    /// returned guard lives, constructing any `dim x dim` matrix on this
+    /// thread panics (debug builds only — release builds get a no-op
+    /// guard). The op-path tests use it to *prove* a sample-sharded
+    /// trial never materializes a d×d observation.
+    #[must_use = "the guard is the tripwire; dropping it disarms immediately"]
+    pub fn forbid_square_allocs(dim: usize) -> SquareAllocGuard {
+        #[cfg(debug_assertions)]
+        {
+            SquareAllocGuard { prev: FORBIDDEN_SQUARE.with(|c| c.replace(dim)) }
+        }
+        #[cfg(not(debug_assertions))]
+        {
+            let _ = dim;
+            SquareAllocGuard {}
+        }
+    }
+
     /// All-zeros matrix of shape `(rows, cols)`.
     pub fn zeros(rows: usize, cols: usize) -> Self {
+        debug_square_guard(rows, cols);
         Mat { rows, cols, data: vec![0.0; rows * cols] }
     }
 
@@ -33,6 +85,7 @@ impl Mat {
 
     /// Build from a function of the index pair.
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        debug_square_guard(rows, cols);
         let mut data = Vec::with_capacity(rows * cols);
         for i in 0..rows {
             for j in 0..cols {
@@ -44,6 +97,7 @@ impl Mat {
 
     /// Build from a row-major data vector (length must equal rows*cols).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        debug_square_guard(rows, cols);
         assert_eq!(data.len(), rows * cols, "data length != rows*cols");
         Mat { rows, cols, data }
     }
@@ -400,5 +454,27 @@ mod tests {
     #[should_panic]
     fn from_vec_bad_len_panics() {
         let _ = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0]);
+    }
+
+    /// The square-alloc tripwire catches exactly the guarded dimension,
+    /// nests, and disarms on drop (debug builds).
+    #[test]
+    #[cfg(debug_assertions)]
+    fn square_alloc_guard_trips_and_restores() {
+        let guard = Mat::forbid_square_allocs(5);
+        assert!(std::panic::catch_unwind(|| Mat::zeros(5, 5)).is_err());
+        assert!(std::panic::catch_unwind(|| Mat::from_fn(5, 5, |_, _| 0.0)).is_err());
+        // other shapes — including other squares — are untouched
+        let _ = Mat::zeros(4, 5);
+        let _ = Mat::zeros(4, 4);
+        {
+            let inner = Mat::forbid_square_allocs(4);
+            assert!(std::panic::catch_unwind(|| Mat::eye(4)).is_err());
+            let _ = Mat::zeros(5, 5); // inner guard replaced the outer one
+            drop(inner);
+        }
+        assert!(std::panic::catch_unwind(|| Mat::zeros(5, 5)).is_err());
+        drop(guard);
+        let _ = Mat::zeros(5, 5);
     }
 }

@@ -6,7 +6,10 @@
 //! polar/Procrustes solvers and subspace metrics — validated
 //! module-by-module against naive oracles and algebraic identities.
 //! Iterative solvers reuse scratch through [`workspace::Workspace`] and
-//! the `_into` kernel variants instead of allocating per step.
+//! the `_into` kernel variants instead of allocating per step, and the
+//! [`symop`] operator data plane lets every spectral solve run
+//! matrix-free — Gram shards, sensing weights, sparse Katz polynomials
+//! and stacked projectors all apply `C·V` without forming `C`.
 
 pub mod chol;
 pub mod eig;
@@ -19,7 +22,11 @@ pub mod qr;
 pub mod shiftinvert;
 pub mod subspace;
 pub mod svd;
+pub mod symop;
 pub mod workspace;
 
 pub use mat::Mat;
+pub use symop::{
+    DenseSymOp, GramOp, GramStackOp, KatzOp, StackedProjectorOp, SymOp, TruncatedSensingOp,
+};
 pub use workspace::Workspace;

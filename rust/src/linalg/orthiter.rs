@@ -3,7 +3,11 @@
 //! for arbitrary-shape sweeps; integration tests pin it against both the
 //! dense eigensolver (`sym_eig`) and the PJRT artifacts.
 //!
-//! The inner loop is allocation-free: the power step and the QR
+//! The iteration consumes a [`SymOp`] — the power step is `op.apply_into`,
+//! so the same loop serves the dense plane (`&Mat` coerces to
+//! `&dyn SymOp`), Gram sample shards, sensing operators, sparse Katz
+//! polynomials and stacked projectors without ever materializing a d×d
+//! matrix. The inner loop is allocation-free: the power step and the QR
 //! re-orthonormalization write into [`Workspace`]-owned buffers via the
 //! `_into` kernels, so a 30-step solve performs O(1) allocations instead
 //! of O(steps). The `_ws` entry points accept a caller-owned workspace so
@@ -11,35 +15,36 @@
 //! across solves too.
 
 use super::eig::top_eigvecs;
-use super::gemm::{at_b_into, matmul_into};
+use super::gemm::at_b_into;
 use super::mat::Mat;
 use super::qr::orthonormalize_into;
+use super::symop::SymOp;
 use super::workspace::Workspace;
 
-/// Leading-r eigenbasis of symmetric `c` by orthogonal iteration from the
-/// initial panel `v0` (d, r). Returns `(V, ritz)` with `ritz[j] = v_j^T C v_j`.
+/// Leading-r eigenbasis (by |λ|) of the symmetric operator `op` by
+/// orthogonal iteration from the initial panel `v0` (d, r). Returns
+/// `(V, ritz)` with `ritz[j] = v_jᵀ (C v_j)`.
 ///
-/// Convergence is linear with ratio `lambda_{r+1}/lambda_r`; callers choose
-/// `steps` accordingly (the AOT artifact bakes 30, matching
+/// Convergence is linear with ratio `|lambda_{r+1}/lambda_r|`; callers
+/// choose `steps` accordingly (the AOT artifact bakes 30, matching
 /// `model.DEFAULT_STEPS`).
-pub fn orth_iter(c: &Mat, v0: &Mat, steps: usize) -> (Mat, Vec<f64>) {
+pub fn orth_iter(op: &dyn SymOp, v0: &Mat, steps: usize) -> (Mat, Vec<f64>) {
     let mut ws = Workspace::new();
-    orth_iter_ws(c, v0, steps, &mut ws)
+    orth_iter_ws(op, v0, steps, &mut ws)
 }
 
 /// [`orth_iter`] with caller-owned scratch.
-pub fn orth_iter_ws(c: &Mat, v0: &Mat, steps: usize, ws: &mut Workspace) -> (Mat, Vec<f64>) {
-    assert!(c.is_square());
-    assert_eq!(c.rows(), v0.rows());
+pub fn orth_iter_ws(op: &dyn SymOp, v0: &Mat, steps: usize, ws: &mut Workspace) -> (Mat, Vec<f64>) {
     let (d, r) = v0.shape();
+    assert_eq!(op.dim(), d, "operator/panel dimension mismatch");
     let mut v = ws.take_mat(d, r);
     orthonormalize_into(v0, &mut v, ws);
     let mut cv = ws.take_mat(d, r);
     for _ in 0..steps {
-        matmul_into(c, &v, &mut cv);
+        op.apply_into(&v, &mut cv, ws);
         orthonormalize_into(&cv, &mut v, ws);
     }
-    matmul_into(c, &v, &mut cv);
+    op.apply_into(&v, &mut cv, ws);
     let ritz = ritz_values(&v, &cv);
     ws.put_mat(cv);
     (v, ritz)
@@ -48,20 +53,26 @@ pub fn orth_iter_ws(c: &Mat, v0: &Mat, steps: usize, ws: &mut Workspace) -> (Mat
 /// Adaptive variant: iterate until the subspace stops moving
 /// (`||V_k^T V_{k+1}|| ~ I` to `tol`) or `max_steps` is reached.
 /// Returns `(V, ritz, steps_taken)`.
-pub fn orth_iter_adaptive(c: &Mat, v0: &Mat, tol: f64, max_steps: usize) -> (Mat, Vec<f64>, usize) {
+pub fn orth_iter_adaptive(
+    op: &dyn SymOp,
+    v0: &Mat,
+    tol: f64,
+    max_steps: usize,
+) -> (Mat, Vec<f64>, usize) {
     let mut ws = Workspace::new();
-    orth_iter_adaptive_ws(c, v0, tol, max_steps, &mut ws)
+    orth_iter_adaptive_ws(op, v0, tol, max_steps, &mut ws)
 }
 
 /// [`orth_iter_adaptive`] with caller-owned scratch.
 pub fn orth_iter_adaptive_ws(
-    c: &Mat,
+    op: &dyn SymOp,
     v0: &Mat,
     tol: f64,
     max_steps: usize,
     ws: &mut Workspace,
 ) -> (Mat, Vec<f64>, usize) {
     let (d, r) = v0.shape();
+    assert_eq!(op.dim(), d, "operator/panel dimension mismatch");
     let mut v = ws.take_mat(d, r);
     orthonormalize_into(v0, &mut v, ws);
     let mut vn = ws.take_mat(d, r);
@@ -70,7 +81,7 @@ pub fn orth_iter_adaptive_ws(
     let mut gg = ws.take_mat(r, r);
     let mut taken = 0;
     for step in 0..max_steps {
-        matmul_into(c, &v, &mut cv);
+        op.apply_into(&v, &mut cv, ws);
         orthonormalize_into(&cv, &mut vn, ws);
         at_b_into(&v, &vn, &mut g);
         // movement = deviation of singular values of V^T V_new from 1;
@@ -89,7 +100,7 @@ pub fn orth_iter_adaptive_ws(
             break;
         }
     }
-    matmul_into(c, &v, &mut cv);
+    op.apply_into(&v, &mut cv, ws);
     let ritz = ritz_values(&v, &cv);
     ws.put_mat(vn);
     ws.put_mat(cv);
@@ -117,7 +128,9 @@ mod tests {
     use super::*;
     use crate::linalg::gemm::matmul;
     use crate::linalg::subspace::{dist2, is_orthonormal};
+    use crate::linalg::symop::{DenseSymOp, GramOp};
     use crate::rng::Pcg64;
+    use crate::testkit::tol;
 
     fn gapped(rng: &mut Pcg64, d: usize, r: usize, gap: f64) -> (Mat, Mat) {
         let q = rng.haar_orthogonal(d);
@@ -160,7 +173,7 @@ mod tests {
     /// the testkit's independent Jacobi oracle.
     #[test]
     fn matches_jacobi_oracle_subspace() {
-        use crate::testkit::{check, oracle, tol};
+        use crate::testkit::{check, oracle};
         let mut rng = Pcg64::seed(12);
         let (c, _) = gapped(&mut rng, 28, 3, 0.3);
         let v0 = rng.normal_mat(28, 3);
@@ -194,6 +207,37 @@ mod tests {
         let (v, _, steps) = orth_iter_adaptive(&c, &v0, 1e-12, 500);
         assert!(steps < 500);
         assert!(dist2(&v, &v1) < 1e-6);
+    }
+
+    /// The `DenseSymOp` wrapper and the bare `&Mat` coercion are the same
+    /// operator: bit-identical iterates.
+    #[test]
+    fn dense_wrapper_and_mat_coercion_bit_identical() {
+        let mut rng = Pcg64::seed(11);
+        let (c, _) = gapped(&mut rng, 26, 3, 0.3);
+        let v0 = rng.normal_mat(26, 3);
+        let (va, ra) = orth_iter(&c, &v0, 40);
+        let (vb, rb) = orth_iter(&DenseSymOp::new(&c), &v0, 40);
+        assert_eq!(va, vb);
+        assert_eq!(ra, rb);
+    }
+
+    /// A Gram operator over samples and the dense plane over its
+    /// materialized covariance share the spectrum, so both iterations
+    /// land on the same leading subspace with matching Ritz values.
+    #[test]
+    fn gram_op_agrees_with_materialized_dense_plane() {
+        let mut rng = Pcg64::seed(13);
+        let (n, d, r) = (300usize, 24usize, 3usize);
+        let x = rng.normal_mat(n, d);
+        let c = crate::linalg::gemm::syrk_scaled(&x, n as f64);
+        let v0 = rng.normal_mat(d, r);
+        let (vg, rg) = orth_iter(&GramOp::new(&x), &v0, 120);
+        let (vd, rd) = orth_iter(&c, &v0, 120);
+        assert!(dist2(&vg, &vd) < tol::ITER, "subspace gap {}", dist2(&vg, &vd));
+        for (a, b) in rg.iter().zip(&rd) {
+            assert!((a - b).abs() < tol::ITER, "ritz {a} vs {b}");
+        }
     }
 
     /// A caller-owned workspace reused across solves of different shapes

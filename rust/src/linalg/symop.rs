@@ -1,0 +1,483 @@
+//! Matrix-free symmetric-operator data plane (DESIGN.md S13).
+//!
+//! Every spectral solve in the pipeline reduces to repeated products
+//! `Y = C V` with a symmetric `C` and a thin panel `V` — and for the
+//! paper's workloads `C` almost never needs to exist as a dense matrix:
+//! the PCA observation is a Gram product `XᵀX/n` of a tall-skinny sample
+//! shard, the sensing init matrix is a diagonally-weighted Gram, the Katz
+//! proximity is a polynomial in a sparse adjacency, and Fan et al.'s mean
+//! projector is `W Wᵀ` of stacked panels. A [`SymOp`] is exactly that
+//! product: `apply_into` computes `C V` through the packed GEMM core and
+//! [`Workspace`]-owned scratch, never materializing `C`. This turns the
+//! per-iteration cost of a local solve from `O(d²r)` (plus the `O(nd²)`
+//! covariance formation) into `O(ndr)`, and lets the node-local data be a
+//! sample shard instead of a d×d observation — the operating regime of
+//! Fan et al. (1702.06488) and Garber et al. (1702.08169).
+//!
+//! [`orth_iter`](super::orthiter::orth_iter) and every `LocalSolver`
+//! consume `&dyn SymOp`; `&Mat` coerces (the dense plane is just one more
+//! operator), so dense callers are untouched.
+
+use super::gemm::{at_b_into, matmul_into};
+use super::mat::Mat;
+use super::workspace::Workspace;
+
+/// A symmetric linear operator `C ∈ R^{d×d}` exposed only through panel
+/// products. Implementations must be symmetric (callers feed the Ritz
+/// values and convergence checks of orthogonal iteration with `v_jᵀ C v_j`
+/// quotients) but need not be definite.
+pub trait SymOp {
+    /// Ambient dimension d.
+    fn dim(&self) -> usize;
+
+    /// `out = C v` for a (d, r) panel `v`, fully overwriting `out`
+    /// (also (d, r)). Scratch comes from `ws` so iterative callers
+    /// allocate nothing in steady state.
+    fn apply_into(&self, v: &Mat, out: &mut Mat, ws: &mut Workspace);
+
+    /// The dense matrix behind this operator, when one already exists.
+    /// Solvers use this to dispatch to direct dense paths (e.g.
+    /// `sym_eig_top_r` when `3r >= d`) without materializing anything.
+    fn as_dense(&self) -> Option<&Mat> {
+        None
+    }
+
+    /// Allocating convenience wrapper around [`SymOp::apply_into`].
+    fn apply(&self, v: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.dim(), v.cols());
+        let mut ws = Workspace::new();
+        self.apply_into(v, &mut out, &mut ws);
+        out
+    }
+
+    /// Materialize the dense `C` by applying the operator to the
+    /// identity. This IS a d×d allocation — it exists only for consumers
+    /// that are inherently dense (the PJRT artifacts are shape-locked to
+    /// a (d, d) input; shift-and-invert factors `σI - C`). Hot paths must
+    /// stay on `apply_into`.
+    fn to_dense(&self) -> Mat {
+        if let Some(c) = self.as_dense() {
+            return c.clone();
+        }
+        let d = self.dim();
+        let mut out = Mat::zeros(d, d);
+        let mut ws = Workspace::new();
+        self.apply_into(&Mat::eye(d), &mut out, &mut ws);
+        // implementations are symmetric up to rounding; make it exact so
+        // dense consumers (tridiagonalization, Cholesky) see a true
+        // symmetric matrix
+        out.symmetrize();
+        out
+    }
+
+    /// Borrow the dense matrix when one already exists, materialize
+    /// otherwise — the one-liner for inherently dense consumers (direct
+    /// eigensolvers, Cholesky-based iterations, shape-locked artifacts).
+    fn dense_view(&self) -> std::borrow::Cow<'_, Mat> {
+        match self.as_dense() {
+            Some(c) => std::borrow::Cow::Borrowed(c),
+            None => std::borrow::Cow::Owned(self.to_dense()),
+        }
+    }
+}
+
+/// The dense plane as an operator: `C v` is one GEMM. `&Mat` itself
+/// coerces to `&dyn SymOp` through this impl, so every pre-existing dense
+/// call site keeps its shape.
+impl SymOp for Mat {
+    fn dim(&self) -> usize {
+        debug_assert!(self.is_square());
+        self.rows()
+    }
+
+    fn apply_into(&self, v: &Mat, out: &mut Mat, _ws: &mut Workspace) {
+        matmul_into(self, v, out);
+    }
+
+    fn as_dense(&self) -> Option<&Mat> {
+        Some(self)
+    }
+}
+
+/// Named wrapper over a borrowed dense symmetric matrix — the explicit
+/// spelling of the dense plane for code that matches on operator kinds.
+pub struct DenseSymOp<'a> {
+    c: &'a Mat,
+}
+
+impl<'a> DenseSymOp<'a> {
+    pub fn new(c: &'a Mat) -> Self {
+        assert!(c.is_square(), "DenseSymOp needs a square matrix");
+        DenseSymOp { c }
+    }
+}
+
+impl SymOp for DenseSymOp<'_> {
+    fn dim(&self) -> usize {
+        self.c.rows()
+    }
+
+    fn apply_into(&self, v: &Mat, out: &mut Mat, _ws: &mut Workspace) {
+        matmul_into(self.c, v, out);
+    }
+
+    fn as_dense(&self) -> Option<&Mat> {
+        Some(self.c)
+    }
+}
+
+/// The PCA observation as an operator: `C = XᵀX / scale` for a tall
+/// sample shard `X` (n, d). `apply_into` is two thin GEMMs —
+/// `Xᵀ(X v) / scale` — at `O(ndr)` per panel product; the d×d Gram is
+/// never formed. This is the node-local data plane for sample sharding.
+pub struct GramOp<'a> {
+    x: &'a Mat,
+    scale: f64,
+}
+
+impl<'a> GramOp<'a> {
+    /// The empirical second-moment operator `XᵀX / n` of a sample shard.
+    pub fn new(x: &'a Mat) -> Self {
+        GramOp { x, scale: x.rows().max(1) as f64 }
+    }
+
+    /// `XᵀX / scale` with an explicit normalization.
+    pub fn with_scale(x: &'a Mat, scale: f64) -> Self {
+        assert!(scale > 0.0);
+        GramOp { x, scale }
+    }
+}
+
+impl SymOp for GramOp<'_> {
+    fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    fn apply_into(&self, v: &Mat, out: &mut Mat, ws: &mut Workspace) {
+        let mut xv = ws.take_mat(self.x.rows(), v.cols());
+        matmul_into(self.x, v, &mut xv);
+        at_b_into(self.x, &xv, out);
+        out.scale_in_place(1.0 / self.scale);
+        ws.put_mat(xv);
+    }
+}
+
+/// The pooled covariance of a sample-sharded cluster as an operator:
+/// `C = (1/scale) Σᵢ XᵢᵀXᵢ` over the machines' shards. The centralized
+/// baseline of a sharded trial runs on this — no `avg_cov` d×d
+/// accumulation anywhere.
+pub struct GramStackOp<'a> {
+    shards: &'a [Mat],
+    scale: f64,
+}
+
+impl<'a> GramStackOp<'a> {
+    /// `(1/scale) Σᵢ XᵢᵀXᵢ`; for the pooled empirical covariance of m
+    /// shards of n samples each, `scale = m * n`.
+    pub fn new(shards: &'a [Mat], scale: f64) -> Self {
+        assert!(!shards.is_empty());
+        assert!(scale > 0.0);
+        let d = shards[0].cols();
+        assert!(shards.iter().all(|x| x.cols() == d), "shards must share d");
+        GramStackOp { shards, scale }
+    }
+}
+
+impl SymOp for GramStackOp<'_> {
+    fn dim(&self) -> usize {
+        self.shards[0].cols()
+    }
+
+    fn apply_into(&self, v: &Mat, out: &mut Mat, ws: &mut Workspace) {
+        let (d, r) = (self.dim(), v.cols());
+        out.as_mut_slice().fill(0.0);
+        let mut acc = ws.take_mat(d, r);
+        for x in self.shards {
+            let mut xv = ws.take_mat(x.rows(), r);
+            matmul_into(x, v, &mut xv);
+            at_b_into(x, &xv, &mut acc);
+            out.axpy(1.0, &acc);
+            ws.put_mat(xv);
+        }
+        out.scale_in_place(1.0 / self.scale);
+        ws.put_mat(acc);
+    }
+}
+
+/// The truncated spectral-init matrix of quadratic sensing (§3.7) as an
+/// operator: `D_N = (1/n) Σᵢ T(yᵢ) aᵢ aᵢᵀ` with `T(y) = y·1{y ≤ τ}`,
+/// `τ = 3·mean(y)`. `apply_into` is `Aᵀ diag(w) (A v) / n` — two thin
+/// GEMMs and a row scaling; the weights are fixed at construction.
+pub struct TruncatedSensingOp<'a> {
+    a: &'a Mat,
+    w: Vec<f64>,
+}
+
+impl<'a> TruncatedSensingOp<'a> {
+    pub fn new(a: &'a Mat, y: &[f64]) -> Self {
+        assert_eq!(a.rows(), y.len());
+        let n = y.len().max(1);
+        let tau = 3.0 * y.iter().sum::<f64>() / n as f64;
+        // same truncation rule as the dense `sensing::spectral_matrix`
+        let w = y
+            .iter()
+            .map(|&yi| if yi <= tau { yi.max(0.0) } else { 0.0 })
+            .collect();
+        TruncatedSensingOp { a, w }
+    }
+}
+
+impl SymOp for TruncatedSensingOp<'_> {
+    fn dim(&self) -> usize {
+        self.a.cols()
+    }
+
+    fn apply_into(&self, v: &Mat, out: &mut Mat, ws: &mut Workspace) {
+        let n = self.a.rows();
+        let mut av = ws.take_mat(n, v.cols());
+        matmul_into(self.a, v, &mut av);
+        for (i, &wi) in self.w.iter().enumerate() {
+            for x in av.row_mut(i) {
+                *x *= wi;
+            }
+        }
+        at_b_into(self.a, &av, out);
+        out.scale_in_place(1.0 / n.max(1) as f64);
+        ws.put_mat(av);
+    }
+}
+
+/// Katz proximity `S = Σ_{t=1..terms} βᵗ Aᵗ` over a sparse undirected
+/// edge list, applied by Horner's rule: `S v = βA(v + βA(v + …))` —
+/// `terms` sparse products at `O(|E|·r)` each, instead of the
+/// `O(n³·terms)` dense power loop that capped graph sizes.
+pub struct KatzOp<'a> {
+    n: usize,
+    edges: &'a [(usize, usize)],
+    beta: f64,
+    terms: usize,
+}
+
+impl<'a> KatzOp<'a> {
+    pub fn new(n: usize, edges: &'a [(usize, usize)], beta: f64, terms: usize) -> Self {
+        assert!(terms >= 1, "Katz series needs at least one term");
+        KatzOp { n, edges, beta, terms }
+    }
+
+    /// `out = A u` through the edge list (both directions of each
+    /// undirected edge).
+    fn adj_mul(&self, u: &Mat, out: &mut Mat) {
+        out.as_mut_slice().fill(0.0);
+        let r = u.cols();
+        for &(a, b) in self.edges {
+            for j in 0..r {
+                out[(a, j)] += u[(b, j)];
+                out[(b, j)] += u[(a, j)];
+            }
+        }
+    }
+}
+
+impl SymOp for KatzOp<'_> {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn apply_into(&self, v: &Mat, out: &mut Mat, ws: &mut Workspace) {
+        let mut u = ws.take_mat(self.n, v.cols());
+        u.as_mut_slice().copy_from_slice(v.as_slice());
+        let mut au = ws.take_mat(self.n, v.cols());
+        // Horner: u_{k+1} = v + βA u_k, k = 1..terms-1, then S v = βA u
+        for _ in 1..self.terms {
+            self.adj_mul(&u, &mut au);
+            let (ub, vb, ab) = (u.as_mut_slice(), v.as_slice(), au.as_slice());
+            for i in 0..ub.len() {
+                ub[i] = vb[i] + self.beta * ab[i];
+            }
+        }
+        self.adj_mul(&u, out);
+        out.scale_in_place(self.beta);
+        ws.put_mat(u);
+        ws.put_mat(au);
+    }
+}
+
+/// Fan et al.'s mean spectral projector `P̄ = (1/m) Σᵢ Wᵢ Wᵢᵀ` as an
+/// operator over the m stacked panels: with `W = [W₁ … W_m]` (d, m·r),
+/// `P̄ v = W (Wᵀ v) / m` — two thin GEMMs against the stacked panel
+/// instead of a d×d projector accumulation plus a dense eigensolve.
+pub struct StackedProjectorOp {
+    w: Mat,
+    m: usize,
+}
+
+impl StackedProjectorOp {
+    pub fn new(panels: &[Mat]) -> Self {
+        assert!(!panels.is_empty());
+        let (d, r) = panels[0].shape();
+        let m = panels.len();
+        let mut w = Mat::zeros(d, m * r);
+        for (k, p) in panels.iter().enumerate() {
+            assert_eq!(p.shape(), (d, r), "panels must share a shape");
+            for i in 0..d {
+                for j in 0..r {
+                    w[(i, k * r + j)] = p[(i, j)];
+                }
+            }
+        }
+        StackedProjectorOp { w, m }
+    }
+}
+
+impl SymOp for StackedProjectorOp {
+    fn dim(&self) -> usize {
+        self.w.rows()
+    }
+
+    fn apply_into(&self, v: &Mat, out: &mut Mat, ws: &mut Workspace) {
+        let mut g = ws.take_mat(self.w.cols(), v.cols());
+        at_b_into(&self.w, v, &mut g);
+        matmul_into(&self.w, &g, out);
+        out.scale_in_place(1.0 / self.m as f64);
+        ws.put_mat(g);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{a_bt, matmul, syrk_scaled};
+    use crate::rng::Pcg64;
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f64, what: &str) {
+        let err = a.sub(b).max_abs();
+        assert!(err < tol, "{what}: max |Δ| = {err:.2e}");
+    }
+
+    #[test]
+    fn mat_and_dense_wrapper_are_one_gemm() {
+        let mut rng = Pcg64::seed(1);
+        let mut c = rng.normal_mat(12, 12);
+        c.symmetrize();
+        let v = rng.normal_mat(12, 3);
+        let want = matmul(&c, &v);
+        assert_close(&c.apply(&v), &want, 1e-14, "Mat as SymOp");
+        assert_close(&DenseSymOp::new(&c).apply(&v), &want, 1e-14, "DenseSymOp");
+        assert!(std::ptr::eq(c.as_dense().unwrap(), &c));
+        assert_eq!(DenseSymOp::new(&c).to_dense(), c);
+    }
+
+    #[test]
+    fn gram_op_matches_dense_gram() {
+        let mut rng = Pcg64::seed(2);
+        for &(n, d, r) in &[(5usize, 3usize, 2usize), (40, 17, 4), (9, 30, 5)] {
+            let x = rng.normal_mat(n, d);
+            let v = rng.normal_mat(d, r);
+            let dense = syrk_scaled(&x, n as f64);
+            assert_close(
+                &GramOp::new(&x).apply(&v),
+                &matmul(&dense, &v),
+                1e-11,
+                &format!("GramOp ({n},{d},{r})"),
+            );
+            assert!(GramOp::new(&x).as_dense().is_none());
+            assert_eq!(GramOp::new(&x).dim(), d);
+        }
+    }
+
+    #[test]
+    fn gram_stack_op_matches_pooled_covariance() {
+        let mut rng = Pcg64::seed(3);
+        let (m, n, d, r) = (4usize, 11usize, 8usize, 3usize);
+        let shards: Vec<Mat> = (0..m).map(|_| rng.normal_mat(n, d)).collect();
+        let mut pooled = Mat::zeros(d, d);
+        for x in &shards {
+            pooled.axpy(1.0 / m as f64, &syrk_scaled(x, n as f64));
+        }
+        let op = GramStackOp::new(&shards, (m * n) as f64);
+        let v = rng.normal_mat(d, r);
+        assert_close(&op.apply(&v), &matmul(&pooled, &v), 1e-11, "GramStackOp");
+        assert_close(&op.to_dense(), &pooled, 1e-11, "GramStackOp::to_dense");
+    }
+
+    #[test]
+    fn sensing_op_matches_spectral_matrix() {
+        let mut rng = Pcg64::seed(4);
+        let (n, d, r) = (60usize, 10usize, 3usize);
+        let a = rng.normal_mat(n, d);
+        let mut y: Vec<f64> = (0..n).map(|_| 1.0 + rng.next_f64()).collect();
+        y[7] = 1e5; // truncated outlier
+        y[9] = -0.5; // clamped negative
+        let dense = crate::sensing::spectral_matrix(&a, &y);
+        let v = rng.normal_mat(d, r);
+        assert_close(
+            &TruncatedSensingOp::new(&a, &y).apply(&v),
+            &matmul(&dense, &v),
+            1e-11,
+            "TruncatedSensingOp",
+        );
+    }
+
+    #[test]
+    fn katz_op_matches_dense_series() {
+        let mut rng = Pcg64::seed(5);
+        let g = crate::graph::sbm(30, 2, 0.3, 0.05, &mut rng);
+        for terms in [1usize, 2, 8, 24] {
+            let op = KatzOp::new(g.n, &g.edges, 0.03, terms);
+            let dense = crate::graph::katz_proximity(&g, 0.03, terms);
+            let v = rng.normal_mat(30, 4);
+            assert_close(
+                &op.apply(&v),
+                &matmul(&dense, &v),
+                1e-10,
+                &format!("KatzOp terms={terms}"),
+            );
+        }
+    }
+
+    #[test]
+    fn stacked_projector_op_matches_mean_projector() {
+        let mut rng = Pcg64::seed(6);
+        let (d, r, m) = (14usize, 3usize, 5usize);
+        let panels: Vec<Mat> = (0..m).map(|_| rng.haar_stiefel(d, r)).collect();
+        let mut p = Mat::zeros(d, d);
+        for w in &panels {
+            p.axpy(1.0 / m as f64, &a_bt(w, w));
+        }
+        let op = StackedProjectorOp::new(&panels);
+        let v = rng.normal_mat(d, r);
+        assert_close(&op.apply(&v), &matmul(&p, &v), 1e-12, "StackedProjectorOp");
+        assert_close(&op.to_dense(), &p, 1e-12, "StackedProjectorOp::to_dense");
+    }
+
+    /// `to_dense` of a matrix-free op reconstructs the dense matrix it
+    /// stands for (applied to the identity, symmetrized).
+    #[test]
+    fn to_dense_reconstructs_gram() {
+        let mut rng = Pcg64::seed(7);
+        let x = rng.normal_mat(20, 6);
+        assert_close(
+            &GramOp::new(&x).to_dense(),
+            &syrk_scaled(&x, 20.0),
+            1e-12,
+            "GramOp::to_dense",
+        );
+    }
+
+    /// Workspace reuse across applies is result-stable: a shared pool
+    /// returns bit-identical products to fresh allocations.
+    #[test]
+    fn workspace_reuse_is_bit_stable() {
+        let mut rng = Pcg64::seed(8);
+        let x = rng.normal_mat(25, 9);
+        let op = GramOp::new(&x);
+        let v = rng.normal_mat(9, 4);
+        let mut ws = Workspace::new();
+        let mut out1 = Mat::zeros(9, 4);
+        let mut out2 = Mat::zeros(9, 4);
+        op.apply_into(&v, &mut out1, &mut ws);
+        op.apply_into(&v, &mut out2, &mut ws);
+        assert_eq!(out1, out2);
+        assert_eq!(out1, op.apply(&v));
+    }
+}

@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use deigen::config::{Cli, RunOptions};
 use deigen::coordinator::{
-    run_cluster, AggregationRule, ClusterConfig, NetworkModel, NodeBehavior,
+    run_cluster, AggregationRule, ClusterConfig, NetworkModel, NodeBehavior, Shard,
     WireCodec, WorkerData,
 };
 use deigen::linalg::subspace::dist2;
@@ -95,8 +95,16 @@ fn cluster_demo(cli: &Cli) -> anyhow::Result<()> {
     let workers: Vec<WorkerData> = (0..m)
         .map(|i| {
             let x = cov.sample(n, &mut rng.split(i as u64));
+            // native engine runs matrix-free on the raw sample shard; the
+            // PJRT artifacts are shape-locked to a dense (d, d) input, so
+            // that path pre-forms the empirical covariance
+            let shard = if use_pjrt {
+                Shard::Dense(CovModel::empirical_cov(&x))
+            } else {
+                Shard::Samples(x)
+            };
             WorkerData {
-                observation: CovModel::empirical_cov(&x),
+                shard,
                 behavior: if i > 0 && i <= byz {
                     NodeBehavior::Byzantine
                 } else {

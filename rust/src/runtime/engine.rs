@@ -1,20 +1,36 @@
 //! The `LocalSolver` abstraction: what a worker node runs to produce its
-//! local leading-eigenbasis panel. Two implementations:
-//! - [`NativeEngine`] — from-scratch rust (any shape; the sweep engine);
-//! - [`super::PjrtEngine`] — AOT-compiled XLA executables (fixed shapes;
-//!   the production path proving the three-layer composition).
+//! local leading-eigenbasis panel. The solver consumes a [`SymOp`] — the
+//! matrix-free data plane — so a worker can own a raw sample shard, a
+//! sensing operator or a sparse graph polynomial instead of a dense d×d
+//! observation; `&Mat` coerces, so dense callers are unchanged. Engines:
+//! - [`NativeEngine`] — from-scratch rust (any shape; the sweep engine),
+//!   fully matrix-free on the iterative path;
+//! - [`DirectEigEngine`], [`ShiftInvertEngine`] — dense baselines that
+//!   materialize non-dense operators (they exist to price direct
+//!   factorizations, not to run the hot path);
+//! - [`super::PjrtEngine`] — AOT-compiled XLA executables (fixed dense
+//!   shapes; the production path proving the three-layer composition).
 
 use crate::linalg::eig::sym_eig_top_r;
 use crate::linalg::orthiter::orth_iter_adaptive;
+use crate::linalg::symop::SymOp;
 use crate::linalg::Mat;
 use crate::rng::Pcg64;
 
-/// A local eigensolver a worker can run on its observation `X̂ⁱ`.
+/// A local eigensolver a worker can run on its observation — exposed as a
+/// symmetric operator `X̂ⁱ` of dimension d.
 pub trait LocalSolver: Send + Sync {
-    /// Leading r-dimensional eigenbasis of the symmetric matrix `c`
-    /// (d, d). `rng` supplies the iteration's random initial panel so runs
-    /// are reproducible.
-    fn leading_subspace(&self, c: &Mat, r: usize, rng: &mut Pcg64) -> Mat;
+    /// Leading r-dimensional eigenbasis of the symmetric operator `op`.
+    /// `rng` supplies the iteration's random initial panel so runs are
+    /// reproducible. This is the data-plane entry point: implementations
+    /// should stay on `op.apply_into` and only materialize via
+    /// `op.to_dense()` when the algorithm is inherently dense.
+    fn leading_subspace_op(&self, op: &dyn SymOp, r: usize, rng: &mut Pcg64) -> Mat;
+
+    /// Dense convenience entry point (`&Mat` is just the dense operator).
+    fn leading_subspace(&self, c: &Mat, r: usize, rng: &mut Pcg64) -> Mat {
+        self.leading_subspace_op(c, r, rng)
+    }
 
     /// Human-readable engine name for logs/CSV metadata.
     fn name(&self) -> &'static str;
@@ -37,19 +53,23 @@ impl Default for NativeEngine {
 }
 
 impl LocalSolver for NativeEngine {
-    fn leading_subspace(&self, c: &Mat, r: usize, rng: &mut Pcg64) -> Mat {
-        // direct-solve dispatch: when r is a sizable fraction of d, the
-        // per-step QR of orthogonal iteration costs as much as the whole
-        // blocked eigensolve — hand the panel to the dedicated top-r
-        // spectral path (exact, no random start needed)
-        if 3 * r >= c.rows() {
-            return sym_eig_top_r(c, r).0;
+    fn leading_subspace_op(&self, op: &dyn SymOp, r: usize, rng: &mut Pcg64) -> Mat {
+        // direct-solve dispatch: when r is a sizable fraction of d AND the
+        // operator already has a dense matrix behind it, the per-step QR
+        // of orthogonal iteration costs as much as the whole blocked
+        // eigensolve — hand the panel to the dedicated top-r spectral
+        // path (exact, no random start needed). Matrix-free operators
+        // never take this branch: materializing would defeat them.
+        if let Some(c) = op.as_dense() {
+            if 3 * r >= c.rows() {
+                return sym_eig_top_r(c, r).0;
+            }
         }
-        let v0 = rng.normal_mat(c.rows(), r);
+        let v0 = rng.normal_mat(op.dim(), r);
         // adaptive stop: large-gap instances converge in ~10 steps, so the
         // movement check (an r x r Gram per step) pays for itself; hard cap
         // at `steps` for tiny-gap instances (§Perf: ~2x on fig2-like runs)
-        orth_iter_adaptive(c, &v0, 1e-12, self.steps).0
+        orth_iter_adaptive(op, &v0, 1e-12, self.steps).0
     }
 
     fn name(&self) -> &'static str {
@@ -63,12 +83,14 @@ impl LocalSolver for NativeEngine {
 /// benches use it to price iterative local solves against a direct
 /// factorization, and it is the right engine when the experiment asks
 /// for r close to d or for bit-reproducibility without an rng stream.
+/// Matrix-free operators are materialized first (`op.to_dense()`) — by
+/// design: this engine IS the dense baseline being priced.
 #[derive(Default)]
 pub struct DirectEigEngine;
 
 impl LocalSolver for DirectEigEngine {
-    fn leading_subspace(&self, c: &Mat, r: usize, _rng: &mut Pcg64) -> Mat {
-        sym_eig_top_r(c, r).0
+    fn leading_subspace_op(&self, op: &dyn SymOp, r: usize, _rng: &mut Pcg64) -> Mat {
+        sym_eig_top_r(&op.dense_view(), r).0
     }
 
     fn name(&self) -> &'static str {
@@ -79,7 +101,10 @@ impl LocalSolver for DirectEigEngine {
 /// Shift-and-invert solver (Garber et al. [23]-style): amplifies small
 /// eigengaps with an SPD solve per step. The multi-round distributed
 /// baselines ([11, 24]) build on this local solver; we expose it so the
-/// ablation benches can compare local-solve costs.
+/// ablation benches can compare local-solve costs. The Cholesky
+/// factorization of `σI - C` needs the dense matrix, so non-dense
+/// operators are materialized (this engine is an ablation baseline, not
+/// a data-plane path).
 pub struct ShiftInvertEngine {
     /// Inverse-iteration steps (5–8 suffice even for tiny gaps).
     pub steps: usize,
@@ -92,13 +117,14 @@ impl Default for ShiftInvertEngine {
 }
 
 impl LocalSolver for ShiftInvertEngine {
-    fn leading_subspace(&self, c: &Mat, r: usize, rng: &mut Pcg64) -> Mat {
-        let v0 = rng.normal_mat(c.rows(), r);
-        crate::linalg::shiftinvert::shift_invert_iter(c, &v0, self.steps)
+    fn leading_subspace_op(&self, op: &dyn SymOp, r: usize, rng: &mut Pcg64) -> Mat {
+        let v0 = rng.normal_mat(op.dim(), r);
+        let c = op.dense_view();
+        crate::linalg::shiftinvert::shift_invert_iter(&c, &v0, self.steps)
             // the adaptive shift backs off until SPD; None only for
             // pathological (e.g. all-zero) inputs — fall back to the plain
             // iteration rather than poisoning the distributed run
-            .unwrap_or_else(|| orth_iter_adaptive(c, &v0, 1e-12, 300).0)
+            .unwrap_or_else(|| orth_iter_adaptive(&*c, &v0, 1e-12, 300).0)
     }
 
     fn name(&self) -> &'static str {
@@ -109,8 +135,9 @@ impl LocalSolver for ShiftInvertEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::gemm::matmul;
+    use crate::linalg::gemm::{matmul, syrk_scaled};
     use crate::linalg::subspace::dist2;
+    use crate::linalg::symop::GramOp;
 
     #[test]
     fn shift_invert_engine_agrees_with_native() {
@@ -168,5 +195,29 @@ mod tests {
         );
         let v = NativeEngine::default().leading_subspace(&c, 4, &mut rng);
         assert!(dist2(&v, &q.col_block(0, 4)) < 1e-6);
+    }
+
+    /// The operator entry point on a Gram shard agrees with the dense
+    /// entry point on the materialized covariance; the dense baselines
+    /// transparently materialize the same operator.
+    #[test]
+    fn engines_consume_gram_operators() {
+        let mut rng = Pcg64::seed(9);
+        let (n, d, r) = (400usize, 20usize, 2usize);
+        let x = rng.normal_mat(n, d);
+        let c = syrk_scaled(&x, n as f64);
+        let mut r1 = Pcg64::seed(77);
+        let mut r2 = Pcg64::seed(77);
+        let native = NativeEngine::default();
+        let via_op = native.leading_subspace_op(&GramOp::new(&x), r, &mut r1);
+        let via_dense = native.leading_subspace(&c, r, &mut r2);
+        assert!(
+            dist2(&via_op, &via_dense) < 1e-6,
+            "op vs dense plane: {}",
+            dist2(&via_op, &via_dense)
+        );
+        // DirectEigEngine materializes the operator and must agree too
+        let direct = DirectEigEngine.leading_subspace_op(&GramOp::new(&x), r, &mut r1);
+        assert!(dist2(&direct, &via_dense) < 1e-6);
     }
 }

@@ -262,12 +262,15 @@ impl SharedPjrtSolver {
 }
 
 impl LocalSolver for SharedPjrtSolver {
-    fn leading_subspace(&self, c: &Mat, r: usize, rng: &mut Pcg64) -> Mat {
-        let v0 = rng.normal_mat(c.rows(), r);
+    fn leading_subspace_op(&self, op: &dyn crate::linalg::SymOp, r: usize, rng: &mut Pcg64) -> Mat {
+        let v0 = rng.normal_mat(op.dim(), r);
+        // the AOT artifact is shape-locked to a dense (d, d) input, so a
+        // matrix-free operator must be materialized at this boundary; the
+        // dense plane passes through untouched
         self.inner
             .lock()
             .unwrap()
-            .local_eig_cov(c, &v0)
+            .local_eig_cov(&op.dense_view(), &v0)
             .expect("PJRT local_eig_cov failed (is the (d, r) shape in the manifest?)")
             .0
     }

@@ -3,6 +3,8 @@
 //! `D_N = (1/N) sum_i T(y_i) a_i a_i^T`, and the distributed spectral
 //! initialization that Algorithm 2 refines.
 
+use crate::linalg::orthiter::orth_iter_adaptive;
+use crate::linalg::symop::TruncatedSensingOp;
 use crate::linalg::{gemm::syrk_scaled, Mat};
 use crate::rng::Pcg64;
 
@@ -61,9 +63,12 @@ impl SensingInstance {
     }
 }
 
-/// Truncated spectral-init matrix `D_N = (1/N) sum T(y_i) a_i a_i^T` with
-/// `T(y) = y * 1{y <= tau}`; `tau = 3 * mean(y)` (the standard truncation
-/// that tames heavy-tailed `y a a^T` terms — cf. Chen & Candès 2015).
+/// Dense truncated spectral-init matrix `D_N = (1/N) sum T(y_i) a_i a_i^T`
+/// with `T(y) = y * 1{y <= tau}`; `tau = 3 * mean(y)` (the standard
+/// truncation that tames heavy-tailed `y a a^T` terms — cf. Chen & Candès
+/// 2015). The hot path never builds this: [`local_init`] solves against
+/// [`TruncatedSensingOp`] directly; this materialization serves the
+/// pooled-central baselines and the operator's pin tests.
 pub fn spectral_matrix(a: &Mat, y: &[f64]) -> Mat {
     assert_eq!(a.rows(), y.len());
     let n = a.rows();
@@ -81,10 +86,18 @@ pub fn spectral_matrix(a: &Mat, y: &[f64]) -> Mat {
     syrk_scaled(&scaled, n as f64)
 }
 
-/// Local spectral initialization: top-r eigenspace of the local `D` matrix.
+/// Local spectral initialization: top-r eigenspace of the local `D`
+/// operator, solved matrix-free — `D_N` is applied as
+/// `Aᵀ diag(T(y)) (A v) / n` (two thin GEMMs per step), never formed.
+/// `D_N` is PSD, so the top-|λ| subspace orthogonal iteration finds is
+/// the top-eigenvalue subspace the dense route returned. The start panel
+/// comes from a fixed-seed stream, keeping the function deterministic in
+/// its inputs like the dense eigensolve it replaces.
 pub fn local_init(a: &Mat, y: &[f64], r: usize) -> Mat {
-    let d = spectral_matrix(a, y);
-    crate::linalg::eig::top_eigvecs(&d, r).0
+    let op = TruncatedSensingOp::new(a, y);
+    let mut rng = Pcg64::seed(0x5e25_1217);
+    let v0 = rng.normal_mat(a.cols(), r);
+    orth_iter_adaptive(&op, &v0, 1e-12, 300).0
 }
 
 #[cfg(test)]
@@ -133,6 +146,20 @@ mod tests {
         let resid = g.sub(&crate::linalg::gemm::matmul(&inst.x_sharp, &xtg));
         let q = crate::linalg::qr::orthonormalize(&resid);
         assert!((inst.leakage(&q) - 1.0).abs() < 1e-8);
+    }
+
+    /// The matrix-free init must land on the same subspace as the dense
+    /// route it replaced (top-r eigenspace of the materialized `D_N`).
+    #[test]
+    fn operator_init_matches_dense_spectral_route() {
+        let mut rng = Pcg64::seed(6);
+        let inst = SensingInstance::draw(24, 3, 0.0, &mut rng);
+        let (a, y) = inst.measure(30 * 24, &mut rng);
+        let x_free = local_init(&a, &y, 3);
+        let dense = spectral_matrix(&a, &y);
+        let x_dense = crate::linalg::eig::top_eigvecs(&dense, 3).0;
+        let gap = dist2(&x_free, &x_dense);
+        assert!(gap < 1e-5, "operator vs dense init subspace gap {gap:.2e}");
     }
 
     #[test]

@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use deigen::align;
 use deigen::coordinator::{
-    run_cluster, AggregationRule, ClusterConfig, NetworkModel, NodeBehavior,
+    run_cluster, AggregationRule, ClusterConfig, NetworkModel, NodeBehavior, Shard,
     WireCodec, WorkerData,
 };
 use deigen::linalg::subspace::dist2;
@@ -28,10 +28,27 @@ fn pca_workers(
     let model = SpectrumModel::M1 { r, lambda_lo: 0.5, lambda_hi: 1.0, delta: 0.2 };
     let cov = CovModel::draw(&model, d, &mut rng);
     let workers = (0..m)
-        .map(|i| WorkerData {
-            observation: CovModel::empirical_cov(&cov.sample(n, &mut rng.split(i as u64))),
-            behavior: NodeBehavior::Honest,
+        .map(|i| {
+            WorkerData::dense(CovModel::empirical_cov(&cov.sample(n, &mut rng.split(i as u64))))
         })
+        .collect();
+    (cov.principal_subspace(), workers)
+}
+
+/// Like [`pca_workers`] but the workers keep their raw sample shards —
+/// the matrix-free Gram data plane.
+fn pca_sample_workers(
+    seed: u64,
+    d: usize,
+    r: usize,
+    m: usize,
+    n: usize,
+) -> (Mat, Vec<WorkerData>) {
+    let mut rng = Pcg64::seed(seed);
+    let model = SpectrumModel::M1 { r, lambda_lo: 0.5, lambda_hi: 1.0, delta: 0.2 };
+    let cov = CovModel::draw(&model, d, &mut rng);
+    let workers = (0..m)
+        .map(|i| WorkerData::samples(cov.sample(n, &mut rng.split(i as u64))))
         .collect();
     (cov.principal_subspace(), workers)
 }
@@ -50,21 +67,60 @@ fn cluster_single_round_equals_library_algorithm1() {
     assert!((dist2(&res.estimate, &truth) - oracle_dist).abs() < tol::ITER);
 }
 
+/// Clone the dense observations back out of a worker set (test helper for
+/// same-data reruns).
+fn dense_obs(workers: &[WorkerData]) -> Vec<Mat> {
+    workers
+        .iter()
+        .map(|w| match &w.shard {
+            Shard::Dense(c) => c.clone(),
+            Shard::Samples(x) => x.clone(),
+        })
+        .collect()
+}
+
 #[test]
 fn refinement_improves_or_matches_single_round() {
     let (truth, workers) = pca_workers(2, 40, 4, 12, 120);
-    let obs: Vec<Mat> = workers.iter().map(|w| w.observation.clone()).collect();
+    let obs: Vec<Mat> = dense_obs(&workers);
     let cfg0 = ClusterConfig { r: 4, seed: 5, ..Default::default() };
     let r0 = run_cluster(workers, Arc::new(NativeEngine::default()), &cfg0);
-    let workers2: Vec<WorkerData> = obs
-        .into_iter()
-        .map(|o| WorkerData { observation: o, behavior: NodeBehavior::Honest })
-        .collect();
+    let workers2: Vec<WorkerData> = obs.into_iter().map(WorkerData::dense).collect();
     let cfg2 = ClusterConfig { r: 4, refine_rounds: 3, seed: 5, ..Default::default() };
     let r2 = run_cluster(workers2, Arc::new(NativeEngine::default()), &cfg2);
     let d0 = dist2(&r0.estimate, &truth);
     let d2 = dist2(&r2.estimate, &truth);
     assert!(d2 <= d0 + 0.03, "refined {d2} vs single {d0}");
+}
+
+/// The sample-sharded data plane end to end: workers own raw (n, d)
+/// shards, local solves run matrix-free through the Gram operator, and
+/// the single-round estimate matches both the truth and a dense-plane run
+/// on the materialized covariances of the same samples.
+#[test]
+fn sample_sharded_cluster_matches_dense_plane_and_truth() {
+    let (truth, sharded) = pca_sample_workers(12, 40, 4, 10, 300);
+    let dense: Vec<WorkerData> = sharded
+        .iter()
+        .map(|w| match &w.shard {
+            Shard::Samples(x) => {
+                WorkerData::dense(CovModel::empirical_cov(x))
+            }
+            Shard::Dense(_) => unreachable!("sample workers requested"),
+        })
+        .collect();
+    let cfg = ClusterConfig { r: 4, seed: 3, ..Default::default() };
+    let res_s = run_cluster(sharded, Arc::new(NativeEngine::default()), &cfg);
+    let res_d = run_cluster(dense, Arc::new(NativeEngine::default()), &cfg);
+    check::assert_orthonormal(&res_s.estimate, tol::FACTOR, "sharded estimate");
+    assert!(dist2(&res_s.estimate, &truth) < 0.15);
+    assert!(
+        dist2(&res_s.estimate, &res_d.estimate) < tol::ITER,
+        "data planes disagree: {}",
+        dist2(&res_s.estimate, &res_d.estimate)
+    );
+    // same protocol shape and wire volume: panels, not shards, cross the wire
+    assert_eq!(res_s.comm, res_d.comm);
 }
 
 #[test]
@@ -120,14 +176,15 @@ fn byzantine_majority_attack_defeats_mean_but_not_median_reference() {
     }
     let obs: Vec<(Mat, NodeBehavior)> = workers
         .iter()
-        .map(|w| (w.observation.clone(), w.behavior))
+        .zip(dense_obs(&workers))
+        .map(|(w, o)| (o, w.behavior))
         .collect();
     let cfg_mean = ClusterConfig { r: 3, seed: 2, ..Default::default() };
     let res_mean = run_cluster(workers, Arc::new(NativeEngine::default()), &cfg_mean);
 
     let workers2: Vec<WorkerData> = obs
         .into_iter()
-        .map(|(o, b)| WorkerData { observation: o, behavior: b })
+        .map(|(o, b)| WorkerData { shard: Shard::Dense(o), behavior: b })
         .collect();
     let cfg_med = ClusterConfig {
         r: 3,
@@ -174,13 +231,10 @@ fn int8_wire_codec_cuts_upload_8x_within_stat_tolerance() {
     // single-round estimate's sin-theta to ground truth stays within
     // tol::STAT of the uncompressed estimate's
     let (truth, workers) = pca_workers(8, 48, 4, 10, 300);
-    let obs: Vec<Mat> = workers.iter().map(|w| w.observation.clone()).collect();
+    let obs: Vec<Mat> = dense_obs(&workers);
     let cfg64 = ClusterConfig { r: 4, seed: 21, ..Default::default() };
     let r64 = run_cluster(workers, Arc::new(NativeEngine::default()), &cfg64);
-    let workers2: Vec<WorkerData> = obs
-        .into_iter()
-        .map(|o| WorkerData { observation: o, behavior: NodeBehavior::Honest })
-        .collect();
+    let workers2: Vec<WorkerData> = obs.into_iter().map(WorkerData::dense).collect();
     let cfg8 = ClusterConfig { r: 4, codec: WireCodec::Int8, seed: 21, ..Default::default() };
     let r8 = run_cluster(workers2, Arc::new(NativeEngine::default()), &cfg8);
 
@@ -208,15 +262,12 @@ fn codec_sweep_preserves_single_round_accuracy_ordering() {
     // every codec keeps the single-round estimate orthonormal and close
     // to the f64 estimate
     let (truth, workers) = pca_workers(9, 40, 4, 8, 300);
-    let obs: Vec<Mat> = workers.iter().map(|w| w.observation.clone()).collect();
+    let obs: Vec<Mat> = dense_obs(&workers);
     let cfg = ClusterConfig { r: 4, seed: 33, ..Default::default() };
     let base = run_cluster(workers, Arc::new(NativeEngine::default()), &cfg);
     let d_base = dist2(&base.estimate, &truth);
     for codec in [WireCodec::F16, WireCodec::Int8, WireCodec::FdSketch { l: 6 }] {
-        let ws: Vec<WorkerData> = obs
-            .iter()
-            .map(|o| WorkerData { observation: o.clone(), behavior: NodeBehavior::Honest })
-            .collect();
+        let ws: Vec<WorkerData> = obs.iter().map(|o| WorkerData::dense(o.clone())).collect();
         let cfg = ClusterConfig { r: 4, codec, seed: 33, ..Default::default() };
         let res = run_cluster(ws, Arc::new(NativeEngine::default()), &cfg);
         check::assert_orthonormal(&res.estimate, 1e-7, &codec.name());
@@ -236,10 +287,7 @@ fn sensing_pipeline_through_coordinator() {
         .map(|i| {
             let mut node_rng = rng.split(i as u64);
             let (a, y) = inst.measure(n, &mut node_rng);
-            WorkerData {
-                observation: deigen::sensing::spectral_matrix(&a, &y),
-                behavior: NodeBehavior::Honest,
-            }
+            WorkerData::dense(deigen::sensing::spectral_matrix(&a, &y))
         })
         .collect();
     let cfg = ClusterConfig { r, refine_rounds: 5, seed: 9, ..Default::default() };

@@ -8,7 +8,7 @@
 use std::sync::Arc;
 
 use deigen::align;
-use deigen::coordinator::{run_cluster, ClusterConfig, NodeBehavior, WorkerData};
+use deigen::coordinator::{run_cluster, ClusterConfig, WorkerData};
 use deigen::linalg::gemm::{matmul, syrk_scaled};
 use deigen::linalg::qr::thin_qr;
 use deigen::linalg::Mat;
@@ -243,10 +243,8 @@ fn algorithm1_matches_centralized_rate_on_spiked_cluster() {
     let err_central = check::sin_theta(&central, &truth);
 
     // the distributed protocol, end to end through the threaded cluster
-    let workers: Vec<WorkerData> = observations
-        .iter()
-        .map(|c| WorkerData { observation: c.clone(), behavior: NodeBehavior::Honest })
-        .collect();
+    let workers: Vec<WorkerData> =
+        observations.iter().map(|c| WorkerData::dense(c.clone())).collect();
     let cfg = ClusterConfig { r, seed: 779, ..Default::default() };
     let res = run_cluster(workers, Arc::new(NativeEngine::default()), &cfg);
     check::assert_orthonormal(&res.estimate, tol::FACTOR, "Alg1 estimate");
@@ -296,6 +294,145 @@ fn naive_average_stalls_under_rotation_ambiguity_oracle_checked() {
     );
 }
 
+// ---------------------------------------------------------------------
+// operator data plane: every SymOp pinned to its dense materialization
+// ---------------------------------------------------------------------
+
+/// Every matrix-free operator applied to a random panel must equal the
+/// explicit `Mat` product of its dense materialization, over adversarial
+/// shapes (degenerate n=1/d=1, tall, wide, and a size whose apply-GEMM
+/// crosses the parallel threshold).
+#[test]
+fn symop_impls_match_dense_materialization_over_adversarial_shapes() {
+    use deigen::linalg::symop::{GramOp, GramStackOp, StackedProjectorOp, SymOp, TruncatedSensingOp};
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (3, 2, 2),
+        (17, 5, 3),
+        (7, 33, 4),
+        (160, 96, 8),   // apply GEMM = 160*96*8 crosses DIRECT, syrk big
+        (700, 64, 48),  // n*d*r ≈ 2.1M madds: straddles PAR_THRESHOLD
+    ];
+    for (si, &(n, d, r)) in shapes.iter().enumerate() {
+        let mut rng = Pcg64::seed(0x0b5 + si as u64);
+        let x = rng.normal_mat(n, d);
+        let v = rng.normal_mat(d, r);
+        let tol_here = tol::dim_scaled(tol::KERNEL, n.max(d));
+
+        // GramOp vs X^T X / n
+        let dense = syrk_scaled(&x, n as f64);
+        check::assert_close(
+            &GramOp::new(&x).apply(&v),
+            &matmul(&dense, &v),
+            tol_here,
+            &format!("GramOp ({n},{d},{r})"),
+        );
+
+        // GramStackOp vs the pooled covariance of 3 shards
+        let shards: Vec<Mat> = (0..3).map(|_| rng.normal_mat(n, d)).collect();
+        let mut pooled = Mat::zeros(d, d);
+        for s in &shards {
+            pooled.axpy(1.0 / 3.0, &syrk_scaled(s, n as f64));
+        }
+        check::assert_close(
+            &GramStackOp::new(&shards, (3 * n) as f64).apply(&v),
+            &matmul(&pooled, &v),
+            tol_here,
+            &format!("GramStackOp ({n},{d},{r})"),
+        );
+
+        // TruncatedSensingOp vs the dense spectral matrix (with an
+        // outlier above the truncation threshold and a negative y)
+        let mut y: Vec<f64> = (0..n).map(|_| 0.5 + rng.next_f64()).collect();
+        if n > 2 {
+            y[0] = 1e6;
+            y[1] = -2.0;
+        }
+        let dn = deigen::sensing::spectral_matrix(&x, &y);
+        check::assert_close(
+            &TruncatedSensingOp::new(&x, &y).apply(&v),
+            &matmul(&dn, &v),
+            tol_here,
+            &format!("TruncatedSensingOp ({n},{d},{r})"),
+        );
+
+        // StackedProjectorOp vs the accumulated mean projector
+        let panels: Vec<Mat> = (0..4).map(|_| rng.haar_stiefel(d, r.min(d))).collect();
+        let mut proj = Mat::zeros(d, d);
+        for w in &panels {
+            proj.axpy(1.0 / 4.0, &deigen::linalg::gemm::a_bt(w, w));
+        }
+        check::assert_close(
+            &StackedProjectorOp::new(&panels).apply(&v),
+            &matmul(&proj, &v),
+            tol_here,
+            &format!("StackedProjectorOp ({n},{d},{r})"),
+        );
+    }
+}
+
+/// KatzOp (sparse Horner) vs the dense truncated power series, including
+/// a bipartite graph whose spectrum is symmetric around zero.
+#[test]
+fn katz_op_matches_dense_series_on_adversarial_graphs() {
+    use deigen::linalg::symop::{KatzOp, SymOp};
+    let mut rng = Pcg64::seed(0xa72);
+    let mut graphs = vec![
+        deigen::graph::sbm(40, 2, 0.3, 0.05, &mut rng),
+        deigen::graph::sbm(25, 1, 0.15, 0.15, &mut rng),
+    ];
+    // complete bipartite block: adversarially indefinite Katz spectrum
+    let mut edges = Vec::new();
+    for u in 0..6usize {
+        for v in 0..6usize {
+            edges.push((u, 6 + v));
+        }
+    }
+    graphs.push(deigen::graph::Graph {
+        n: 12,
+        edges,
+        labels: (0..12).map(|i| usize::from(i >= 6)).collect(),
+    });
+    for (gi, g) in graphs.iter().enumerate() {
+        let dense = deigen::graph::katz_proximity(g, 0.04, 16);
+        let v = rng.normal_mat(g.n, 5);
+        let got = KatzOp::new(g.n, &g.edges, 0.04, 16).apply(&v);
+        check::assert_close(
+            &got,
+            &matmul(&dense, &v),
+            tol::dim_scaled(tol::KERNEL, g.n),
+            &format!("KatzOp graph {gi} (n={})", g.n),
+        );
+    }
+}
+
+/// `orth_iter` over a Gram operator agrees with `orth_iter` over the
+/// materialized dense plane: the operators share a spectrum, so from the
+/// same start panel both land on the same leading subspace with matching
+/// Ritz values.
+#[test]
+fn orth_iter_gram_vs_dense_plane_agreement() {
+    use deigen::linalg::orthiter::orth_iter;
+    use deigen::linalg::symop::{DenseSymOp, GramOp};
+    for seed in 0..3u64 {
+        let mut rng = Pcg64::seed(0x09a3 + seed);
+        let (n, d, r) = (250usize, 28usize, 3usize);
+        let x = rng.normal_mat(n, d);
+        let c = syrk_scaled(&x, n as f64);
+        let v0 = rng.normal_mat(d, r);
+        let (vg, rg) = orth_iter(&GramOp::new(&x), &v0, 150);
+        let (vd, rd) = orth_iter(&DenseSymOp::new(&c), &v0, 150);
+        let gap = check::sin_theta(&vg, &vd);
+        assert!(gap < tol::ITER, "seed {seed}: subspace gap {gap:.2e}");
+        for (a, b) in rg.iter().zip(&rd) {
+            assert!((a - b).abs() < tol::ITER, "seed {seed}: ritz {a} vs {b}");
+        }
+        // and both live in the oracle's leading subspace
+        let otop = oracle::top_eigvecs(&c, r).0;
+        assert!(check::sin_theta(&vg, &otop) < 10.0 * tol::ITER, "seed {seed}: oracle gap");
+    }
+}
+
 /// Determinism: the same seeds produce bit-identical estimates across two
 /// full runs (threaded protocol included).
 #[test]
@@ -306,10 +443,7 @@ fn end_to_end_deterministic_across_runs() {
         let workers: Vec<WorkerData> = (0..6)
             .map(|i| {
                 let x = cov.sample(120, &mut rng.split(i as u64));
-                WorkerData {
-                    observation: syrk_scaled(&x, 120.0),
-                    behavior: NodeBehavior::Honest,
-                }
+                WorkerData::dense(syrk_scaled(&x, 120.0))
             })
             .collect();
         let cfg = ClusterConfig { r: 2, seed: 1001, ..Default::default() };
