@@ -1,0 +1,78 @@
+//! Round-latency bench for the cluster fault plane (DESIGN.md S14): the
+//! in-process quorum engine vs the loopback-TCP transport on identical
+//! worker data and a clean fault plan, at one round and at three rounds
+//! (one local + two refinement). The gap is the real cost of sockets,
+//! frames, and thread handoff — the protocol work is byte-identical on
+//! both paths. Run: `cargo bench --bench bench_net` (add `-- --quick` to
+//! smoke, `-- --json BENCH_net.json` for machine-readable output; under
+//! a blanket `cargo bench`, `--json-net <path>` takes precedence so this
+//! bench does not clobber another target's artifact). TCP rows are
+//! skipped with a note where loopback sockets are unavailable.
+
+use std::sync::Arc;
+
+use deigen::benchutil::{bench, header, quick_mode, report, JsonSink};
+use deigen::coordinator::{
+    run_cluster_faulty, run_cluster_tcp, ClusterConfig, FaultRunConfig, WorkerData,
+};
+use deigen::linalg::Mat;
+use deigen::rng::Pcg64;
+use deigen::runtime::NativeEngine;
+use deigen::synth::{CovModel, SpectrumModel};
+
+fn shards(seed: u64, d: usize, r: usize, m: usize, n: usize) -> Vec<Mat> {
+    let mut rng = Pcg64::seed(seed);
+    let model = SpectrumModel::M1 { r, lambda_lo: 0.5, lambda_hi: 1.0, delta: 0.2 };
+    let cov = CovModel::draw(&model, d, &mut rng);
+    (0..m)
+        .map(|i| CovModel::empirical_cov(&cov.sample(n, &mut rng.split(i as u64))))
+        .collect()
+}
+
+fn main() {
+    header("net: round latency, in-process engine vs loopback TCP");
+    let args: Vec<String> = std::env::args().collect();
+    let json_path = ["--json-net", "--json"].iter().find_map(|flag| {
+        args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1)).cloned()
+    });
+    let mut sink = JsonSink::with_path(json_path);
+
+    let (d, r, m, n, seed) = if quick_mode() {
+        (24usize, 3usize, 4usize, 150usize, 7u64)
+    } else {
+        (48, 3, 8, 300, 7)
+    };
+    let obs = shards(seed, d, r, m, n);
+    let mk = || -> Vec<WorkerData> { obs.iter().map(|o| WorkerData::dense(o.clone())).collect() };
+    let solver = Arc::new(NativeEngine::default());
+    let fc = FaultRunConfig::full(m);
+    let tcp_ok = std::net::TcpListener::bind("127.0.0.1:0").is_ok();
+    if !tcp_ok {
+        println!("  (loopback sockets unavailable; TCP rows skipped)");
+    }
+
+    for &(refine, rounds) in &[(0usize, 1usize), (2, 3)] {
+        let cfg = ClusterConfig { r, refine_rounds: refine, seed, ..Default::default() };
+        let local = bench(&format!("local m={m} d={d} rounds={rounds}"), 1, 7, || {
+            let res = run_cluster_faulty(mk(), solver.clone(), &cfg, &fc);
+            std::hint::black_box(res.estimate);
+        });
+        report(&local);
+        sink.record(&local, None);
+        if tcp_ok {
+            let tcp = bench(&format!("tcp   m={m} d={d} rounds={rounds}"), 1, 5, || {
+                let res = run_cluster_tcp(mk(), solver.clone(), &cfg, &fc)
+                    .expect("loopback TCP run failed");
+                std::hint::black_box(res.estimate);
+            });
+            report(&tcp);
+            sink.record(&tcp, None);
+            println!(
+                "      -> tcp/local: {:.2}x  ({:+.3}ms per run)",
+                tcp.median_s / local.median_s.max(1e-12),
+                (tcp.median_s - local.median_s) * 1e3
+            );
+        }
+    }
+    sink.finish();
+}

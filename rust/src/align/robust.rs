@@ -154,6 +154,59 @@ mod tests {
         assert!(robust < plain, "robust {robust} vs plain {plain}");
     }
 
+    /// The quorum engine can shrink the live set between the reference
+    /// pick and the aggregation (stragglers dropped mid-round). The
+    /// robust machinery must stay correct at every prefix of the live
+    /// set, across even→odd count transitions.
+    #[test]
+    fn reference_stays_honest_as_live_set_shrinks_mid_round() {
+        let mut rng = Pcg64::seed(5);
+        let (truth, locals) = honest_and_byzantine(&mut rng, 30, 3, 7, 1, 0.04);
+        // drop stragglers from the back one at a time: live counts
+        // 8, 7, 6, 5, 4, 3 alternate even/odd median paths; the single
+        // byzantine panel sits at index 7 and disappears first
+        for live in (3..=locals.len()).rev() {
+            let subset = &locals[..live];
+            let idx = robust_reference_index(subset);
+            assert!(idx < 7, "live={live}: picked byzantine reference {idx}");
+            let est = coordinate_median_fix(subset);
+            let dr = dist2(&est, &truth);
+            assert!(dr < 0.25, "live={live}: robust dist {dr}");
+        }
+    }
+
+    #[test]
+    fn even_to_odd_transition_keeps_estimates_stable() {
+        // dropping one honest straggler from an even honest set must not
+        // move the robust estimate by more than the noise scale
+        let mut rng = Pcg64::seed(6);
+        let (truth, locals) = honest_and_byzantine(&mut rng, 24, 2, 6, 0, 0.03);
+        let even = coordinate_median_fix(&locals);
+        let odd = coordinate_median_fix(&locals[..5]);
+        let de = dist2(&even, &truth);
+        let do_ = dist2(&odd, &truth);
+        assert!(de < 0.2 && do_ < 0.2, "even {de} odd {do_}");
+        assert!(dist2(&even, &odd) < 0.2, "shrink moved estimate {}", dist2(&even, &odd));
+    }
+
+    #[test]
+    fn two_node_edge_is_well_defined() {
+        // m=2: each node sees exactly one distance, so both score the
+        // same median and the tie breaks to index 0; the coordinate
+        // median degenerates to the two-point average, which must still
+        // orthonormalize to a sensible estimate
+        let mut rng = Pcg64::seed(7);
+        let (truth, locals) = honest_and_byzantine(&mut rng, 20, 2, 2, 0, 0.03);
+        assert_eq!(robust_reference_index(&locals), 0);
+        let est = coordinate_median_fix(&locals);
+        let dr = dist2(&est, &truth);
+        assert!(dr < 0.2, "m=2 robust dist {dr}");
+        // and the m=1 degenerate case returns (the span of) the panel
+        let solo = coordinate_median_fix(&locals[..1]);
+        assert_eq!(robust_reference_index(&locals[..1]), 0);
+        assert!(dist2(&solo, &locals[0]) < 1e-10);
+    }
+
     #[test]
     fn no_byzantine_matches_mean_closely() {
         let mut rng = Pcg64::seed(4);

@@ -3,11 +3,11 @@
 //! Each worker owns its local observation `X̂ⁱ`, runs a [`LocalSolver`]
 //! (native or PJRT) to produce its leading-eigenbasis panel, and speaks the
 //! [`Message`] protocol with the leader. Worker compute fans out over the
-//! persistent `linalg::pool` — the runtime spawns no threads of its own
-//! (the old thread-per-worker actors paid an OS spawn per worker per run),
-//! and each worker's GEMMs run inline inside its pool job, which is the
-//! right parallelism granularity: across workers, not within one solve.
-//! Two protocol modes:
+//! persistent `linalg::pool` — the in-process runtime spawns no threads of
+//! its own (the old thread-per-worker actors paid an OS spawn per worker
+//! per run), and each worker's GEMMs run inline inside its pool job, which
+//! is the right parallelism granularity: across workers, not within one
+//! solve. Two protocol modes:
 //!
 //! - **single round** (`refine_rounds == 0`): the paper's headline
 //!   Algorithm 1 — one worker→leader panel upload, all alignment on the
@@ -23,8 +23,30 @@
 //! encoded size (control messages are metered separately); Byzantine
 //! workers (the §4 threat model) upload arbitrary orthonormal panels.
 //! Per-worker rng streams make runs bit-reproducible for any pool size.
+//!
+//! # Fault plane (DESIGN.md S14)
+//!
+//! [`run_cluster_faulty`] threads a seeded [`FaultPlan`] through every
+//! link: each message is metered through its deterministic
+//! [`FaultPlan::link_schedule`] (retries, duplicates, timeouts), rounds
+//! proceed once a configurable **quorum** of estimates is in, stragglers
+//! inside a grace/straggler window are late-merged via the alignment
+//! machinery, and nodes may crash or join mid-computation. The classical
+//! [`run_cluster`] is the fault-free special case and delegates.
+//!
+//! [`run_cluster_tcp`] runs the identical protocol over loopback TCP
+//! (length-prefixed frames, see `transport`), with real worker threads —
+//! the one documented exception to the pool-only threading rule; the
+//! pool's bit-determinism guarantee makes each worker's solve identical
+//! on a dedicated thread. Both engines drive quorum decisions from the
+//! *plan's* virtual arrivals (never wall-clock), meter through the shared
+//! [`meter_schedule`] oracle, and record the same canonical
+//! [`Transcript`], so a schedule replays bit-identically in-process and
+//! over real sockets.
 
-use std::sync::Arc;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::align;
 use crate::linalg::symop::{GramOp, SymOp};
@@ -32,8 +54,10 @@ use crate::linalg::{pool, Mat, Workspace};
 use crate::rng::Pcg64;
 use crate::runtime::LocalSolver;
 
+use super::fault::{meter_schedule, FaultPlan, LinkDir, Transcript};
 use super::netsim::{CommSnapshot, CommStats, NetworkModel};
 use super::protocol::{AggregationRule, Message, WireCodec};
+use super::transport::{write_frame, FrameReader};
 
 /// What a worker node actually owns — the data plane behind its
 /// observation operator `X̂ⁱ`.
@@ -153,6 +177,50 @@ pub struct ClusterResult {
     pub sim_time_s: f64,
 }
 
+/// Fault/quorum configuration for a cluster run.
+#[derive(Clone, Debug)]
+pub struct FaultRunConfig {
+    /// The deterministic failure schedule (see [`FaultPlan::parse`]).
+    pub plan: FaultPlan,
+    /// Proceed once this many estimates have arrived (clamped to the
+    /// live delivery count; the quorum-th arrival closes the window).
+    pub quorum: usize,
+    /// Virtual ms past the quorum-th arrival still counted in-window.
+    pub grace_ms: f64,
+    /// Virtual ms past the in-window edge during which stragglers are
+    /// late-merged rather than abandoned.
+    pub straggler_ms: f64,
+}
+
+impl FaultRunConfig {
+    /// Full participation, no faults: the classical protocol.
+    pub fn full(m: usize) -> Self {
+        FaultRunConfig { plan: FaultPlan::none(), quorum: m, grace_ms: 0.0, straggler_ms: 0.0 }
+    }
+}
+
+/// Output of a fault-injected (in-process or loopback-TCP) cluster run.
+pub struct FaultyClusterResult {
+    /// The final orthonormal (d, r) estimate.
+    pub estimate: Mat,
+    /// Round-0 panels that made the merge (in-window ∪ late), node order.
+    pub local_panels: Vec<Mat>,
+    /// Communication accounting, including retry/drop/dup/timeout meters.
+    pub comm: CommSnapshot,
+    /// Simulated communication wall-clock (includes quorum stall time).
+    pub sim_time_s: f64,
+    /// Canonical record of every wire event the fault plan produced;
+    /// equal plans produce `==` transcripts on both engines.
+    pub transcript: Transcript,
+    /// Nodes whose round-0 estimate arrived inside the quorum window.
+    pub in_quorum: Vec<usize>,
+    /// Nodes late-merged into the round-0 estimate.
+    pub late_merged: Vec<usize>,
+    /// Nodes that contributed nothing to round 0: crashed, timed out,
+    /// abandoned past the straggler window, or not yet joined.
+    pub lost: Vec<usize>,
+}
+
 fn aggregate(panels: &[Mat], rule: AggregationRule, reference: &Mat) -> Mat {
     match rule {
         AggregationRule::Mean => align::procrustes_fix_with_reference(panels, reference),
@@ -172,41 +240,220 @@ struct WorkerState {
     panel: Option<Mat>,
 }
 
-/// Run the full protocol over `workers` (consumed). Returns the estimate
-/// plus communication metrics. Worker compute runs as jobs on the
-/// persistent worker pool; panics propagate from worker jobs.
-pub fn run_cluster(
-    workers: Vec<WorkerData>,
-    solver: Arc<dyn LocalSolver>,
-    config: &ClusterConfig,
-) -> ClusterResult {
-    assert!(!workers.is_empty());
-    let m = workers.len();
-    let stats = Arc::new(CommStats::new());
-    let r = config.r;
-    let codec = config.codec;
-
-    let mut states: Vec<WorkerState> = workers
+fn make_states(workers: Vec<WorkerData>, seed: u64) -> Vec<WorkerState> {
+    workers
         .into_iter()
         .enumerate()
         .map(|(i, data)| WorkerState {
             id: i,
             behavior: data.behavior,
             shard: data.shard,
-            rng: Pcg64::seed_stream(config.seed, i as u64 + 1),
+            rng: Pcg64::seed_stream(seed, i as u64 + 1),
             panel: None,
         })
-        .collect();
+        .collect()
+}
 
-    // --- round 1: local solves fan out on the pool, one upload each ------
+/// One decoded panel with its virtual arrival time (ms after the round's
+/// reference send). Both engines derive `arrival_ms` from the plan, never
+/// from wall-clock, so the quorum partition is identical across them.
+struct Delivery {
+    node: usize,
+    arrival_ms: f64,
+    panel: Mat,
+}
+
+/// The quorum partition of one round's deliveries.
+struct QuorumSplit {
+    /// Arrived by (quorum-th arrival + grace); node order.
+    in_window: Vec<Delivery>,
+    /// Arrived inside the straggler window after that; node order.
+    late: Vec<Delivery>,
+    /// Virtual time the leader stalled waiting for the window to close.
+    stall_ms: f64,
+}
+
+/// Quorum semantics: sort by (virtual arrival, node); the quorum-th
+/// arrival plus `grace_ms` closes the in-window set, a further
+/// `straggler_ms` admits late merges, anything beyond is abandoned.
+fn split_quorum(
+    mut deliveries: Vec<Delivery>,
+    quorum: usize,
+    grace_ms: f64,
+    straggler_ms: f64,
+) -> QuorumSplit {
+    if deliveries.is_empty() {
+        return QuorumSplit { in_window: Vec::new(), late: Vec::new(), stall_ms: 0.0 };
+    }
+    deliveries.sort_by(|a, b| a.arrival_ms.total_cmp(&b.arrival_ms).then(a.node.cmp(&b.node)));
+    let q = quorum.clamp(1, deliveries.len());
+    let in_end = deliveries[q - 1].arrival_ms + grace_ms;
+    let late_end = in_end + straggler_ms;
+    let mut in_window = Vec::new();
+    let mut late = Vec::new();
+    for d in deliveries {
+        if d.arrival_ms <= in_end {
+            in_window.push(d);
+        } else if d.arrival_ms <= late_end {
+            late.push(d);
+        }
+        // beyond the straggler window: abandoned (dropped on the floor;
+        // the link-level meters already accounted its wire traffic)
+    }
+    let stall_ms = in_window.iter().map(|d| d.arrival_ms).fold(0.0, f64::max);
+    in_window.sort_by_key(|d| d.node);
+    late.sort_by_key(|d| d.node);
+    QuorumSplit { in_window, late, stall_ms }
+}
+
+fn stall_us(ms: f64) -> usize {
+    (ms * 1000.0).round() as usize
+}
+
+/// Round-0 outcome shared by both engines.
+struct Round0 {
+    /// In-window decoded panels, node order.
+    in_panels: Vec<Mat>,
+    /// In-window ∪ late decoded panels, node order.
+    local_panels: Vec<Mat>,
+    in_quorum: Vec<usize>,
+    late_merged: Vec<usize>,
+    lost: Vec<usize>,
+}
+
+/// Book the quorum outcome of round 0 into the meters and split the
+/// panels out in node order.
+fn settle_round0(split: QuorumSplit, m: usize, stats: &CommStats) -> Round0 {
+    assert!(
+        !split.in_window.is_empty(),
+        "no round-0 estimate survived the fault plan; nothing to aggregate"
+    );
+    for _ in &split.late {
+        stats.record_late();
+    }
+    stats.add_stall_us(stall_us(split.stall_ms));
+    let in_quorum: Vec<usize> = split.in_window.iter().map(|d| d.node).collect();
+    let late_merged: Vec<usize> = split.late.iter().map(|d| d.node).collect();
+    let lost: Vec<usize> = (0..m)
+        .filter(|i| !in_quorum.contains(i) && !late_merged.contains(i))
+        .collect();
+    let mut union: Vec<(usize, Mat)> = split
+        .in_window
+        .iter()
+        .chain(split.late.iter())
+        .map(|d| (d.node, d.panel.clone()))
+        .collect();
+    union.sort_by_key(|(n, _)| *n);
+    let local_panels = union.into_iter().map(|(_, p)| p).collect();
+    let in_panels = split.in_window.into_iter().map(|d| d.panel).collect();
+    Round0 { in_panels, local_panels, in_quorum, late_merged, lost }
+}
+
+/// Single-round (Algorithm 1) estimate under quorum semantics: aggregate
+/// the in-window panels first, then late-merge stragglers by
+/// re-aggregating the union against the quorum estimate as reference.
+fn quorum_estimate(round0: &Round0, rule: AggregationRule) -> Mat {
+    let quorum_est = aggregate(&round0.in_panels, rule, &round0.in_panels[0]);
+    if round0.late_merged.is_empty() {
+        quorum_est
+    } else {
+        aggregate(&round0.local_panels, rule, &quorum_est)
+    }
+}
+
+/// Book one refinement round's quorum outcome and return the merged
+/// (in-window ∪ late) panels in node order.
+fn settle_refine(split: QuorumSplit, stats: &CommStats) -> Vec<Mat> {
+    for _ in &split.late {
+        stats.record_late();
+    }
+    stats.add_stall_us(stall_us(split.stall_ms));
+    let mut union: Vec<(usize, Mat)> = split
+        .in_window
+        .into_iter()
+        .chain(split.late)
+        .map(|d| (d.node, d.panel))
+        .collect();
+    union.sort_by_key(|(n, _)| *n);
+    union.into_iter().map(|(_, p)| p).collect()
+}
+
+/// One refinement merge on the leader: re-align span-only codecs to the
+/// broadcast reference, then average. `None` for an empty round (the
+/// previous reference survives).
+fn merge_refined(
+    mut merged: Vec<Mat>,
+    codec: WireCodec,
+    reference: &Mat,
+    rule: AggregationRule,
+) -> Option<Mat> {
+    if merged.is_empty() {
+        return None;
+    }
+    // span-only codecs (FD sketch) lose the worker-side alignment in
+    // transit — the decoded basis is arbitrary — so the leader re-aligns
+    // before aggregating entry-wise
+    if !codec.preserves_representative() {
+        for p in merged.iter_mut() {
+            *p = crate::linalg::procrustes::procrustes_align(p, reference);
+        }
+    }
+    Some(match rule {
+        AggregationRule::Mean => align::mean_qr(&merged),
+        AggregationRule::CoordinateMedian => align::median_qr(&merged),
+    })
+}
+
+/// Run the full protocol over `workers` (consumed). Returns the estimate
+/// plus communication metrics. Worker compute runs as jobs on the
+/// persistent worker pool; panics propagate from worker jobs. This is the
+/// fault-free full-participation special case of [`run_cluster_faulty`].
+pub fn run_cluster(
+    workers: Vec<WorkerData>,
+    solver: Arc<dyn LocalSolver>,
+    config: &ClusterConfig,
+) -> ClusterResult {
+    let m = workers.len();
+    let res = run_cluster_faulty(workers, solver, config, &FaultRunConfig::full(m));
+    ClusterResult {
+        estimate: res.estimate,
+        local_panels: res.local_panels,
+        comm: res.comm,
+        sim_time_s: res.sim_time_s,
+    }
+}
+
+/// Run the protocol under a deterministic [`FaultPlan`] with quorum
+/// rounds: every link message is metered through its plan schedule, the
+/// leader proceeds at `fc.quorum` arrivals, stragglers late-merge through
+/// the alignment machinery, and crash/join events change membership
+/// mid-computation. Replaying an equal plan yields a bit-identical
+/// transcript, meters, and estimate.
+pub fn run_cluster_faulty(
+    workers: Vec<WorkerData>,
+    solver: Arc<dyn LocalSolver>,
+    config: &ClusterConfig,
+    fc: &FaultRunConfig,
+) -> FaultyClusterResult {
+    assert!(!workers.is_empty());
+    let m = workers.len();
+    let stats = Arc::new(CommStats::new());
+    let mut transcript = Transcript::default();
+    let r = config.r;
+    let codec = config.codec;
+    let plan = &fc.plan;
+
+    let mut states = make_states(workers, config.seed);
+
+    // --- round 0: local solves fan out on the pool, one upload each ------
     let mut uploads: Vec<Option<Message>> = (0..m).map(|_| None).collect();
     {
         let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = states
             .iter_mut()
             .zip(uploads.iter_mut())
+            .filter(|(st, _)| plan.active(st.id, 0))
             .map(|(st, slot)| {
                 let solver = Arc::clone(&solver);
-                let stats = Arc::clone(&stats);
                 let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
                     let d = st.shard.dim();
                     // local solve through the operator data plane (or
@@ -223,7 +470,6 @@ pub fn run_cluster(
                         panel: codec.encode(&panel),
                         ritz: vec![],
                     };
-                    stats.record_up(msg.wire_bytes());
                     *slot = Some(msg);
                     st.panel = Some(panel);
                 });
@@ -232,88 +478,122 @@ pub fn run_cluster(
             .collect();
         pool::run_scoped(jobs);
     }
+    // the leader meters each upload through its link schedule and decodes
+    // the first delivered copy
+    let mut deliveries: Vec<Delivery> = Vec::new();
+    for (i, msg) in uploads.into_iter().enumerate() {
+        let Some(msg) = msg else { continue };
+        let bytes = msg.wire_bytes();
+        let sched = plan.link_schedule(i, LinkDir::Up, 0);
+        meter_schedule(&stats, LinkDir::Up, bytes, &sched);
+        transcript.push_schedule(0, LinkDir::Up, i, bytes, &sched);
+        if let Some(e) = sched.delivered.first() {
+            let Message::LocalEstimate { panel, .. } = msg else { unreachable!() };
+            deliveries.push(Delivery { node: i, arrival_ms: e.arrival_ms, panel: panel.decode() });
+        }
+    }
     stats.bump_round();
-    // the leader decodes what crossed the wire
-    let local_panels: Vec<Mat> = uploads
-        .into_iter()
-        .map(|msg| match msg.expect("worker produced no upload") {
-            Message::LocalEstimate { panel, .. } => panel.decode(),
-            other => panic!("unexpected message in round 1: {other:?}"),
-        })
-        .collect();
+    let split = split_quorum(deliveries, fc.quorum, fc.grace_ms, fc.straggler_ms);
+    let round0 = settle_round0(split, m, &stats);
 
     // --- alignment -------------------------------------------------------
     let estimate = if config.refine_rounds == 0 {
-        // single-round Algorithm 1, leader-side alignment
-        aggregate(&local_panels, config.aggregation, &local_panels[0])
+        quorum_estimate(&round0, config.aggregation)
     } else {
-        let mut reference = local_panels[0].clone();
+        let mut reference = round0.local_panels[0].clone();
         for round in 1..=config.refine_rounds {
             // broadcast the reference (encoded once, metered per link);
-            // workers decode, align their exact round-1 panel, and upload
-            // the encoded result — all as one pool job per worker
-            let encoded = config.codec.encode(&reference);
+            // receiving workers decode, align their exact panel, and
+            // upload the encoded result — one pool job per live worker
+            let encoded = codec.encode(&reference);
+            let ref_bytes = Message::Reference { round, panel: encoded.clone() }.wire_bytes();
+            let ref_decoded = encoded.decode();
+            let mut down_ok: Vec<Option<f64>> = vec![None; m];
+            for i in 0..m {
+                if !plan.active(i, round) {
+                    continue;
+                }
+                let sched = plan.link_schedule(i, LinkDir::Down, round);
+                meter_schedule(&stats, LinkDir::Down, ref_bytes, &sched);
+                transcript.push_schedule(round, LinkDir::Down, i, ref_bytes, &sched);
+                down_ok[i] = sched.delivered.first().map(|e| e.arrival_ms);
+            }
             let mut replies: Vec<Option<Message>> = (0..m).map(|_| None).collect();
-            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = states
-                .iter_mut()
-                .zip(replies.iter_mut())
-                .map(|(st, slot)| {
-                    let msg = Message::Reference { round, panel: encoded.clone() };
-                    stats.record_down(msg.wire_bytes());
-                    let stats = Arc::clone(&stats);
-                    let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
-                        let Message::Reference { panel: reference, .. } = msg else {
-                            unreachable!()
-                        };
-                        let d = st.shard.dim();
-                        let aligned = match st.behavior {
-                            NodeBehavior::Honest => crate::linalg::procrustes::procrustes_align(
-                                st.panel.as_ref().expect("round-1 panel missing"),
-                                &reference.decode(),
-                            ),
-                            NodeBehavior::Byzantine => st.rng.haar_stiefel(d, r),
-                        };
-                        let reply = Message::Aligned {
-                            node: st.id,
-                            round,
-                            panel: codec.encode(&aligned),
-                        };
-                        stats.record_up(reply.wire_bytes());
-                        *slot = Some(reply);
+            {
+                let ref_decoded = &ref_decoded;
+                let down_ok = &down_ok;
+                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = states
+                    .iter_mut()
+                    .zip(replies.iter_mut())
+                    .filter(|(st, _)| down_ok[st.id].is_some())
+                    .map(|(st, slot)| {
+                        let solver = Arc::clone(&solver);
+                        let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                            let d = st.shard.dim();
+                            let aligned = match st.behavior {
+                                NodeBehavior::Honest => {
+                                    if st.panel.is_none() {
+                                        // a joiner's first round: solve
+                                        // before aligning
+                                        st.panel = Some(solver.leading_subspace_op(
+                                            &st.shard,
+                                            r,
+                                            &mut st.rng,
+                                        ));
+                                    }
+                                    crate::linalg::procrustes::procrustes_align(
+                                        st.panel.as_ref().expect("panel just ensured"),
+                                        ref_decoded,
+                                    )
+                                }
+                                NodeBehavior::Byzantine => st.rng.haar_stiefel(d, r),
+                            };
+                            *slot = Some(Message::Aligned {
+                                node: st.id,
+                                round,
+                                panel: codec.encode(&aligned),
+                            });
+                        });
+                        job
+                    })
+                    .collect();
+                pool::run_scoped(jobs);
+            }
+            let mut deliveries: Vec<Delivery> = Vec::new();
+            for (i, slot) in replies.iter_mut().enumerate() {
+                let Some(d0) = down_ok[i] else { continue };
+                let reply = slot.take().expect("scheduled worker produced no reply");
+                let bytes = reply.wire_bytes();
+                let sched = plan.link_schedule(i, LinkDir::Up, round);
+                meter_schedule(&stats, LinkDir::Up, bytes, &sched);
+                transcript.push_schedule(round, LinkDir::Up, i, bytes, &sched);
+                if let Some(e) = sched.delivered.first() {
+                    let Message::Aligned { panel, .. } = reply else { unreachable!() };
+                    deliveries.push(Delivery {
+                        node: i,
+                        arrival_ms: d0 + e.arrival_ms,
+                        panel: panel.decode(),
                     });
-                    job
-                })
-                .collect();
-            pool::run_scoped(jobs);
-            stats.bump_round();
-            let mut aligned: Vec<Mat> = replies
-                .into_iter()
-                .map(|msg| match msg.expect("worker produced no aligned panel") {
-                    Message::Aligned { panel, .. } => panel.decode(),
-                    other => panic!("unexpected message in refinement: {other:?}"),
-                })
-                .collect();
-            // span-only codecs (FD sketch) lose the worker-side alignment
-            // in transit — the decoded basis is arbitrary — so the leader
-            // re-aligns before aggregating entry-wise
-            if !config.codec.preserves_representative() {
-                for p in aligned.iter_mut() {
-                    *p = crate::linalg::procrustes::procrustes_align(p, &reference);
                 }
             }
-            reference = match config.aggregation {
-                AggregationRule::Mean => align::mean_qr(&aligned),
-                AggregationRule::CoordinateMedian => align::median_qr(&aligned),
-            };
+            stats.bump_round();
+            let split = split_quorum(deliveries, fc.quorum, fc.grace_ms, fc.straggler_ms);
+            let merged = settle_refine(split, &stats);
+            if let Some(next) = merge_refined(merged, codec, &reference, config.aggregation) {
+                reference = next;
+            }
         }
         reference
     };
 
     // --- shutdown --------------------------------------------------------
-    // the protocol still ends with one Done per worker link; it is
+    // the protocol still ends with one Done per live worker link; it is
     // control traffic, metered separately so it cannot inflate the
     // payload meters or the simulated wall-clock
-    for _ in 0..m {
+    for i in 0..m {
+        if !plan.active(i, config.refine_rounds) {
+            continue;
+        }
         let msg = Message::Done;
         debug_assert!(msg.is_control());
         stats.record_ctrl(msg.wire_bytes());
@@ -321,7 +601,369 @@ pub fn run_cluster(
 
     let comm = stats.snapshot();
     let sim_time_s = stats.simulated_time(&config.network);
-    ClusterResult { estimate, local_panels, comm, sim_time_s }
+    FaultyClusterResult {
+        estimate,
+        local_panels: round0.local_panels,
+        comm,
+        sim_time_s,
+        transcript: transcript.canonical(),
+        in_quorum: round0.in_quorum,
+        late_merged: round0.late_merged,
+        lost: round0.lost,
+    }
+}
+
+/// Everything a TCP worker thread needs besides its own state.
+struct NetCtx {
+    addr: SocketAddr,
+    solver: Arc<dyn LocalSolver>,
+    stats: Arc<CommStats>,
+    transcript: Arc<Mutex<Transcript>>,
+    plan: FaultPlan,
+    codec: WireCodec,
+    r: usize,
+}
+
+/// Worker-side fault-injected upload: meter and record the plan's
+/// schedule for this `(node, round)` message, then physically write each
+/// delivered copy at (approximately) its scheduled arrival offset. A
+/// timed-out schedule writes nothing — the leader, holding the same plan,
+/// does not expect the frame.
+fn send_with_schedule(
+    stream: &mut TcpStream,
+    ctx: &NetCtx,
+    node: usize,
+    round: usize,
+    msg: &Message,
+) -> std::io::Result<()> {
+    let bytes = msg.wire_bytes();
+    let sched = ctx.plan.link_schedule(node, LinkDir::Up, round);
+    meter_schedule(&ctx.stats, LinkDir::Up, bytes, &sched);
+    ctx.transcript
+        .lock()
+        .expect("transcript lock")
+        .push_schedule(round, LinkDir::Up, node, bytes, &sched);
+    let start = Instant::now();
+    for e in &sched.delivered {
+        let target = Duration::from_micros((e.arrival_ms * 1000.0).max(0.0) as u64);
+        let elapsed = start.elapsed();
+        if target > elapsed {
+            std::thread::sleep(target - elapsed);
+        }
+        write_frame(stream, msg)?;
+    }
+    Ok(())
+}
+
+/// One TCP worker: connect, handshake, round-0 upload, then serve
+/// Reference→Aligned rounds until `Done` or the leader hangs up. Crash
+/// events make the worker leave silently, exactly when the plan says.
+fn worker_main(mut st: WorkerState, ctx: NetCtx) {
+    let Ok(mut stream) = TcpStream::connect(ctx.addr) else { return };
+    let _ = stream.set_nodelay(true);
+    // socket-level handshake: the analogue of channel creation, unmetered
+    if write_frame(&mut stream, &Message::Hello { node: st.id }).is_err() {
+        return;
+    }
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = FrameReader::new(read_half);
+    if ctx.plan.active(st.id, 0) {
+        let d = st.shard.dim();
+        let panel = match st.behavior {
+            NodeBehavior::Honest => ctx.solver.leading_subspace_op(&st.shard, ctx.r, &mut st.rng),
+            NodeBehavior::Byzantine => st.rng.haar_stiefel(d, ctx.r),
+        };
+        let msg = Message::LocalEstimate {
+            node: st.id,
+            panel: ctx.codec.encode(&panel),
+            ritz: vec![],
+        };
+        st.panel = Some(panel);
+        if send_with_schedule(&mut stream, &ctx, st.id, 0, &msg).is_err() {
+            return;
+        }
+    }
+    loop {
+        match reader.read_message() {
+            Ok(Message::Reference { round, panel }) => {
+                if ctx.plan.crashed(st.id, round) {
+                    // crash mid-computation: leave without a word
+                    return;
+                }
+                let d = st.shard.dim();
+                let aligned = match st.behavior {
+                    NodeBehavior::Honest => {
+                        if st.panel.is_none() {
+                            // a joiner's first round: solve before aligning
+                            st.panel =
+                                Some(ctx.solver.leading_subspace_op(&st.shard, ctx.r, &mut st.rng));
+                        }
+                        crate::linalg::procrustes::procrustes_align(
+                            st.panel.as_ref().expect("panel just ensured"),
+                            &panel.decode(),
+                        )
+                    }
+                    NodeBehavior::Byzantine => st.rng.haar_stiefel(d, ctx.r),
+                };
+                let reply = Message::Aligned {
+                    node: st.id,
+                    round,
+                    panel: ctx.codec.encode(&aligned),
+                };
+                if send_with_schedule(&mut stream, &ctx, st.id, round, &reply).is_err() {
+                    return;
+                }
+            }
+            // Done, anything unexpected, or a closed socket all end the run
+            Ok(_) | Err(_) => return,
+        }
+    }
+}
+
+/// Drain up to `expected` accepted frames from the reader channel, with a
+/// real-time deadline as a failsafe against lost workers. `accept`
+/// filters/decodes one frame and names its owning node; the first copy
+/// per node wins (duplicates are byte-identical anyway).
+fn collect_expected(
+    rx: &mpsc::Receiver<(usize, Message)>,
+    expected: usize,
+    deadline: Duration,
+    got: &mut [Option<Mat>],
+    mut accept: impl FnMut(usize, Message) -> Option<(usize, Mat)>,
+) {
+    let until = Instant::now() + deadline;
+    let mut seen = 0usize;
+    while seen < expected {
+        let left = until.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            break;
+        }
+        match rx.recv_timeout(left) {
+            Ok((node, msg)) => {
+                if let Some((n, panel)) = accept(node, msg) {
+                    seen += 1;
+                    if got[n].is_none() {
+                        got[n] = Some(panel);
+                    }
+                }
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// Run the identical quorum protocol over loopback TCP: real sockets,
+/// real worker threads, length-prefixed frames. The same [`FaultPlan`]
+/// drives injection on the worker side (delayed/duplicated/suppressed
+/// physical sends) and the quorum partition on the leader side — from
+/// the plan's *virtual* arrivals, never wall-clock — so the result,
+/// meters, and transcript are bit-identical to [`run_cluster_faulty`]
+/// with the same inputs. Fails (rather than panicking) where loopback
+/// sockets are unavailable, so callers can skip gracefully.
+pub fn run_cluster_tcp(
+    workers: Vec<WorkerData>,
+    solver: Arc<dyn LocalSolver>,
+    config: &ClusterConfig,
+    fc: &FaultRunConfig,
+) -> anyhow::Result<FaultyClusterResult> {
+    assert!(!workers.is_empty());
+    let m = workers.len();
+    let r = config.r;
+    let codec = config.codec;
+    let plan = fc.plan.clone();
+    let stats = Arc::new(CommStats::new());
+    let transcript = Arc::new(Mutex::new(Transcript::default()));
+
+    let listener = TcpListener::bind("127.0.0.1:0")
+        .map_err(|e| anyhow::anyhow!("loopback bind failed: {e}"))?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+
+    let states = make_states(workers, config.seed);
+    // real-time failsafe per collection: the plan's virtual horizon plus
+    // a generous compute margin (correctness never depends on it)
+    let deadline = Duration::from_millis(plan.horizon_ms().ceil() as u64 + 30_000);
+
+    let (estimate, round0) = std::thread::scope(|s| -> anyhow::Result<(Mat, Round0)> {
+        for st in states {
+            if plan.crashed_at_start(st.id) {
+                continue;
+            }
+            let ctx = NetCtx {
+                addr,
+                solver: Arc::clone(&solver),
+                stats: Arc::clone(&stats),
+                transcript: Arc::clone(&transcript),
+                plan: plan.clone(),
+                codec,
+                r,
+            };
+            s.spawn(move || worker_main(st, ctx));
+        }
+
+        // accept one connection per live worker, route frames by node
+        let expected_conns = (0..m).filter(|&i| !plan.crashed_at_start(i)).count();
+        let (tx, rx) = mpsc::channel::<(usize, Message)>();
+        let mut writers: Vec<Option<TcpStream>> = (0..m).map(|_| None).collect();
+        let accept_deadline = Instant::now() + Duration::from_secs(20);
+        let mut accepted = 0usize;
+        while accepted < expected_conns {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    stream.set_nodelay(true)?;
+                    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+                    let mut reader = FrameReader::new(stream.try_clone()?);
+                    let hello = reader
+                        .read_message()
+                        .map_err(|e| anyhow::anyhow!("worker handshake failed: {e}"))?;
+                    let Message::Hello { node } = hello else {
+                        anyhow::bail!("expected Hello, got {hello:?}");
+                    };
+                    anyhow::ensure!(
+                        node < m && writers[node].is_none(),
+                        "bad Hello from node {node}"
+                    );
+                    writers[node] = Some(stream);
+                    let tx = tx.clone();
+                    s.spawn(move || loop {
+                        match reader.read_message() {
+                            Ok(msg) => {
+                                if tx.send((node, msg)).is_err() {
+                                    return;
+                                }
+                            }
+                            Err(_) => return,
+                        }
+                    });
+                    accepted += 1;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    anyhow::ensure!(
+                        Instant::now() < accept_deadline,
+                        "timed out waiting for worker connections"
+                    );
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        drop(tx);
+
+        // --- round 0: collect every physically-expected upload frame -----
+        let expected: usize = (0..m)
+            .filter(|&i| plan.active(i, 0))
+            .map(|i| plan.link_schedule(i, LinkDir::Up, 0).delivered.len())
+            .sum();
+        let mut got: Vec<Option<Mat>> = (0..m).map(|_| None).collect();
+        collect_expected(&rx, expected, deadline, &mut got, |node, msg| match msg {
+            Message::LocalEstimate { panel, .. } => Some((node, panel.decode())),
+            _ => None,
+        });
+        let mut deliveries: Vec<Delivery> = Vec::new();
+        for (i, slot) in got.iter_mut().enumerate() {
+            if !plan.active(i, 0) {
+                continue;
+            }
+            let sched = plan.link_schedule(i, LinkDir::Up, 0);
+            let (Some(e), Some(panel)) = (sched.delivered.first(), slot.take()) else {
+                continue;
+            };
+            deliveries.push(Delivery { node: i, arrival_ms: e.arrival_ms, panel });
+        }
+        stats.bump_round();
+        let split = split_quorum(deliveries, fc.quorum, fc.grace_ms, fc.straggler_ms);
+        let round0 = settle_round0(split, m, &stats);
+
+        // --- refinement over real sockets --------------------------------
+        let estimate = if config.refine_rounds == 0 {
+            quorum_estimate(&round0, config.aggregation)
+        } else {
+            let mut reference = round0.local_panels[0].clone();
+            for round in 1..=config.refine_rounds {
+                let encoded = codec.encode(&reference);
+                let ref_bytes = Message::Reference { round, panel: encoded.clone() }.wire_bytes();
+                let mut down_ok: Vec<Option<f64>> = vec![None; m];
+                for i in 0..m {
+                    if !plan.active(i, round) {
+                        continue;
+                    }
+                    let sched = plan.link_schedule(i, LinkDir::Down, round);
+                    meter_schedule(&stats, LinkDir::Down, ref_bytes, &sched);
+                    transcript
+                        .lock()
+                        .expect("transcript lock")
+                        .push_schedule(round, LinkDir::Down, i, ref_bytes, &sched);
+                    let Some(e) = sched.delivered.first() else { continue };
+                    let Some(w) = writers[i].as_mut() else { continue };
+                    let msg = Message::Reference { round, panel: encoded.clone() };
+                    if write_frame(w, &msg).is_ok() {
+                        down_ok[i] = Some(e.arrival_ms);
+                    }
+                }
+                let expected: usize = (0..m)
+                    .filter(|&i| down_ok[i].is_some())
+                    .map(|i| plan.link_schedule(i, LinkDir::Up, round).delivered.len())
+                    .sum();
+                let mut got: Vec<Option<Mat>> = (0..m).map(|_| None).collect();
+                collect_expected(&rx, expected, deadline, &mut got, |node, msg| match msg {
+                    Message::Aligned { round: rr, panel, .. } if rr == round => {
+                        Some((node, panel.decode()))
+                    }
+                    _ => None,
+                });
+                let mut deliveries: Vec<Delivery> = Vec::new();
+                for (i, slot) in got.iter_mut().enumerate() {
+                    let Some(d0) = down_ok[i] else { continue };
+                    let sched = plan.link_schedule(i, LinkDir::Up, round);
+                    let (Some(e), Some(panel)) = (sched.delivered.first(), slot.take()) else {
+                        continue;
+                    };
+                    deliveries.push(Delivery { node: i, arrival_ms: d0 + e.arrival_ms, panel });
+                }
+                stats.bump_round();
+                let split = split_quorum(deliveries, fc.quorum, fc.grace_ms, fc.straggler_ms);
+                let merged = settle_refine(split, &stats);
+                if let Some(next) = merge_refined(merged, codec, &reference, config.aggregation) {
+                    reference = next;
+                }
+            }
+            reference
+        };
+
+        // --- shutdown ----------------------------------------------------
+        for i in 0..m {
+            if !plan.active(i, config.refine_rounds) {
+                continue;
+            }
+            let msg = Message::Done;
+            stats.record_ctrl(msg.wire_bytes());
+            if let Some(w) = writers[i].as_mut() {
+                let _ = write_frame(w, &msg);
+            }
+        }
+        // dropping the write halves hangs up every remaining worker
+        drop(writers);
+        Ok((estimate, round0))
+    })?;
+
+    let comm = stats.snapshot();
+    let sim_time_s = stats.simulated_time(&config.network);
+    let transcript = Arc::try_unwrap(transcript)
+        .expect("transcript still shared after scope join")
+        .into_inner()
+        .expect("transcript lock")
+        .canonical();
+    Ok(FaultyClusterResult {
+        estimate,
+        local_panels: round0.local_panels,
+        comm,
+        sim_time_s,
+        transcript,
+        in_quorum: round0.in_quorum,
+        late_merged: round0.late_merged,
+        lost: round0.lost,
+    })
 }
 
 #[cfg(test)]
@@ -496,5 +1138,85 @@ mod tests {
         // identical protocol shape: the data plane changes compute, not
         // communication
         assert_eq!(res_s.comm, res_d.comm);
+    }
+
+    #[test]
+    fn crash_shrinks_quorum_but_estimate_stays_close() {
+        let mut rng = Pcg64::seed(8);
+        let (truth, workers) = make_workers(&mut rng, 24, 3, 8, 0.02);
+        let cfg = ClusterConfig { r: 3, seed: 21, ..Default::default() };
+        let fc = FaultRunConfig {
+            plan: FaultPlan::parse("crash=3@0").unwrap(),
+            quorum: 7,
+            grace_ms: 0.0,
+            straggler_ms: 0.0,
+        };
+        let res = run_cluster_faulty(workers, Arc::new(NativeEngine::default()), &cfg, &fc);
+        // node 3 never participates: 7 uploads, and it lands in `lost`
+        assert_eq!(res.comm.msgs_up, 7);
+        assert_eq!(res.in_quorum.len(), 7);
+        assert!(res.lost.contains(&3));
+        assert!(res.late_merged.is_empty());
+        check::assert_orthonormal(&res.estimate, tol::FACTOR, "quorum estimate");
+        assert!(dist2(&res.estimate, &truth) < tol::STAT);
+        // and it stays within statistical tolerance of full participation
+        let mut rng2 = Pcg64::seed(8);
+        let (_, workers2) = make_workers(&mut rng2, 24, 3, 8, 0.02);
+        let full = run_cluster(workers2, Arc::new(NativeEngine::default()), &cfg);
+        assert!(dist2(&res.estimate, &full.estimate) < tol::STAT);
+    }
+
+    #[test]
+    fn fault_transcripts_replay_bit_identically_through_the_engine() {
+        let build = || {
+            let mut rng = Pcg64::seed(9);
+            let (_, workers) = make_workers(&mut rng, 16, 2, 6, 0.05);
+            let cfg = ClusterConfig { r: 2, refine_rounds: 2, seed: 3, ..Default::default() };
+            let fc = FaultRunConfig {
+                plan: FaultPlan {
+                    drop_p: 0.2,
+                    delay_p: 0.3,
+                    delay_ms: 40.0,
+                    dup_p: 0.1,
+                    ..FaultPlan::default()
+                }
+                .seeded(77),
+                quorum: 4,
+                grace_ms: 10.0,
+                straggler_ms: 100.0,
+            };
+            run_cluster_faulty(workers, Arc::new(NativeEngine::default()), &cfg, &fc)
+        };
+        let a = build();
+        let b = build();
+        assert!(!a.transcript.events.is_empty());
+        assert_eq!(a.transcript, b.transcript);
+        assert_eq!(a.comm, b.comm);
+        assert_eq!(a.in_quorum, b.in_quorum);
+        assert_eq!(a.late_merged, b.late_merged);
+        assert_eq!(a.lost, b.lost);
+        assert!(a.estimate.sub(&b.estimate).max_abs() == 0.0);
+    }
+
+    #[test]
+    fn join_mid_computation_contributes() {
+        let mut rng = Pcg64::seed(10);
+        let (truth, workers) = make_workers(&mut rng, 20, 2, 6, 0.05);
+        let cfg = ClusterConfig { r: 2, refine_rounds: 3, seed: 15, ..Default::default() };
+        let fc = FaultRunConfig {
+            plan: FaultPlan::parse("join=5@2").unwrap(),
+            quorum: 5,
+            grace_ms: 0.0,
+            straggler_ms: 0.0,
+        };
+        let res = run_cluster_faulty(workers, Arc::new(NativeEngine::default()), &cfg, &fc);
+        // node 5 is absent for round 0 and refine round 1, present for
+        // refine rounds 2 and 3: down = 5 + 6 + 6, up = 5 + 5 + 6 + 6
+        assert_eq!(res.comm.msgs_down, 5 + 6 + 6);
+        assert_eq!(res.comm.msgs_up, 5 + 5 + 6 + 6);
+        assert_eq!(res.comm.msgs_ctrl, 6);
+        assert!(res.lost.contains(&5));
+        check::assert_orthonormal(&res.estimate, tol::FACTOR, "join-round estimate");
+        assert!(dist2(&res.estimate, &truth) < 0.2);
     }
 }

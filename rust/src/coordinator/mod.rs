@@ -14,11 +14,24 @@
 //! comparisons exactly. Control messages are metered separately and never
 //! inflate the payload numbers.
 
+//! The fault plane (DESIGN.md S14) extends the same boundary to real
+//! failure regimes: [`fault`] holds seeded deterministic drop/delay/
+//! duplicate/partition/crash schedules shared by the in-process engine
+//! and the loopback-TCP [`transport`], and the cluster runs at a
+//! configurable quorum with straggler late-merging.
+
 mod cluster;
+pub mod fault;
 pub mod gossip;
 mod netsim;
 mod protocol;
+pub mod transport;
 
-pub use cluster::{run_cluster, ClusterConfig, ClusterResult, NodeBehavior, Shard, WorkerData};
+pub use cluster::{
+    run_cluster, run_cluster_faulty, run_cluster_tcp, ClusterConfig, ClusterResult,
+    FaultRunConfig, FaultyClusterResult, NodeBehavior, Shard, WorkerData,
+};
+pub use fault::{meter_schedule, FaultPlan, LinkDir, LinkSchedule, Transcript, CANNED};
 pub use netsim::{CommSnapshot, CommStats, NetworkModel};
 pub use protocol::{AggregationRule, Message, WireCodec, WirePanel, HEADER_BYTES};
+pub use transport::{FrameDecoder, FrameError, FrameReader, TransportError};

@@ -72,6 +72,20 @@ pub struct CommStats {
     pub peer_serial_bytes: AtomicUsize,
     /// Synchronous communication rounds completed.
     pub rounds: AtomicUsize,
+    /// Retransmissions beyond a message's first send attempt.
+    pub msgs_retry: AtomicUsize,
+    /// Send attempts the network dropped (each was still metered at its
+    /// encoded size in the direction meters above).
+    pub msgs_dropped: AtomicUsize,
+    /// Duplicate copies delivered beyond the message itself.
+    pub msgs_dup: AtomicUsize,
+    /// Messages whose every attempt (1 + retries) was dropped.
+    pub timeouts: AtomicUsize,
+    /// Straggler estimates merged after their round's quorum window.
+    pub late_merged: AtomicUsize,
+    /// Virtual stall accumulated waiting out fault-induced arrival skew
+    /// (per-round max in-window arrival), microseconds.
+    pub stall_us: AtomicUsize,
 }
 
 impl CommStats {
@@ -114,6 +128,36 @@ impl CommStats {
         self.rounds.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record `n` retransmissions (attempts beyond a message's first).
+    pub fn record_retries(&self, n: usize) {
+        self.msgs_retry.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record `n` dropped send attempts.
+    pub fn record_drops(&self, n: usize) {
+        self.msgs_dropped.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record `n` delivered duplicate copies.
+    pub fn record_dups(&self, n: usize) {
+        self.msgs_dup.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record one message lost to retry exhaustion.
+    pub fn record_timeout(&self) {
+        self.timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one straggler estimate merged after the quorum window.
+    pub fn record_late(&self) {
+        self.late_merged.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add fault-induced stall (waiting out arrival skew), microseconds.
+    pub fn add_stall_us(&self, us: usize) {
+        self.stall_us.fetch_add(us, Ordering::Relaxed);
+    }
+
     /// Total payload bytes (control traffic excluded).
     pub fn total_bytes(&self) -> usize {
         self.bytes_up.load(Ordering::Relaxed)
@@ -144,6 +188,12 @@ impl CommStats {
             msgs_peer: self.msgs_peer.load(Ordering::Relaxed),
             peer_serial_bytes: self.peer_serial_bytes.load(Ordering::Relaxed),
             rounds: self.rounds_done(),
+            msgs_retry: self.msgs_retry.load(Ordering::Relaxed),
+            msgs_dropped: self.msgs_dropped.load(Ordering::Relaxed),
+            msgs_dup: self.msgs_dup.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
+            late_merged: self.late_merged.load(Ordering::Relaxed),
+            stall_us: self.stall_us.load(Ordering::Relaxed),
         }
     }
 }
@@ -161,6 +211,12 @@ pub struct CommSnapshot {
     pub msgs_peer: usize,
     pub peer_serial_bytes: usize,
     pub rounds: usize,
+    pub msgs_retry: usize,
+    pub msgs_dropped: usize,
+    pub msgs_dup: usize,
+    pub timeouts: usize,
+    pub late_merged: usize,
+    pub stall_us: usize,
 }
 
 impl CommSnapshot {
@@ -172,11 +228,14 @@ impl CommSnapshot {
     /// per-round bottleneck ingress (`peer_serial_bytes`, reported by
     /// the gossip loop as the max per-node incoming volume) serializes.
     /// Control envelopes piggyback on round teardown and cost nothing
-    /// here.
+    /// here. Fault-induced stall (`stall_us`, accumulated by the quorum
+    /// engine as each round's max in-window arrival skew) adds directly:
+    /// it is wall-clock the leader spends waiting, not wire volume.
     pub fn simulated_time(&self, net: &NetworkModel) -> f64 {
         self.rounds as f64 * net.latency_s
             + (self.bytes_up + self.bytes_down + self.peer_serial_bytes) as f64
                 / net.bandwidth_bps
+            + self.stall_us as f64 * 1e-6
     }
 }
 
@@ -244,6 +303,33 @@ mod tests {
         assert!((snap.simulated_time(&net) - (0.01 + 0.18)).abs() < 1e-12);
         // peer payload counts toward the payload total
         assert_eq!(s.total_bytes(), 340);
+    }
+
+    /// Retry/drop/dup/timeout meters accumulate independently of the
+    /// direction meters, and only `stall_us` (leader wait, not volume)
+    /// moves the simulated clock.
+    #[test]
+    fn fault_meters_accumulate_and_only_stall_moves_time() {
+        let net = NetworkModel { latency_s: 0.01, bandwidth_bps: 1000.0 };
+        let s = CommStats::new();
+        s.record_up(500);
+        s.bump_round();
+        let before = s.simulated_time(&net);
+        s.record_retries(2);
+        s.record_drops(2);
+        s.record_dups(1);
+        s.record_timeout();
+        s.record_late();
+        assert_eq!(s.simulated_time(&net), before, "counters alone must not move the clock");
+        s.add_stall_us(250_000); // 0.25 s of quorum-window stall
+        assert!((s.simulated_time(&net) - (before + 0.25)).abs() < 1e-12);
+        let snap = s.snapshot();
+        assert_eq!(snap.msgs_retry, 2);
+        assert_eq!(snap.msgs_dropped, 2);
+        assert_eq!(snap.msgs_dup, 1);
+        assert_eq!(snap.timeouts, 1);
+        assert_eq!(snap.late_merged, 1);
+        assert_eq!(snap.stall_us, 250_000);
     }
 
     #[test]

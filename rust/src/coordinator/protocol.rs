@@ -157,6 +157,12 @@ pub enum Message {
     Reference { round: usize, panel: WirePanel },
     /// Worker -> leader: locally aligned panel `V̂₁⁽ⁱ⁾ Zᵢ` (Remark 2 path).
     Aligned { node: usize, round: usize, panel: WirePanel },
+    /// Worker -> leader: session establishment on a real transport — the
+    /// first frame on a fresh connection, identifying the sender. The
+    /// in-process engine has no connections, so to keep the control
+    /// meters transport-independent the TCP plane leaves `Hello`
+    /// unmetered (it is the socket-level analogue of channel creation).
+    Hello { node: usize },
     /// Leader -> worker: the protocol is finished.
     Done,
 }
@@ -172,14 +178,14 @@ impl Message {
             Message::Reference { panel, .. } | Message::Aligned { panel, .. } => {
                 HEADER_BYTES + panel.wire_bytes()
             }
-            Message::Done => HEADER_BYTES,
+            Message::Hello { .. } | Message::Done => HEADER_BYTES,
         }
     }
 
     /// Control messages carry no payload and are metered separately from
     /// the data traffic (they do not contribute to `sim_time_s`).
     pub fn is_control(&self) -> bool {
-        matches!(self, Message::Done)
+        matches!(self, Message::Hello { .. } | Message::Done)
     }
 }
 
@@ -211,7 +217,9 @@ mod tests {
         };
         assert_eq!(e.wire_bytes(), HEADER_BYTES + 8 * 64 * 8 + 64);
         assert_eq!(Message::Done.wire_bytes(), HEADER_BYTES);
+        assert_eq!(Message::Hello { node: 3 }.wire_bytes(), HEADER_BYTES);
         assert!(Message::Done.is_control() && !e.is_control());
+        assert!(Message::Hello { node: 3 }.is_control());
 
         // the quantized payloads carry a 16-byte codec header (range/meta)
         let f16 = Message::Reference { round: 0, panel: WireCodec::F16.encode(&panel) };

@@ -1,0 +1,712 @@
+//! Length-prefixed frame codec and socket plumbing for the real-network
+//! plane (DESIGN.md S14).
+//!
+//! Every [`Message`] crosses a byte stream as one frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic (0xD1E16E01, little-endian)
+//! 4       4     frame_len — total frame bytes, header included
+//! 8       1     tag (message kind)
+//! 9       1     codec (panel payload kind; 0 = no panel)
+//! 10      2     reserved (0)
+//! 12      4     node
+//! 16      4     round
+//! 20      4     rows
+//! 24      4     cols
+//! 28      4     ritz_len
+//! 32      ...   panel payload [+ ritz f64s]
+//! ```
+//!
+//! The 32-byte header *is* the protocol's [`HEADER_BYTES`] envelope, and
+//! payloads serialize at exactly [`WirePanel::wire_bytes`], so for every
+//! message `encode_message(m).len() == m.wire_bytes()` — the byte meters
+//! the simulator reports are the bytes a socket actually carries, tested
+//! in [`tests::encoded_size_equals_wire_bytes_for_every_variant`].
+//!
+//! Decoding is defensive: truncated frames, oversized length headers and
+//! garbage bytes surface as typed [`FrameError`]s — never panics, never
+//! unbounded buffering ([`MAX_FRAME_BYTES`] caps allocation before any
+//! payload byte is read).
+
+use std::io::{Read, Write};
+
+use crate::linalg::Mat;
+use crate::sketch::{Codec, QuantizedPanel};
+
+use super::protocol::{Message, WirePanel, HEADER_BYTES};
+
+/// Leading frame magic ("d-eigen v1"), little-endian on the wire.
+pub const FRAME_MAGIC: u32 = 0xd1e1_6e01;
+
+/// Upper bound on a single frame (256 MiB) — a length header above this
+/// is rejected before any buffering happens.
+pub const MAX_FRAME_BYTES: usize = 1 << 28;
+
+const TAG_LOCAL: u8 = 0;
+const TAG_REFERENCE: u8 = 1;
+const TAG_ALIGNED: u8 = 2;
+const TAG_DONE: u8 = 3;
+const TAG_HELLO: u8 = 4;
+
+const CODEC_NONE: u8 = 0;
+const CODEC_F64: u8 = 1;
+const CODEC_F16: u8 = 2;
+const CODEC_INT8: u8 = 3;
+const CODEC_FD: u8 = 4;
+
+/// Typed decode failure. Every malformed input maps here — the decoder
+/// never panics and never waits forever for bytes a bad header promised.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// The stream does not start with [`FRAME_MAGIC`].
+    BadMagic(u32),
+    /// `frame_len` exceeds [`MAX_FRAME_BYTES`].
+    Oversized(usize),
+    /// `frame_len` is smaller than the fixed header.
+    Undersized(usize),
+    /// Unknown message tag.
+    BadTag(u8),
+    /// Unknown or inconsistent panel codec byte.
+    BadCodec(u8),
+    /// Header fields and payload length disagree.
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::BadMagic(m) => {
+                write!(f, "bad frame magic {m:#010x} (expected {FRAME_MAGIC:#010x})")
+            }
+            FrameError::Oversized(n) => {
+                write!(f, "frame length {n} exceeds cap {MAX_FRAME_BYTES}")
+            }
+            FrameError::Undersized(n) => {
+                write!(f, "frame length {n} below header size {HEADER_BYTES}")
+            }
+            FrameError::BadTag(t) => write!(f, "unknown message tag {t}"),
+            FrameError::BadCodec(c) => write!(f, "unknown panel codec byte {c}"),
+            FrameError::Malformed(why) => write!(f, "malformed frame: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Transport-level failure: a frame error, an I/O error, or clean EOF.
+#[derive(Debug)]
+pub enum TransportError {
+    Frame(FrameError),
+    Io(std::io::Error),
+    /// The peer closed the stream between frames.
+    Eof,
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Frame(e) => write!(f, "frame error: {e}"),
+            TransportError::Io(e) => write!(f, "io error: {e}"),
+            TransportError::Eof => write!(f, "connection closed"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl From<FrameError> for TransportError {
+    fn from(e: FrameError) -> Self {
+        TransportError::Frame(e)
+    }
+}
+
+impl From<std::io::Error> for TransportError {
+    fn from(e: std::io::Error) -> Self {
+        TransportError::Io(e)
+    }
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64s(buf: &mut Vec<u8>, vals: &[f64]) {
+    buf.reserve(8 * vals.len());
+    for v in vals {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn get_u32(buf: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([buf[off], buf[off + 1], buf[off + 2], buf[off + 3]])
+}
+
+fn get_f64(buf: &[u8], off: usize) -> f64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&buf[off..off + 8]);
+    f64::from_le_bytes(b)
+}
+
+fn get_f64s(buf: &[u8], n: usize) -> Vec<f64> {
+    (0..n).map(|i| get_f64(buf, 8 * i)).collect()
+}
+
+struct PanelWire<'a> {
+    codec: u8,
+    rows: usize,
+    cols: usize,
+    panel: &'a WirePanel,
+}
+
+fn panel_wire(panel: &WirePanel) -> PanelWire<'_> {
+    let (rows, cols) = panel.shape();
+    let codec = match panel {
+        WirePanel::F64(_) => CODEC_F64,
+        WirePanel::Quant(q) => match q.codec {
+            Codec::F16 => CODEC_F16,
+            Codec::Int8 => CODEC_INT8,
+        },
+        WirePanel::Fd { .. } => CODEC_FD,
+    };
+    PanelWire { codec, rows, cols, panel }
+}
+
+fn put_panel_payload(buf: &mut Vec<u8>, panel: &WirePanel) {
+    match panel {
+        WirePanel::F64(m) => put_f64s(buf, m.as_slice()),
+        WirePanel::Quant(q) => {
+            buf.extend_from_slice(&q.lo.to_le_bytes());
+            buf.extend_from_slice(&q.hi.to_le_bytes());
+            buf.extend_from_slice(&q.data);
+        }
+        WirePanel::Fd { sketch, .. } => put_f64s(buf, sketch.as_slice()),
+    }
+}
+
+/// Serialize one message to its frame. The result's length equals
+/// [`Message::wire_bytes`] exactly.
+pub fn encode_message(msg: &Message) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(msg.wire_bytes());
+    let (tag, node, round, ritz_len, pw) = match msg {
+        Message::LocalEstimate { node, panel, ritz } => {
+            (TAG_LOCAL, *node, 0usize, ritz.len(), Some(panel_wire(panel)))
+        }
+        Message::Reference { round, panel } => {
+            (TAG_REFERENCE, 0usize, *round, 0, Some(panel_wire(panel)))
+        }
+        Message::Aligned { node, round, panel } => {
+            (TAG_ALIGNED, *node, *round, 0, Some(panel_wire(panel)))
+        }
+        Message::Hello { node } => (TAG_HELLO, *node, 0, 0, None),
+        Message::Done => (TAG_DONE, 0, 0, 0, None),
+    };
+    put_u32(&mut buf, FRAME_MAGIC);
+    put_u32(&mut buf, msg.wire_bytes() as u32);
+    buf.push(tag);
+    buf.push(pw.as_ref().map(|p| p.codec).unwrap_or(CODEC_NONE));
+    buf.extend_from_slice(&[0u8; 2]); // reserved
+    put_u32(&mut buf, node as u32);
+    put_u32(&mut buf, round as u32);
+    put_u32(&mut buf, pw.as_ref().map(|p| p.rows).unwrap_or(0) as u32);
+    put_u32(&mut buf, pw.as_ref().map(|p| p.cols).unwrap_or(0) as u32);
+    put_u32(&mut buf, ritz_len as u32);
+    debug_assert_eq!(buf.len(), HEADER_BYTES);
+    if let Some(pw) = &pw {
+        put_panel_payload(&mut buf, pw.panel);
+    }
+    if let Message::LocalEstimate { ritz, .. } = msg {
+        put_f64s(&mut buf, ritz);
+    }
+    debug_assert_eq!(buf.len(), msg.wire_bytes(), "frame size must equal wire_bytes");
+    buf
+}
+
+/// Decode one complete frame (`frame.len()` must equal its `frame_len`).
+fn decode_frame(frame: &[u8]) -> Result<Message, FrameError> {
+    debug_assert!(frame.len() >= HEADER_BYTES);
+    let tag = frame[8];
+    let codec = frame[9];
+    let node = get_u32(frame, 12) as usize;
+    let round = get_u32(frame, 16) as usize;
+    let rows = get_u32(frame, 20) as usize;
+    let cols = get_u32(frame, 24) as usize;
+    let ritz_len = get_u32(frame, 28) as usize;
+    let body = &frame[HEADER_BYTES..];
+
+    // ritz values only ride on LocalEstimate frames
+    if tag != TAG_LOCAL && ritz_len != 0 {
+        return Err(FrameError::Malformed("ritz values on a non-estimate frame"));
+    }
+    let ritz_bytes = 8usize
+        .checked_mul(ritz_len)
+        .filter(|&b| b <= body.len())
+        .ok_or(FrameError::Malformed("ritz length exceeds frame"))?;
+    let panel_bytes = body.len() - ritz_bytes;
+    let panel_body = &body[..panel_bytes];
+
+    let decode_panel = || -> Result<WirePanel, FrameError> {
+        // entry counts as u128 so adversarial rows/cols cannot overflow
+        let entries = (rows as u128) * (cols as u128);
+        match codec {
+            CODEC_F64 => {
+                if (panel_bytes as u128) != 8 * entries {
+                    return Err(FrameError::Malformed("f64 payload size mismatch"));
+                }
+                Ok(WirePanel::F64(Mat::from_vec(rows, cols, get_f64s(panel_body, rows * cols))))
+            }
+            CODEC_F16 | CODEC_INT8 => {
+                let (wire_codec, per_entry) = if codec == CODEC_F16 {
+                    (Codec::F16, 2u128)
+                } else {
+                    (Codec::Int8, 1u128)
+                };
+                if panel_bytes < 16 || (panel_bytes as u128 - 16) != per_entry * entries {
+                    return Err(FrameError::Malformed("quantized payload size mismatch"));
+                }
+                Ok(WirePanel::Quant(QuantizedPanel {
+                    rows,
+                    cols,
+                    codec: wire_codec,
+                    lo: get_f64(panel_body, 0),
+                    hi: get_f64(panel_body, 8),
+                    data: panel_body[16..].to_vec(),
+                }))
+            }
+            CODEC_FD => {
+                // payload is the (l', rows) sketch; l' is derived
+                if rows == 0 || panel_bytes % (8 * rows) != 0 {
+                    return Err(FrameError::Malformed("fd sketch payload size mismatch"));
+                }
+                let l = panel_bytes / (8 * rows);
+                Ok(WirePanel::Fd {
+                    rows,
+                    cols,
+                    sketch: Mat::from_vec(l, rows, get_f64s(panel_body, l * rows)),
+                })
+            }
+            other => Err(FrameError::BadCodec(other)),
+        }
+    };
+
+    match tag {
+        TAG_LOCAL => Ok(Message::LocalEstimate {
+            node,
+            panel: decode_panel()?,
+            ritz: get_f64s(&body[panel_bytes..], ritz_len),
+        }),
+        TAG_REFERENCE => {
+            if ritz_bytes != 0 {
+                return Err(FrameError::Malformed("ritz values on a reference frame"));
+            }
+            Ok(Message::Reference { round, panel: decode_panel()? })
+        }
+        TAG_ALIGNED => Ok(Message::Aligned { node, round, panel: decode_panel()? }),
+        TAG_HELLO | TAG_DONE => {
+            if !panel_body.is_empty() || codec != CODEC_NONE {
+                return Err(FrameError::Malformed("payload on a control frame"));
+            }
+            Ok(if tag == TAG_HELLO { Message::Hello { node } } else { Message::Done })
+        }
+        other => Err(FrameError::BadTag(other)),
+    }
+}
+
+/// Incremental frame parser: feed arbitrary byte chunks (split, coalesced
+/// or interleaved reads), pull complete messages. A detected error is
+/// sticky — the stream is unrecoverable past a bad header.
+#[derive(Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    poisoned: bool,
+}
+
+impl FrameDecoder {
+    pub fn new() -> Self {
+        FrameDecoder::default()
+    }
+
+    /// Append raw bytes from the stream.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed as frames.
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Try to decode the next complete frame. `Ok(None)` means more bytes
+    /// are needed; errors are permanent for this stream.
+    pub fn try_next(&mut self) -> Result<Option<Message>, FrameError> {
+        if self.poisoned {
+            return Err(FrameError::Malformed("stream already failed"));
+        }
+        // validate eagerly: magic as soon as 4 bytes exist, the length
+        // as soon as 8 do — garbage fails fast instead of buffering
+        if self.buf.len() >= 4 {
+            let magic = get_u32(&self.buf, 0);
+            if magic != FRAME_MAGIC {
+                self.poisoned = true;
+                return Err(FrameError::BadMagic(magic));
+            }
+        }
+        if self.buf.len() < 8 {
+            return Ok(None);
+        }
+        let frame_len = get_u32(&self.buf, 4) as usize;
+        if frame_len > MAX_FRAME_BYTES {
+            self.poisoned = true;
+            return Err(FrameError::Oversized(frame_len));
+        }
+        if frame_len < HEADER_BYTES {
+            self.poisoned = true;
+            return Err(FrameError::Undersized(frame_len));
+        }
+        if self.buf.len() < frame_len {
+            return Ok(None);
+        }
+        let rest = self.buf.split_off(frame_len);
+        let frame = std::mem::replace(&mut self.buf, rest);
+        match decode_frame(&frame) {
+            Ok(msg) => Ok(Some(msg)),
+            Err(e) => {
+                self.poisoned = true;
+                Err(e)
+            }
+        }
+    }
+}
+
+/// Blocking message reader over any byte stream.
+pub struct FrameReader<R: Read> {
+    inner: R,
+    dec: FrameDecoder,
+}
+
+impl<R: Read> FrameReader<R> {
+    pub fn new(inner: R) -> Self {
+        FrameReader { inner, dec: FrameDecoder::new() }
+    }
+
+    /// Read until one complete message is available. EOF between frames
+    /// is [`TransportError::Eof`]; EOF inside a frame is a truncation
+    /// ([`FrameError::Malformed`]).
+    pub fn read_message(&mut self) -> Result<Message, TransportError> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            if let Some(msg) = self.dec.try_next()? {
+                return Ok(msg);
+            }
+            let n = self.inner.read(&mut chunk)?;
+            if n == 0 {
+                return if self.dec.pending() == 0 {
+                    Err(TransportError::Eof)
+                } else {
+                    Err(FrameError::Malformed("stream truncated mid-frame").into())
+                };
+            }
+            self.dec.push(&chunk[..n]);
+        }
+    }
+}
+
+/// Write one message as a frame.
+pub fn write_frame<W: Write>(w: &mut W, msg: &Message) -> std::io::Result<()> {
+    w.write_all(&encode_message(msg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::WireCodec;
+    use crate::rng::Pcg64;
+
+    fn every_codec() -> Vec<WireCodec> {
+        vec![WireCodec::F64, WireCodec::F16, WireCodec::Int8, WireCodec::FdSketch { l: 4 }]
+    }
+
+    fn sample_messages() -> Vec<Message> {
+        let mut rng = Pcg64::seed(31);
+        let panel = rng.haar_stiefel(12, 3);
+        let mut out = vec![Message::Done, Message::Hello { node: 7 }];
+        for codec in every_codec() {
+            out.push(Message::LocalEstimate {
+                node: 5,
+                panel: codec.encode(&panel),
+                ritz: vec![1.25, 0.5, -0.75],
+            });
+            out.push(Message::Reference { round: 2, panel: codec.encode(&panel) });
+            out.push(Message::Aligned { node: 3, round: 2, panel: codec.encode(&panel) });
+        }
+        out
+    }
+
+    fn assert_messages_equal(a: &Message, b: &Message) {
+        match (a, b) {
+            (
+                Message::LocalEstimate { node: n1, panel: p1, ritz: r1 },
+                Message::LocalEstimate { node: n2, panel: p2, ritz: r2 },
+            ) => {
+                assert_eq!(n1, n2);
+                assert_eq!(r1, r2);
+                assert_panels_equal(p1, p2);
+            }
+            (
+                Message::Reference { round: r1, panel: p1 },
+                Message::Reference { round: r2, panel: p2 },
+            ) => {
+                assert_eq!(r1, r2);
+                assert_panels_equal(p1, p2);
+            }
+            (
+                Message::Aligned { node: n1, round: r1, panel: p1 },
+                Message::Aligned { node: n2, round: r2, panel: p2 },
+            ) => {
+                assert_eq!(n1, n2);
+                assert_eq!(r1, r2);
+                assert_panels_equal(p1, p2);
+            }
+            (Message::Hello { node: n1 }, Message::Hello { node: n2 }) => assert_eq!(n1, n2),
+            (Message::Done, Message::Done) => {}
+            (x, y) => panic!("message kind changed in transit: {x:?} vs {y:?}"),
+        }
+    }
+
+    fn assert_panels_equal(a: &WirePanel, b: &WirePanel) {
+        assert_eq!(a.shape(), b.shape());
+        assert_eq!(a.wire_bytes(), b.wire_bytes());
+        match (a, b) {
+            (WirePanel::F64(x), WirePanel::F64(y)) => assert_eq!(x, y),
+            (WirePanel::Quant(x), WirePanel::Quant(y)) => {
+                assert_eq!(x.codec, y.codec);
+                assert_eq!(x.data, y.data);
+                assert_eq!(x.lo, y.lo);
+                assert_eq!(x.hi, y.hi);
+            }
+            (WirePanel::Fd { sketch: x, .. }, WirePanel::Fd { sketch: y, .. }) => {
+                assert_eq!(x, y)
+            }
+            (x, y) => panic!("panel kind changed in transit: {x:?} vs {y:?}"),
+        }
+    }
+
+    #[test]
+    fn encoded_size_equals_wire_bytes_for_every_variant() {
+        for msg in sample_messages() {
+            let frame = encode_message(&msg);
+            assert_eq!(frame.len(), msg.wire_bytes(), "{msg:?}");
+        }
+    }
+
+    #[test]
+    fn round_trip_through_one_push() {
+        for msg in sample_messages() {
+            let mut dec = FrameDecoder::new();
+            dec.push(&encode_message(&msg));
+            let back = dec.try_next().unwrap().expect("complete frame");
+            assert_messages_equal(&msg, &back);
+            assert_eq!(dec.pending(), 0);
+            assert!(dec.try_next().unwrap().is_none());
+        }
+    }
+
+    #[test]
+    fn split_reads_byte_by_byte() {
+        for msg in sample_messages() {
+            let frame = encode_message(&msg);
+            let mut dec = FrameDecoder::new();
+            let mut got = None;
+            for b in &frame {
+                dec.push(std::slice::from_ref(b));
+                if let Some(m) = dec.try_next().unwrap() {
+                    got = Some(m);
+                }
+            }
+            assert_messages_equal(&msg, &got.expect("message after final byte"));
+        }
+    }
+
+    #[test]
+    fn coalesced_and_interleaved_reads() {
+        // all sample messages concatenated into one buffer, then re-chunked
+        // at awkward boundaries
+        let msgs = sample_messages();
+        let mut stream = Vec::new();
+        for m in &msgs {
+            stream.extend_from_slice(&encode_message(m));
+        }
+        for chunk_size in [1usize, 3, 7, 32, 33, 1024, stream.len()] {
+            let mut dec = FrameDecoder::new();
+            let mut got = Vec::new();
+            for chunk in stream.chunks(chunk_size) {
+                dec.push(chunk);
+                while let Some(m) = dec.try_next().unwrap() {
+                    got.push(m);
+                }
+            }
+            assert_eq!(got.len(), msgs.len(), "chunk size {chunk_size}");
+            for (a, b) in msgs.iter().zip(&got) {
+                assert_messages_equal(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn garbage_bytes_error_immediately() {
+        let mut dec = FrameDecoder::new();
+        dec.push(&[0xde, 0xad, 0xbe, 0xef, 0x01]);
+        match dec.try_next() {
+            Err(FrameError::BadMagic(_)) => {}
+            other => panic!("expected BadMagic, got {other:?}"),
+        }
+        // the failure is sticky
+        assert!(dec.try_next().is_err());
+    }
+
+    #[test]
+    fn oversized_length_header_rejected_before_buffering() {
+        let mut frame = encode_message(&Message::Done);
+        frame[4..8].copy_from_slice(&(u32::MAX).to_le_bytes());
+        let mut dec = FrameDecoder::new();
+        dec.push(&frame[..8]);
+        match dec.try_next() {
+            Err(FrameError::Oversized(n)) => assert_eq!(n, u32::MAX as usize),
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn undersized_length_header_rejected() {
+        let mut frame = encode_message(&Message::Done);
+        frame[4..8].copy_from_slice(&4u32.to_le_bytes());
+        let mut dec = FrameDecoder::new();
+        dec.push(&frame);
+        match dec.try_next() {
+            Err(FrameError::Undersized(4)) => {}
+            other => panic!("expected Undersized, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_frames_are_incomplete_not_errors() {
+        // a prefix of a valid frame never errors from the push parser —
+        // it is indistinguishable from a slow sender; blocking readers
+        // turn EOF-mid-frame into a typed error instead
+        for msg in sample_messages() {
+            let frame = encode_message(&msg);
+            let mut cuts = vec![4usize, 8, frame.len() - 1];
+            if frame.len() > HEADER_BYTES {
+                cuts.push(HEADER_BYTES);
+            }
+            for cut in cuts {
+                let mut dec = FrameDecoder::new();
+                dec.push(&frame[..cut]);
+                assert!(dec.try_next().unwrap().is_none(), "cut at {cut} of {msg:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn eof_mid_frame_is_a_typed_error() {
+        let frame = encode_message(&sample_messages()[2]);
+        let cut = &frame[..frame.len() - 3];
+        let mut reader = FrameReader::new(cut);
+        match reader.read_message() {
+            Err(TransportError::Frame(FrameError::Malformed(_))) => {}
+            other => panic!("expected truncation error, got {other:?}"),
+        }
+        // clean EOF between frames is Eof, not an error with bytes pending
+        let mut reader = FrameReader::new(&[][..]);
+        match reader.read_message() {
+            Err(TransportError::Eof) => {}
+            other => panic!("expected Eof, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn payload_size_mismatches_are_typed_errors_for_every_codec() {
+        for codec in every_codec() {
+            let mut rng = Pcg64::seed(5);
+            let panel = rng.haar_stiefel(10, 2);
+            let msg = Message::Reference { round: 1, panel: codec.encode(&panel) };
+            let mut frame = encode_message(&msg);
+            // lie about the panel shape: rows := rows + 1
+            let rows = get_u32(&frame, 20);
+            frame[20..24].copy_from_slice(&(rows + 1).to_le_bytes());
+            let mut dec = FrameDecoder::new();
+            dec.push(&frame);
+            match dec.try_next() {
+                Err(FrameError::Malformed(_)) => {}
+                other => panic!("{}: expected Malformed, got {other:?}", codec.name()),
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_tag_and_codec_bytes_are_typed_errors() {
+        let mut frame = encode_message(&Message::Done);
+        frame[8] = 200;
+        let mut dec = FrameDecoder::new();
+        dec.push(&frame);
+        match dec.try_next() {
+            Err(FrameError::BadTag(200)) => {}
+            other => panic!("expected BadTag, got {other:?}"),
+        }
+
+        let mut rng = Pcg64::seed(6);
+        let panel = rng.haar_stiefel(8, 2);
+        let mut frame =
+            encode_message(&Message::Reference { round: 0, panel: WireCodec::F64.encode(&panel) });
+        frame[9] = 99;
+        let mut dec = FrameDecoder::new();
+        dec.push(&frame);
+        match dec.try_next() {
+            Err(FrameError::BadCodec(99)) => {}
+            other => panic!("expected BadCodec, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn frame_reader_round_trips_over_a_byte_stream() {
+        let msgs = sample_messages();
+        let mut stream = Vec::new();
+        for m in &msgs {
+            write_frame(&mut stream, m).unwrap();
+        }
+        let mut reader = FrameReader::new(&stream[..]);
+        for m in &msgs {
+            let back = reader.read_message().unwrap();
+            assert_messages_equal(m, &back);
+        }
+        match reader.read_message() {
+            Err(TransportError::Eof) => {}
+            other => panic!("expected Eof at stream end, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decoded_panels_decode_to_the_same_matrix() {
+        // the frame codec must be transparent: decode() after transit
+        // equals decode() before transit, for every wire codec
+        let mut rng = Pcg64::seed(8);
+        let panel = rng.haar_stiefel(16, 4);
+        for codec in every_codec() {
+            let msg = Message::Reference { round: 0, panel: codec.encode(&panel) };
+            let mut dec = FrameDecoder::new();
+            dec.push(&encode_message(&msg));
+            let Some(Message::Reference { panel: back, .. }) = dec.try_next().unwrap() else {
+                panic!("wrong message kind");
+            };
+            let (a, b) = (msg_panel(&msg).decode(), back.decode());
+            assert_eq!(a, b, "{} decode changed in transit", codec.name());
+        }
+    }
+
+    fn msg_panel(m: &Message) -> &WirePanel {
+        match m {
+            Message::Reference { panel, .. } => panel,
+            _ => unreachable!(),
+        }
+    }
+}

@@ -10,6 +10,7 @@ pub mod common;
 mod figs_apps;
 mod figs_intdim;
 mod figs_pca;
+mod netfault;
 mod tables;
 mod wire;
 
@@ -18,10 +19,10 @@ use anyhow::{anyhow, Result};
 use crate::config::RunOptions;
 
 /// Every runnable experiment: the paper's figures/tables in paper order,
-/// plus the wire-codec sweep this reproduction adds.
+/// plus the wire-codec and fault-schedule sweeps this reproduction adds.
 pub const ALL: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9",
-    "fig10", "table1", "table2", "wire",
+    "fig10", "table1", "table2", "wire", "faults",
 ];
 
 /// Dispatch a single experiment by name.
@@ -41,6 +42,7 @@ pub fn run(name: &str, opts: &RunOptions) -> Result<()> {
         "table1" => tables::table1(opts),
         "table2" => figs_apps::table2(opts),
         "wire" => wire::wire(opts),
+        "faults" => netfault::faults(opts),
         "all" => {
             for n in ALL {
                 println!("\n================ {n} ================");

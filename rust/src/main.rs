@@ -4,9 +4,11 @@
 //! - `exp <fig1..fig10|table1|table2|all> [--quick] [--seed S] [--out DIR]
 //!   [--trials T]` — regenerate a paper figure/table (CSV + console table).
 //! - `cluster [--m M] [--n N] [--d D] [--r R] [--refine K] [--pjrt]
-//!   [--byzantine B] [--median]` — run the threaded leader/worker
-//!   coordinator on a synthetic distributed-PCA workload and report
-//!   accuracy + communication accounting.
+//!   [--byzantine B] [--median] [--transport local|tcp] [--quorum Q]
+//!   [--faults SPEC] [--grace MS] [--straggler MS]` — run the
+//!   leader/worker coordinator on a synthetic distributed-PCA workload
+//!   (in-process or over loopback TCP, optionally under a deterministic
+//!   fault schedule) and report accuracy + communication accounting.
 //! - `info` — version, artifact manifest, PJRT platform.
 
 use std::process::ExitCode;
@@ -14,8 +16,8 @@ use std::sync::Arc;
 
 use deigen::config::{Cli, RunOptions};
 use deigen::coordinator::{
-    run_cluster, AggregationRule, ClusterConfig, NetworkModel, NodeBehavior, Shard,
-    WireCodec, WorkerData,
+    run_cluster_faulty, run_cluster_tcp, AggregationRule, ClusterConfig, FaultPlan,
+    FaultRunConfig, NetworkModel, NodeBehavior, Shard, WireCodec, WorkerData,
 };
 use deigen::linalg::subspace::dist2;
 use deigen::rng::Pcg64;
@@ -26,12 +28,15 @@ const USAGE: &str = "usage:
   deigen exp <name|all> [--quick] [--seed S] [--out DIR] [--trials T]
   deigen cluster [--m M] [--n N] [--d D] [--r R] [--refine K] [--pjrt]
                  [--byzantine B] [--median] [--wan] [--seed S]
-                 [--codec f64|f16|int8|fd<l>]
+                 [--codec f64|f16|int8|fd<l>] [--transport local|tcp]
+                 [--quorum Q] [--faults SPEC] [--grace MS] [--straggler MS]
   deigen plot <csv> [--x COL] [--y COL[,COL..]] [--group COL[,COL..]]
               [--linear-x] [--linear-y]
   deigen info
 experiments: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 table1
-             table2 wire";
+             table2 wire faults
+fault spec:  clean|lossy|laggy|chaos or clauses drop=P, delay=P:MS, dup=P,
+             slow=N:MS, crash=N@R, join=N@R, part=A-B@R:K, retries=K, rto=MS";
 
 fn main() -> ExitCode {
     match real_main() {
@@ -80,9 +85,24 @@ fn cluster_demo(cli: &Cli) -> anyhow::Result<()> {
     let seed = cli.get_u64("seed", 20200504).map_err(|e| anyhow::anyhow!(e))?;
     let codec = WireCodec::parse(&cli.get_str("codec", "f64"))
         .map_err(|e| anyhow::anyhow!(e))?;
+    let transport = cli.get_str("transport", "local");
+    anyhow::ensure!(
+        transport == "local" || transport == "tcp",
+        "--transport must be local or tcp, got '{transport}'"
+    );
+    let quorum = cli.get_usize("quorum", m).map_err(|e| anyhow::anyhow!(e))?;
+    let faults = cli.get_str("faults", "none");
+    let plan = FaultPlan::parse(&faults).map_err(|e| anyhow::anyhow!(e))?.seeded(seed);
+    let fc = FaultRunConfig {
+        plan,
+        quorum,
+        grace_ms: cli.get_f64("grace", 0.0).map_err(|e| anyhow::anyhow!(e))?,
+        straggler_ms: cli.get_f64("straggler", 0.0).map_err(|e| anyhow::anyhow!(e))?,
+    };
 
     println!(
-        "cluster: m={m} n={n} d={d} r={r} refine={refine} byzantine={byz} codec={} engine={}",
+        "cluster: m={m} n={n} d={d} r={r} refine={refine} byzantine={byz} codec={} engine={} \
+         transport={transport} quorum={quorum} faults={faults}",
         codec.name(),
         if use_pjrt { "pjrt" } else { "native" }
     );
@@ -143,7 +163,11 @@ fn cluster_demo(cli: &Cli) -> anyhow::Result<()> {
     };
 
     let t0 = std::time::Instant::now();
-    let res = run_cluster(workers, solver, &config);
+    let res = if transport == "tcp" {
+        run_cluster_tcp(workers, solver, &config, &fc)?
+    } else {
+        run_cluster_faulty(workers, solver, &config, &fc)
+    };
     let wall = t0.elapsed();
 
     println!("estimate dist2 to truth: {:.4}", dist2(&res.estimate, &truth));
@@ -159,6 +183,19 @@ fn cluster_demo(cli: &Cli) -> anyhow::Result<()> {
         res.comm.msgs_ctrl,
         res.sim_time_s,
         wall,
+    );
+    println!(
+        "faults: retries={} dropped={} dups={} timeouts={} late_merged={} stall={:.1}ms; \
+         quorum {} in-window, {} late, {} lost",
+        res.comm.msgs_retry,
+        res.comm.msgs_dropped,
+        res.comm.msgs_dup,
+        res.comm.timeouts,
+        res.comm.late_merged,
+        res.comm.stall_us as f64 / 1000.0,
+        res.in_quorum.len(),
+        res.late_merged.len(),
+        res.lost.len(),
     );
     Ok(())
 }

@@ -1,0 +1,153 @@
+//! Deterministic fault-schedule property suite (DESIGN.md S14): for
+//! seeded drop/delay/duplicate/partition schedules at m ∈ {4, 8, 16},
+//! quorum rounds must recover sin-Θ within `tol::STAT` of the
+//! full-participation run, the byte/message meters must reconcile
+//! *exactly* with the transcript across retries and duplicates, and
+//! replaying the same plan seed must yield bit-identical transcripts.
+
+use std::sync::Arc;
+
+use deigen::coordinator::fault::Partition;
+use deigen::coordinator::{
+    run_cluster_faulty, ClusterConfig, FaultPlan, FaultRunConfig, FaultyClusterResult,
+    LinkDir, WorkerData,
+};
+use deigen::linalg::subspace::dist2;
+use deigen::linalg::Mat;
+use deigen::rng::Pcg64;
+use deigen::runtime::NativeEngine;
+use deigen::synth::{CovModel, SpectrumModel};
+use deigen::testkit::{check, tol};
+
+fn pca_workers(seed: u64, d: usize, r: usize, m: usize, n: usize) -> (Mat, Vec<WorkerData>) {
+    let mut rng = Pcg64::seed(seed);
+    let model = SpectrumModel::M1 { r, lambda_lo: 0.5, lambda_hi: 1.0, delta: 0.2 };
+    let cov = CovModel::draw(&model, d, &mut rng);
+    let workers = (0..m)
+        .map(|i| {
+            WorkerData::dense(CovModel::empirical_cov(&cov.sample(n, &mut rng.split(i as u64))))
+        })
+        .collect();
+    (cov.principal_subspace(), workers)
+}
+
+fn lossy_plan(seed: u64) -> FaultPlan {
+    FaultPlan {
+        drop_p: 0.15,
+        delay_p: 0.3,
+        delay_ms: 30.0,
+        dup_p: 0.1,
+        ..FaultPlan::default()
+    }
+    .seeded(seed)
+}
+
+fn run(m: usize, seed: u64, fc: &FaultRunConfig, refine: usize) -> (f64, FaultyClusterResult) {
+    let (truth, workers) = pca_workers(seed, 24, 3, m, 200);
+    let cfg = ClusterConfig { r: 3, refine_rounds: refine, seed, ..Default::default() };
+    let res = run_cluster_faulty(workers, Arc::new(NativeEngine::default()), &cfg, fc);
+    (dist2(&res.estimate, &truth), res)
+}
+
+/// Quorum rounds under a lossy schedule stay within `tol::STAT` of full
+/// participation, for every swept cluster size.
+#[test]
+fn quorum_recovers_full_participation_accuracy_at_every_m() {
+    for &m in &[4usize, 8, 16] {
+        let seed = 40 + m as u64;
+        let fc = FaultRunConfig {
+            plan: lossy_plan(seed),
+            quorum: m - 1,
+            grace_ms: 5.0,
+            straggler_ms: 1000.0,
+        };
+        let (dist, res) = run(m, seed, &fc, 0);
+        let (full_dist, full) = run(m, seed, &FaultRunConfig::full(m), 0);
+        check::assert_orthonormal(&res.estimate, tol::FACTOR, "quorum estimate");
+        assert!(dist < tol::STAT, "m={m}: quorum sin-theta {dist}");
+        assert!(
+            (dist - full_dist).abs() < tol::STAT,
+            "m={m}: quorum {dist} vs full {full_dist}"
+        );
+        assert!(dist2(&res.estimate, &full.estimate) < tol::STAT, "m={m}: estimates diverge");
+        // the schedule actually bit: some wire-level fault fired
+        let perturbed = res.comm.msgs_retry + res.comm.msgs_dup + res.comm.timeouts;
+        assert!(perturbed > 0, "m={m}: schedule too tame to test anything");
+    }
+}
+
+/// The `CommStats` meters and the transcript are two independent
+/// accountings of the same wire events; they must agree *exactly*,
+/// including every retransmission, duplicate, and timeout. Snapshot
+/// retry/drop/dup/timeout meters are cross-direction totals, so they
+/// reconcile against counts(Up) + counts(Down).
+#[test]
+fn meters_reconcile_exactly_with_the_transcript() {
+    for &m in &[4usize, 8, 16] {
+        let seed = 80 + m as u64;
+        let fc = FaultRunConfig {
+            plan: lossy_plan(seed),
+            quorum: m - 1,
+            grace_ms: 5.0,
+            straggler_ms: 1000.0,
+        };
+        let (_, res) = run(m, seed, &fc, 2);
+        let up = res.transcript.counts(LinkDir::Up);
+        let down = res.transcript.counts(LinkDir::Down);
+        assert_eq!(up.msgs, res.comm.msgs_up, "m={m} up msgs");
+        assert_eq!(up.bytes, res.comm.bytes_up, "m={m} up bytes");
+        assert_eq!(down.msgs, res.comm.msgs_down, "m={m} down msgs");
+        assert_eq!(down.bytes, res.comm.bytes_down, "m={m} down bytes");
+        assert_eq!(up.retries + down.retries, res.comm.msgs_retry, "m={m} retries");
+        assert_eq!(up.dropped + down.dropped, res.comm.msgs_dropped, "m={m} drops");
+        assert_eq!(up.dups + down.dups, res.comm.msgs_dup, "m={m} dups");
+        assert_eq!(up.timeouts + down.timeouts, res.comm.timeouts, "m={m} timeouts");
+    }
+}
+
+/// Replaying the same plan seed yields a bit-identical transcript,
+/// meters, and estimate; a different seed yields a different transcript.
+#[test]
+fn same_seed_replays_bit_identically_different_seed_does_not() {
+    let m = 8usize;
+    let fc = |plan_seed: u64| FaultRunConfig {
+        plan: lossy_plan(plan_seed),
+        quorum: m - 1,
+        grace_ms: 5.0,
+        straggler_ms: 500.0,
+    };
+    let (_, a) = run(m, 7, &fc(123), 2);
+    let (_, b) = run(m, 7, &fc(123), 2);
+    assert!(!a.transcript.events.is_empty());
+    assert_eq!(a.transcript, b.transcript);
+    assert_eq!(a.comm, b.comm);
+    assert_eq!(a.in_quorum, b.in_quorum);
+    assert_eq!(a.late_merged, b.late_merged);
+    assert_eq!(a.lost, b.lost);
+    assert!(a.estimate.sub(&b.estimate).max_abs() == 0.0, "estimate not bit-identical");
+    let (_, c) = run(m, 7, &fc(124), 2);
+    assert_ne!(a.transcript, c.transcript, "different plan seeds produced equal transcripts");
+}
+
+/// A leader-side partition blacks out a node range for a window of
+/// rounds: their messages time out (metered), the quorum proceeds
+/// without them, and accuracy holds.
+#[test]
+fn partition_window_times_out_but_quorum_proceeds() {
+    let m = 8usize;
+    let seed = 11u64;
+    let plan = FaultPlan {
+        partitions: vec![Partition { lo: 1, hi: 2, round: 0, rounds: 1 }],
+        ..FaultPlan::default()
+    }
+    .seeded(seed);
+    let fc = FaultRunConfig { plan, quorum: m - 2, grace_ms: 0.0, straggler_ms: 0.0 };
+    let (dist, res) = run(m, seed, &fc, 0);
+    // nodes 1 and 2 lose every round-0 attempt: one timeout each, every
+    // attempt (first send + retries) metered as a drop
+    assert_eq!(res.comm.timeouts, 2);
+    assert_eq!(res.comm.msgs_dropped, 2 * (deigen::coordinator::fault::DEFAULT_RETRIES + 1));
+    assert!(res.lost.contains(&1) && res.lost.contains(&2));
+    assert_eq!(res.in_quorum.len(), m - 2);
+    assert!(dist < tol::STAT, "partitioned quorum sin-theta {dist}");
+}

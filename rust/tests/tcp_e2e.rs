@@ -1,0 +1,126 @@
+//! Loopback-TCP integration tests (tier-1): end-to-end Algorithm 1 over
+//! real sockets — length-prefixed frames, real worker threads — with one
+//! injected crash and one delayed straggler, checked against the
+//! in-process engine (bit-identical estimate, meters, and transcript)
+//! and against the full-participation sin-Θ within `tol::STAT`. Skips
+//! gracefully where loopback sockets are unavailable.
+
+use std::sync::Arc;
+
+use deigen::coordinator::{
+    run_cluster_faulty, run_cluster_tcp, ClusterConfig, FaultPlan, FaultRunConfig, WorkerData,
+};
+use deigen::linalg::subspace::dist2;
+use deigen::linalg::Mat;
+use deigen::rng::Pcg64;
+use deigen::runtime::NativeEngine;
+use deigen::synth::{CovModel, SpectrumModel};
+use deigen::testkit::{check, tol};
+
+fn pca_workers(seed: u64, d: usize, r: usize, m: usize, n: usize) -> (Mat, Vec<WorkerData>) {
+    let mut rng = Pcg64::seed(seed);
+    let model = SpectrumModel::M1 { r, lambda_lo: 0.5, lambda_hi: 1.0, delta: 0.2 };
+    let cov = CovModel::draw(&model, d, &mut rng);
+    let workers = (0..m)
+        .map(|i| {
+            WorkerData::dense(CovModel::empirical_cov(&cov.sample(n, &mut rng.split(i as u64))))
+        })
+        .collect();
+    (cov.principal_subspace(), workers)
+}
+
+/// Loopback sockets can be unavailable in sandboxed environments; a bind
+/// failure skips the test rather than failing it.
+fn sockets_available() -> bool {
+    match std::net::TcpListener::bind("127.0.0.1:0") {
+        Ok(_) => true,
+        Err(e) => {
+            eprintln!("skipping TCP e2e: loopback unavailable ({e})");
+            false
+        }
+    }
+}
+
+/// The acceptance scenario: quorum m−1 under one injected crash plus one
+/// delayed straggler, over real sockets. The TCP estimate must be
+/// bit-identical to the in-process engine under the same plan, and match
+/// the full-participation run within `tol::STAT`.
+#[test]
+fn tcp_e2e_crash_plus_straggler_matches_in_process_and_full_runs() {
+    if !sockets_available() {
+        return;
+    }
+    let (m, seed) = (6usize, 17u64);
+    // node 3 crashes before round 0; node 2's uploads arrive 600 virtual
+    // ms late — inside the straggler window, far outside the grace window
+    let plan = FaultPlan::parse("crash=3@0, slow=2:600").unwrap().seeded(seed);
+    let fc = FaultRunConfig { plan, quorum: m - 1, grace_ms: 150.0, straggler_ms: 5000.0 };
+    let cfg = ClusterConfig { r: 3, seed, ..Default::default() };
+
+    let (truth, workers) = pca_workers(seed, 24, 3, m, 200);
+    let tcp = run_cluster_tcp(workers, Arc::new(NativeEngine::default()), &cfg, &fc)
+        .expect("loopback TCP run failed");
+
+    // the straggler late-merged, the crashed node is lost
+    assert!(tcp.lost.contains(&3), "crashed node not lost: {:?}", tcp.lost);
+    assert_eq!(tcp.late_merged, vec![2], "straggler not late-merged");
+    assert_eq!(tcp.in_quorum.len(), m - 2);
+    check::assert_orthonormal(&tcp.estimate, tol::FACTOR, "tcp estimate");
+
+    // bit-identical to the in-process engine under the identical plan
+    let (_, workers2) = pca_workers(seed, 24, 3, m, 200);
+    let local = run_cluster_faulty(workers2, Arc::new(NativeEngine::default()), &cfg, &fc);
+    assert!(
+        tcp.estimate.sub(&local.estimate).max_abs() == 0.0,
+        "TCP vs in-process estimate not bit-identical: {}",
+        tcp.estimate.sub(&local.estimate).max_abs()
+    );
+    assert_eq!(tcp.comm, local.comm, "TCP vs in-process meters diverge");
+    assert_eq!(tcp.transcript, local.transcript, "TCP vs in-process transcripts diverge");
+    assert_eq!(tcp.in_quorum, local.in_quorum);
+    assert_eq!(tcp.late_merged, local.late_merged);
+    assert_eq!(tcp.lost, local.lost);
+
+    // and within statistical tolerance of full participation
+    let (_, workers3) = pca_workers(seed, 24, 3, m, 200);
+    let full = run_cluster_faulty(
+        workers3,
+        Arc::new(NativeEngine::default()),
+        &cfg,
+        &FaultRunConfig::full(m),
+    );
+    assert!(dist2(&tcp.estimate, &truth) < tol::STAT);
+    assert!(
+        dist2(&tcp.estimate, &full.estimate) < tol::STAT,
+        "quorum-under-faults vs full participation: {}",
+        dist2(&tcp.estimate, &full.estimate)
+    );
+}
+
+/// Refinement rounds over real sockets stay bit-identical to the
+/// in-process engine, lossy codec included (frames carry the quantized
+/// payload byte-exactly).
+#[test]
+fn tcp_refinement_with_lossy_codec_matches_in_process_engine() {
+    if !sockets_available() {
+        return;
+    }
+    let (m, seed) = (4usize, 29u64);
+    let plan = FaultPlan::parse("drop=0.1, dup=0.1, rto=5").unwrap().seeded(seed);
+    let fc = FaultRunConfig { plan, quorum: m, grace_ms: 50.0, straggler_ms: 500.0 };
+    let cfg = ClusterConfig {
+        r: 2,
+        refine_rounds: 2,
+        codec: deigen::coordinator::WireCodec::Int8,
+        seed,
+        ..Default::default()
+    };
+    let (_, workers) = pca_workers(seed, 16, 2, m, 150);
+    let tcp = run_cluster_tcp(workers, Arc::new(NativeEngine::default()), &cfg, &fc)
+        .expect("loopback TCP run failed");
+    let (_, workers2) = pca_workers(seed, 16, 2, m, 150);
+    let local = run_cluster_faulty(workers2, Arc::new(NativeEngine::default()), &cfg, &fc);
+    assert!(tcp.estimate.sub(&local.estimate).max_abs() == 0.0);
+    assert_eq!(tcp.comm, local.comm);
+    assert_eq!(tcp.transcript, local.transcript);
+}
