@@ -1,0 +1,86 @@
+//! Protocol-engine throughput bench (DESIGN.md S15): wall-clock per
+//! cluster run for each round protocol at a fixed K, on identical worker
+//! observations, f64 and int8 codecs. The spread isolates what each
+//! protocol adds on top of the shared round skeleton — qpower pays one
+//! operator apply per worker per round, sanger adds the Hebbian update
+//! GEMMs, deepca adds QR + tracking plus leader-side FastMix. Run:
+//! `cargo bench --bench bench_rounds` (add `-- --quick` to smoke,
+//! `-- --json BENCH_rounds.json` for machine-readable output; under a
+//! blanket `cargo bench`, `--json-rounds <path>` takes precedence so
+//! this bench does not clobber another target's artifact).
+
+use std::sync::Arc;
+
+use deigen::benchutil::{bench, header, quick_mode, report, JsonSink};
+use deigen::coordinator::{
+    run_cluster_faulty, ClusterConfig, FaultRunConfig, ProtocolKind, Topology, WireCodec,
+    WorkerData,
+};
+use deigen::linalg::gemm::matmul;
+use deigen::linalg::Mat;
+use deigen::rng::Pcg64;
+use deigen::runtime::NativeEngine;
+
+fn observations(seed: u64, d: usize, r: usize, m: usize, noise: f64) -> Vec<Mat> {
+    let mut rng = Pcg64::seed(seed);
+    let q = rng.haar_orthogonal(d);
+    let evs: Vec<f64> = (0..d).map(|i| if i < r { 1.0 } else { 0.3 }).collect();
+    let x = matmul(&Mat::from_fn(d, d, |i, j| q[(i, j)] * evs[j]), &q.transpose());
+    (0..m)
+        .map(|_| {
+            let mut e = rng.normal_mat(d, d).scale(noise);
+            e.symmetrize();
+            x.add(&e)
+        })
+        .collect()
+}
+
+fn main() {
+    header("rounds: protocol engine throughput per cluster run");
+    let args: Vec<String> = std::env::args().collect();
+    let json_path = ["--json-rounds", "--json"].iter().find_map(|flag| {
+        args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1)).cloned()
+    });
+    let mut sink = JsonSink::with_path(json_path);
+
+    let (d, r, m, k, iters) = if quick_mode() {
+        (32usize, 3usize, 6usize, 2usize, 3usize)
+    } else {
+        (64, 5, 16, 3, 7)
+    };
+    let obs = observations(11, d, r, m, 0.08);
+    let mk = || -> Vec<WorkerData> { obs.iter().map(|o| WorkerData::dense(o.clone())).collect() };
+    let solver = Arc::new(NativeEngine::default());
+    let fc = FaultRunConfig::full(m);
+
+    let protocols: [(&str, ProtocolKind, usize); 4] = [
+        ("oneshot", ProtocolKind::OneShot, k),
+        ("qpower", ProtocolKind::QPower { rounds: k, tol: 0.0 }, 0),
+        ("sanger", ProtocolKind::Sanger { rounds: k, step: 0.3, topology: Topology::Ring }, 0),
+        ("deepca", ProtocolKind::DeepCa { rounds: k, fastmix: 3, topology: Topology::Ring }, 0),
+    ];
+    for (name, protocol, refine) in &protocols {
+        for codec in [WireCodec::F64, WireCodec::Int8] {
+            let cfg = ClusterConfig {
+                r,
+                refine_rounds: *refine,
+                protocol: protocol.clone(),
+                codec,
+                seed: 11,
+                ..Default::default()
+            };
+            let res = bench(
+                &format!("{name:<7} {} m={m} d={d} K={k}", codec.name()),
+                1,
+                iters,
+                || {
+                    let out = run_cluster_faulty(mk(), solver.clone(), &cfg, &fc);
+                    std::hint::black_box(out.estimate);
+                },
+            );
+            report(&res);
+            sink.record(&res, None);
+        }
+    }
+    sink.finish();
+}

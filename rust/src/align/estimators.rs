@@ -153,6 +153,27 @@ pub fn aligned_average_raw(locals: &[Mat], reference: &Mat) -> Mat {
     acc
 }
 
+/// Flip each column of `panel` so its inner product with the matching
+/// `reference` column is nonnegative. QR factors are unique only up to
+/// column signs, so iterative protocols that re-orthonormalize every
+/// round (DeEPCA's gradient tracking) must pin the signs against a fixed
+/// reference or the tracked difference `C X_t - C X_{t-1}` flips
+/// arbitrarily between rounds. Zero-dot columns keep their sign.
+pub fn sign_adjust(panel: &Mat, reference: &Mat) -> Mat {
+    let (d, r) = panel.shape();
+    assert_eq!(reference.shape(), (d, r), "sign_adjust shape mismatch");
+    let mut out = panel.clone();
+    for j in 0..r {
+        let dot: f64 = (0..d).map(|i| panel[(i, j)] * reference[(i, j)]).sum();
+        if dot < 0.0 {
+            for i in 0..d {
+                out[(i, j)] = -out[(i, j)];
+            }
+        }
+    }
+    out
+}
+
 /// Procrustes rotations for a set of locals against a reference — the
 /// message the coordinator broadcasts in the parallel variant (Remark 2).
 pub fn rotations(locals: &[Mat], reference: &Mat) -> Vec<Mat> {
@@ -187,6 +208,25 @@ mod tests {
             })
             .collect();
         (truth, locals)
+    }
+
+    /// Column signs flip toward the reference, nothing else changes:
+    /// `sign_adjust` is idempotent, involution-safe (adjusting a fully
+    /// flipped panel recovers the original), and leaves aligned panels
+    /// untouched.
+    #[test]
+    fn sign_adjust_pins_column_signs() {
+        let mut rng = Pcg64::seed(17);
+        let p = rng.haar_stiefel(20, 3);
+        // flip columns 0 and 2
+        let flipped = Mat::from_fn(20, 3, |i, j| if j == 1 { p[(i, j)] } else { -p[(i, j)] });
+        let fixed = sign_adjust(&flipped, &p);
+        assert_eq!(fixed, p);
+        // already-aligned input is untouched, and the map is idempotent
+        assert_eq!(sign_adjust(&p, &p), p);
+        assert_eq!(sign_adjust(&fixed, &p), fixed);
+        // the column span never changes, only the representative
+        assert!(dist2(&fixed, &flipped) < 1e-12);
     }
 
     #[test]

@@ -7,15 +7,24 @@
 //! its own (the old thread-per-worker actors paid an OS spawn per worker
 //! per run), and each worker's GEMMs run inline inside its pool job, which
 //! is the right parallelism granularity: across workers, not within one
-//! solve. Two protocol modes:
+//! solve.
 //!
-//! - **single round** (`refine_rounds == 0`): the paper's headline
-//!   Algorithm 1 — one worker→leader panel upload, all alignment on the
-//!   leader. Communication: m uploads, 0 broadcasts.
-//! - **parallel refinement** (`refine_rounds >= 1`): Remark 2 / Algorithm 2
-//!   — the leader broadcasts a reference, workers align locally and upload
-//!   the aligned panel; repeated `refine_rounds` times with the averaged
-//!   result as the next reference.
+//! Both engines run the same protocol-agnostic round skeleton (DESIGN.md
+//! S15): round 0 is always the local solve + upload + quorum settle, and
+//! everything after is driven by the [`RoundProtocol`] selected in
+//! [`ClusterConfig::protocol`]:
+//!
+//! - **one-shot** (`ProtocolKind::OneShot`, `refine_rounds == 0`): the
+//!   paper's headline Algorithm 1 — one worker→leader panel upload, all
+//!   alignment on the leader. Communication: m uploads, 0 broadcasts.
+//!   With `refine_rounds >= 1`, Remark 2 / Algorithm 2 — the leader
+//!   broadcasts a reference, workers align locally and upload the aligned
+//!   panel; repeated `refine_rounds` times with the averaged result as
+//!   the next reference.
+//! - **iterative** (`qpower`/`sanger`/`deepca`, see `rounds`): the same
+//!   loop with protocol-specific payloads, worker steps, and merges —
+//!   including per-node (non-broadcast) down-links for the simulated
+//!   decentralized protocols.
 //!
 //! Panels still cross an explicit [`Message`] boundary: workers *encode*
 //! with the negotiated [`WireCodec`] and the leader *decodes*, in both
@@ -57,6 +66,7 @@ use crate::runtime::LocalSolver;
 use super::fault::{meter_schedule, FaultPlan, LinkDir, Transcript};
 use super::netsim::{CommSnapshot, CommStats, NetworkModel};
 use super::protocol::{AggregationRule, Message, WireCodec};
+use super::rounds::{LeaderCtx, ProtocolKind, RoundProtocol, WorkerEnv, WorkerMem};
 use super::transport::{write_frame, FrameReader};
 
 /// What a worker node actually owns — the data plane behind its
@@ -137,8 +147,12 @@ pub struct ClusterConfig {
     pub r: usize,
     /// 0 = single-round Algorithm 1 (leader-side alignment);
     /// k >= 1 = k rounds of broadcast-align-average (Algorithm 2 with
-    /// Remark-2 parallel alignment).
+    /// Remark-2 parallel alignment). Only consulted by
+    /// [`ProtocolKind::OneShot`]; iterative protocols carry their own
+    /// round counts.
     pub refine_rounds: usize,
+    /// Which multi-round protocol runs after the round-0 collect.
+    pub protocol: ProtocolKind,
     /// Mean (Algorithms 1/2) or coordinate-median (robust extension).
     pub aggregation: AggregationRule,
     /// Latency/bandwidth model for the simulated-time report.
@@ -155,6 +169,7 @@ impl Default for ClusterConfig {
         ClusterConfig {
             r: 1,
             refine_rounds: 0,
+            protocol: ProtocolKind::OneShot,
             aggregation: AggregationRule::Mean,
             network: NetworkModel::datacenter(),
             codec: WireCodec::F64,
@@ -207,6 +222,10 @@ pub struct FaultyClusterResult {
     pub local_panels: Vec<Mat>,
     /// Communication accounting, including retry/drop/dup/timeout meters.
     pub comm: CommSnapshot,
+    /// Round-indexed traffic snapshots (index 0 = the collect round);
+    /// field-wise, the payload meters sum to `comm` (control traffic is
+    /// round-less and appears only in the totals).
+    pub per_round: Vec<CommSnapshot>,
     /// Simulated communication wall-clock (includes quorum stall time).
     pub sim_time_s: f64,
     /// Canonical record of every wire event the fault plan produced;
@@ -229,15 +248,15 @@ fn aggregate(panels: &[Mat], rule: AggregationRule, reference: &Mat) -> Mat {
 }
 
 /// Per-worker state carried across protocol rounds. Each worker keeps its
-/// own seeded rng stream (bit-reproducible for any pool size) and, after
-/// round 1, its *exact* local panel — refinement aligns the exact panel,
-/// not the lossily-decoded copy the leader received.
+/// own seeded rng stream (bit-reproducible for any pool size) and its
+/// protocol memory ([`WorkerMem`]): the exact round-0 local panel plus any
+/// protocol-private slots (e.g. DeEPCA's tracked state).
 struct WorkerState {
     id: usize,
     behavior: NodeBehavior,
     shard: Shard,
     rng: Pcg64,
-    panel: Option<Mat>,
+    mem: WorkerMem,
 }
 
 fn make_states(workers: Vec<WorkerData>, seed: u64) -> Vec<WorkerState> {
@@ -249,7 +268,7 @@ fn make_states(workers: Vec<WorkerData>, seed: u64) -> Vec<WorkerState> {
             behavior: data.behavior,
             shard: data.shard,
             rng: Pcg64::seed_stream(seed, i as u64 + 1),
-            panel: None,
+            mem: WorkerMem::default(),
         })
         .collect()
 }
@@ -310,15 +329,16 @@ fn stall_us(ms: f64) -> usize {
     (ms * 1000.0).round() as usize
 }
 
-/// Round-0 outcome shared by both engines.
-struct Round0 {
+/// Round-0 outcome shared by both engines; protocols seed their leader
+/// state from it (see `rounds`).
+pub(crate) struct Round0 {
     /// In-window decoded panels, node order.
-    in_panels: Vec<Mat>,
+    pub(crate) in_panels: Vec<Mat>,
     /// In-window ∪ late decoded panels, node order.
-    local_panels: Vec<Mat>,
-    in_quorum: Vec<usize>,
-    late_merged: Vec<usize>,
-    lost: Vec<usize>,
+    pub(crate) local_panels: Vec<Mat>,
+    pub(crate) in_quorum: Vec<usize>,
+    pub(crate) late_merged: Vec<usize>,
+    pub(crate) lost: Vec<usize>,
 }
 
 /// Book the quorum outcome of round 0 into the meters and split the
@@ -329,9 +349,9 @@ fn settle_round0(split: QuorumSplit, m: usize, stats: &CommStats) -> Round0 {
         "no round-0 estimate survived the fault plan; nothing to aggregate"
     );
     for _ in &split.late {
-        stats.record_late();
+        stats.record_late(0);
     }
-    stats.add_stall_us(stall_us(split.stall_ms));
+    stats.add_stall_us(0, stall_us(split.stall_ms));
     let in_quorum: Vec<usize> = split.in_window.iter().map(|d| d.node).collect();
     let late_merged: Vec<usize> = split.late.iter().map(|d| d.node).collect();
     let lost: Vec<usize> = (0..m)
@@ -352,7 +372,7 @@ fn settle_round0(split: QuorumSplit, m: usize, stats: &CommStats) -> Round0 {
 /// Single-round (Algorithm 1) estimate under quorum semantics: aggregate
 /// the in-window panels first, then late-merge stragglers by
 /// re-aggregating the union against the quorum estimate as reference.
-fn quorum_estimate(round0: &Round0, rule: AggregationRule) -> Mat {
+pub(crate) fn quorum_estimate(round0: &Round0, rule: AggregationRule) -> Mat {
     let quorum_est = aggregate(&round0.in_panels, rule, &round0.in_panels[0]);
     if round0.late_merged.is_empty() {
         quorum_est
@@ -361,13 +381,14 @@ fn quorum_estimate(round0: &Round0, rule: AggregationRule) -> Mat {
     }
 }
 
-/// Book one refinement round's quorum outcome and return the merged
-/// (in-window ∪ late) panels in node order.
-fn settle_refine(split: QuorumSplit, stats: &CommStats) -> Vec<Mat> {
+/// Book one protocol round's quorum outcome and return the surviving
+/// (in-window ∪ late) replies in node order, tagged with their nodes so
+/// per-node protocols know which iterate each reply updates.
+fn settle_refine(split: QuorumSplit, round: usize, stats: &CommStats) -> Vec<(usize, Mat)> {
     for _ in &split.late {
-        stats.record_late();
+        stats.record_late(round);
     }
-    stats.add_stall_us(stall_us(split.stall_ms));
+    stats.add_stall_us(round, stall_us(split.stall_ms));
     let mut union: Vec<(usize, Mat)> = split
         .in_window
         .into_iter()
@@ -375,13 +396,13 @@ fn settle_refine(split: QuorumSplit, stats: &CommStats) -> Vec<Mat> {
         .map(|d| (d.node, d.panel))
         .collect();
     union.sort_by_key(|(n, _)| *n);
-    union.into_iter().map(|(_, p)| p).collect()
+    union
 }
 
 /// One refinement merge on the leader: re-align span-only codecs to the
 /// broadcast reference, then average. `None` for an empty round (the
 /// previous reference survives).
-fn merge_refined(
+pub(crate) fn merge_refined(
     mut merged: Vec<Mat>,
     codec: WireCodec,
     reference: &Mat,
@@ -467,11 +488,12 @@ pub fn run_cluster_faulty(
                     };
                     let msg = Message::LocalEstimate {
                         node: st.id,
+                        round: 0,
                         panel: codec.encode(&panel),
                         ritz: vec![],
                     };
                     *slot = Some(msg);
-                    st.panel = Some(panel);
+                    st.mem.panel = Some(panel);
                 });
                 job
             })
@@ -485,7 +507,7 @@ pub fn run_cluster_faulty(
         let Some(msg) = msg else { continue };
         let bytes = msg.wire_bytes();
         let sched = plan.link_schedule(i, LinkDir::Up, 0);
-        meter_schedule(&stats, LinkDir::Up, bytes, &sched);
+        meter_schedule(&stats, LinkDir::Up, 0, bytes, &sched);
         transcript.push_schedule(0, LinkDir::Up, i, bytes, &sched);
         if let Some(e) = sched.delivered.first() {
             let Message::LocalEstimate { panel, .. } = msg else { unreachable!() };
@@ -496,102 +518,120 @@ pub fn run_cluster_faulty(
     let split = split_quorum(deliveries, fc.quorum, fc.grace_ms, fc.straggler_ms);
     let round0 = settle_round0(split, m, &stats);
 
-    // --- alignment -------------------------------------------------------
-    let estimate = if config.refine_rounds == 0 {
-        quorum_estimate(&round0, config.aggregation)
-    } else {
-        let mut reference = round0.local_panels[0].clone();
-        for round in 1..=config.refine_rounds {
-            // broadcast the reference (encoded once, metered per link);
-            // receiving workers decode, align their exact panel, and
-            // upload the encoded result — one pool job per live worker
-            let encoded = codec.encode(&reference);
-            let ref_bytes = Message::Reference { round, panel: encoded.clone() }.wire_bytes();
-            let ref_decoded = encoded.decode();
-            let mut down_ok: Vec<Option<f64>> = vec![None; m];
-            for i in 0..m {
-                if !plan.active(i, round) {
-                    continue;
+    // --- protocol rounds -------------------------------------------------
+    // everything past round 0 is the protocol's business: the leader state
+    // decides the down-link payload(s), the protocol decides the worker
+    // compute, and the merge folds the surviving replies back in. The
+    // skeleton — metering, transcript, quorum, pool fan-out — is common.
+    let protocol = config.protocol.build(config.refine_rounds);
+    let lctx = LeaderCtx { m, aggregation: config.aggregation, codec };
+    let mut leader = protocol.init_leader(&round0, &lctx);
+    let mut last_round = 0usize;
+    for round in 1..=protocol.rounds() {
+        // broadcast protocols encode (and decode) the shared payload once,
+        // exactly like the legacy reference broadcast; per-node protocols
+        // encode each node's panel separately
+        let shared = if leader.is_broadcast() {
+            let encoded = codec.encode(leader.down(round, 0));
+            let bytes = Message::Reference { round, panel: encoded.clone() }.wire_bytes();
+            Some((encoded.decode(), bytes))
+        } else {
+            None
+        };
+        let mut down_ok: Vec<Option<f64>> = vec![None; m];
+        let mut down_panels: Vec<Option<Mat>> = (0..m).map(|_| None).collect();
+        for i in 0..m {
+            if !plan.active(i, round) {
+                continue;
+            }
+            let (decoded, bytes) = match &shared {
+                Some((decoded, bytes)) => (decoded.clone(), *bytes),
+                None => {
+                    let encoded = codec.encode(leader.down(round, i));
+                    let bytes = Message::Reference { round, panel: encoded.clone() }.wire_bytes();
+                    (encoded.decode(), bytes)
                 }
-                let sched = plan.link_schedule(i, LinkDir::Down, round);
-                meter_schedule(&stats, LinkDir::Down, ref_bytes, &sched);
-                transcript.push_schedule(round, LinkDir::Down, i, ref_bytes, &sched);
-                down_ok[i] = sched.delivered.first().map(|e| e.arrival_ms);
-            }
-            let mut replies: Vec<Option<Message>> = (0..m).map(|_| None).collect();
-            {
-                let ref_decoded = &ref_decoded;
-                let down_ok = &down_ok;
-                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = states
-                    .iter_mut()
-                    .zip(replies.iter_mut())
-                    .filter(|(st, _)| down_ok[st.id].is_some())
-                    .map(|(st, slot)| {
-                        let solver = Arc::clone(&solver);
-                        let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
-                            let d = st.shard.dim();
-                            let aligned = match st.behavior {
-                                NodeBehavior::Honest => {
-                                    if st.panel.is_none() {
-                                        // a joiner's first round: solve
-                                        // before aligning
-                                        st.panel = Some(solver.leading_subspace_op(
-                                            &st.shard,
-                                            r,
-                                            &mut st.rng,
-                                        ));
-                                    }
-                                    crate::linalg::procrustes::procrustes_align(
-                                        st.panel.as_ref().expect("panel just ensured"),
-                                        ref_decoded,
-                                    )
-                                }
-                                NodeBehavior::Byzantine => st.rng.haar_stiefel(d, r),
-                            };
-                            *slot = Some(Message::Aligned {
-                                node: st.id,
-                                round,
-                                panel: codec.encode(&aligned),
-                            });
-                        });
-                        job
-                    })
-                    .collect();
-                pool::run_scoped(jobs);
-            }
-            let mut deliveries: Vec<Delivery> = Vec::new();
-            for (i, slot) in replies.iter_mut().enumerate() {
-                let Some(d0) = down_ok[i] else { continue };
-                let reply = slot.take().expect("scheduled worker produced no reply");
-                let bytes = reply.wire_bytes();
-                let sched = plan.link_schedule(i, LinkDir::Up, round);
-                meter_schedule(&stats, LinkDir::Up, bytes, &sched);
-                transcript.push_schedule(round, LinkDir::Up, i, bytes, &sched);
-                if let Some(e) = sched.delivered.first() {
-                    let Message::Aligned { panel, .. } = reply else { unreachable!() };
-                    deliveries.push(Delivery {
-                        node: i,
-                        arrival_ms: d0 + e.arrival_ms,
-                        panel: panel.decode(),
-                    });
-                }
-            }
-            stats.bump_round();
-            let split = split_quorum(deliveries, fc.quorum, fc.grace_ms, fc.straggler_ms);
-            let merged = settle_refine(split, &stats);
-            if let Some(next) = merge_refined(merged, codec, &reference, config.aggregation) {
-                reference = next;
+            };
+            let sched = plan.link_schedule(i, LinkDir::Down, round);
+            meter_schedule(&stats, LinkDir::Down, round, bytes, &sched);
+            transcript.push_schedule(round, LinkDir::Down, i, bytes, &sched);
+            if let Some(e) = sched.delivered.first() {
+                down_ok[i] = Some(e.arrival_ms);
+                down_panels[i] = Some(decoded);
             }
         }
-        reference
-    };
+        let mut replies: Vec<Option<Message>> = (0..m).map(|_| None).collect();
+        {
+            let down_panels = &down_panels;
+            let protocol = &protocol;
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = states
+                .iter_mut()
+                .zip(replies.iter_mut())
+                .filter(|(st, _)| down_panels[st.id].is_some())
+                .map(|(st, slot)| {
+                    let solver = Arc::clone(&solver);
+                    let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                        let WorkerState { id, behavior, shard, rng, mem } = st;
+                        let d = shard.dim();
+                        let incoming =
+                            down_panels[*id].as_ref().expect("job scheduled without payload");
+                        let panel = match behavior {
+                            NodeBehavior::Honest => {
+                                let mut env = WorkerEnv {
+                                    shard: &*shard,
+                                    solver: solver.as_ref(),
+                                    r,
+                                    rng,
+                                };
+                                protocol.worker_step(mem, round, incoming, &mut env)
+                            }
+                            NodeBehavior::Byzantine => rng.haar_stiefel(d, r),
+                        };
+                        *slot = Some(Message::Aligned {
+                            node: *id,
+                            round,
+                            panel: codec.encode(&panel),
+                        });
+                    });
+                    job
+                })
+                .collect();
+            pool::run_scoped(jobs);
+        }
+        let mut deliveries: Vec<Delivery> = Vec::new();
+        for (i, slot) in replies.iter_mut().enumerate() {
+            let Some(d0) = down_ok[i] else { continue };
+            let reply = slot.take().expect("scheduled worker produced no reply");
+            let bytes = reply.wire_bytes();
+            let sched = plan.link_schedule(i, LinkDir::Up, round);
+            meter_schedule(&stats, LinkDir::Up, round, bytes, &sched);
+            transcript.push_schedule(round, LinkDir::Up, i, bytes, &sched);
+            if let Some(e) = sched.delivered.first() {
+                let Message::Aligned { panel, .. } = reply else { unreachable!() };
+                deliveries.push(Delivery {
+                    node: i,
+                    arrival_ms: d0 + e.arrival_ms,
+                    panel: panel.decode(),
+                });
+            }
+        }
+        stats.bump_round();
+        let split = split_quorum(deliveries, fc.quorum, fc.grace_ms, fc.straggler_ms);
+        let merged = settle_refine(split, round, &stats);
+        leader.merge(round, merged);
+        last_round = round;
+        if leader.converged() {
+            break;
+        }
+    }
+    let estimate = leader.into_estimate();
 
     // --- shutdown --------------------------------------------------------
     // the protocol still ends with one Done per live worker link; it is
     // control traffic, metered separately so it cannot inflate the
     // payload meters or the simulated wall-clock
     for i in 0..m {
-        if !plan.active(i, config.refine_rounds) {
+        if !plan.active(i, last_round) {
             continue;
         }
         let msg = Message::Done;
@@ -600,11 +640,13 @@ pub fn run_cluster_faulty(
     }
 
     let comm = stats.snapshot();
+    let per_round = stats.round_snapshots();
     let sim_time_s = stats.simulated_time(&config.network);
     FaultyClusterResult {
         estimate,
         local_panels: round0.local_panels,
         comm,
+        per_round,
         sim_time_s,
         transcript: transcript.canonical(),
         in_quorum: round0.in_quorum,
@@ -622,6 +664,7 @@ struct NetCtx {
     plan: FaultPlan,
     codec: WireCodec,
     r: usize,
+    protocol: Arc<dyn RoundProtocol>,
 }
 
 /// Worker-side fault-injected upload: meter and record the plan's
@@ -638,7 +681,7 @@ fn send_with_schedule(
 ) -> std::io::Result<()> {
     let bytes = msg.wire_bytes();
     let sched = ctx.plan.link_schedule(node, LinkDir::Up, round);
-    meter_schedule(&ctx.stats, LinkDir::Up, bytes, &sched);
+    meter_schedule(&ctx.stats, LinkDir::Up, round, bytes, &sched);
     ctx.transcript
         .lock()
         .expect("transcript lock")
@@ -655,8 +698,9 @@ fn send_with_schedule(
     Ok(())
 }
 
-/// One TCP worker: connect, handshake, round-0 upload, then serve
-/// Reference→Aligned rounds until `Done` or the leader hangs up. Crash
+/// One TCP worker: connect, handshake, round-0 upload, then serve the
+/// protocol's Reference→Aligned rounds until `Done` or the leader hangs
+/// up. The worker's protocol memory lives here, across rounds. Crash
 /// events make the worker leave silently, exactly when the plan says.
 fn worker_main(mut st: WorkerState, ctx: NetCtx) {
     let Ok(mut stream) = TcpStream::connect(ctx.addr) else { return };
@@ -675,10 +719,11 @@ fn worker_main(mut st: WorkerState, ctx: NetCtx) {
         };
         let msg = Message::LocalEstimate {
             node: st.id,
+            round: 0,
             panel: ctx.codec.encode(&panel),
             ritz: vec![],
         };
-        st.panel = Some(panel);
+        st.mem.panel = Some(panel);
         if send_with_schedule(&mut stream, &ctx, st.id, 0, &msg).is_err() {
             return;
         }
@@ -691,24 +736,24 @@ fn worker_main(mut st: WorkerState, ctx: NetCtx) {
                     return;
                 }
                 let d = st.shard.dim();
-                let aligned = match st.behavior {
+                let incoming = panel.decode();
+                let reply_panel = match st.behavior {
                     NodeBehavior::Honest => {
-                        if st.panel.is_none() {
-                            // a joiner's first round: solve before aligning
-                            st.panel =
-                                Some(ctx.solver.leading_subspace_op(&st.shard, ctx.r, &mut st.rng));
-                        }
-                        crate::linalg::procrustes::procrustes_align(
-                            st.panel.as_ref().expect("panel just ensured"),
-                            &panel.decode(),
-                        )
+                        let WorkerState { shard, rng, mem, .. } = &mut st;
+                        let mut env = WorkerEnv {
+                            shard: &*shard,
+                            solver: ctx.solver.as_ref(),
+                            r: ctx.r,
+                            rng,
+                        };
+                        ctx.protocol.worker_step(mem, round, &incoming, &mut env)
                     }
                     NodeBehavior::Byzantine => st.rng.haar_stiefel(d, ctx.r),
                 };
                 let reply = Message::Aligned {
                     node: st.id,
                     round,
-                    panel: ctx.codec.encode(&aligned),
+                    panel: ctx.codec.encode(&reply_panel),
                 };
                 if send_with_schedule(&mut stream, &ctx, st.id, round, &reply).is_err() {
                     return;
@@ -771,6 +816,7 @@ pub fn run_cluster_tcp(
     let r = config.r;
     let codec = config.codec;
     let plan = fc.plan.clone();
+    let protocol = config.protocol.build(config.refine_rounds);
     let stats = Arc::new(CommStats::new());
     let transcript = Arc::new(Mutex::new(Transcript::default()));
 
@@ -797,6 +843,7 @@ pub fn run_cluster_tcp(
                 plan: plan.clone(),
                 codec,
                 r,
+                protocol: Arc::clone(&protocol),
             };
             s.spawn(move || worker_main(st, ctx));
         }
@@ -875,65 +922,82 @@ pub fn run_cluster_tcp(
         let split = split_quorum(deliveries, fc.quorum, fc.grace_ms, fc.straggler_ms);
         let round0 = settle_round0(split, m, &stats);
 
-        // --- refinement over real sockets --------------------------------
-        let estimate = if config.refine_rounds == 0 {
-            quorum_estimate(&round0, config.aggregation)
-        } else {
-            let mut reference = round0.local_panels[0].clone();
-            for round in 1..=config.refine_rounds {
-                let encoded = codec.encode(&reference);
-                let ref_bytes = Message::Reference { round, panel: encoded.clone() }.wire_bytes();
-                let mut down_ok: Vec<Option<f64>> = vec![None; m];
-                for i in 0..m {
-                    if !plan.active(i, round) {
-                        continue;
-                    }
-                    let sched = plan.link_schedule(i, LinkDir::Down, round);
-                    meter_schedule(&stats, LinkDir::Down, ref_bytes, &sched);
-                    transcript
-                        .lock()
-                        .expect("transcript lock")
-                        .push_schedule(round, LinkDir::Down, i, ref_bytes, &sched);
-                    let Some(e) = sched.delivered.first() else { continue };
-                    let Some(w) = writers[i].as_mut() else { continue };
-                    let msg = Message::Reference { round, panel: encoded.clone() };
-                    if write_frame(w, &msg).is_ok() {
-                        down_ok[i] = Some(e.arrival_ms);
-                    }
+        // --- protocol rounds over real sockets ---------------------------
+        let lctx = LeaderCtx { m, aggregation: config.aggregation, codec };
+        let mut leader = protocol.init_leader(&round0, &lctx);
+        let mut last_round = 0usize;
+        for round in 1..=protocol.rounds() {
+            // broadcast protocols reuse one encoded frame; per-node
+            // protocols encode each node's panel — the receiving worker
+            // decodes either way, so both engines feed worker_step the
+            // decode of the very same encoded panel
+            let shared = if leader.is_broadcast() {
+                let encoded = codec.encode(leader.down(round, 0));
+                let bytes = Message::Reference { round, panel: encoded.clone() }.wire_bytes();
+                Some((encoded, bytes))
+            } else {
+                None
+            };
+            let mut down_ok: Vec<Option<f64>> = vec![None; m];
+            for i in 0..m {
+                if !plan.active(i, round) {
+                    continue;
                 }
-                let expected: usize = (0..m)
-                    .filter(|&i| down_ok[i].is_some())
-                    .map(|i| plan.link_schedule(i, LinkDir::Up, round).delivered.len())
-                    .sum();
-                let mut got: Vec<Option<Mat>> = (0..m).map(|_| None).collect();
-                collect_expected(&rx, expected, deadline, &mut got, |node, msg| match msg {
-                    Message::Aligned { round: rr, panel, .. } if rr == round => {
-                        Some((node, panel.decode()))
+                let (encoded, bytes) = match &shared {
+                    Some((encoded, bytes)) => (encoded.clone(), *bytes),
+                    None => {
+                        let enc = codec.encode(leader.down(round, i));
+                        let bytes = Message::Reference { round, panel: enc.clone() }.wire_bytes();
+                        (enc, bytes)
                     }
-                    _ => None,
-                });
-                let mut deliveries: Vec<Delivery> = Vec::new();
-                for (i, slot) in got.iter_mut().enumerate() {
-                    let Some(d0) = down_ok[i] else { continue };
-                    let sched = plan.link_schedule(i, LinkDir::Up, round);
-                    let (Some(e), Some(panel)) = (sched.delivered.first(), slot.take()) else {
-                        continue;
-                    };
-                    deliveries.push(Delivery { node: i, arrival_ms: d0 + e.arrival_ms, panel });
-                }
-                stats.bump_round();
-                let split = split_quorum(deliveries, fc.quorum, fc.grace_ms, fc.straggler_ms);
-                let merged = settle_refine(split, &stats);
-                if let Some(next) = merge_refined(merged, codec, &reference, config.aggregation) {
-                    reference = next;
+                };
+                let sched = plan.link_schedule(i, LinkDir::Down, round);
+                meter_schedule(&stats, LinkDir::Down, round, bytes, &sched);
+                transcript
+                    .lock()
+                    .expect("transcript lock")
+                    .push_schedule(round, LinkDir::Down, i, bytes, &sched);
+                let Some(e) = sched.delivered.first() else { continue };
+                let Some(w) = writers[i].as_mut() else { continue };
+                let msg = Message::Reference { round, panel: encoded };
+                if write_frame(w, &msg).is_ok() {
+                    down_ok[i] = Some(e.arrival_ms);
                 }
             }
-            reference
-        };
+            let expected: usize = (0..m)
+                .filter(|&i| down_ok[i].is_some())
+                .map(|i| plan.link_schedule(i, LinkDir::Up, round).delivered.len())
+                .sum();
+            let mut got: Vec<Option<Mat>> = (0..m).map(|_| None).collect();
+            collect_expected(&rx, expected, deadline, &mut got, |node, msg| match msg {
+                Message::Aligned { round: rr, panel, .. } if rr == round => {
+                    Some((node, panel.decode()))
+                }
+                _ => None,
+            });
+            let mut deliveries: Vec<Delivery> = Vec::new();
+            for (i, slot) in got.iter_mut().enumerate() {
+                let Some(d0) = down_ok[i] else { continue };
+                let sched = plan.link_schedule(i, LinkDir::Up, round);
+                let (Some(e), Some(panel)) = (sched.delivered.first(), slot.take()) else {
+                    continue;
+                };
+                deliveries.push(Delivery { node: i, arrival_ms: d0 + e.arrival_ms, panel });
+            }
+            stats.bump_round();
+            let split = split_quorum(deliveries, fc.quorum, fc.grace_ms, fc.straggler_ms);
+            let merged = settle_refine(split, round, &stats);
+            leader.merge(round, merged);
+            last_round = round;
+            if leader.converged() {
+                break;
+            }
+        }
+        let estimate = leader.into_estimate();
 
         // --- shutdown ----------------------------------------------------
         for i in 0..m {
-            if !plan.active(i, config.refine_rounds) {
+            if !plan.active(i, last_round) {
                 continue;
             }
             let msg = Message::Done;
@@ -948,6 +1012,7 @@ pub fn run_cluster_tcp(
     })?;
 
     let comm = stats.snapshot();
+    let per_round = stats.round_snapshots();
     let sim_time_s = stats.simulated_time(&config.network);
     let transcript = Arc::try_unwrap(transcript)
         .expect("transcript still shared after scope join")
@@ -958,6 +1023,7 @@ pub fn run_cluster_tcp(
         estimate,
         local_panels: round0.local_panels,
         comm,
+        per_round,
         sim_time_s,
         transcript,
         in_quorum: round0.in_quorum,

@@ -419,18 +419,24 @@ impl LinkSchedule {
 /// attempts, retransmissions, duplicates) at the message's encoded size.
 /// Both the in-process simulator and the TCP transport go through this
 /// single function, so their meters agree by construction.
-pub fn meter_schedule(stats: &CommStats, dir: LinkDir, bytes: usize, sched: &LinkSchedule) {
+pub fn meter_schedule(
+    stats: &CommStats,
+    dir: LinkDir,
+    round: usize,
+    bytes: usize,
+    sched: &LinkSchedule,
+) {
     for _ in 0..sched.wire_sends() {
         match dir {
-            LinkDir::Up => stats.record_up(bytes),
-            LinkDir::Down => stats.record_down(bytes),
+            LinkDir::Up => stats.record_up(round, bytes),
+            LinkDir::Down => stats.record_down(round, bytes),
         }
     }
-    stats.record_retries(sched.retries());
-    stats.record_drops(sched.attempts_dropped);
-    stats.record_dups(sched.dups());
+    stats.record_retries(round, sched.retries());
+    stats.record_drops(round, sched.attempts_dropped);
+    stats.record_dups(round, sched.dups());
     if sched.timed_out {
-        stats.record_timeout();
+        stats.record_timeout(round);
     }
 }
 
@@ -768,7 +774,7 @@ mod tests {
         let bytes = 1056;
         for node in 0..32 {
             let sched = plan.link_schedule(node, LinkDir::Up, 0);
-            meter_schedule(&stats, LinkDir::Up, bytes, &sched);
+            meter_schedule(&stats, LinkDir::Up, 0, bytes, &sched);
             tr.push_schedule(0, LinkDir::Up, node, bytes, &sched);
         }
         let snap = stats.snapshot();

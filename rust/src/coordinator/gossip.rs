@@ -7,8 +7,18 @@
 //!
 //! Protocol per round (synchronous): each node i picks its neighbors,
 //! receives their current panels, aligns each incoming panel with its own,
-//! averages (own + aligned incoming), re-orthonormalizes.
+//! averages (own + aligned incoming, Metropolis-weighted), and
+//! re-orthonormalizes.
+//!
+//! The mixing weights live in a [`MixingMatrix`] built once per run: a
+//! symmetric doubly-stochastic Metropolis–Hastings matrix over the
+//! topology, with its neighbor lists cached (the old code re-materialized
+//! `Topology::neighbors` on every round of the mixing loop) and its
+//! second-largest absolute eigenvalue precomputed for the Chebyshev
+//! acceleration used by DeEPCA-style gradient tracking
+//! ([`MixingMatrix::fastmix`]).
 
+use crate::linalg::eig::sym_eig;
 use crate::linalg::procrustes::procrustes_align;
 use crate::linalg::qr::orthonormalize;
 use crate::linalg::subspace::dist2;
@@ -18,7 +28,7 @@ use super::netsim::CommStats;
 use super::protocol::{WireCodec, WirePanel, HEADER_BYTES};
 
 /// Communication topology for gossip.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Topology {
     /// Ring: node i talks to i±1.
     Ring,
@@ -78,6 +88,112 @@ impl Topology {
     }
 }
 
+/// Cached mixing operator for one (topology, m) pair: the symmetric
+/// doubly-stochastic Metropolis–Hastings weight matrix, its neighbor
+/// lists, and its second-largest absolute eigenvalue. Build it once per
+/// run and reuse it across rounds — the weights, the adjacency, and the
+/// spectral gap are all static.
+#[derive(Clone, Debug)]
+pub struct MixingMatrix {
+    /// Dense m x m weight matrix: `w[(i,j)] = 1 / (1 + max(deg_i, deg_j))`
+    /// on edges, diagonal absorbs the slack. Symmetric, rows and columns
+    /// sum to 1, entries nonnegative.
+    pub w: Mat,
+    /// Neighbor list per node (sorted, self excluded), cached from the
+    /// topology so mixing loops stop re-materializing it.
+    pub neighbors: Vec<Vec<usize>>,
+    /// Second-largest absolute eigenvalue of `w` (0 when m <= 1 or the
+    /// graph mixes in one step, e.g. complete graphs and the m = 2
+    /// antipodal pair). Controls the Chebyshev acceleration weight.
+    pub lambda2: f64,
+}
+
+impl MixingMatrix {
+    /// Metropolis–Hastings weights over `topology` on `m` nodes.
+    pub fn metropolis(topology: &Topology, m: usize) -> Self {
+        assert!(m >= 1);
+        let neighbors: Vec<Vec<usize>> = (0..m).map(|i| topology.neighbors(i, m)).collect();
+        let deg: Vec<usize> = neighbors.iter().map(Vec::len).collect();
+        let mut w = Mat::zeros(m, m);
+        for i in 0..m {
+            let mut off = 0.0;
+            for &j in &neighbors[i] {
+                let wij = 1.0 / (1.0 + deg[i].max(deg[j]) as f64);
+                w[(i, j)] = wij;
+                off += wij;
+            }
+            w[(i, i)] = 1.0 - off;
+        }
+        let lambda2 = if m < 2 {
+            0.0
+        } else {
+            // eigenvalues ascend; the top one is 1 (doubly stochastic), so
+            // the mixing rate is the larger of |smallest| and second-largest.
+            let (vals, _) = sym_eig(&w);
+            vals[0].abs().max(vals[m - 2].abs()).min(1.0)
+        };
+        MixingMatrix { w, neighbors, lambda2 }
+    }
+
+    /// Number of nodes.
+    pub fn m(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    /// One mixing step: `out_i = sum_j w_ij * panels_j`, using the cached
+    /// neighbor lists (only self + neighbors carry weight).
+    pub fn mix(&self, panels: &[Mat]) -> Vec<Mat> {
+        assert_eq!(panels.len(), self.m());
+        (0..panels.len())
+            .map(|i| {
+                let mut acc = panels[i].scale(self.w[(i, i)]);
+                for &j in &self.neighbors[i] {
+                    acc.axpy(self.w[(i, j)], &panels[j]);
+                }
+                acc
+            })
+            .collect()
+    }
+
+    /// Chebyshev acceleration weight `eta = (1 - sqrt(1 - lambda2^2)) /
+    /// (1 + sqrt(1 - lambda2^2))`; 0 when the graph already mixes in one
+    /// step (`lambda2 = 0`), in which case FastMix degenerates to plain
+    /// powers of `w`.
+    pub fn cheb_eta(&self) -> f64 {
+        if self.lambda2 <= 0.0 {
+            return 0.0;
+        }
+        let s = (1.0 - self.lambda2 * self.lambda2).max(0.0).sqrt();
+        (1.0 - s) / (1.0 + s)
+    }
+
+    /// FastMix (Chebyshev-accelerated gossip averaging, SNIPPETS.md §3):
+    /// `P_1 = W P_0`, then `P_{k+1} = (1 + eta) W P_k - eta P_{k-1}` for
+    /// `steps` total applications of `W`. Converges to the consensus
+    /// average at the Chebyshev rate instead of `lambda2^k`.
+    pub fn fastmix(&self, panels: &[Mat], steps: usize) -> Vec<Mat> {
+        if steps == 0 {
+            return panels.to_vec();
+        }
+        let eta = self.cheb_eta();
+        let mut prev: Vec<Mat> = panels.to_vec();
+        let mut cur = self.mix(panels);
+        for _ in 1..steps {
+            let mixed = self.mix(&cur);
+            let next: Vec<Mat> = (0..panels.len())
+                .map(|i| {
+                    let mut x = mixed[i].scale(1.0 + eta);
+                    x.axpy(-eta, &prev[i]);
+                    x
+                })
+                .collect();
+            prev = cur;
+            cur = next;
+        }
+        cur
+    }
+}
+
 /// Result of a gossip run.
 pub struct GossipResult {
     /// Final per-node panels.
@@ -124,6 +240,9 @@ pub fn gossip_align(
 ) -> GossipResult {
     let m = panels.len();
     assert!(m >= 1);
+    // weights + adjacency are static: build the Metropolis matrix once and
+    // reuse its cached neighbor lists every round
+    let mixer = MixingMatrix::metropolis(topology, m);
     let mut bytes = 0usize;
     let mut trace = Vec::with_capacity(rounds);
     let mut executed = 0;
@@ -143,28 +262,32 @@ pub fn gossip_align(
         };
         let mut widest_ingress = 0usize;
         for i in 0..m {
-            let nbrs = topology.neighbors(i, m);
+            let nbrs = &mixer.neighbors[i];
             if nbrs.is_empty() {
                 continue;
             }
             let mut node_in = 0usize;
-            let mut acc = panels[i].clone();
-            for &j in &nbrs {
+            // Metropolis-weighted average: own panel at w_ii plus each
+            // aligned incoming panel at w_ij. On regular graphs (all the
+            // built-in topologies) every weight is 1/(deg+1), i.e. the
+            // plain average this loop used to take.
+            let mut acc = panels[i].scale(mixer.w[(i, i)]);
+            for &j in nbrs {
                 // receiving j's panel costs one message at encoded size
                 let msg_bytes = HEADER_BYTES + sizes[j];
                 bytes += msg_bytes;
                 node_in += msg_bytes;
                 if let Some(s) = stats {
-                    s.record_peer(msg_bytes);
+                    s.record_peer(executed, msg_bytes);
                 }
                 let incoming = decoded.as_ref().map_or(&snapshot[j], |d| &d[j]);
-                acc.axpy(1.0, &procrustes_align(incoming, &snapshot[i]));
+                acc.axpy(mixer.w[(i, j)], &procrustes_align(incoming, &snapshot[i]));
             }
             widest_ingress = widest_ingress.max(node_in);
-            panels[i] = orthonormalize(&acc.scale(1.0 / (nbrs.len() + 1) as f64));
+            panels[i] = orthonormalize(&acc);
         }
         if let Some(s) = stats {
-            s.add_peer_serial(widest_ingress);
+            s.add_peer_serial(executed, widest_ingress);
             s.bump_round();
         }
         executed += 1;
@@ -337,6 +460,168 @@ mod tests {
         let stats2 = CommStats::new();
         gossip_align(panels2, &Topology::Complete, 1, 0.0, WireCodec::F64, Some(&stats2));
         assert_eq!(stats2.snapshot().peer_serial_bytes, (m - 1) * link);
+    }
+
+    /// Satellite contract: the cached Metropolis matrix is symmetric,
+    /// nonnegative, and doubly stochastic (rows AND columns sum to 1) on
+    /// every topology, its neighbor lists match the topology, and its
+    /// spectral data is sane (lambda2 in [0, 1); complete graphs and the
+    /// m = 2 antipodal pair mix in one step, lambda2 = 0).
+    #[test]
+    fn metropolis_matrix_is_symmetric_doubly_stochastic() {
+        let cases: Vec<(Topology, usize)> = vec![
+            (Topology::Ring, 2),
+            (Topology::Ring, 7),
+            (Topology::Complete, 5),
+            (Topology::KRegular(2), 2),
+            (Topology::KRegular(3), 6),
+            (Topology::KRegular(4), 12),
+        ];
+        for (topo, m) in cases {
+            let mx = MixingMatrix::metropolis(&topo, m);
+            assert_eq!(mx.m(), m);
+            for i in 0..m {
+                assert_eq!(mx.neighbors[i], topo.neighbors(i, m), "{topo:?} m={m} i={i}");
+                let mut row = 0.0;
+                let mut col = 0.0;
+                for j in 0..m {
+                    let wij = mx.w[(i, j)];
+                    assert!(wij >= 0.0, "{topo:?} m={m}: w[{i},{j}] = {wij} < 0");
+                    assert!(
+                        (wij - mx.w[(j, i)]).abs() < 1e-15,
+                        "{topo:?} m={m}: asymmetric at ({i},{j})"
+                    );
+                    // weight lives exactly on self + neighbor slots
+                    if i != j && !mx.neighbors[i].contains(&j) {
+                        assert_eq!(wij, 0.0, "{topo:?} m={m}: weight off the graph");
+                    }
+                    row += wij;
+                    col += mx.w[(j, i)];
+                }
+                assert!((row - 1.0).abs() < 1e-12, "{topo:?} m={m}: row {i} sums to {row}");
+                assert!((col - 1.0).abs() < 1e-12, "{topo:?} m={m}: col {i} sums to {col}");
+            }
+            assert!(
+                (0.0..1.0).contains(&mx.lambda2),
+                "{topo:?} m={m}: lambda2 = {}",
+                mx.lambda2
+            );
+        }
+        // one-step mixers: K_m is the rank-one averaging matrix, and the
+        // antipodal pair (m = 2) is K_2 — both have lambda2 = 0, eta = 0
+        for (topo, m) in [(Topology::Complete, 6), (Topology::Ring, 2), (Topology::KRegular(2), 2)]
+        {
+            let mx = MixingMatrix::metropolis(&topo, m);
+            assert!(mx.lambda2 < 1e-9, "{topo:?} m={m}: lambda2 = {}", mx.lambda2);
+            assert_eq!(mx.cheb_eta(), 0.0);
+        }
+        // a big ring mixes slowly: lambda2 close to (but strictly below) 1
+        let ring = MixingMatrix::metropolis(&Topology::Ring, 24);
+        assert!(ring.lambda2 > 0.9 && ring.lambda2 < 1.0, "ring lambda2 = {}", ring.lambda2);
+    }
+
+    /// Dense mixing-polynomial oracle for FastMix: build the Chebyshev
+    /// matrix polynomial `M_0 = I, M_1 = W, M_{k+1} = (1+eta) W M_k -
+    /// eta M_{k-1}` with dense matmuls and check that
+    /// `fastmix(panels, K)[i] == sum_j M_K[i,j] * panels[j]` on ring,
+    /// KRegular, and complete topologies — including the m = 2 antipodal
+    /// edge case where eta = 0 and FastMix must degenerate to plain `W^K`.
+    #[test]
+    fn fastmix_matches_dense_polynomial_oracle() {
+        use crate::testkit::tol;
+        let mut rng = Pcg64::seed(11);
+        let (d, r) = (10usize, 2usize);
+        let cases: Vec<(Topology, usize)> = vec![
+            (Topology::Ring, 6),
+            (Topology::Ring, 2),
+            (Topology::KRegular(2), 2),
+            (Topology::KRegular(4), 9),
+            (Topology::Complete, 5),
+        ];
+        for (topo, m) in cases {
+            let mx = MixingMatrix::metropolis(&topo, m);
+            let eta = mx.cheb_eta();
+            let panels: Vec<Mat> = (0..m).map(|_| rng.normal_mat(d, r)).collect();
+            let mut m_prev = Mat::eye(m);
+            let mut m_cur = mx.w.clone();
+            for steps in 0..=5usize {
+                // oracle coefficient matrix for `steps` applications of W
+                let coeff = if steps == 0 { &m_prev } else { &m_cur };
+                let got = mx.fastmix(&panels, steps);
+                for i in 0..m {
+                    let mut want = Mat::zeros(d, r);
+                    for j in 0..m {
+                        want.axpy(coeff[(i, j)], &panels[j]);
+                    }
+                    let err = got[i].sub(&want).max_abs();
+                    assert!(
+                        err < tol::KERNEL,
+                        "{topo:?} m={m} steps={steps} node {i}: off oracle by {err}"
+                    );
+                }
+                if steps >= 1 {
+                    // advance the polynomial: M_{k+1} = (1+eta) W M_k - eta M_{k-1}
+                    let mut next = matmul(&mx.w, &m_cur).scale(1.0 + eta);
+                    next.axpy(-eta, &m_prev);
+                    m_prev = m_cur;
+                    m_cur = next;
+                }
+            }
+            // antipodal / complete: eta = 0 reduces the polynomial to W^k,
+            // so 2 steps must equal mixing twice
+            if eta == 0.0 {
+                let twice = mx.mix(&mx.mix(&panels));
+                let fast = mx.fastmix(&panels, 2);
+                for i in 0..m {
+                    assert!(fast[i].sub(&twice[i]).max_abs() < tol::KERNEL);
+                }
+            }
+        }
+    }
+
+    /// FastMix actually accelerates: on a slow ring, the Chebyshev
+    /// recursion reaches consensus (all panels near the true average)
+    /// closer than the same number of plain W applications.
+    #[test]
+    fn fastmix_beats_plain_powers_on_a_ring() {
+        let mut rng = Pcg64::seed(12);
+        let (d, r, m, steps) = (8usize, 2usize, 16usize, 8usize);
+        let mx = MixingMatrix::metropolis(&Topology::Ring, m);
+        let panels: Vec<Mat> = (0..m).map(|_| rng.normal_mat(d, r)).collect();
+        let mut avg = Mat::zeros(d, r);
+        for p in &panels {
+            avg.axpy(1.0 / m as f64, p);
+        }
+        let dev = |set: &[Mat]| -> f64 {
+            set.iter().map(|p| p.sub(&avg).fro_norm()).fold(0.0f64, f64::max)
+        };
+        let mut plain = panels.clone();
+        for _ in 0..steps {
+            plain = mx.mix(&plain);
+        }
+        let fast = mx.fastmix(&panels, steps);
+        assert!(
+            dev(&fast) < 0.5 * dev(&plain),
+            "fastmix {} vs plain {}",
+            dev(&fast),
+            dev(&plain)
+        );
+    }
+
+    /// gossip_align's round-indexed metering partitions its totals.
+    #[test]
+    fn gossip_rounds_bucket_reconciles() {
+        let mut rng = Pcg64::seed(8);
+        let (_, panels) = noisy_panels(&mut rng, 16, 2, 6);
+        let stats = CommStats::new();
+        let res = gossip_align(panels, &Topology::Ring, 4, 0.0, WireCodec::Int8, Some(&stats));
+        let per_round = stats.round_snapshots();
+        assert_eq!(per_round.len(), res.rounds);
+        let bytes: usize = per_round.iter().map(|s| s.bytes_peer).sum();
+        assert_eq!(bytes, stats.snapshot().bytes_peer);
+        let serial: usize = per_round.iter().map(|s| s.peer_serial_bytes).sum();
+        assert_eq!(serial, stats.snapshot().peer_serial_bytes);
+        assert!(per_round.iter().all(|s| s.rounds == 1 && s.bytes_up == 0));
     }
 
     #[test]

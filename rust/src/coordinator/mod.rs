@@ -20,11 +20,19 @@
 //! and the loopback-TCP [`transport`], and the cluster runs at a
 //! configurable quorum with straggler late-merging.
 
+//! The round protocol engine (DESIGN.md S15) generalizes the pipeline
+//! past one shot: [`rounds`] defines the `RoundProtocol`/`LeaderState`
+//! traits both engines drive, with one-shot Algorithm 1 as the trivial
+//! instance next to DeEPCA gradient tracking, distributed Sanger, and the
+//! quantized power method — every round metered, fault-injected, and
+//! transcripted through the same boundaries.
+
 mod cluster;
 pub mod fault;
 pub mod gossip;
 mod netsim;
 mod protocol;
+pub mod rounds;
 pub mod transport;
 
 pub use cluster::{
@@ -32,6 +40,8 @@ pub use cluster::{
     FaultRunConfig, FaultyClusterResult, NodeBehavior, Shard, WorkerData,
 };
 pub use fault::{meter_schedule, FaultPlan, LinkDir, LinkSchedule, Transcript, CANNED};
+pub use gossip::{MixingMatrix, Topology};
 pub use netsim::{CommSnapshot, CommStats, NetworkModel};
 pub use protocol::{AggregationRule, Message, WireCodec, WirePanel, HEADER_BYTES};
+pub use rounds::{LeaderCtx, LeaderState, ProtocolKind, RoundProtocol, WorkerEnv, WorkerMem};
 pub use transport::{FrameDecoder, FrameError, FrameReader, TransportError};

@@ -3,8 +3,19 @@
 //! communication *rounds* and *volume*; this module meters both and maps
 //! them onto a latency/bandwidth model (`T = rounds * latency +
 //! bytes / bandwidth`), mirroring the `T_comm` term of Remark 2.
+//!
+//! Every payload meter is round-indexed (DESIGN.md S15): callers tag each
+//! record with the barrier round it belongs to, and [`CommStats`] keeps a
+//! per-round accumulator next to the run totals. The totals stay
+//! lock-free atomics (hot path); the round buckets sit behind a mutex and
+//! are touched once per record — cheap next to encoding a panel. The
+//! simulated-time formula is linear in (rounds, bytes, stall), so the sum
+//! of the per-round snapshots reproduces the run total exactly in every
+//! counter and to rounding in seconds; `round_snapshots` is the basis of
+//! the rounds-vs-bytes frontier sweep and of the reconciliation tests.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Per-link network model.
 #[derive(Clone, Copy, Debug)]
@@ -31,6 +42,26 @@ impl NetworkModel {
     pub fn transfer_time(&self, bytes: usize) -> f64 {
         self.latency_s + bytes as f64 / self.bandwidth_bps
     }
+}
+
+/// One barrier round's worth of payload accounting. Control traffic has
+/// no bucket: `Hello`/`Done` envelopes ride session setup/teardown, not a
+/// numbered round.
+#[derive(Clone, Copy, Debug, Default)]
+struct RoundAccum {
+    bytes_up: usize,
+    bytes_down: usize,
+    msgs_up: usize,
+    msgs_down: usize,
+    bytes_peer: usize,
+    msgs_peer: usize,
+    peer_serial_bytes: usize,
+    msgs_retry: usize,
+    msgs_dropped: usize,
+    msgs_dup: usize,
+    timeouts: usize,
+    late_merged: usize,
+    stall_us: usize,
 }
 
 /// Thread-safe communication meter shared by all links of a cluster run.
@@ -86,6 +117,8 @@ pub struct CommStats {
     /// Virtual stall accumulated waiting out fault-induced arrival skew
     /// (per-round max in-window arrival), microseconds.
     pub stall_us: AtomicUsize,
+    /// Round-indexed buckets mirroring the payload meters above.
+    per_round: Mutex<Vec<RoundAccum>>,
 }
 
 impl CommStats {
@@ -93,18 +126,35 @@ impl CommStats {
         Self::default()
     }
 
-    pub fn record_up(&self, bytes: usize) {
+    fn bucket(&self, round: usize, f: impl FnOnce(&mut RoundAccum)) {
+        let mut buckets = self.per_round.lock().unwrap();
+        if buckets.len() <= round {
+            buckets.resize_with(round + 1, RoundAccum::default);
+        }
+        f(&mut buckets[round]);
+    }
+
+    pub fn record_up(&self, round: usize, bytes: usize) {
         self.bytes_up.fetch_add(bytes, Ordering::Relaxed);
         self.msgs_up.fetch_add(1, Ordering::Relaxed);
+        self.bucket(round, |b| {
+            b.bytes_up += bytes;
+            b.msgs_up += 1;
+        });
     }
 
-    pub fn record_down(&self, bytes: usize) {
+    pub fn record_down(&self, round: usize, bytes: usize) {
         self.bytes_down.fetch_add(bytes, Ordering::Relaxed);
         self.msgs_down.fetch_add(1, Ordering::Relaxed);
+        self.bucket(round, |b| {
+            b.bytes_down += bytes;
+            b.msgs_down += 1;
+        });
     }
 
-    /// Record a control (no-payload) message; kept out of the data meters
-    /// and the simulated-time model.
+    /// Record a control (no-payload) message; kept out of the data meters,
+    /// the simulated-time model, and the round buckets (control envelopes
+    /// belong to session setup/teardown, not a numbered round).
     pub fn record_ctrl(&self, bytes: usize) {
         self.bytes_ctrl.fetch_add(bytes, Ordering::Relaxed);
         self.msgs_ctrl.fetch_add(1, Ordering::Relaxed);
@@ -112,16 +162,21 @@ impl CommStats {
 
     /// Record one peer-to-peer payload message (gossip link traffic —
     /// volume meters only; the time model reads [`Self::add_peer_serial`]).
-    pub fn record_peer(&self, bytes: usize) {
+    pub fn record_peer(&self, round: usize, bytes: usize) {
         self.bytes_peer.fetch_add(bytes, Ordering::Relaxed);
         self.msgs_peer.fetch_add(1, Ordering::Relaxed);
+        self.bucket(round, |b| {
+            b.bytes_peer += bytes;
+            b.msgs_peer += 1;
+        });
     }
 
     /// Report the bottleneck ingress of a completed round (the max over
     /// nodes of that node's total incoming bytes); distinct nodes receive
     /// concurrently, so one round serializes only this much on the wire.
-    pub fn add_peer_serial(&self, bytes: usize) {
+    pub fn add_peer_serial(&self, round: usize, bytes: usize) {
         self.peer_serial_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.bucket(round, |b| b.peer_serial_bytes += bytes);
     }
 
     pub fn bump_round(&self) {
@@ -129,33 +184,39 @@ impl CommStats {
     }
 
     /// Record `n` retransmissions (attempts beyond a message's first).
-    pub fn record_retries(&self, n: usize) {
+    pub fn record_retries(&self, round: usize, n: usize) {
         self.msgs_retry.fetch_add(n, Ordering::Relaxed);
+        self.bucket(round, |b| b.msgs_retry += n);
     }
 
     /// Record `n` dropped send attempts.
-    pub fn record_drops(&self, n: usize) {
+    pub fn record_drops(&self, round: usize, n: usize) {
         self.msgs_dropped.fetch_add(n, Ordering::Relaxed);
+        self.bucket(round, |b| b.msgs_dropped += n);
     }
 
     /// Record `n` delivered duplicate copies.
-    pub fn record_dups(&self, n: usize) {
+    pub fn record_dups(&self, round: usize, n: usize) {
         self.msgs_dup.fetch_add(n, Ordering::Relaxed);
+        self.bucket(round, |b| b.msgs_dup += n);
     }
 
     /// Record one message lost to retry exhaustion.
-    pub fn record_timeout(&self) {
+    pub fn record_timeout(&self, round: usize) {
         self.timeouts.fetch_add(1, Ordering::Relaxed);
+        self.bucket(round, |b| b.timeouts += 1);
     }
 
     /// Record one straggler estimate merged after the quorum window.
-    pub fn record_late(&self) {
+    pub fn record_late(&self, round: usize) {
         self.late_merged.fetch_add(1, Ordering::Relaxed);
+        self.bucket(round, |b| b.late_merged += 1);
     }
 
     /// Add fault-induced stall (waiting out arrival skew), microseconds.
-    pub fn add_stall_us(&self, us: usize) {
+    pub fn add_stall_us(&self, round: usize, us: usize) {
         self.stall_us.fetch_add(us, Ordering::Relaxed);
+        self.bucket(round, |b| b.stall_us += us);
     }
 
     /// Total payload bytes (control traffic excluded).
@@ -196,6 +257,43 @@ impl CommStats {
             stall_us: self.stall_us.load(Ordering::Relaxed),
         }
     }
+
+    /// One [`CommSnapshot`] per barrier round, in round order. Each
+    /// snapshot carries `rounds = 1` while the run counts it toward
+    /// `rounds_done` (a closed round is one latency barrier), zero
+    /// control traffic (control is round-less), and that round's payload
+    /// meters — so its `simulated_time` is the round's share of the
+    /// run's clock, and field-wise sums over this vector reproduce
+    /// [`Self::snapshot`] up to the control fields. Rounds that closed
+    /// without recording traffic still appear (all-zero payload).
+    pub fn round_snapshots(&self) -> Vec<CommSnapshot> {
+        let buckets = self.per_round.lock().unwrap();
+        let closed = self.rounds_done();
+        let n = buckets.len().max(closed);
+        (0..n)
+            .map(|k| {
+                let b = buckets.get(k).copied().unwrap_or_default();
+                CommSnapshot {
+                    bytes_up: b.bytes_up,
+                    bytes_down: b.bytes_down,
+                    msgs_up: b.msgs_up,
+                    msgs_down: b.msgs_down,
+                    msgs_ctrl: 0,
+                    bytes_ctrl: 0,
+                    bytes_peer: b.bytes_peer,
+                    msgs_peer: b.msgs_peer,
+                    peer_serial_bytes: b.peer_serial_bytes,
+                    rounds: if k < closed { 1 } else { 0 },
+                    msgs_retry: b.msgs_retry,
+                    msgs_dropped: b.msgs_dropped,
+                    msgs_dup: b.msgs_dup,
+                    timeouts: b.timeouts,
+                    late_merged: b.late_merged,
+                    stall_us: b.stall_us,
+                }
+            })
+            .collect()
+    }
 }
 
 /// Plain-data snapshot of [`CommStats`].
@@ -231,11 +329,59 @@ impl CommSnapshot {
     /// here. Fault-induced stall (`stall_us`, accumulated by the quorum
     /// engine as each round's max in-window arrival skew) adds directly:
     /// it is wall-clock the leader spends waiting, not wire volume.
+    ///
+    /// The formula is linear in `(rounds, bytes, stall_us)`, so a K-round
+    /// run's clock equals the sum of its per-round snapshots' clocks
+    /// (`K * latency + total bytes / bandwidth + total stall`): the
+    /// barrier-synchronized K-round model falls out of
+    /// [`CommStats::round_snapshots`] without a second formula.
     pub fn simulated_time(&self, net: &NetworkModel) -> f64 {
         self.rounds as f64 * net.latency_s
             + (self.bytes_up + self.bytes_down + self.peer_serial_bytes) as f64
                 / net.bandwidth_bps
             + self.stall_us as f64 * 1e-6
+    }
+
+    /// Field-wise sum, for reconciling per-round snapshots with totals.
+    pub fn accumulate(&mut self, other: &CommSnapshot) {
+        self.bytes_up += other.bytes_up;
+        self.bytes_down += other.bytes_down;
+        self.msgs_up += other.msgs_up;
+        self.msgs_down += other.msgs_down;
+        self.msgs_ctrl += other.msgs_ctrl;
+        self.bytes_ctrl += other.bytes_ctrl;
+        self.bytes_peer += other.bytes_peer;
+        self.msgs_peer += other.msgs_peer;
+        self.peer_serial_bytes += other.peer_serial_bytes;
+        self.rounds += other.rounds;
+        self.msgs_retry += other.msgs_retry;
+        self.msgs_dropped += other.msgs_dropped;
+        self.msgs_dup += other.msgs_dup;
+        self.timeouts += other.timeouts;
+        self.late_merged += other.late_merged;
+        self.stall_us += other.stall_us;
+    }
+
+    /// All-zero snapshot (identity for [`Self::accumulate`]).
+    pub fn zero() -> Self {
+        CommSnapshot {
+            bytes_up: 0,
+            bytes_down: 0,
+            msgs_up: 0,
+            msgs_down: 0,
+            msgs_ctrl: 0,
+            bytes_ctrl: 0,
+            bytes_peer: 0,
+            msgs_peer: 0,
+            peer_serial_bytes: 0,
+            rounds: 0,
+            msgs_retry: 0,
+            msgs_dropped: 0,
+            msgs_dup: 0,
+            timeouts: 0,
+            late_merged: 0,
+            stall_us: 0,
+        }
     }
 }
 
@@ -252,9 +398,9 @@ mod tests {
     #[test]
     fn stats_accumulate() {
         let s = CommStats::new();
-        s.record_up(100);
-        s.record_up(50);
-        s.record_down(10);
+        s.record_up(0, 100);
+        s.record_up(0, 50);
+        s.record_down(0, 10);
         s.record_ctrl(32);
         s.bump_round();
         let snap = s.snapshot();
@@ -272,7 +418,7 @@ mod tests {
     fn control_traffic_does_not_move_simulated_time() {
         let net = NetworkModel { latency_s: 0.01, bandwidth_bps: 1000.0 };
         let s = CommStats::new();
-        s.record_up(500);
+        s.record_up(0, 500);
         s.bump_round();
         let before = s.simulated_time(&net);
         s.record_ctrl(32);
@@ -290,9 +436,9 @@ mod tests {
         // a round of 4 peer messages; the caller reports the bottleneck
         // ingress (say one node received the 100 B and the 80 B message)
         for bytes in [100usize, 80, 100, 60] {
-            s.record_peer(bytes);
+            s.record_peer(0, bytes);
         }
-        s.add_peer_serial(180);
+        s.add_peer_serial(0, 180);
         s.bump_round();
         let snap = s.snapshot();
         assert_eq!(snap.msgs_peer, 4);
@@ -312,16 +458,16 @@ mod tests {
     fn fault_meters_accumulate_and_only_stall_moves_time() {
         let net = NetworkModel { latency_s: 0.01, bandwidth_bps: 1000.0 };
         let s = CommStats::new();
-        s.record_up(500);
+        s.record_up(0, 500);
         s.bump_round();
         let before = s.simulated_time(&net);
-        s.record_retries(2);
-        s.record_drops(2);
-        s.record_dups(1);
-        s.record_timeout();
-        s.record_late();
+        s.record_retries(0, 2);
+        s.record_drops(0, 2);
+        s.record_dups(0, 1);
+        s.record_timeout(0);
+        s.record_late(0);
         assert_eq!(s.simulated_time(&net), before, "counters alone must not move the clock");
-        s.add_stall_us(250_000); // 0.25 s of quorum-window stall
+        s.add_stall_us(0, 250_000); // 0.25 s of quorum-window stall
         assert!((s.simulated_time(&net) - (before + 0.25)).abs() < 1e-12);
         let snap = s.snapshot();
         assert_eq!(snap.msgs_retry, 2);
@@ -335,8 +481,84 @@ mod tests {
     #[test]
     fn wan_slower_than_datacenter() {
         let s = CommStats::new();
-        s.record_up(1_000_000);
+        s.record_up(0, 1_000_000);
         s.bump_round();
         assert!(s.simulated_time(&NetworkModel::wan()) > s.simulated_time(&NetworkModel::datacenter()));
+    }
+
+    /// Satellite 1 contract: round buckets partition the run. Field-wise
+    /// sums of `round_snapshots` reproduce the totals (control excluded —
+    /// it is round-less by design), and because the time formula is
+    /// linear, the per-round clocks sum to the run clock.
+    #[test]
+    fn round_snapshots_reconcile_with_totals() {
+        let net = NetworkModel { latency_s: 0.01, bandwidth_bps: 1000.0 };
+        let s = CommStats::new();
+        // round 0: uploads only, with a drop + retry and some stall
+        s.record_up(0, 100);
+        s.record_up(0, 70);
+        s.record_retries(0, 1);
+        s.record_drops(0, 1);
+        s.add_stall_us(0, 40_000);
+        s.bump_round();
+        // round 1: broadcast down, replies up, one dup + one straggler
+        s.record_down(1, 64);
+        s.record_down(1, 64);
+        s.record_up(1, 80);
+        s.record_dups(1, 1);
+        s.record_late(1);
+        s.bump_round();
+        // round 2: gossip traffic + a timeout, closed with no stall
+        s.record_peer(2, 120);
+        s.record_peer(2, 90);
+        s.add_peer_serial(2, 120);
+        s.record_timeout(2);
+        s.bump_round();
+        // control rides teardown, outside any round bucket
+        s.record_ctrl(32);
+
+        let per_round = s.round_snapshots();
+        assert_eq!(per_round.len(), 3);
+        assert_eq!(per_round[0].bytes_up, 170);
+        assert_eq!(per_round[1].msgs_down, 2);
+        assert_eq!(per_round[2].peer_serial_bytes, 120);
+        assert!(per_round.iter().all(|r| r.rounds == 1 && r.bytes_ctrl == 0));
+
+        let mut sum = CommSnapshot::zero();
+        for r in &per_round {
+            sum.accumulate(r);
+        }
+        let total = s.snapshot();
+        // counters reconcile exactly (control fields are round-less)
+        assert_eq!(sum.bytes_up, total.bytes_up);
+        assert_eq!(sum.bytes_down, total.bytes_down);
+        assert_eq!(sum.msgs_up, total.msgs_up);
+        assert_eq!(sum.msgs_down, total.msgs_down);
+        assert_eq!(sum.bytes_peer, total.bytes_peer);
+        assert_eq!(sum.msgs_peer, total.msgs_peer);
+        assert_eq!(sum.peer_serial_bytes, total.peer_serial_bytes);
+        assert_eq!(sum.rounds, total.rounds);
+        assert_eq!(sum.msgs_retry, total.msgs_retry);
+        assert_eq!(sum.msgs_dropped, total.msgs_dropped);
+        assert_eq!(sum.msgs_dup, total.msgs_dup);
+        assert_eq!(sum.timeouts, total.timeouts);
+        assert_eq!(sum.late_merged, total.late_merged);
+        assert_eq!(sum.stall_us, total.stall_us);
+        // linearity: per-round clocks sum to the run clock
+        let t: f64 = per_round.iter().map(|r| r.simulated_time(&net)).sum();
+        assert!((t - total.simulated_time(&net)).abs() < 1e-9 * total.simulated_time(&net));
+    }
+
+    /// Rounds that close without traffic still appear as (empty) buckets
+    /// so the latency term of the K-round model stays per-round.
+    #[test]
+    fn silent_rounds_still_snapshot() {
+        let s = CommStats::new();
+        s.record_up(0, 10);
+        s.bump_round();
+        s.bump_round(); // round 1 closes with no traffic
+        let per_round = s.round_snapshots();
+        assert_eq!(per_round.len(), 2);
+        assert_eq!(per_round[1], CommSnapshot { rounds: 1, ..CommSnapshot::zero() });
     }
 }

@@ -150,8 +150,10 @@ impl WirePanel {
 /// Messages of the distributed protocol.
 #[derive(Clone, Debug)]
 pub enum Message {
-    /// Worker -> leader: local leading-eigenbasis panel `V̂₁⁽ⁱ⁾` (+ Ritz values).
-    LocalEstimate { node: usize, panel: WirePanel, ritz: Vec<f64> },
+    /// Worker -> leader: local leading-eigenbasis panel `V̂₁⁽ⁱ⁾` (+ Ritz
+    /// values). Carries the protocol round it answers (0 for the initial
+    /// local solve; iterative protocols re-upload in later rounds).
+    LocalEstimate { node: usize, round: usize, panel: WirePanel, ritz: Vec<f64> },
     /// Leader -> worker: reference panel to align against (Remark 2 /
     /// Algorithm 2 broadcast).
     Reference { round: usize, panel: WirePanel },
@@ -212,6 +214,7 @@ mod tests {
         assert_eq!(m.wire_bytes(), HEADER_BYTES + 8 * 64 * 8);
         let e = Message::LocalEstimate {
             node: 1,
+            round: 0,
             panel: WireCodec::F64.encode(&panel),
             ritz: vec![0.0; 8],
         };

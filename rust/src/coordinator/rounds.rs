@@ -1,0 +1,800 @@
+//! Round-based protocol engine (DESIGN.md S15).
+//!
+//! The cluster engines in `cluster.rs` run one fixed skeleton: a round-0
+//! local solve + upload + quorum settle, then K barrier rounds of
+//! leader→worker payload, worker-local compute, worker→leader reply, and
+//! a leader merge. What *varies* between protocols is the content of
+//! those payloads and merges — so that content lives behind two traits:
+//!
+//! - [`RoundProtocol`]: the protocol family itself — how many rounds it
+//!   wants, what an honest worker computes each round
+//!   ([`RoundProtocol::worker_step`]), and how to seed the leader state
+//!   from the round-0 quorum outcome ([`RoundProtocol::init_leader`]).
+//! - [`LeaderState`]: the leader's evolving state — the panel(s) to send
+//!   down each round ([`LeaderState::down`], broadcast or per-node), the
+//!   merge of the round's replies, an optional convergence check, and the
+//!   final estimate.
+//!
+//! Four instances ship:
+//!
+//! - [`ProtocolKind::OneShot`] — the paper's Algorithm 1/2: round 0 IS
+//!   the estimate when `refine_rounds == 0`, otherwise each round
+//!   broadcasts the reference and workers Procrustes-align their exact
+//!   local panel (bit-identical to the pre-refactor pipeline).
+//! - [`ProtocolKind::QPower`] — quantized power method: the leader
+//!   broadcasts its iterate, every worker applies its local observation
+//!   operator, the leader averages + re-orthonormalizes. Each round's
+//!   panels ride the negotiated `WireCodec`, so int8/FD compose with the
+//!   iteration (Alimisis et al., arXiv 2110.14391 flavor).
+//! - [`ProtocolKind::Sanger`] — distributed Sanger/GHA ascent over the
+//!   symmetric doubly-stochastic Metropolis weights (SNIPPETS.md §2):
+//!   per-node iterates are mixed by `W` at the leader, workers take one
+//!   Sanger step on the mixed panel. All iterates start from the common
+//!   round-0 quorum estimate: per-node local inits carry arbitrary
+//!   rotations that cancel under mixing and the iteration goes nowhere.
+//! - [`ProtocolKind::DeepCa`] — DeEPCA-style gradient tracking
+//!   (SNIPPETS.md §3): workers track `S_i += C_i X_t - C_i X_{t-1}` with
+//!   QR + column-sign pinning between rounds, and the leader applies
+//!   FastMix (Chebyshev-accelerated gossip) to the tracked panels.
+//!
+//! The decentralized protocols are *simulated* at the leader: the mixing
+//! multiply `W·S` happens in the leader merge, and the wire traffic is
+//! metered as star up/down links per round. This keeps every round on the
+//! existing boundaries — `FaultPlan` link schedules, quorum windows, the
+//! transcript, and both transports apply uniformly to all four protocols —
+//! at the cost of charging a star topology for traffic a real gossip
+//! deployment would put on peer links (see DESIGN.md S15 for why).
+
+use std::sync::Arc;
+
+use crate::align;
+use crate::linalg::gemm::matmul;
+use crate::linalg::procrustes::procrustes_align;
+use crate::linalg::qr::orthonormalize;
+use crate::linalg::subspace::dist2;
+use crate::linalg::{Mat, Workspace};
+use crate::rng::Pcg64;
+use crate::runtime::LocalSolver;
+
+use super::cluster::{merge_refined, quorum_estimate, Round0, Shard};
+use super::gossip::{MixingMatrix, Topology};
+use super::protocol::{AggregationRule, WireCodec};
+
+/// Which multi-round protocol a cluster run executes (round 0 — local
+/// solve + upload + quorum — is common to all of them).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ProtocolKind {
+    /// Algorithm 1 (+ Algorithm 2 refinement when
+    /// `ClusterConfig::refine_rounds >= 1`). The trivial instance of the
+    /// round engine; bit-identical to the pre-engine pipeline.
+    OneShot,
+    /// Quantized power method: `rounds` broadcast/apply/average rounds on
+    /// top of the round-0 warm start. `tol > 0` stops early once the
+    /// iterate's subspace movement per round drops below it.
+    QPower { rounds: usize, tol: f64 },
+    /// Distributed Sanger iteration: `rounds` mixed gradient-ascent steps
+    /// of size `step` over Metropolis weights on `topology`.
+    Sanger { rounds: usize, step: f64, topology: Topology },
+    /// DeEPCA-style gradient tracking with `fastmix` Chebyshev-accelerated
+    /// mixing steps per round over Metropolis weights on `topology`.
+    DeepCa { rounds: usize, fastmix: usize, topology: Topology },
+}
+
+impl ProtocolKind {
+    /// Parse a CLI spelling (`oneshot | qpower | sanger | deepca`), with
+    /// `rounds` supplying the iteration count for the iterative kinds
+    /// (OneShot keeps taking its rounds from `refine_rounds`).
+    pub fn parse(s: &str, rounds: usize) -> Result<ProtocolKind, String> {
+        match s {
+            "oneshot" => Ok(ProtocolKind::OneShot),
+            "qpower" => Ok(ProtocolKind::QPower { rounds, tol: 0.0 }),
+            "sanger" => {
+                Ok(ProtocolKind::Sanger { rounds, step: 0.3, topology: Topology::Ring })
+            }
+            "deepca" => {
+                Ok(ProtocolKind::DeepCa { rounds, fastmix: 3, topology: Topology::Ring })
+            }
+            other => Err(format!("unknown protocol '{other}' (oneshot|qpower|sanger|deepca)")),
+        }
+    }
+
+    /// Short name for reports and CSV columns.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProtocolKind::OneShot => "oneshot",
+            ProtocolKind::QPower { .. } => "qpower",
+            ProtocolKind::Sanger { .. } => "sanger",
+            ProtocolKind::DeepCa { .. } => "deepca",
+        }
+    }
+
+    /// Instantiate the protocol. `refine_rounds` is the legacy Algorithm-2
+    /// round count and drives only the OneShot instance.
+    pub fn build(&self, refine_rounds: usize) -> Arc<dyn RoundProtocol> {
+        match self {
+            ProtocolKind::OneShot => Arc::new(OneShotProtocol { rounds: refine_rounds }),
+            ProtocolKind::QPower { rounds, tol } => {
+                Arc::new(QPowerProtocol { rounds: *rounds, tol: *tol })
+            }
+            ProtocolKind::Sanger { rounds, step, topology } => Arc::new(SangerProtocol {
+                rounds: *rounds,
+                step: *step,
+                topology: topology.clone(),
+            }),
+            ProtocolKind::DeepCa { rounds, fastmix, topology } => Arc::new(DeepCaProtocol {
+                rounds: *rounds,
+                fastmix: *fastmix,
+                topology: topology.clone(),
+            }),
+        }
+    }
+}
+
+/// Per-worker protocol memory, carried across rounds by both engines.
+#[derive(Default)]
+pub struct WorkerMem {
+    /// The worker's *exact* round-0 local panel (refinement aligns the
+    /// exact panel, not the lossily-decoded copy the leader received).
+    pub panel: Option<Mat>,
+    /// Protocol-private slots (e.g. DeEPCA's tracked `C_i X_{t-1}` and
+    /// sign reference). Empty until the protocol's first contact.
+    pub slots: Vec<Mat>,
+}
+
+/// What a worker step may touch besides its protocol memory: the node's
+/// observation shard, the local solver (for joiners that must still
+/// produce a round-0-style panel), the target rank, and the node's
+/// deterministic rng stream.
+pub struct WorkerEnv<'a> {
+    pub shard: &'a Shard,
+    pub solver: &'a dyn LocalSolver,
+    pub r: usize,
+    pub rng: &'a mut Pcg64,
+}
+
+impl WorkerEnv<'_> {
+    /// Apply the node's observation operator to `v` (matrix-free for
+    /// sample shards).
+    fn apply_op(&self, v: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.shard.dim(), v.cols());
+        let mut ws = Workspace::new();
+        self.shard.apply_into(v, &mut out, &mut ws);
+        out
+    }
+
+    /// The worker's exact local panel, solving on first use (a joiner's
+    /// first contact happens after round 0).
+    fn ensure_panel<'m>(&mut self, mem: &'m mut WorkerMem) -> &'m Mat {
+        if mem.panel.is_none() {
+            mem.panel = Some(self.solver.leading_subspace_op(self.shard, self.r, self.rng));
+        }
+        mem.panel.as_ref().expect("panel just ensured")
+    }
+}
+
+/// A multi-round protocol: the worker-side compute per round plus the
+/// factory for the leader's state. Implementations must be deterministic
+/// functions of their inputs — both engines call them on identical inputs
+/// and expect bit-identical outputs.
+pub trait RoundProtocol: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Barrier rounds after round 0 (0 = the one-shot protocol).
+    fn rounds(&self) -> usize;
+
+    /// Honest worker's round-`round` compute: consume the decoded
+    /// down-link panel, update protocol memory, return the reply panel
+    /// (encoded by the engine before it crosses the wire).
+    fn worker_step(
+        &self,
+        mem: &mut WorkerMem,
+        round: usize,
+        incoming: &Mat,
+        env: &mut WorkerEnv<'_>,
+    ) -> Mat;
+
+    /// Seed the leader state from the round-0 quorum outcome.
+    fn init_leader(&self, round0: &Round0, ctx: &LeaderCtx) -> Box<dyn LeaderState>;
+}
+
+/// Leader-side construction context.
+pub struct LeaderCtx {
+    pub m: usize,
+    pub aggregation: AggregationRule,
+    pub codec: WireCodec,
+}
+
+/// The leader's evolving state across rounds.
+pub trait LeaderState: Send {
+    /// True when every node receives the same down-link panel this round
+    /// (the engine then encodes once and meters the shared frame per
+    /// link, like the legacy reference broadcast).
+    fn is_broadcast(&self) -> bool;
+
+    /// The panel to send to `node` in `round` (ignore `node` when
+    /// broadcasting).
+    fn down(&self, round: usize, node: usize) -> &Mat;
+
+    /// Fold one round's surviving replies (node order, in-window ∪ late)
+    /// into the state. Nodes outside the quorum window simply don't
+    /// appear.
+    fn merge(&mut self, round: usize, replies: Vec<(usize, Mat)>);
+
+    /// Optional early stop, checked after each merge.
+    fn converged(&self) -> bool {
+        false
+    }
+
+    /// The final orthonormal (d, r) estimate.
+    fn into_estimate(self: Box<Self>) -> Mat;
+}
+
+fn rule_merge(panels: &[Mat], rule: AggregationRule) -> Mat {
+    match rule {
+        AggregationRule::Mean => align::mean_qr(panels),
+        AggregationRule::CoordinateMedian => align::median_qr(panels),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// OneShot: Algorithm 1 + Algorithm-2 refinement, re-expressed on the engine
+// ---------------------------------------------------------------------------
+
+struct OneShotProtocol {
+    rounds: usize,
+}
+
+impl RoundProtocol for OneShotProtocol {
+    fn name(&self) -> &'static str {
+        "oneshot"
+    }
+
+    fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    fn worker_step(
+        &self,
+        mem: &mut WorkerMem,
+        _round: usize,
+        incoming: &Mat,
+        env: &mut WorkerEnv<'_>,
+    ) -> Mat {
+        // exactly the legacy refinement step: align the exact local panel
+        // (solved on first contact for joiners) to the decoded reference
+        let panel = env.ensure_panel(mem);
+        procrustes_align(panel, incoming)
+    }
+
+    fn init_leader(&self, round0: &Round0, ctx: &LeaderCtx) -> Box<dyn LeaderState> {
+        // refine_rounds == 0: round 0 IS the protocol; the quorum estimate
+        // is final. Otherwise seed the reference exactly like the legacy
+        // loop did: the first merged round-0 panel.
+        let reference = if self.rounds == 0 {
+            quorum_estimate(round0, ctx.aggregation)
+        } else {
+            round0.local_panels[0].clone()
+        };
+        Box::new(OneShotState { reference, codec: ctx.codec, rule: ctx.aggregation })
+    }
+}
+
+struct OneShotState {
+    reference: Mat,
+    codec: WireCodec,
+    rule: AggregationRule,
+}
+
+impl LeaderState for OneShotState {
+    fn is_broadcast(&self) -> bool {
+        true
+    }
+
+    fn down(&self, _round: usize, _node: usize) -> &Mat {
+        &self.reference
+    }
+
+    fn merge(&mut self, _round: usize, replies: Vec<(usize, Mat)>) {
+        let panels: Vec<Mat> = replies.into_iter().map(|(_, p)| p).collect();
+        if let Some(next) = merge_refined(panels, self.codec, &self.reference, self.rule) {
+            self.reference = next;
+        }
+    }
+
+    fn into_estimate(self: Box<Self>) -> Mat {
+        self.reference
+    }
+}
+
+// ---------------------------------------------------------------------------
+// QPower: quantized distributed power method
+// ---------------------------------------------------------------------------
+
+struct QPowerProtocol {
+    rounds: usize,
+    tol: f64,
+}
+
+impl RoundProtocol for QPowerProtocol {
+    fn name(&self) -> &'static str {
+        "qpower"
+    }
+
+    fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    fn worker_step(
+        &self,
+        _mem: &mut WorkerMem,
+        _round: usize,
+        incoming: &Mat,
+        env: &mut WorkerEnv<'_>,
+    ) -> Mat {
+        // one local power application: C_i X_t. No local solve, no memory —
+        // the iterate lives on the leader.
+        env.apply_op(incoming)
+    }
+
+    fn init_leader(&self, round0: &Round0, ctx: &LeaderCtx) -> Box<dyn LeaderState> {
+        // warm start from the round-0 quorum estimate: the one-shot answer
+        // is the best panel the leader holds, and the power rounds then
+        // contract its error at the pooled spectral-gap rate
+        let x = quorum_estimate(round0, ctx.aggregation);
+        Box::new(QPowerState {
+            x,
+            codec: ctx.codec,
+            rule: ctx.aggregation,
+            tol: self.tol,
+            last_move: f64::INFINITY,
+        })
+    }
+}
+
+struct QPowerState {
+    x: Mat,
+    codec: WireCodec,
+    rule: AggregationRule,
+    tol: f64,
+    last_move: f64,
+}
+
+impl LeaderState for QPowerState {
+    fn is_broadcast(&self) -> bool {
+        true
+    }
+
+    fn down(&self, _round: usize, _node: usize) -> &Mat {
+        &self.x
+    }
+
+    fn merge(&mut self, _round: usize, replies: Vec<(usize, Mat)>) {
+        let mut panels: Vec<Mat> = replies.into_iter().map(|(_, p)| p).collect();
+        if panels.is_empty() {
+            return; // the whole round was lost; keep iterating from x
+        }
+        // span-only codecs lose the magnitudes power iteration weights by;
+        // re-align the decoded bases to the broadcast iterate so the
+        // average still contracts toward the dominant subspace
+        if !self.codec.preserves_representative() {
+            for p in panels.iter_mut() {
+                *p = procrustes_align(p, &self.x);
+            }
+        }
+        let next = rule_merge(&panels, self.rule);
+        self.last_move = dist2(&next, &self.x);
+        self.x = next;
+    }
+
+    fn converged(&self) -> bool {
+        self.tol > 0.0 && self.last_move < self.tol
+    }
+
+    fn into_estimate(self: Box<Self>) -> Mat {
+        self.x
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sanger: distributed generalized Hebbian ascent over Metropolis weights
+// ---------------------------------------------------------------------------
+
+struct SangerProtocol {
+    rounds: usize,
+    step: f64,
+    topology: Topology,
+}
+
+impl RoundProtocol for SangerProtocol {
+    fn name(&self) -> &'static str {
+        "sanger"
+    }
+
+    fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    fn worker_step(
+        &self,
+        _mem: &mut WorkerMem,
+        _round: usize,
+        incoming: &Mat,
+        env: &mut WorkerEnv<'_>,
+    ) -> Mat {
+        // one Sanger/GHA step from the mixed iterate X = sum_j W_ij X_j:
+        //   X' = X + step * (C X - X tril(X^T C X))
+        // The tril deflation makes column k ascend only against the
+        // subspace of columns < k — the fixed point is the ordered
+        // eigenbasis, not just an invariant subspace.
+        let x = incoming;
+        let cx = env.apply_op(x);
+        let xtcx = matmul(&x.transpose(), &cx);
+        let r = xtcx.rows();
+        let tril = Mat::from_fn(r, r, |i, j| if j <= i { xtcx[(i, j)] } else { 0.0 });
+        let mut update = cx;
+        update.axpy(-1.0, &matmul(x, &tril));
+        let mut out = x.clone();
+        out.axpy(self.step, &update);
+        out
+    }
+
+    fn init_leader(&self, round0: &Round0, ctx: &LeaderCtx) -> Box<dyn LeaderState> {
+        // common warm start: every node's iterate begins at the quorum
+        // estimate. Starting from per-node local panels does NOT work —
+        // each carries an arbitrary rotation of the subspace, and the
+        // Metropolis average of differently-rotated panels cancels.
+        let q = quorum_estimate(round0, ctx.aggregation);
+        let mixer = MixingMatrix::metropolis(&self.topology, ctx.m);
+        let xs = vec![q; ctx.m];
+        let mixed = mixer.mix(&xs);
+        Box::new(SangerState { xs, mixed, mixer, codec: ctx.codec, rule: ctx.aggregation })
+    }
+}
+
+struct SangerState {
+    /// Per-node iterates (node-indexed; lost nodes keep their last value).
+    xs: Vec<Mat>,
+    /// `W * xs` — the per-node down-link panels for the next round.
+    mixed: Vec<Mat>,
+    mixer: MixingMatrix,
+    codec: WireCodec,
+    rule: AggregationRule,
+}
+
+impl LeaderState for SangerState {
+    fn is_broadcast(&self) -> bool {
+        false
+    }
+
+    fn down(&self, _round: usize, node: usize) -> &Mat {
+        &self.mixed[node]
+    }
+
+    fn merge(&mut self, _round: usize, replies: Vec<(usize, Mat)>) {
+        for (node, mut p) in replies {
+            if !self.codec.preserves_representative() {
+                // span-only decode: re-anchor to the panel it stepped from
+                p = procrustes_align(&p, &self.mixed[node]);
+            }
+            self.xs[node] = p;
+        }
+        self.mixed = self.mixer.mix(&self.xs);
+    }
+
+    fn into_estimate(self: Box<Self>) -> Mat {
+        rule_merge(&self.xs, self.rule)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DeepCa: gradient tracking with FastMix acceleration
+// ---------------------------------------------------------------------------
+
+struct DeepCaProtocol {
+    rounds: usize,
+    fastmix: usize,
+    topology: Topology,
+}
+
+/// Slot layout inside [`WorkerMem::slots`] for DeEPCA.
+const DEEPCA_CX_PREV: usize = 0;
+const DEEPCA_SIGN_REF: usize = 1;
+
+impl RoundProtocol for DeepCaProtocol {
+    fn name(&self) -> &'static str {
+        "deepca"
+    }
+
+    fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    fn worker_step(
+        &self,
+        mem: &mut WorkerMem,
+        _round: usize,
+        incoming: &Mat,
+        env: &mut WorkerEnv<'_>,
+    ) -> Mat {
+        if mem.slots.is_empty() {
+            // first contact: the down-link carries the common warm start
+            // X_0; initialize the tracked panel S_i = C_i X_0 and pin the
+            // sign reference for all later QR factors
+            let x0 = orthonormalize(incoming);
+            let cx = env.apply_op(&x0);
+            mem.slots = vec![cx.clone(), x0];
+            return cx;
+        }
+        // later rounds: the down-link carries the mixed tracked panel
+        // S̄_i; recover the iterate by QR with pinned column signs, then
+        // track the local gradient difference:
+        //   X_t   = sign_adjust(QR(S̄_i))
+        //   S_i' = S̄_i + C_i X_t - C_i X_{t-1}
+        let x = align::sign_adjust(&orthonormalize(incoming), &mem.slots[DEEPCA_SIGN_REF]);
+        let cx = env.apply_op(&x);
+        let mut s_new = incoming.clone();
+        s_new.axpy(1.0, &cx);
+        s_new.axpy(-1.0, &mem.slots[DEEPCA_CX_PREV]);
+        mem.slots[DEEPCA_CX_PREV] = cx;
+        s_new
+    }
+
+    fn init_leader(&self, round0: &Round0, ctx: &LeaderCtx) -> Box<dyn LeaderState> {
+        // round 1's down-link is the common warm start for every node;
+        // later rounds send the FastMix-ed tracked panels
+        let q = quorum_estimate(round0, ctx.aggregation);
+        let mixer = MixingMatrix::metropolis(&self.topology, ctx.m);
+        Box::new(DeepCaState {
+            ss: vec![q; ctx.m],
+            mixer,
+            fastmix: self.fastmix,
+            codec: ctx.codec,
+            rule: ctx.aggregation,
+        })
+    }
+}
+
+struct DeepCaState {
+    /// Per-node tracked panels (round 1: the warm start; later: mixed S_i).
+    ss: Vec<Mat>,
+    mixer: MixingMatrix,
+    fastmix: usize,
+    codec: WireCodec,
+    rule: AggregationRule,
+}
+
+impl LeaderState for DeepCaState {
+    fn is_broadcast(&self) -> bool {
+        false
+    }
+
+    fn down(&self, _round: usize, node: usize) -> &Mat {
+        &self.ss[node]
+    }
+
+    fn merge(&mut self, _round: usize, replies: Vec<(usize, Mat)>) {
+        for (node, mut p) in replies {
+            if !self.codec.preserves_representative() {
+                p = procrustes_align(&p, &self.ss[node]);
+            }
+            self.ss[node] = p;
+        }
+        // FastMix the tracked panels — the gradient-tracking invariant
+        // (column sums preserved by doubly-stochastic W) survives the
+        // Chebyshev polynomial because every term is a polynomial in W
+        self.ss = self.mixer.fastmix(&self.ss, self.fastmix);
+    }
+
+    fn into_estimate(self: Box<Self>) -> Mat {
+        rule_merge(&self.ss, self.rule)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cluster::WorkerData;
+    use crate::runtime::NativeEngine;
+    use crate::testkit::tol;
+
+    #[test]
+    fn parse_and_name_round_trip() {
+        for (s, rounds) in [("oneshot", 0usize), ("qpower", 3), ("sanger", 4), ("deepca", 2)] {
+            let kind = ProtocolKind::parse(s, rounds).unwrap();
+            assert_eq!(kind.name(), s);
+            let proto = kind.build(5);
+            assert_eq!(proto.name(), s);
+            // iterative kinds take their round count from parse; oneshot
+            // keeps honoring refine_rounds
+            assert_eq!(proto.rounds(), if s == "oneshot" { 5 } else { rounds });
+        }
+        assert!(ProtocolKind::parse("power", 3).is_err());
+        assert_eq!(ProtocolKind::parse("oneshot", 9).unwrap(), ProtocolKind::OneShot);
+    }
+
+    fn env_fixture(d: usize) -> (Shard, Arc<NativeEngine>, Pcg64) {
+        let mut rng = Pcg64::seed(42);
+        let a = {
+            let mut e = rng.normal_mat(d, d);
+            e.symmetrize();
+            e
+        };
+        (Shard::Dense(a), Arc::new(NativeEngine::default()), rng)
+    }
+
+    /// QPower's worker step is exactly one operator application.
+    #[test]
+    fn qpower_worker_step_applies_the_shard() {
+        let (shard, solver, mut rng) = env_fixture(12);
+        let x = rng.haar_stiefel(12, 3);
+        let mut mem = WorkerMem::default();
+        let proto = ProtocolKind::QPower { rounds: 1, tol: 0.0 }.build(0);
+        let mut env = WorkerEnv { shard: &shard, solver: solver.as_ref(), r: 3, rng: &mut rng };
+        let got = proto.worker_step(&mut mem, 1, &x, &mut env);
+        let want = match &shard {
+            Shard::Dense(c) => matmul(c, &x),
+            _ => unreachable!(),
+        };
+        assert!(got.sub(&want).max_abs() < tol::KERNEL);
+        assert!(mem.panel.is_none() && mem.slots.is_empty(), "qpower keeps no worker memory");
+    }
+
+    /// Sanger's fixed point: at an exact eigenbasis of C, the update term
+    /// vanishes and the step returns the iterate unchanged (to rounding).
+    #[test]
+    fn sanger_step_is_stationary_at_an_eigenbasis() {
+        let (shard, solver, mut rng) = env_fixture(10);
+        let c = match &shard {
+            Shard::Dense(c) => c.clone(),
+            _ => unreachable!(),
+        };
+        let (x, _) = crate::linalg::eig::top_eigvecs(&c, 3);
+        let proto = ProtocolKind::Sanger { rounds: 1, step: 0.3, topology: Topology::Ring };
+        let proto = proto.build(0);
+        let mut mem = WorkerMem::default();
+        let mut env = WorkerEnv { shard: &shard, solver: solver.as_ref(), r: 3, rng: &mut rng };
+        let out = proto.worker_step(&mut mem, 1, &x, &mut env);
+        // C x_k = λ_k x_k and tril(XᵀCX) = diag(λ) at an eigenbasis, so
+        // the bracket cancels column by column
+        assert!(out.sub(&x).max_abs() < tol::ITER, "{}", out.sub(&x).max_abs());
+    }
+
+    /// DeEPCA worker memory: first contact initializes the tracked state,
+    /// later rounds update `C X_prev` and keep the sign reference fixed.
+    #[test]
+    fn deepca_worker_tracks_across_rounds() {
+        let (shard, solver, mut rng) = env_fixture(10);
+        let x0 = rng.haar_stiefel(10, 2);
+        let proto = ProtocolKind::DeepCa { rounds: 2, fastmix: 2, topology: Topology::Ring };
+        let proto = proto.build(0);
+        let mut mem = WorkerMem::default();
+        let mut env = WorkerEnv { shard: &shard, solver: solver.as_ref(), r: 2, rng: &mut rng };
+        let s1 = proto.worker_step(&mut mem, 1, &x0, &mut env);
+        assert_eq!(mem.slots.len(), 2);
+        // first reply is C x0 (orthonormalized x0 == x0 here)
+        let c = match &shard {
+            Shard::Dense(c) => c.clone(),
+            _ => unreachable!(),
+        };
+        assert!(s1.sub(&matmul(&c, &orthonormalize(&x0))).max_abs() < tol::ITER);
+        let sign_ref = mem.slots[DEEPCA_SIGN_REF].clone();
+        // a later round updates CX_prev, keeps the sign reference, and
+        // satisfies the tracking identity S' = S_in + C X - C X_prev
+        let s_in = rng.normal_mat(10, 2);
+        let cx_prev = mem.slots[DEEPCA_CX_PREV].clone();
+        let s2 = proto.worker_step(&mut mem, 2, &s_in, &mut env);
+        assert_eq!(mem.slots[DEEPCA_SIGN_REF], sign_ref);
+        let x = align::sign_adjust(&orthonormalize(&s_in), &sign_ref);
+        let mut want = s_in.clone();
+        want.axpy(1.0, &matmul(&c, &x));
+        want.axpy(-1.0, &cx_prev);
+        assert!(s2.sub(&want).max_abs() < tol::KERNEL);
+        assert!(mem.slots[DEEPCA_CX_PREV].sub(&matmul(&c, &x)).max_abs() < tol::KERNEL);
+    }
+
+    /// The engine-facing contract of the leader states: broadcast flags,
+    /// per-node down panels, merge-on-empty safety.
+    #[test]
+    fn leader_state_shapes() {
+        let mut rng = Pcg64::seed(3);
+        let (d, r, m) = (8usize, 2usize, 4usize);
+        let panels: Vec<Mat> = (0..m).map(|_| rng.haar_stiefel(d, r)).collect();
+        let round0 = Round0 {
+            in_panels: panels.clone(),
+            local_panels: panels.clone(),
+            in_quorum: (0..m).collect(),
+            late_merged: vec![],
+            lost: vec![],
+        };
+        let ctx = LeaderCtx { m, aggregation: AggregationRule::Mean, codec: WireCodec::F64 };
+        for (kind, broadcast) in [
+            (ProtocolKind::OneShot, true),
+            (ProtocolKind::QPower { rounds: 2, tol: 0.0 }, true),
+            (ProtocolKind::Sanger { rounds: 2, step: 0.3, topology: Topology::Ring }, false),
+            (ProtocolKind::DeepCa { rounds: 2, fastmix: 1, topology: Topology::Ring }, false),
+        ] {
+            let proto = kind.build(2);
+            let mut leader = proto.init_leader(&round0, &ctx);
+            assert_eq!(leader.is_broadcast(), broadcast, "{}", proto.name());
+            for node in 0..m {
+                assert_eq!(leader.down(1, node).shape(), (d, r), "{}", proto.name());
+            }
+            // a fully-lost round must not panic or corrupt state
+            leader.merge(1, vec![]);
+            assert!(!leader.converged());
+            let est = leader.into_estimate();
+            assert_eq!(est.shape(), (d, r));
+            crate::testkit::check::assert_orthonormal(&est, tol::FACTOR, kind.name());
+        }
+    }
+
+    /// QPower's tol-based convergence check trips once the iterate stops
+    /// moving (identical replies round after round).
+    #[test]
+    fn qpower_convergence_check() {
+        let mut rng = Pcg64::seed(4);
+        let (d, r, m) = (8usize, 2usize, 3usize);
+        let panels: Vec<Mat> = (0..m).map(|_| rng.haar_stiefel(d, r)).collect();
+        let round0 = Round0 {
+            in_panels: panels.clone(),
+            local_panels: panels,
+            in_quorum: (0..m).collect(),
+            late_merged: vec![],
+            lost: vec![],
+        };
+        let ctx = LeaderCtx { m, aggregation: AggregationRule::Mean, codec: WireCodec::F64 };
+        let proto = ProtocolKind::QPower { rounds: 5, tol: 1e-8 }.build(0);
+        let mut leader = proto.init_leader(&round0, &ctx);
+        let x = leader.down(1, 0).clone();
+        // replies exactly spanning the current iterate: zero movement
+        leader.merge(1, (0..m).map(|i| (i, x.clone())).collect());
+        assert!(leader.converged());
+    }
+
+    /// End-to-end smoke through the real engine: every protocol runs on
+    /// the cluster and produces an orthonormal estimate near the truth on
+    /// an easy problem.
+    #[test]
+    fn all_protocols_estimate_an_easy_subspace() {
+        use crate::coordinator::cluster::{run_cluster_faulty, ClusterConfig, FaultRunConfig};
+        use crate::linalg::subspace::dist2;
+        let mut rng = Pcg64::seed(9);
+        let (d, r, m) = (16usize, 2usize, 6usize);
+        let q = rng.haar_orthogonal(d);
+        let x = {
+            let evs: Vec<f64> = (0..d).map(|i| if i < r { 1.0 } else { 0.2 }).collect();
+            matmul(&Mat::from_fn(d, d, |i, j| q[(i, j)] * evs[j]), &q.transpose())
+        };
+        let truth = q.col_block(0, r);
+        let mk = || -> Vec<WorkerData> {
+            (0..m)
+                .map(|_| {
+                    let mut e = rng.normal_mat(d, d).scale(0.02);
+                    e.symmetrize();
+                    WorkerData::dense(x.add(&e))
+                })
+                .collect()
+        };
+        for kind in [
+            ProtocolKind::OneShot,
+            ProtocolKind::QPower { rounds: 3, tol: 0.0 },
+            ProtocolKind::Sanger { rounds: 3, step: 0.3, topology: Topology::Ring },
+            ProtocolKind::DeepCa { rounds: 3, fastmix: 2, topology: Topology::Ring },
+        ] {
+            let cfg = ClusterConfig { r, seed: 5, protocol: kind.clone(), ..Default::default() };
+            let res = run_cluster_faulty(
+                mk(),
+                Arc::new(NativeEngine::default()),
+                &cfg,
+                &FaultRunConfig::full(m),
+            );
+            crate::testkit::check::assert_orthonormal(&res.estimate, tol::FACTOR, kind.name());
+            let err = dist2(&res.estimate, &truth);
+            assert!(err < 0.2, "{}: err {err}", kind.name());
+            // round accounting: 1 collect round + the protocol's K
+            let want_rounds = 1 + kind.build(cfg.refine_rounds).rounds();
+            assert_eq!(res.comm.rounds, want_rounds, "{}", kind.name());
+            assert_eq!(res.per_round.len(), want_rounds, "{}", kind.name());
+        }
+    }
+}

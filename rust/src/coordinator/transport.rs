@@ -189,8 +189,8 @@ fn put_panel_payload(buf: &mut Vec<u8>, panel: &WirePanel) {
 pub fn encode_message(msg: &Message) -> Vec<u8> {
     let mut buf = Vec::with_capacity(msg.wire_bytes());
     let (tag, node, round, ritz_len, pw) = match msg {
-        Message::LocalEstimate { node, panel, ritz } => {
-            (TAG_LOCAL, *node, 0usize, ritz.len(), Some(panel_wire(panel)))
+        Message::LocalEstimate { node, round, panel, ritz } => {
+            (TAG_LOCAL, *node, *round, ritz.len(), Some(panel_wire(panel)))
         }
         Message::Reference { round, panel } => {
             (TAG_REFERENCE, 0usize, *round, 0, Some(panel_wire(panel)))
@@ -292,6 +292,7 @@ fn decode_frame(frame: &[u8]) -> Result<Message, FrameError> {
     match tag {
         TAG_LOCAL => Ok(Message::LocalEstimate {
             node,
+            round,
             panel: decode_panel()?,
             ritz: get_f64s(&body[panel_bytes..], ritz_len),
         }),
@@ -433,6 +434,7 @@ mod tests {
         for codec in every_codec() {
             out.push(Message::LocalEstimate {
                 node: 5,
+                round: 1,
                 panel: codec.encode(&panel),
                 ritz: vec![1.25, 0.5, -0.75],
             });
@@ -445,10 +447,11 @@ mod tests {
     fn assert_messages_equal(a: &Message, b: &Message) {
         match (a, b) {
             (
-                Message::LocalEstimate { node: n1, panel: p1, ritz: r1 },
-                Message::LocalEstimate { node: n2, panel: p2, ritz: r2 },
+                Message::LocalEstimate { node: n1, round: k1, panel: p1, ritz: r1 },
+                Message::LocalEstimate { node: n2, round: k2, panel: p2, ritz: r2 },
             ) => {
                 assert_eq!(n1, n2);
+                assert_eq!(k1, k2);
                 assert_eq!(r1, r2);
                 assert_panels_equal(p1, p2);
             }

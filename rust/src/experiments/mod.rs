@@ -11,6 +11,7 @@ mod figs_apps;
 mod figs_intdim;
 mod figs_pca;
 mod netfault;
+mod rounds;
 mod tables;
 mod wire;
 
@@ -22,7 +23,7 @@ use crate::config::RunOptions;
 /// plus the wire-codec and fault-schedule sweeps this reproduction adds.
 pub const ALL: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9",
-    "fig10", "table1", "table2", "wire", "faults",
+    "fig10", "table1", "table2", "wire", "faults", "rounds",
 ];
 
 /// Dispatch a single experiment by name.
@@ -43,6 +44,7 @@ pub fn run(name: &str, opts: &RunOptions) -> Result<()> {
         "table2" => figs_apps::table2(opts),
         "wire" => wire::wire(opts),
         "faults" => netfault::faults(opts),
+        "rounds" => rounds::rounds(opts),
         "all" => {
             for n in ALL {
                 println!("\n================ {n} ================");

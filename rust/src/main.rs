@@ -4,11 +4,13 @@
 //! - `exp <fig1..fig10|table1|table2|all> [--quick] [--seed S] [--out DIR]
 //!   [--trials T]` — regenerate a paper figure/table (CSV + console table).
 //! - `cluster [--m M] [--n N] [--d D] [--r R] [--refine K] [--pjrt]
+//!   [--protocol oneshot|qpower|sanger|deepca] [--rounds K]
 //!   [--byzantine B] [--median] [--transport local|tcp] [--quorum Q]
 //!   [--faults SPEC] [--grace MS] [--straggler MS]` — run the
 //!   leader/worker coordinator on a synthetic distributed-PCA workload
 //!   (in-process or over loopback TCP, optionally under a deterministic
-//!   fault schedule) and report accuracy + communication accounting.
+//!   fault schedule, with a one-shot or iterative multi-round protocol)
+//!   and report accuracy + communication accounting, per round.
 //! - `info` — version, artifact manifest, PJRT platform.
 
 use std::process::ExitCode;
@@ -17,7 +19,7 @@ use std::sync::Arc;
 use deigen::config::{Cli, RunOptions};
 use deigen::coordinator::{
     run_cluster_faulty, run_cluster_tcp, AggregationRule, ClusterConfig, FaultPlan,
-    FaultRunConfig, NetworkModel, NodeBehavior, Shard, WireCodec, WorkerData,
+    FaultRunConfig, NetworkModel, NodeBehavior, ProtocolKind, Shard, WireCodec, WorkerData,
 };
 use deigen::linalg::subspace::dist2;
 use deigen::rng::Pcg64;
@@ -27,6 +29,7 @@ use deigen::synth::{CovModel, SpectrumModel};
 const USAGE: &str = "usage:
   deigen exp <name|all> [--quick] [--seed S] [--out DIR] [--trials T]
   deigen cluster [--m M] [--n N] [--d D] [--r R] [--refine K] [--pjrt]
+                 [--protocol oneshot|qpower|sanger|deepca] [--rounds K]
                  [--byzantine B] [--median] [--wan] [--seed S]
                  [--codec f64|f16|int8|fd<l>] [--transport local|tcp]
                  [--quorum Q] [--faults SPEC] [--grace MS] [--straggler MS]
@@ -34,7 +37,7 @@ const USAGE: &str = "usage:
               [--linear-x] [--linear-y]
   deigen info
 experiments: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 table1
-             table2 wire faults
+             table2 wire faults rounds
 fault spec:  clean|lossy|laggy|chaos or clauses drop=P, delay=P:MS, dup=P,
              slow=N:MS, crash=N@R, join=N@R, part=A-B@R:K, retries=K, rto=MS";
 
@@ -81,6 +84,9 @@ fn cluster_demo(cli: &Cli) -> anyhow::Result<()> {
     let d = cli.get_usize("d", if use_pjrt { 64 } else { 100 }).map_err(|e| anyhow::anyhow!(e))?;
     let r = cli.get_usize("r", if use_pjrt { 8 } else { 4 }).map_err(|e| anyhow::anyhow!(e))?;
     let refine = cli.get_usize("refine", 0).map_err(|e| anyhow::anyhow!(e))?;
+    let rounds = cli.get_usize("rounds", 3).map_err(|e| anyhow::anyhow!(e))?;
+    let protocol = ProtocolKind::parse(&cli.get_str("protocol", "oneshot"), rounds)
+        .map_err(|e| anyhow::anyhow!(e))?;
     let byz = cli.get_usize("byzantine", 0).map_err(|e| anyhow::anyhow!(e))?;
     let seed = cli.get_u64("seed", 20200504).map_err(|e| anyhow::anyhow!(e))?;
     let codec = WireCodec::parse(&cli.get_str("codec", "f64"))
@@ -101,8 +107,9 @@ fn cluster_demo(cli: &Cli) -> anyhow::Result<()> {
     };
 
     println!(
-        "cluster: m={m} n={n} d={d} r={r} refine={refine} byzantine={byz} codec={} engine={} \
-         transport={transport} quorum={quorum} faults={faults}",
+        "cluster: m={m} n={n} d={d} r={r} protocol={} refine={refine} byzantine={byz} codec={} \
+         engine={} transport={transport} quorum={quorum} faults={faults}",
+        protocol.name(),
         codec.name(),
         if use_pjrt { "pjrt" } else { "native" }
     );
@@ -137,6 +144,7 @@ fn cluster_demo(cli: &Cli) -> anyhow::Result<()> {
     let config = ClusterConfig {
         r,
         refine_rounds: refine,
+        protocol,
         aggregation: if cli.get_flag("median") {
             AggregationRule::CoordinateMedian
         } else {
@@ -197,6 +205,19 @@ fn cluster_demo(cli: &Cli) -> anyhow::Result<()> {
         res.late_merged.len(),
         res.lost.len(),
     );
+    if res.per_round.len() > 1 {
+        println!("per-round payload traffic:");
+        for (k, s) in res.per_round.iter().enumerate() {
+            println!(
+                "  round {k}: up={}B ({} msgs) down={}B ({} msgs) stall={:.1}ms",
+                s.bytes_up,
+                s.msgs_up,
+                s.bytes_down,
+                s.msgs_down,
+                s.stall_us as f64 / 1000.0,
+            );
+        }
+    }
     Ok(())
 }
 

@@ -1,0 +1,275 @@
+//! Round-protocol integration suite (tier-1, DESIGN.md S15):
+//!
+//! 1. The `RoundProtocol` one-shot instance is bit-identical to a
+//!    spec-level oracle of the pre-engine pipeline (Algorithm 1 +
+//!    Algorithm-2 refinement) across seeds, codecs, refinement depths,
+//!    and both transports — the engine refactor changed nothing the
+//!    wire can see.
+//! 2. The rounds-vs-bytes frontier claim: in the calibrated regime
+//!    (d=64, r=5, m=32), three quantized power rounds move fewer bytes
+//!    than one f64 one-shot upload and land a strictly better estimate.
+//! 3. Per-round meters reconcile field-wise with the run totals on a
+//!    real multi-round cluster run under a lossy fault plan.
+
+use std::sync::Arc;
+
+use deigen::align::{mean_qr, procrustes_fix_with_reference};
+use deigen::coordinator::{
+    run_cluster_faulty, run_cluster_tcp, ClusterConfig, CommSnapshot, FaultPlan,
+    FaultRunConfig, ProtocolKind, Shard, WireCodec, WorkerData,
+};
+use deigen::linalg::gemm::matmul;
+use deigen::linalg::procrustes::procrustes_align;
+use deigen::linalg::subspace::dist2;
+use deigen::linalg::Mat;
+use deigen::rng::Pcg64;
+use deigen::runtime::{LocalSolver, NativeEngine};
+use deigen::testkit::tol;
+
+/// m dense noisy observations of a spectrum-{1.0, 0.3} symmetric ground
+/// truth — the same generator the coordinator unit tests and the
+/// `exp rounds` sweep use.
+fn noisy_observations(
+    rng: &mut Pcg64,
+    d: usize,
+    r: usize,
+    m: usize,
+    noise: f64,
+) -> (Mat, Vec<Mat>) {
+    let q = rng.haar_orthogonal(d);
+    let evs: Vec<f64> = (0..d).map(|i| if i < r { 1.0 } else { 0.3 }).collect();
+    let x = matmul(&Mat::from_fn(d, d, |i, j| q[(i, j)] * evs[j]), &q.transpose());
+    let obs = (0..m)
+        .map(|_| {
+            let mut e = rng.normal_mat(d, d).scale(noise);
+            e.symmetrize();
+            x.add(&e)
+        })
+        .collect();
+    (q.col_block(0, r), obs)
+}
+
+fn median(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.total_cmp(b));
+    xs[xs.len() / 2]
+}
+
+/// Spec-level oracle for the pre-engine one-shot pipeline under full
+/// participation: round-0 local solves on per-worker rng streams, codec
+/// encode/decode at every boundary, leader-side Procrustes aggregation,
+/// then `refine` broadcast-align-average rounds seeded from node 0's
+/// decoded panel. Mirrors the legacy `run_cluster` operation-for-
+/// operation, so the engine must reproduce it bit-for-bit.
+fn oneshot_oracle(obs: &[Mat], r: usize, seed: u64, codec: WireCodec, refine: usize) -> Mat {
+    let solver = NativeEngine::default();
+    let mut exact = Vec::with_capacity(obs.len());
+    let mut decoded = Vec::with_capacity(obs.len());
+    for (i, o) in obs.iter().enumerate() {
+        let shard = Shard::Dense(o.clone());
+        let mut rng = Pcg64::seed_stream(seed, i as u64 + 1);
+        let panel = solver.leading_subspace_op(&shard, r, &mut rng);
+        decoded.push(codec.encode(&panel).decode());
+        exact.push(panel);
+    }
+    let mut reference = if refine == 0 {
+        procrustes_fix_with_reference(&decoded, &decoded[0])
+    } else {
+        decoded[0].clone()
+    };
+    for _ in 1..=refine {
+        // the broadcast is encoded once and every worker sees its decode
+        let ref_dec = codec.encode(&reference).decode();
+        let mut replies: Vec<Mat> = exact
+            .iter()
+            .map(|p| codec.encode(&procrustes_align(p, &ref_dec)).decode())
+            .collect();
+        // span-only codecs decode to an arbitrary basis; the leader
+        // re-anchors to its own (un-encoded) reference before averaging
+        if !codec.preserves_representative() {
+            for p in replies.iter_mut() {
+                *p = procrustes_align(p, &reference);
+            }
+        }
+        reference = mean_qr(&replies);
+    }
+    reference
+}
+
+/// Satellite 4: the engine's `ProtocolKind::OneShot` path is
+/// bit-identical to the pre-refactor pipeline — across seeds, codecs,
+/// refinement depths, and (for one seed) the loopback-TCP engine.
+#[test]
+fn oneshot_round_engine_is_bit_identical_to_the_legacy_pipeline() {
+    let (d, r, m) = (16usize, 2usize, 5usize);
+    for seed in [1u64, 5] {
+        for codec in [WireCodec::F64, WireCodec::Int8, WireCodec::FdSketch { l: 2 }] {
+            for refine in [0usize, 2] {
+                let mut rng = Pcg64::seed(seed);
+                let (_, obs) = noisy_observations(&mut rng, d, r, m, 0.05);
+                let want = oneshot_oracle(&obs, r, seed, codec, refine);
+                let workers: Vec<WorkerData> =
+                    obs.iter().map(|o| WorkerData::dense(o.clone())).collect();
+                let cfg = ClusterConfig {
+                    r,
+                    refine_rounds: refine,
+                    protocol: ProtocolKind::OneShot,
+                    codec,
+                    seed,
+                    ..Default::default()
+                };
+                let res = run_cluster_faulty(
+                    workers,
+                    Arc::new(NativeEngine::default()),
+                    &cfg,
+                    &FaultRunConfig::full(m),
+                );
+                assert!(
+                    res.estimate.sub(&want).max_abs() == 0.0,
+                    "engine vs legacy oracle diverge (seed={seed} codec={} refine={refine}): {}",
+                    codec.name(),
+                    res.estimate.sub(&want).max_abs()
+                );
+                // and the engine itself replays bit-identically
+                let workers2: Vec<WorkerData> =
+                    obs.iter().map(|o| WorkerData::dense(o.clone())).collect();
+                let res2 = run_cluster_faulty(
+                    workers2,
+                    Arc::new(NativeEngine::default()),
+                    &cfg,
+                    &FaultRunConfig::full(m),
+                );
+                assert!(res.estimate.sub(&res2.estimate).max_abs() == 0.0);
+                assert_eq!(res.comm, res2.comm);
+                assert_eq!(res.transcript, res2.transcript);
+
+                // the TCP engine lands on the very same bits (one seed
+                // keeps the socket churn bounded; tcp_e2e covers faults)
+                if seed == 1 {
+                    let Ok(listener) = std::net::TcpListener::bind("127.0.0.1:0") else {
+                        eprintln!("skipping TCP leg: loopback unavailable");
+                        continue;
+                    };
+                    drop(listener);
+                    let workers3: Vec<WorkerData> =
+                        obs.iter().map(|o| WorkerData::dense(o.clone())).collect();
+                    let tcp = run_cluster_tcp(
+                        workers3,
+                        Arc::new(NativeEngine::default()),
+                        &cfg,
+                        &FaultRunConfig::full(m),
+                    )
+                    .expect("loopback TCP run failed");
+                    assert!(
+                        tcp.estimate.sub(&want).max_abs() == 0.0,
+                        "TCP engine vs legacy oracle diverge (codec={} refine={refine})",
+                        codec.name()
+                    );
+                    assert_eq!(tcp.comm, res.comm);
+                    assert_eq!(tcp.transcript, res.transcript);
+                }
+            }
+        }
+    }
+}
+
+/// The acceptance claim behind `deigen exp rounds`: a regime where an
+/// iterative protocol beats one-shot at equal byte budget. At (d=64,
+/// r=5) an int8 panel message is ~1/8 of an f64 one, so K=3 quantized
+/// power rounds (1 upload + 3 down/up exchanges, all int8) fit inside
+/// the single f64 one-shot upload budget — and the power iterations
+/// contract the estimate error below the one-shot baseline.
+#[test]
+fn qpower_int8_beats_oneshot_f64_at_equal_byte_budget() {
+    let (d, r, m, noise) = (64usize, 5usize, 32usize, 0.08);
+    let trials = 5;
+    let mut margins = Vec::with_capacity(trials);
+    let mut qpower_errs = Vec::with_capacity(trials);
+    for trial in 0..trials {
+        let mut rng = Pcg64::seed_stream(4242, 100 + trial as u64);
+        let (truth, obs) = noisy_observations(&mut rng, d, r, m, noise);
+        let mk = || -> Vec<WorkerData> {
+            obs.iter().map(|o| WorkerData::dense(o.clone())).collect()
+        };
+        let base_cfg = ClusterConfig { r, seed: 4242, ..Default::default() };
+        let oneshot = run_cluster_faulty(
+            mk(),
+            Arc::new(NativeEngine::default()),
+            &base_cfg,
+            &FaultRunConfig::full(m),
+        );
+        let q_cfg = ClusterConfig {
+            r,
+            protocol: ProtocolKind::QPower { rounds: 3, tol: 0.0 },
+            codec: WireCodec::Int8,
+            seed: 4242,
+            ..Default::default()
+        };
+        let qpower = run_cluster_faulty(
+            mk(),
+            Arc::new(NativeEngine::default()),
+            &q_cfg,
+            &FaultRunConfig::full(m),
+        );
+        // the byte budget: total payload (up + down) of the iterative
+        // run must not exceed the one-shot f64 upload
+        let oneshot_bytes = oneshot.comm.bytes_up + oneshot.comm.bytes_down;
+        let qpower_bytes = qpower.comm.bytes_up + qpower.comm.bytes_down;
+        assert!(
+            qpower_bytes <= oneshot_bytes,
+            "trial {trial}: qpower spent {qpower_bytes} B > oneshot {oneshot_bytes} B"
+        );
+        let err_o = dist2(&oneshot.estimate, &truth);
+        let err_q = dist2(&qpower.estimate, &truth);
+        margins.push(err_o - err_q);
+        qpower_errs.push(err_q);
+    }
+    let med_margin = median(&mut margins);
+    assert!(
+        med_margin > 0.0,
+        "qpower-int8 did not beat oneshot-f64 at equal bytes: median margin {med_margin}"
+    );
+    assert!(
+        median(&mut qpower_errs) < tol::STAT,
+        "qpower estimate not within statistical tolerance of the truth"
+    );
+}
+
+/// Per-round meters on a real multi-round run under a lossy plan sum
+/// field-wise to the run totals: payload, retry/drop/dup, stall — with
+/// control traffic round-less by design (appears only in the totals).
+#[test]
+fn per_round_meters_reconcile_with_run_totals() {
+    let (d, r, m, seed) = (16usize, 2usize, 6usize, 23u64);
+    let mut rng = Pcg64::seed(seed);
+    let (_, obs) = noisy_observations(&mut rng, d, r, m, 0.05);
+    let workers: Vec<WorkerData> = obs.iter().map(|o| WorkerData::dense(o.clone())).collect();
+    let plan = FaultPlan::parse("drop=0.1, delay=0.2:10, dup=0.1, rto=5").unwrap().seeded(seed);
+    let fc = FaultRunConfig { plan, quorum: m - 1, grace_ms: 20.0, straggler_ms: 200.0 };
+    let cfg = ClusterConfig {
+        r,
+        protocol: ProtocolKind::QPower { rounds: 3, tol: 0.0 },
+        codec: WireCodec::Int8,
+        seed,
+        ..Default::default()
+    };
+    let res = run_cluster_faulty(workers, Arc::new(NativeEngine::default()), &cfg, &fc);
+    // 1 collect round + 3 protocol rounds, one snapshot each
+    assert_eq!(res.comm.rounds, 4);
+    assert_eq!(res.per_round.len(), 4);
+    let mut acc = CommSnapshot::zero();
+    for s in &res.per_round {
+        assert_eq!((s.bytes_ctrl, s.msgs_ctrl), (0, 0), "control traffic is round-less");
+        acc.accumulate(s);
+    }
+    assert_eq!(
+        acc,
+        CommSnapshot { bytes_ctrl: 0, msgs_ctrl: 0, ..res.comm },
+        "per-round snapshots do not sum to the run totals"
+    );
+    assert!(res.comm.bytes_ctrl > 0, "Done control traffic missing from totals");
+    // round 0 carries no down-link payload; every protocol round does
+    assert_eq!(res.per_round[0].bytes_down, 0);
+    for (k, s) in res.per_round.iter().enumerate().skip(1) {
+        assert!(s.bytes_down > 0, "round {k} sent no down-link payload");
+    }
+}

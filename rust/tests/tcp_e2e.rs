@@ -8,7 +8,8 @@
 use std::sync::Arc;
 
 use deigen::coordinator::{
-    run_cluster_faulty, run_cluster_tcp, ClusterConfig, FaultPlan, FaultRunConfig, WorkerData,
+    run_cluster_faulty, run_cluster_tcp, ClusterConfig, FaultPlan, FaultRunConfig, ProtocolKind,
+    Topology, WireCodec, WorkerData,
 };
 use deigen::linalg::subspace::dist2;
 use deigen::linalg::Mat;
@@ -123,4 +124,49 @@ fn tcp_refinement_with_lossy_codec_matches_in_process_engine() {
     assert!(tcp.estimate.sub(&local.estimate).max_abs() == 0.0);
     assert_eq!(tcp.comm, local.comm);
     assert_eq!(tcp.transcript, local.transcript);
+}
+
+/// The iterative protocols replay bit-identically across the two engines
+/// under a lossy fault plan: every round's panels ride the negotiated
+/// codec, every link passes through the plan's drop/delay/dup schedule,
+/// and the per-round meters, transcript, and estimate must all agree —
+/// including the per-node (non-broadcast) down-links of the simulated
+/// decentralized protocols.
+#[test]
+fn tcp_multi_round_protocols_replay_bit_identically_under_lossy_plan() {
+    if !sockets_available() {
+        return;
+    }
+    let (m, seed) = (5usize, 31u64);
+    let combos = [
+        (ProtocolKind::QPower { rounds: 3, tol: 0.0 }, WireCodec::Int8),
+        (ProtocolKind::Sanger { rounds: 3, step: 0.3, topology: Topology::Ring }, WireCodec::F64),
+        (ProtocolKind::DeepCa { rounds: 2, fastmix: 2, topology: Topology::Ring }, WireCodec::F64),
+    ];
+    for (protocol, codec) in combos {
+        let plan =
+            FaultPlan::parse("drop=0.15, delay=0.3:20, dup=0.1, rto=5").unwrap().seeded(seed);
+        let fc = FaultRunConfig { plan, quorum: m - 1, grace_ms: 40.0, straggler_ms: 400.0 };
+        let cfg = ClusterConfig {
+            r: 2,
+            protocol: protocol.clone(),
+            codec,
+            seed,
+            ..Default::default()
+        };
+        let (_, workers) = pca_workers(seed, 16, 2, m, 150);
+        let tcp = run_cluster_tcp(workers, Arc::new(NativeEngine::default()), &cfg, &fc)
+            .expect("loopback TCP run failed");
+        let (_, workers2) = pca_workers(seed, 16, 2, m, 150);
+        let local = run_cluster_faulty(workers2, Arc::new(NativeEngine::default()), &cfg, &fc);
+        let name = protocol.name();
+        assert!(
+            tcp.estimate.sub(&local.estimate).max_abs() == 0.0,
+            "{name}: TCP vs in-process estimate not bit-identical"
+        );
+        assert_eq!(tcp.comm, local.comm, "{name}: meters diverge");
+        assert_eq!(tcp.per_round, local.per_round, "{name}: per-round meters diverge");
+        assert_eq!(tcp.transcript, local.transcript, "{name}: transcripts diverge");
+        check::assert_orthonormal(&tcp.estimate, tol::FACTOR, name);
+    }
 }
