@@ -13,8 +13,8 @@ use std::sync::Arc;
 
 use deigen::benchutil::{bench, header, quick_mode, report, JsonSink};
 use deigen::coordinator::{
-    run_cluster_faulty, ClusterConfig, FaultRunConfig, ProtocolKind, Topology, WireCodec,
-    WorkerData,
+    run_cluster_faulty, ClusterConfig, FaultPlan, FaultRunConfig, ProtocolKind, RobustMode,
+    RobustPolicy, Topology, WireCodec, WorkerData,
 };
 use deigen::linalg::gemm::matmul;
 use deigen::linalg::Mat;
@@ -56,8 +56,16 @@ fn main() {
     let protocols: [(&str, ProtocolKind, usize); 4] = [
         ("oneshot", ProtocolKind::OneShot, k),
         ("qpower", ProtocolKind::QPower { rounds: k, tol: 0.0 }, 0),
-        ("sanger", ProtocolKind::Sanger { rounds: k, step: 0.3, topology: Topology::Ring }, 0),
-        ("deepca", ProtocolKind::DeepCa { rounds: k, fastmix: 3, topology: Topology::Ring }, 0),
+        (
+            "sanger",
+            ProtocolKind::Sanger { rounds: k, step: 0.3, topology: Topology::Ring, tol: 0.0 },
+            0,
+        ),
+        (
+            "deepca",
+            ProtocolKind::DeepCa { rounds: k, fastmix: 3, topology: Topology::Ring, tol: 0.0 },
+            0,
+        ),
     ];
     for (name, protocol, refine) in &protocols {
         for codec in [WireCodec::F64, WireCodec::Int8] {
@@ -81,6 +89,39 @@ fn main() {
             report(&res);
             sink.record(&res, None);
         }
+    }
+
+    // robust-merge overhead probe: the same qpower run with the
+    // reputation gate screening a corrupt minority, vs the plain merge —
+    // the delta is the per-round Procrustes screening + scoring cost
+    let byz_fc = FaultRunConfig {
+        plan: FaultPlan::parse(&format!("byz={}:rotate", (m / 2).saturating_sub(1).max(1)))
+            .expect("byz spec")
+            .seeded(11),
+        ..FaultRunConfig::full(m)
+    };
+    for (label, robust) in [
+        ("plain ", RobustPolicy::off()),
+        ("screen", RobustPolicy::with_mode(RobustMode::Screen)),
+    ] {
+        let cfg = ClusterConfig {
+            r,
+            protocol: ProtocolKind::QPower { rounds: k, tol: 0.0 },
+            seed: 11,
+            robust,
+            ..Default::default()
+        };
+        let res = bench(
+            &format!("qpower+byz {label} m={m} d={d} K={k}"),
+            1,
+            iters,
+            || {
+                let out = run_cluster_faulty(mk(), solver.clone(), &cfg, &byz_fc);
+                std::hint::black_box(out.estimate);
+            },
+        );
+        report(&res);
+        sink.record(&res, None);
     }
     sink.finish();
 }

@@ -130,7 +130,7 @@ pub fn median_qr(panels: &[Mat]) -> Mat {
             for (k, p) in panels.iter().enumerate() {
                 buf[k] = p[(i, j)];
             }
-            buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            buf.sort_by(|a, b| a.total_cmp(b));
             let mid = buf.len() / 2;
             med[(i, j)] = if buf.len() % 2 == 1 {
                 buf[mid]
@@ -140,6 +140,52 @@ pub fn median_qr(panels: &[Mat]) -> Mat {
         }
     }
     orthonormalize(&med)
+}
+
+/// QR of the *weighted* mean of already-aligned panels — the
+/// reputation-weighted leader aggregation. Weights need not sum to one;
+/// non-positive total weight falls back to the unweighted mean.
+pub fn weighted_mean_qr(panels: &[Mat], weights: &[f64]) -> Mat {
+    assert!(!panels.is_empty());
+    assert_eq!(panels.len(), weights.len(), "one weight per panel");
+    let total: f64 = weights.iter().copied().filter(|w| w.is_finite() && *w > 0.0).sum();
+    if total <= 0.0 {
+        return mean_qr(panels);
+    }
+    let (d, r) = panels[0].shape();
+    let mut acc = Mat::zeros(d, r);
+    for (p, &w) in panels.iter().zip(weights) {
+        if w.is_finite() && w > 0.0 {
+            acc.axpy(w / total, p);
+        }
+    }
+    orthonormalize(&acc)
+}
+
+/// QR of the entry-wise **trimmed mean** of already-aligned panels: per
+/// coordinate, drop the `floor(frac * m)` smallest and largest values and
+/// average the rest. `frac = 0` is the plain mean; the trim depth is
+/// clamped so at least one value always survives. NaNs sort to the tails
+/// (total order), so a trimmed aggregation also clips non-finite junk.
+pub fn trimmed_mean_qr(panels: &[Mat], frac: f64) -> Mat {
+    assert!(!panels.is_empty());
+    assert!((0.0..0.5).contains(&frac), "trim fraction must be in [0, 0.5)");
+    let m = panels.len();
+    let t = ((frac * m as f64).floor() as usize).min((m - 1) / 2);
+    let (d, r) = panels[0].shape();
+    let mut out = Mat::zeros(d, r);
+    let mut buf = vec![0.0f64; m];
+    for i in 0..d {
+        for j in 0..r {
+            for (k, p) in panels.iter().enumerate() {
+                buf[k] = p[(i, j)];
+            }
+            buf.sort_by(|a, b| a.total_cmp(b));
+            let kept = &buf[t..m - t];
+            out[(i, j)] = kept.iter().sum::<f64>() / kept.len() as f64;
+        }
+    }
+    orthonormalize(&out)
 }
 
 /// The *unnormalized* aligned average `mean_i V^(i) Z_i` (before QR) —
@@ -385,6 +431,53 @@ mod tests {
         let est = centralized(&mats, 3);
         let truth = q.col_block(0, 3);
         assert!(dist2(&est, &truth) < 0.05);
+    }
+
+    #[test]
+    fn weighted_mean_matches_plain_mean_at_equal_weights() {
+        let mut rng = Pcg64::seed(23);
+        let (_, locals) = noisy_locals(&mut rng, 20, 3, 6, 0.05);
+        let aligned: Vec<Mat> = locals
+            .iter()
+            .map(|v| crate::linalg::procrustes::procrustes_align(v, &locals[0]))
+            .collect();
+        let plain = mean_qr(&aligned);
+        let weighted = weighted_mean_qr(&aligned, &[1.0; 6]);
+        assert!(dist2(&plain, &weighted) < 1e-12);
+        // down-weighting a junk panel to zero removes its influence exactly
+        let mut poisoned = aligned.clone();
+        poisoned[5] = rng.haar_stiefel(20, 3);
+        let mut w = [1.0; 6];
+        w[5] = 0.0;
+        let screened = weighted_mean_qr(&poisoned, &w);
+        let clean = mean_qr(&aligned[..5]);
+        assert!(dist2(&screened, &clean) < 1e-12);
+        // degenerate all-zero weights fall back to the unweighted mean
+        let fallback = weighted_mean_qr(&aligned, &[0.0; 6]);
+        assert!(dist2(&fallback, &plain) < 1e-12);
+    }
+
+    #[test]
+    fn trimmed_mean_clips_outliers_and_degenerates_to_mean() {
+        let mut rng = Pcg64::seed(29);
+        let (truth, locals) = noisy_locals(&mut rng, 24, 3, 9, 0.04);
+        let aligned: Vec<Mat> = locals
+            .iter()
+            .map(|v| crate::linalg::procrustes::procrustes_align(v, &locals[0]))
+            .collect();
+        assert!(dist2(&trimmed_mean_qr(&aligned, 0.0), &mean_qr(&aligned)) < 1e-12);
+        // one wild panel: trimming one value per tail removes it per entry
+        let mut poisoned = aligned.clone();
+        poisoned[8] = poisoned[8].scale(50.0);
+        let trimmed = dist2(&trimmed_mean_qr(&poisoned, 0.15), &truth);
+        let untrimmed = dist2(&mean_qr(&poisoned), &truth);
+        assert!(trimmed < untrimmed, "trimmed {trimmed} vs mean {untrimmed}");
+        assert!(trimmed < 0.2, "trimmed dist {trimmed}");
+        crate::testkit::check::assert_orthonormal(
+            &trimmed_mean_qr(&poisoned, 0.15),
+            crate::testkit::tol::FACTOR,
+            "trimmed_mean_qr",
+        );
     }
 
     #[test]

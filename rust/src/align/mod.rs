@@ -12,6 +12,6 @@ pub use estimators::{
     aligned_average_raw, apply_rotations, centralized, iterative_refinement,
     mean_qr, median_qr, naive_average, procrustes_fix,
     procrustes_fix_with_reference, projector_average, rotations,
-    sign_adjust, sign_fix_average,
+    sign_adjust, sign_fix_average, trimmed_mean_qr, weighted_mean_qr,
 };
-pub use robust::{coordinate_median_fix, robust_reference_index};
+pub use robust::{coordinate_median_fix, robust_reference_index, trimmed_fix};

@@ -21,7 +21,9 @@ pub fn robust_reference_index(locals: &[Mat]) -> usize {
             .filter(|&j| j != i)
             .map(|j| procrustes_distance(&locals[j], &locals[i]))
             .collect();
-        dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a NaN distance (corrupted/f16-decoded panel) must
+        // sort deterministically instead of panicking the leader
+        dists.sort_by(|a, b| a.total_cmp(b));
         // true median: for even-length lists average the two middle
         // elements — taking the upper middle alone biases the score
         // upward exactly when half the distances are adversarial
@@ -55,7 +57,7 @@ pub fn coordinate_median_fix(locals: &[Mat]) -> Mat {
             for (k, a) in aligned.iter().enumerate() {
                 buf[k] = a[(i, j)];
             }
-            buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            buf.sort_by(|a, b| a.total_cmp(b));
             let mid = buf.len() / 2;
             med[(i, j)] = if buf.len() % 2 == 1 {
                 buf[mid]
@@ -65,6 +67,21 @@ pub fn coordinate_median_fix(locals: &[Mat]) -> Mat {
         }
     }
     orthonormalize(&med)
+}
+
+/// Robust Procrustes fixing with an **entry-wise trimmed mean**: align
+/// every panel with the robustly chosen reference, drop the
+/// `floor(frac * m)` smallest and largest values of each coordinate,
+/// average the survivors, orthonormalize. `frac = 0` degenerates to the
+/// aligned mean; `frac` close to 0.5 approaches the coordinate median.
+pub fn trimmed_fix(locals: &[Mat], frac: f64) -> Mat {
+    assert!(!locals.is_empty());
+    let ref_idx = robust_reference_index(locals);
+    let aligned: Vec<Mat> = locals
+        .iter()
+        .map(|v| procrustes_align(v, &locals[ref_idx]))
+        .collect();
+    super::estimators::trimmed_mean_qr(&aligned, frac)
 }
 
 #[cfg(test)]
@@ -205,6 +222,79 @@ mod tests {
         let solo = coordinate_median_fix(&locals[..1]);
         assert_eq!(robust_reference_index(&locals[..1]), 0);
         assert!(dist2(&solo, &locals[0]) < 1e-10);
+    }
+
+    /// Satellite regression: a NaN-carrying panel (corrupted or decoded
+    /// from a junk f16 frame) used to panic both the reference pick and
+    /// the coordinate sort via `partial_cmp().unwrap()`. With `total_cmp`
+    /// the honest majority still wins and nothing panics.
+    #[test]
+    fn nan_panels_do_not_panic_and_honest_majority_survives() {
+        let mut rng = Pcg64::seed(31);
+        let (truth, mut locals) = honest_and_byzantine(&mut rng, 30, 3, 7, 0, 0.04);
+        let (d, r) = locals[0].shape();
+        locals.push(Mat::from_fn(d, r, |_, _| f64::NAN));
+        let idx = robust_reference_index(&locals);
+        assert!(idx < 7, "picked the NaN panel as reference");
+        // the coordinate median sees 7 finite values vs 1 NaN per entry:
+        // total_cmp sorts NaN last, so the two middles are finite
+        let est = coordinate_median_fix(&locals);
+        let dr = dist2(&est, &truth);
+        assert!(dr.is_finite() && dr < 0.25, "robust dist {dr}");
+        // the trimmed variant clips the NaN tail entirely
+        let tr = dist2(&trimmed_fix(&locals, 0.2), &truth);
+        assert!(tr.is_finite() && tr < 0.25, "trimmed dist {tr}");
+    }
+
+    /// The breakdown property (tentpole acceptance): colluding adversaries
+    /// — identical junk panels, mutual distance zero — are screened while
+    /// they are a strict minority (`ceil(m/2) - 1`), and capture the
+    /// robust reference the moment they reach `ceil(m/2)`.
+    #[test]
+    fn coordinate_median_breaks_down_exactly_past_half() {
+        use crate::testkit::tol;
+        for &m in &[5usize, 8, 9] {
+            let minority = m.div_ceil(2) - 1;
+            let majority = m.div_ceil(2);
+            for (byz, expect_hold) in [(minority, true), (majority, false)] {
+                let honest = m - byz;
+                let mut rng = Pcg64::seed(400 + m as u64);
+                let (truth, mut locals) =
+                    honest_and_byzantine(&mut rng, 30, 3, honest, 0, 0.03);
+                let junk = rng.haar_stiefel(30, 3);
+                for _ in 0..byz {
+                    locals.push(junk.clone()); // colluders: identical panels
+                }
+                let dr = dist2(&coordinate_median_fix(&locals), &truth);
+                if expect_hold {
+                    assert!(
+                        dr < tol::STAT,
+                        "m={m} byz={byz}: robust dist {dr} should hold"
+                    );
+                } else {
+                    // at ceil(m/2) colluders the mutual-distance-zero block
+                    // wins the reference pick and the estimate tracks junk
+                    let dj = dist2(&coordinate_median_fix(&locals), &junk);
+                    assert!(
+                        dr > tol::STAT || dj < dr,
+                        "m={m} byz={byz}: expected breakdown, dist to truth {dr}, \
+                         dist to junk {dj}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trimmed_fix_interpolates_mean_and_median() {
+        let mut rng = Pcg64::seed(41);
+        let (truth, locals) = honest_and_byzantine(&mut rng, 30, 3, 10, 3, 0.04);
+        // frac 0 = aligned mean around the robust reference: still poisoned
+        // by the junk values; frac 0.3 clips all 3 junk panels per entry
+        let loose = dist2(&trimmed_fix(&locals, 0.0), &truth);
+        let tight = dist2(&trimmed_fix(&locals, 0.3), &truth);
+        assert!(tight < 0.25, "trimmed dist {tight}");
+        assert!(tight <= loose + 1e-9, "trimming should not hurt: {tight} vs {loose}");
     }
 
     #[test]

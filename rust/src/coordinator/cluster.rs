@@ -63,10 +63,13 @@ use crate::linalg::{pool, Mat, Workspace};
 use crate::rng::Pcg64;
 use crate::runtime::LocalSolver;
 
-use super::fault::{meter_schedule, FaultPlan, LinkDir, Transcript};
+use super::fault::{
+    meter_schedule, AttackStrategy, FaultAction, FaultEvent, FaultPlan, LinkDir, Transcript,
+};
 use super::netsim::{CommSnapshot, CommStats, NetworkModel};
-use super::protocol::{AggregationRule, Message, WireCodec};
-use super::rounds::{LeaderCtx, ProtocolKind, RoundProtocol, WorkerEnv, WorkerMem};
+use super::protocol::{AggregationRule, Message, WireCodec, HEADER_BYTES};
+use super::reputation::{GateChange, RobustGate, RobustPolicy};
+use super::rounds::{Contribution, LeaderCtx, ProtocolKind, RoundProtocol, WorkerEnv, WorkerMem};
 use super::transport::{write_frame, FrameReader};
 
 /// What a worker node actually owns — the data plane behind its
@@ -155,6 +158,10 @@ pub struct ClusterConfig {
     pub protocol: ProtocolKind,
     /// Mean (Algorithms 1/2) or coordinate-median (robust extension).
     pub aggregation: AggregationRule,
+    /// Robust-merge policy: outlier screening, reputation weights, and
+    /// quarantine (DESIGN.md S16). `RobustPolicy::off()` is the plain
+    /// pipeline; `Median`/`Trimmed` modes override `aggregation`.
+    pub robust: RobustPolicy,
     /// Latency/bandwidth model for the simulated-time report.
     pub network: NetworkModel,
     /// Wire encoding for every panel crossing a channel (both
@@ -171,6 +178,7 @@ impl Default for ClusterConfig {
             refine_rounds: 0,
             protocol: ProtocolKind::OneShot,
             aggregation: AggregationRule::Mean,
+            robust: RobustPolicy::off(),
             network: NetworkModel::datacenter(),
             codec: WireCodec::F64,
             seed: 0,
@@ -244,6 +252,65 @@ fn aggregate(panels: &[Mat], rule: AggregationRule, reference: &Mat) -> Mat {
     match rule {
         AggregationRule::Mean => align::procrustes_fix_with_reference(panels, reference),
         AggregationRule::CoordinateMedian => align::coordinate_median_fix(panels),
+        AggregationRule::Trimmed { frac } => align::trimmed_fix(panels, frac),
+    }
+}
+
+/// Apply the Byzantine adversary plane at the uplink boundary: whatever
+/// an honest node would upload, a corrupted node's panel is replaced (or
+/// transformed) by its seeded [`AttackStrategy`] — a pure function of
+/// (plan seed, node, round), so both engines corrupt bit-identically.
+/// Strategies that transform the honest panel still run the honest
+/// compute (archiving it for `stale` replays); pure-junk strategies skip
+/// it entirely.
+fn uplink_boundary(
+    plan: &FaultPlan,
+    node: usize,
+    behavior: NodeBehavior,
+    round: usize,
+    shape: (usize, usize),
+    history: &mut Vec<Mat>,
+    honest: impl FnOnce() -> Mat,
+) -> Mat {
+    let strat = match (behavior, plan.byz_strategy(node)) {
+        (_, Some(s)) => s,
+        // behavior-level Byzantine nodes (the legacy §4 knob) map to the
+        // rotate attack: an arbitrary orthonormal panel every round
+        (NodeBehavior::Byzantine, None) => AttackStrategy::Rotate,
+        (NodeBehavior::Honest, None) => return honest(),
+    };
+    let honest_panel = strat.needs_honest().then(honest);
+    if let Some(h) = &honest_panel {
+        history.push(h.clone());
+    }
+    plan.attack_panel(strat, node, round, shape, honest_panel.as_ref(), history)
+}
+
+/// Decode-boundary defense: a panel with any non-finite entry never
+/// reaches the alignment machinery — the delivery is rejected (the node
+/// counts as lost for this round's quorum) and metered, NOT dropped: its
+/// wire traffic already landed in the direction meters, so the
+/// meter/transcript reconciliation stays exact.
+fn finite_or_reject(panel: Mat, stats: &CommStats, round: usize) -> Option<Mat> {
+    if panel.as_slice().iter().all(|v| v.is_finite()) {
+        Some(panel)
+    } else {
+        stats.record_rejected(round);
+        None
+    }
+}
+
+/// The transcript line for one quarantine-state transition (control
+/// traffic: header-only, down-link direction).
+fn gate_event(round: usize, ch: &GateChange) -> FaultEvent {
+    FaultEvent {
+        round,
+        dir: LinkDir::Down,
+        node: ch.node,
+        attempt: 0,
+        copy: 0,
+        bytes: HEADER_BYTES,
+        action: if ch.readmit { FaultAction::Readmitted } else { FaultAction::Quarantined },
     }
 }
 
@@ -257,6 +324,9 @@ struct WorkerState {
     shard: Shard,
     rng: Pcg64,
     mem: WorkerMem,
+    /// Honest panels archived at the uplink boundary, for replay attacks
+    /// (`stale`). Empty on honest nodes and pure-junk strategies.
+    byz_history: Vec<Mat>,
 }
 
 fn make_states(workers: Vec<WorkerData>, seed: u64) -> Vec<WorkerState> {
@@ -269,6 +339,7 @@ fn make_states(workers: Vec<WorkerData>, seed: u64) -> Vec<WorkerState> {
             shard: data.shard,
             rng: Pcg64::seed_stream(seed, i as u64 + 1),
             mem: WorkerMem::default(),
+            byz_history: Vec::new(),
         })
         .collect()
 }
@@ -400,10 +471,13 @@ fn settle_refine(split: QuorumSplit, round: usize, stats: &CommStats) -> Vec<(us
 }
 
 /// One refinement merge on the leader: re-align span-only codecs to the
-/// broadcast reference, then average. `None` for an empty round (the
-/// previous reference survives).
+/// broadcast reference, then average under the reputation weights (all
+/// 1.0 on the non-robust path, where the weighted rules reduce to the
+/// plain ones bit-identically). `None` for an empty round (the previous
+/// reference survives).
 pub(crate) fn merge_refined(
     mut merged: Vec<Mat>,
+    weights: &[f64],
     codec: WireCodec,
     reference: &Mat,
     rule: AggregationRule,
@@ -419,10 +493,7 @@ pub(crate) fn merge_refined(
             *p = crate::linalg::procrustes::procrustes_align(p, reference);
         }
     }
-    Some(match rule {
-        AggregationRule::Mean => align::mean_qr(&merged),
-        AggregationRule::CoordinateMedian => align::median_qr(&merged),
-    })
+    Some(super::rounds::rule_merge_weighted(&merged, weights, rule))
 }
 
 /// Run the full protocol over `workers` (consumed). Returns the estimate
@@ -476,24 +547,23 @@ pub fn run_cluster_faulty(
             .map(|(st, slot)| {
                 let solver = Arc::clone(&solver);
                 let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
-                    let d = st.shard.dim();
-                    // local solve through the operator data plane (or
-                    // junk for Byzantine nodes); a Samples shard never
-                    // materializes its d×d Gram
-                    let panel = match st.behavior {
-                        NodeBehavior::Honest => {
-                            solver.leading_subspace_op(&st.shard, r, &mut st.rng)
-                        }
-                        NodeBehavior::Byzantine => st.rng.haar_stiefel(d, r),
-                    };
+                    let WorkerState { id, behavior, shard, rng, mem, byz_history } = st;
+                    let d = shard.dim();
+                    // local solve through the operator data plane (or the
+                    // node's attack strategy at the uplink boundary); a
+                    // Samples shard never materializes its d×d Gram
+                    let panel = uplink_boundary(plan, *id, *behavior, 0, (d, r), byz_history, || {
+                        let p = solver.leading_subspace_op(&*shard, r, rng);
+                        mem.panel = Some(p.clone());
+                        p
+                    });
                     let msg = Message::LocalEstimate {
-                        node: st.id,
+                        node: *id,
                         round: 0,
                         panel: codec.encode(&panel),
                         ritz: vec![],
                     };
                     *slot = Some(msg);
-                    st.mem.panel = Some(panel);
                 });
                 job
             })
@@ -511,12 +581,19 @@ pub fn run_cluster_faulty(
         transcript.push_schedule(0, LinkDir::Up, i, bytes, &sched);
         if let Some(e) = sched.delivered.first() {
             let Message::LocalEstimate { panel, .. } = msg else { unreachable!() };
-            deliveries.push(Delivery { node: i, arrival_ms: e.arrival_ms, panel: panel.decode() });
+            if let Some(panel) = finite_or_reject(panel.decode(), &stats, 0) {
+                deliveries.push(Delivery { node: i, arrival_ms: e.arrival_ms, panel });
+            }
         }
     }
     stats.bump_round();
     let split = split_quorum(deliveries, fc.quorum, fc.grace_ms, fc.straggler_ms);
-    let round0 = settle_round0(split, m, &stats);
+    let mut round0 = settle_round0(split, m, &stats);
+    let mut gate = RobustGate::new(config.robust.clone(), m);
+    for ch in gate.screen_round0(&mut round0) {
+        stats.record_ctrl(HEADER_BYTES);
+        transcript.events.push(gate_event(0, &ch));
+    }
 
     // --- protocol rounds -------------------------------------------------
     // everything past round 0 is the protocol's business: the leader state
@@ -524,7 +601,7 @@ pub fn run_cluster_faulty(
     // compute, and the merge folds the surviving replies back in. The
     // skeleton — metering, transcript, quorum, pool fan-out — is common.
     let protocol = config.protocol.build(config.refine_rounds);
-    let lctx = LeaderCtx { m, aggregation: config.aggregation, codec };
+    let lctx = LeaderCtx { m, aggregation: config.robust.mode.rule_or(config.aggregation), codec };
     let mut leader = protocol.init_leader(&round0, &lctx);
     let mut last_round = 0usize;
     for round in 1..=protocol.rounds() {
@@ -571,12 +648,12 @@ pub fn run_cluster_faulty(
                 .map(|(st, slot)| {
                     let solver = Arc::clone(&solver);
                     let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
-                        let WorkerState { id, behavior, shard, rng, mem } = st;
+                        let WorkerState { id, behavior, shard, rng, mem, byz_history } = st;
                         let d = shard.dim();
                         let incoming =
                             down_panels[*id].as_ref().expect("job scheduled without payload");
-                        let panel = match behavior {
-                            NodeBehavior::Honest => {
+                        let panel =
+                            uplink_boundary(plan, *id, *behavior, round, (d, r), byz_history, || {
                                 let mut env = WorkerEnv {
                                     shard: &*shard,
                                     solver: solver.as_ref(),
@@ -584,9 +661,7 @@ pub fn run_cluster_faulty(
                                     rng,
                                 };
                                 protocol.worker_step(mem, round, incoming, &mut env)
-                            }
-                            NodeBehavior::Byzantine => rng.haar_stiefel(d, r),
-                        };
+                            });
                         *slot = Some(Message::Aligned {
                             node: *id,
                             round,
@@ -608,17 +683,20 @@ pub fn run_cluster_faulty(
             transcript.push_schedule(round, LinkDir::Up, i, bytes, &sched);
             if let Some(e) = sched.delivered.first() {
                 let Message::Aligned { panel, .. } = reply else { unreachable!() };
-                deliveries.push(Delivery {
-                    node: i,
-                    arrival_ms: d0 + e.arrival_ms,
-                    panel: panel.decode(),
-                });
+                if let Some(panel) = finite_or_reject(panel.decode(), &stats, round) {
+                    deliveries.push(Delivery { node: i, arrival_ms: d0 + e.arrival_ms, panel });
+                }
             }
         }
         stats.bump_round();
         let split = split_quorum(deliveries, fc.quorum, fc.grace_ms, fc.straggler_ms);
         let merged = settle_refine(split, round, &stats);
-        leader.merge(round, merged);
+        let (contribs, changes) = gate.screen(merged);
+        for ch in changes {
+            stats.record_ctrl(HEADER_BYTES);
+            transcript.events.push(gate_event(round, &ch));
+        }
+        leader.merge(round, contribs);
         last_round = round;
         if leader.converged() {
             break;
@@ -712,18 +790,19 @@ fn worker_main(mut st: WorkerState, ctx: NetCtx) {
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = FrameReader::new(read_half);
     if ctx.plan.active(st.id, 0) {
-        let d = st.shard.dim();
-        let panel = match st.behavior {
-            NodeBehavior::Honest => ctx.solver.leading_subspace_op(&st.shard, ctx.r, &mut st.rng),
-            NodeBehavior::Byzantine => st.rng.haar_stiefel(d, ctx.r),
-        };
+        let WorkerState { id, behavior, shard, rng, mem, byz_history } = &mut st;
+        let d = shard.dim();
+        let panel = uplink_boundary(&ctx.plan, *id, *behavior, 0, (d, ctx.r), byz_history, || {
+            let p = ctx.solver.leading_subspace_op(&*shard, ctx.r, rng);
+            mem.panel = Some(p.clone());
+            p
+        });
         let msg = Message::LocalEstimate {
             node: st.id,
             round: 0,
             panel: ctx.codec.encode(&panel),
             ritz: vec![],
         };
-        st.mem.panel = Some(panel);
         if send_with_schedule(&mut stream, &ctx, st.id, 0, &msg).is_err() {
             return;
         }
@@ -735,11 +814,17 @@ fn worker_main(mut st: WorkerState, ctx: NetCtx) {
                     // crash mid-computation: leave without a word
                     return;
                 }
-                let d = st.shard.dim();
                 let incoming = panel.decode();
-                let reply_panel = match st.behavior {
-                    NodeBehavior::Honest => {
-                        let WorkerState { shard, rng, mem, .. } = &mut st;
+                let WorkerState { id, behavior, shard, rng, mem, byz_history } = &mut st;
+                let d = shard.dim();
+                let reply_panel = uplink_boundary(
+                    &ctx.plan,
+                    *id,
+                    *behavior,
+                    round,
+                    (d, ctx.r),
+                    byz_history,
+                    || {
                         let mut env = WorkerEnv {
                             shard: &*shard,
                             solver: ctx.solver.as_ref(),
@@ -747,9 +832,8 @@ fn worker_main(mut st: WorkerState, ctx: NetCtx) {
                             rng,
                         };
                         ctx.protocol.worker_step(mem, round, &incoming, &mut env)
-                    }
-                    NodeBehavior::Byzantine => st.rng.haar_stiefel(d, ctx.r),
-                };
+                    },
+                );
                 let reply = Message::Aligned {
                     node: st.id,
                     round,
@@ -759,6 +843,9 @@ fn worker_main(mut st: WorkerState, ctx: NetCtx) {
                     return;
                 }
             }
+            // quarantine/readmission notices are informational: the gate
+            // already decides merge membership on the leader side
+            Ok(Message::Quarantine { .. }) => {}
             // Done, anything unexpected, or a closed socket all end the run
             Ok(_) | Err(_) => return,
         }
@@ -916,14 +1003,25 @@ pub fn run_cluster_tcp(
             let (Some(e), Some(panel)) = (sched.delivered.first(), slot.take()) else {
                 continue;
             };
+            let Some(panel) = finite_or_reject(panel, &stats, 0) else { continue };
             deliveries.push(Delivery { node: i, arrival_ms: e.arrival_ms, panel });
         }
         stats.bump_round();
         let split = split_quorum(deliveries, fc.quorum, fc.grace_ms, fc.straggler_ms);
-        let round0 = settle_round0(split, m, &stats);
+        let mut round0 = settle_round0(split, m, &stats);
+        let mut gate = RobustGate::new(config.robust.clone(), m);
+        for ch in gate.screen_round0(&mut round0) {
+            let msg = Message::Quarantine { node: ch.node, round: 0, readmit: ch.readmit };
+            stats.record_ctrl(msg.wire_bytes());
+            transcript.lock().expect("transcript lock").events.push(gate_event(0, &ch));
+            if let Some(w) = writers[ch.node].as_mut() {
+                let _ = write_frame(w, &msg);
+            }
+        }
 
         // --- protocol rounds over real sockets ---------------------------
-        let lctx = LeaderCtx { m, aggregation: config.aggregation, codec };
+        let lctx =
+            LeaderCtx { m, aggregation: config.robust.mode.rule_or(config.aggregation), codec };
         let mut leader = protocol.init_leader(&round0, &lctx);
         let mut last_round = 0usize;
         for round in 1..=protocol.rounds() {
@@ -982,12 +1080,22 @@ pub fn run_cluster_tcp(
                 let (Some(e), Some(panel)) = (sched.delivered.first(), slot.take()) else {
                     continue;
                 };
+                let Some(panel) = finite_or_reject(panel, &stats, round) else { continue };
                 deliveries.push(Delivery { node: i, arrival_ms: d0 + e.arrival_ms, panel });
             }
             stats.bump_round();
             let split = split_quorum(deliveries, fc.quorum, fc.grace_ms, fc.straggler_ms);
             let merged = settle_refine(split, round, &stats);
-            leader.merge(round, merged);
+            let (contribs, changes) = gate.screen(merged);
+            for ch in changes {
+                let msg = Message::Quarantine { node: ch.node, round, readmit: ch.readmit };
+                stats.record_ctrl(msg.wire_bytes());
+                transcript.lock().expect("transcript lock").events.push(gate_event(round, &ch));
+                if let Some(w) = writers[ch.node].as_mut() {
+                    let _ = write_frame(w, &msg);
+                }
+            }
+            leader.merge(round, contribs);
             last_round = round;
             if leader.converged() {
                 break;

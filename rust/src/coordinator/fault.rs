@@ -17,6 +17,8 @@
 use std::collections::BTreeMap;
 
 use super::netsim::CommStats;
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
 
 /// Default retransmission attempts after the first send.
 pub const DEFAULT_RETRIES: usize = 3;
@@ -51,6 +53,101 @@ pub struct Partition {
     pub rounds: usize,
 }
 
+/// Hash lane for Byzantine corruption draws — disjoint from the
+/// [`LinkDir`] lanes (Up = 0, Down = 1) so attack randomness never
+/// correlates with drop/delay/dup decisions on the same link.
+const BYZ_LANE: u64 = 2;
+
+/// How a corrupted node mangles its uplink panel. Every strategy is a
+/// pure function of `(plan seed, node, round)` plus the node's honest
+/// compute state, so byz schedules replay bit-identically across the
+/// in-process and loopback-TCP engines.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AttackStrategy {
+    /// Flip the sign of hash-selected columns of the honest panel — a
+    /// deliberately weak attack (span-preserving), the floor of the
+    /// breakdown curve.
+    SignFlip,
+    /// Honest panel plus `scale`-scaled i.i.d. Gaussian noise, not
+    /// re-orthonormalized.
+    Noise { scale: f64 },
+    /// Replace the panel with an independent Haar-random Stiefel point,
+    /// fresh per (node, round).
+    Rotate,
+    /// Replay the node's honest panel from `k` rounds ago (honest when
+    /// the history is still too short).
+    Stale { k: usize },
+    /// All corrupted nodes send the *same* Haar-random junk panel per
+    /// round — the worst case for distance-based screening, since
+    /// colluders sit at mutual distance zero.
+    Collude,
+    /// Send an all-NaN panel; exercises the decode-boundary rejection.
+    NanFlood,
+}
+
+impl AttackStrategy {
+    /// Parse a strategy spelling:
+    /// `signflip | noise:S | rotate | stale:K | collude | nan`.
+    pub fn parse(s: &str) -> Result<AttackStrategy, String> {
+        match s {
+            "signflip" => Ok(AttackStrategy::SignFlip),
+            "rotate" => Ok(AttackStrategy::Rotate),
+            "collude" => Ok(AttackStrategy::Collude),
+            "nan" => Ok(AttackStrategy::NanFlood),
+            _ => {
+                if let Some(v) = s.strip_prefix("noise:") {
+                    let scale: f64 =
+                        v.parse().map_err(|e| format!("byz noise:'{v}': {e}"))?;
+                    if !scale.is_finite() || scale < 0.0 {
+                        return Err(format!("byz noise:'{v}': expected finite scale >= 0"));
+                    }
+                    Ok(AttackStrategy::Noise { scale })
+                } else if let Some(v) = s.strip_prefix("stale:") {
+                    let k: usize = v.parse().map_err(|e| format!("byz stale:'{v}': {e}"))?;
+                    if k == 0 {
+                        return Err("byz stale:0 is the honest panel; use k >= 1".into());
+                    }
+                    Ok(AttackStrategy::Stale { k })
+                } else {
+                    Err(format!(
+                        "unknown byz strategy '{s}' \
+                         (signflip|noise:S|rotate|stale:K|collude|nan)"
+                    ))
+                }
+            }
+        }
+    }
+
+    /// Display label (round-trips through [`AttackStrategy::parse`]).
+    pub fn label(&self) -> String {
+        match self {
+            AttackStrategy::SignFlip => "signflip".into(),
+            AttackStrategy::Noise { scale } => format!("noise:{scale}"),
+            AttackStrategy::Rotate => "rotate".into(),
+            AttackStrategy::Stale { k } => format!("stale:{k}"),
+            AttackStrategy::Collude => "collude".into(),
+            AttackStrategy::NanFlood => "nan".into(),
+        }
+    }
+
+    /// Does this strategy need the node's honest panel as input?
+    pub fn needs_honest(&self) -> bool {
+        matches!(
+            self,
+            AttackStrategy::SignFlip | AttackStrategy::Noise { .. } | AttackStrategy::Stale { .. }
+        )
+    }
+}
+
+/// The Byzantine clause of a fault plan: nodes `1..=count` apply
+/// `strategy` at every uplink (node 0 stays honest, mirroring the CLI's
+/// `--byzantine B` convention).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ByzSpec {
+    pub count: usize,
+    pub strategy: AttackStrategy,
+}
+
 /// Deterministic failure schedule for a cluster run. All probabilities
 /// are evaluated by pure hashing (see module docs); `seed` selects the
 /// schedule, and two runs with equal plans see identical faults.
@@ -79,6 +176,8 @@ pub struct FaultPlan {
     pub max_retries: usize,
     /// Retransmission timeout, milliseconds.
     pub rto_ms: f64,
+    /// Byzantine data-plane corruption (`byz=N:STRATEGY` clause).
+    pub byz: Option<ByzSpec>,
 }
 
 impl Default for FaultPlan {
@@ -95,6 +194,7 @@ impl Default for FaultPlan {
             partitions: Vec::new(),
             max_retries: DEFAULT_RETRIES,
             rto_ms: DEFAULT_RTO_MS,
+            byz: None,
         }
     }
 }
@@ -102,6 +202,12 @@ impl Default for FaultPlan {
 /// Canned schedule names accepted by [`FaultPlan::parse`] (and swept by
 /// the `faults` experiment / CI fault-matrix job).
 pub const CANNED: &[&str] = &["clean", "lossy", "laggy", "chaos"];
+
+/// Canned Byzantine schedules (calibrated for m = 8): a screenable
+/// minority and a colluding majority past the breakdown point. Swept by
+/// `deigen exp byz` and the CI fault-matrix smoke job alongside
+/// [`CANNED`].
+pub const CANNED_BYZ: &[&str] = &["byz-minority", "byz-majority"];
 
 impl FaultPlan {
     /// The fault-free plan (every message delivered instantly, once).
@@ -119,6 +225,7 @@ impl FaultPlan {
             && self.crashes.is_empty()
             && self.joins.is_empty()
             && self.partitions.is_empty()
+            && self.byz.is_none()
     }
 
     /// Rebind the hash seed (builder style).
@@ -151,6 +258,18 @@ impl FaultPlan {
                 partitions: vec![Partition { lo: 2, hi: 2, round: 1, rounds: 1 }],
                 ..FaultPlan::default()
             }),
+            // byz-minority: 3 of 8 independently rotating — exactly
+            // ceil(m/2) - 1 at m = 8, the last screenable count
+            "byz-minority" => Some(FaultPlan {
+                byz: Some(ByzSpec { count: 3, strategy: AttackStrategy::Rotate }),
+                ..FaultPlan::default()
+            }),
+            // byz-majority: 4 of 8 colluding — past the breakdown point,
+            // where even the robust reference can land on a colluder
+            "byz-majority" => Some(FaultPlan {
+                byz: Some(ByzSpec { count: 4, strategy: AttackStrategy::Collude }),
+                ..FaultPlan::default()
+            }),
             _ => None,
         }
     }
@@ -168,6 +287,8 @@ impl FaultPlan {
     /// part=A-B@R:K    nodes A..=B unreachable for K rounds from round R
     /// retries=K       retransmission attempts after the first send
     /// rto=MS          retransmission timeout (ms)
+    /// byz=N:STRAT     nodes 1..=N corrupt every uplink with STRAT, one of
+    ///                 signflip|noise:S|rotate|stale:K|collude|nan
     /// ```
     pub fn parse(spec: &str) -> Result<FaultPlan, String> {
         let spec = spec.trim();
@@ -238,10 +359,19 @@ impl FaultPlan {
                 }
                 "retries" => plan.max_retries = parse_node(key, val)?,
                 "rto" => plan.rto_ms = parse_ms(key, val)?.max(1e-9),
+                "byz" => {
+                    let (n, strat) = val
+                        .split_once(':')
+                        .ok_or_else(|| format!("byz='{val}': expected N:STRATEGY"))?;
+                    plan.byz = Some(ByzSpec {
+                        count: parse_node(key, n)?,
+                        strategy: AttackStrategy::parse(strat)?,
+                    });
+                }
                 other => {
                     return Err(format!(
                         "unknown fault clause '{other}' \
-                         (drop|delay|dup|slow|crash|join|part|retries|rto)"
+                         (drop|delay|dup|slow|crash|join|part|retries|rto|byz)"
                     ))
                 }
             }
@@ -343,6 +473,74 @@ impl FaultPlan {
     pub fn horizon_ms(&self) -> f64 {
         let slow_max = self.slow.iter().map(|(_, ms)| *ms).fold(0.0, f64::max);
         (self.max_retries as f64 + 1.0) * self.rto_ms + 1.5 * self.delay_ms + slow_max
+    }
+
+    /// The attack `node` applies at its uplink boundary, or `None` for an
+    /// honest node. The plan corrupts nodes `1..=count` (node 0 never).
+    pub fn byz_strategy(&self, node: usize) -> Option<AttackStrategy> {
+        self.byz
+            .filter(|b| node >= 1 && node <= b.count)
+            .map(|b| b.strategy)
+    }
+
+    /// The corruption hash for `(node, round, salt)` on the Byzantine
+    /// lane — the sole entropy source of every attack draw.
+    fn byz_hash(&self, node: u64, round: usize, salt: u64) -> u64 {
+        link_hash(self.seed, node, BYZ_LANE, round as u64, 0, salt)
+    }
+
+    /// Produce the corrupted panel `node` uploads in `round`. Pure in
+    /// `(seed, node, round)` given the honest inputs: `honest` must be
+    /// `Some` iff [`AttackStrategy::needs_honest`], `history` is the
+    /// node's honest panels so far (most recent last, current included).
+    pub fn attack_panel(
+        &self,
+        strat: AttackStrategy,
+        node: usize,
+        round: usize,
+        shape: (usize, usize),
+        honest: Option<&Mat>,
+        history: &[Mat],
+    ) -> Mat {
+        let (d, r) = shape;
+        match strat {
+            AttackStrategy::SignFlip => {
+                let mut panel = honest.expect("signflip needs the honest panel").clone();
+                for j in 0..r {
+                    if self.byz_hash(node as u64, round, 10 + j as u64) & 1 == 1 {
+                        for i in 0..d {
+                            panel[(i, j)] = -panel[(i, j)];
+                        }
+                    }
+                }
+                panel
+            }
+            AttackStrategy::Noise { scale } => {
+                let mut rng = Pcg64::seed(self.byz_hash(node as u64, round, 20));
+                honest
+                    .expect("noise needs the honest panel")
+                    .add(&rng.normal_mat(d, r).scale(scale))
+            }
+            AttackStrategy::Rotate => {
+                let mut rng = Pcg64::seed(self.byz_hash(node as u64, round, 30));
+                rng.haar_stiefel(d, r)
+            }
+            AttackStrategy::Stale { k } => {
+                // history ends with the current honest panel; k rounds ago
+                // is history[len - 1 - k] once enough rounds have passed
+                if history.len() > k {
+                    history[history.len() - 1 - k].clone()
+                } else {
+                    honest.expect("stale needs the honest panel").clone()
+                }
+            }
+            AttackStrategy::Collude => {
+                // node-independent hash: every colluder draws the same junk
+                let mut rng = Pcg64::seed(self.byz_hash(u64::MAX, round, 31));
+                rng.haar_stiefel(d, r)
+            }
+            AttackStrategy::NanFlood => Mat::from_fn(d, r, |_, _| f64::NAN),
+        }
     }
 }
 
@@ -449,6 +647,11 @@ pub enum FaultAction {
     Delivered { arrival_us: u64 },
     /// All attempts exhausted; the message never arrived.
     TimedOut,
+    /// The robust leader quarantined this node (control event; appended
+    /// after the wire variants so transcript ordering is stable).
+    Quarantined,
+    /// The robust leader readmitted this node.
+    Readmitted,
 }
 
 /// One transcript line. Ordering is the canonical transcript order.
@@ -563,6 +766,9 @@ impl Transcript {
                     }
                 }
                 FaultAction::TimedOut => c.timeouts += 1,
+                // reputation-gate control events are metered as control
+                // traffic, which is round-less and outside wire counts
+                FaultAction::Quarantined | FaultAction::Readmitted => {}
             }
         }
         c.retries = attempts.values().map(|a| a.saturating_sub(1)).sum();
@@ -751,11 +957,126 @@ mod tests {
         for name in CANNED {
             assert!(FaultPlan::parse(name).is_ok(), "canned '{name}' must parse");
         }
+        for name in CANNED_BYZ {
+            let plan = FaultPlan::parse(name).unwrap();
+            assert!(plan.byz.is_some(), "canned '{name}' must carry a byz clause");
+            assert!(!plan.is_clean());
+        }
         assert!(FaultPlan::parse("drop=2.0").is_err());
         assert!(FaultPlan::parse("delay=0.5").is_err());
         assert!(FaultPlan::parse("part=5-2@0:1").is_err());
         assert!(FaultPlan::parse("warp=0.1").is_err());
         assert!(FaultPlan::parse("drop").is_err());
+
+        // the byz clause round-trips every strategy spelling
+        for (spec, strat) in [
+            ("byz=3:signflip", AttackStrategy::SignFlip),
+            ("byz=3:noise:0.5", AttackStrategy::Noise { scale: 0.5 }),
+            ("byz=3:rotate", AttackStrategy::Rotate),
+            ("byz=3:stale:2", AttackStrategy::Stale { k: 2 }),
+            ("byz=3:collude", AttackStrategy::Collude),
+            ("byz=3:nan", AttackStrategy::NanFlood),
+        ] {
+            let plan = FaultPlan::parse(spec).unwrap();
+            assert_eq!(plan.byz, Some(ByzSpec { count: 3, strategy: strat }), "{spec}");
+            assert!(!plan.is_clean());
+            assert_eq!(
+                AttackStrategy::parse(&strat.label()).unwrap(),
+                strat,
+                "label must round-trip"
+            );
+        }
+        assert!(FaultPlan::parse("byz=3").is_err());
+        assert!(FaultPlan::parse("byz=3:warp").is_err());
+        assert!(FaultPlan::parse("byz=3:noise:-1").is_err());
+        assert!(FaultPlan::parse("byz=3:stale:0").is_err());
+    }
+
+    #[test]
+    fn byz_strategy_corrupts_nodes_one_through_count_only() {
+        let plan = FaultPlan::parse("byz=2:rotate").unwrap();
+        assert_eq!(plan.byz_strategy(0), None, "node 0 (leader-local) stays honest");
+        assert_eq!(plan.byz_strategy(1), Some(AttackStrategy::Rotate));
+        assert_eq!(plan.byz_strategy(2), Some(AttackStrategy::Rotate));
+        assert_eq!(plan.byz_strategy(3), None);
+        assert_eq!(FaultPlan::none().byz_strategy(1), None);
+    }
+
+    #[test]
+    fn attack_panels_are_pure_in_seed_node_round() {
+        let plan = FaultPlan::parse("byz=4:rotate").unwrap().seeded(77);
+        let a = plan.attack_panel(AttackStrategy::Rotate, 1, 2, (12, 3), None, &[]);
+        let b = plan.attack_panel(AttackStrategy::Rotate, 1, 2, (12, 3), None, &[]);
+        assert!(a.sub(&b).max_abs() == 0.0, "rotate must replay bit-identically");
+        // different node / round / seed each decorrelate the draw
+        let other_node = plan.attack_panel(AttackStrategy::Rotate, 2, 2, (12, 3), None, &[]);
+        let other_round = plan.attack_panel(AttackStrategy::Rotate, 1, 3, (12, 3), None, &[]);
+        let other_seed = plan
+            .clone()
+            .seeded(78)
+            .attack_panel(AttackStrategy::Rotate, 1, 2, (12, 3), None, &[]);
+        for (o, what) in
+            [(other_node, "node"), (other_round, "round"), (other_seed, "seed")]
+        {
+            assert!(a.sub(&o).max_abs() > 0.0, "{what} did not decorrelate");
+        }
+    }
+
+    #[test]
+    fn colluders_send_identical_junk_per_round() {
+        let plan = FaultPlan::parse("byz=4:collude").unwrap().seeded(5);
+        let n1 = plan.attack_panel(AttackStrategy::Collude, 1, 1, (10, 2), None, &[]);
+        let n3 = plan.attack_panel(AttackStrategy::Collude, 3, 1, (10, 2), None, &[]);
+        assert!(n1.sub(&n3).max_abs() == 0.0, "colluders must agree within a round");
+        let next = plan.attack_panel(AttackStrategy::Collude, 1, 2, (10, 2), None, &[]);
+        assert!(n1.sub(&next).max_abs() > 0.0, "collusion junk must vary by round");
+    }
+
+    #[test]
+    fn honest_input_strategies_transform_the_honest_panel() {
+        let plan = FaultPlan::parse("byz=1:signflip").unwrap().seeded(9);
+        let mut rng = Pcg64::seed(1);
+        let honest = rng.haar_stiefel(8, 3);
+        let flipped =
+            plan.attack_panel(AttackStrategy::SignFlip, 1, 0, (8, 3), Some(&honest), &[]);
+        for j in 0..3 {
+            let col_match = (0..8).all(|i| flipped[(i, j)] == honest[(i, j)]);
+            let col_neg = (0..8).all(|i| flipped[(i, j)] == -honest[(i, j)]);
+            assert!(col_match || col_neg, "signflip must act column-wise");
+        }
+        let noisy = plan.attack_panel(
+            AttackStrategy::Noise { scale: 0.5 },
+            1,
+            0,
+            (8, 3),
+            Some(&honest),
+            &[],
+        );
+        assert!(noisy.sub(&honest).max_abs() > 0.0);
+        // stale: too-short history falls back to honest; deep history replays
+        let old = rng.haar_stiefel(8, 3);
+        let history = vec![old.clone(), honest.clone()];
+        let fresh = plan.attack_panel(
+            AttackStrategy::Stale { k: 5 },
+            1,
+            0,
+            (8, 3),
+            Some(&honest),
+            &history,
+        );
+        assert!(fresh.sub(&honest).max_abs() == 0.0);
+        let stale = plan.attack_panel(
+            AttackStrategy::Stale { k: 1 },
+            1,
+            1,
+            (8, 3),
+            Some(&honest),
+            &history,
+        );
+        assert!(stale.sub(&old).max_abs() == 0.0);
+        // nan flood is all-NaN
+        let nan = plan.attack_panel(AttackStrategy::NanFlood, 1, 0, (8, 3), None, &[]);
+        assert!(nan[(0, 0)].is_nan() && nan[(7, 2)].is_nan());
     }
 
     #[test]

@@ -32,6 +32,7 @@ pub mod fault;
 pub mod gossip;
 mod netsim;
 mod protocol;
+pub mod reputation;
 pub mod rounds;
 pub mod transport;
 
@@ -39,9 +40,15 @@ pub use cluster::{
     run_cluster, run_cluster_faulty, run_cluster_tcp, ClusterConfig, ClusterResult,
     FaultRunConfig, FaultyClusterResult, NodeBehavior, Shard, WorkerData,
 };
-pub use fault::{meter_schedule, FaultPlan, LinkDir, LinkSchedule, Transcript, CANNED};
+pub use fault::{
+    meter_schedule, AttackStrategy, ByzSpec, FaultPlan, LinkDir, LinkSchedule, Transcript,
+    CANNED, CANNED_BYZ,
+};
 pub use gossip::{MixingMatrix, Topology};
 pub use netsim::{CommSnapshot, CommStats, NetworkModel};
 pub use protocol::{AggregationRule, Message, WireCodec, WirePanel, HEADER_BYTES};
-pub use rounds::{LeaderCtx, LeaderState, ProtocolKind, RoundProtocol, WorkerEnv, WorkerMem};
+pub use reputation::{GateChange, RobustGate, RobustMode, RobustPolicy};
+pub use rounds::{
+    Contribution, LeaderCtx, LeaderState, ProtocolKind, RoundProtocol, WorkerEnv, WorkerMem,
+};
 pub use transport::{FrameDecoder, FrameError, FrameReader, TransportError};

@@ -61,6 +61,7 @@ struct RoundAccum {
     msgs_dup: usize,
     timeouts: usize,
     late_merged: usize,
+    panels_rejected: usize,
     stall_us: usize,
 }
 
@@ -114,6 +115,11 @@ pub struct CommStats {
     pub timeouts: AtomicUsize,
     /// Straggler estimates merged after their round's quorum window.
     pub late_merged: AtomicUsize,
+    /// Delivered panels rejected at the decode boundary (non-finite
+    /// entries — NaN floods, corrupted frames). Rejections are *not*
+    /// drops: the bytes crossed the wire and stay in the direction
+    /// meters; the panel just never reaches the aggregation.
+    pub panels_rejected: AtomicUsize,
     /// Virtual stall accumulated waiting out fault-induced arrival skew
     /// (per-round max in-window arrival), microseconds.
     pub stall_us: AtomicUsize,
@@ -213,6 +219,13 @@ impl CommStats {
         self.bucket(round, |b| b.late_merged += 1);
     }
 
+    /// Record one delivered panel rejected at the decode boundary
+    /// (non-finite entries).
+    pub fn record_rejected(&self, round: usize) {
+        self.panels_rejected.fetch_add(1, Ordering::Relaxed);
+        self.bucket(round, |b| b.panels_rejected += 1);
+    }
+
     /// Add fault-induced stall (waiting out arrival skew), microseconds.
     pub fn add_stall_us(&self, round: usize, us: usize) {
         self.stall_us.fetch_add(us, Ordering::Relaxed);
@@ -254,6 +267,7 @@ impl CommStats {
             msgs_dup: self.msgs_dup.load(Ordering::Relaxed),
             timeouts: self.timeouts.load(Ordering::Relaxed),
             late_merged: self.late_merged.load(Ordering::Relaxed),
+            panels_rejected: self.panels_rejected.load(Ordering::Relaxed),
             stall_us: self.stall_us.load(Ordering::Relaxed),
         }
     }
@@ -289,6 +303,7 @@ impl CommStats {
                     msgs_dup: b.msgs_dup,
                     timeouts: b.timeouts,
                     late_merged: b.late_merged,
+                    panels_rejected: b.panels_rejected,
                     stall_us: b.stall_us,
                 }
             })
@@ -314,6 +329,7 @@ pub struct CommSnapshot {
     pub msgs_dup: usize,
     pub timeouts: usize,
     pub late_merged: usize,
+    pub panels_rejected: usize,
     pub stall_us: usize,
 }
 
@@ -359,6 +375,7 @@ impl CommSnapshot {
         self.msgs_dup += other.msgs_dup;
         self.timeouts += other.timeouts;
         self.late_merged += other.late_merged;
+        self.panels_rejected += other.panels_rejected;
         self.stall_us += other.stall_us;
     }
 
@@ -380,6 +397,7 @@ impl CommSnapshot {
             msgs_dup: 0,
             timeouts: 0,
             late_merged: 0,
+            panels_rejected: 0,
             stall_us: 0,
         }
     }
@@ -508,11 +526,13 @@ mod tests {
         s.record_dups(1, 1);
         s.record_late(1);
         s.bump_round();
-        // round 2: gossip traffic + a timeout, closed with no stall
+        // round 2: gossip traffic + a timeout + a decode-boundary
+        // rejection, closed with no stall
         s.record_peer(2, 120);
         s.record_peer(2, 90);
         s.add_peer_serial(2, 120);
         s.record_timeout(2);
+        s.record_rejected(2);
         s.bump_round();
         // control rides teardown, outside any round bucket
         s.record_ctrl(32);
@@ -543,6 +563,7 @@ mod tests {
         assert_eq!(sum.msgs_dup, total.msgs_dup);
         assert_eq!(sum.timeouts, total.timeouts);
         assert_eq!(sum.late_merged, total.late_merged);
+        assert_eq!(sum.panels_rejected, total.panels_rejected);
         assert_eq!(sum.stall_us, total.stall_us);
         // linearity: per-round clocks sum to the run clock
         let t: f64 = per_round.iter().map(|r| r.simulated_time(&net)).sum();

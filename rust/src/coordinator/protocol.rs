@@ -165,6 +165,11 @@ pub enum Message {
     /// meters transport-independent the TCP plane leaves `Hello`
     /// unmetered (it is the socket-level analogue of channel creation).
     Hello { node: usize },
+    /// Leader -> worker: the robust gate's verdict on the node changed —
+    /// quarantined (`readmit == false`, its replies stop entering merges)
+    /// or readmitted (`readmit == true`). Control traffic: header only,
+    /// metered round-less like `Done`.
+    Quarantine { node: usize, round: usize, readmit: bool },
     /// Leader -> worker: the protocol is finished.
     Done,
 }
@@ -180,24 +185,29 @@ impl Message {
             Message::Reference { panel, .. } | Message::Aligned { panel, .. } => {
                 HEADER_BYTES + panel.wire_bytes()
             }
-            Message::Hello { .. } | Message::Done => HEADER_BYTES,
+            Message::Hello { .. } | Message::Quarantine { .. } | Message::Done => HEADER_BYTES,
         }
     }
 
     /// Control messages carry no payload and are metered separately from
     /// the data traffic (they do not contribute to `sim_time_s`).
     pub fn is_control(&self) -> bool {
-        matches!(self, Message::Hello { .. } | Message::Done)
+        matches!(self, Message::Hello { .. } | Message::Quarantine { .. } | Message::Done)
     }
 }
 
 /// How the leader combines aligned panels.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum AggregationRule {
     /// Mean of aligned panels then QR (Algorithms 1/2).
     Mean,
     /// Entry-wise median then QR (Byzantine-robust extension).
     CoordinateMedian,
+    /// Entry-wise `frac`-trimmed mean then QR: drop the `frac` smallest
+    /// and largest aligned values per entry, average the rest. `frac` in
+    /// (0, 0.5); interpolates between the mean (efficiency) and the
+    /// coordinate median (breakdown point).
+    Trimmed { frac: f64 },
 }
 
 #[cfg(test)]
@@ -221,8 +231,11 @@ mod tests {
         assert_eq!(e.wire_bytes(), HEADER_BYTES + 8 * 64 * 8 + 64);
         assert_eq!(Message::Done.wire_bytes(), HEADER_BYTES);
         assert_eq!(Message::Hello { node: 3 }.wire_bytes(), HEADER_BYTES);
+        let q = Message::Quarantine { node: 2, round: 4, readmit: true };
+        assert_eq!(q.wire_bytes(), HEADER_BYTES);
         assert!(Message::Done.is_control() && !e.is_control());
         assert!(Message::Hello { node: 3 }.is_control());
+        assert!(q.is_control());
 
         // the quantized payloads carry a 16-byte codec header (range/meta)
         let f16 = Message::Reference { round: 0, panel: WireCodec::F16.encode(&panel) };

@@ -1,0 +1,383 @@
+//! Reputation-weighted robust aggregation for the multi-round protocols
+//! (DESIGN.md S16).
+//!
+//! The §4 threat model gives Byzantine workers full control over their
+//! uplink panels. One coordinate-median merge tolerates that for the
+//! one-shot protocol, but the iterative protocols re-merge every round —
+//! a persistent adversary gets `rounds` chances to steer the iterate. The
+//! [`RobustGate`] closes that gap at the merge boundary:
+//!
+//! 1. **Screening**: each round, the leader picks the robust reference
+//!    among the surviving replies ([`crate::align::robust_reference_index`],
+//!    the panel with minimal median Procrustes distance to the rest) and
+//!    flags replies whose distance exceeds `outlier_factor ×` the median
+//!    distance (plus a small absolute floor for noiseless rounds).
+//!    Flagged replies never enter the merge.
+//! 2. **Reputation**: every node carries a score in (0, 1], starting at
+//!    1. A flagged round halves it; a clean round recovers half the gap
+//!    back to 1. Scores weight the mean merge (honest nodes sit at
+//!    exactly 1.0, so clean runs reduce to the unweighted mean
+//!    bit-identically).
+//! 3. **Quarantine**: a score below `quarantine_below` quarantines the
+//!    node — its replies are dropped pre-merge until a streak of clean
+//!    rounds lifts the score above `readmit_above`. Transitions surface
+//!    as [`GateChange`]s; the engines meter them as control traffic and
+//!    record them in the [`super::fault::Transcript`].
+//!
+//! The gate is pure leader-side state: both engines drive it with the
+//! same settled replies in the same order, so lossy+Byzantine schedules
+//! still replay bit-identically in-process and over TCP.
+
+use crate::align::robust_reference_index;
+use crate::linalg::procrustes::procrustes_distance;
+use crate::linalg::Mat;
+
+use super::cluster::Round0;
+use super::protocol::AggregationRule;
+use super::rounds::Contribution;
+
+/// Which robust merge mode a cluster run uses (`--robust` on the CLI).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RobustMode {
+    /// No screening, no reputation: the plain pipeline.
+    Off,
+    /// Screening + reputation weights on top of the configured
+    /// aggregation rule (mean by default).
+    Screen,
+    /// Screening + coordinate-median aggregation.
+    Median,
+    /// Screening + `frac`-trimmed-mean aggregation.
+    Trimmed(f64),
+}
+
+impl RobustMode {
+    /// Parse a CLI spelling: `off | screen | median | trimmed:F` with
+    /// `F` in (0, 0.5).
+    pub fn parse(s: &str) -> Result<RobustMode, String> {
+        match s {
+            "off" => Ok(RobustMode::Off),
+            "screen" => Ok(RobustMode::Screen),
+            "median" => Ok(RobustMode::Median),
+            other => match other.strip_prefix("trimmed:").map(str::parse::<f64>) {
+                Some(Ok(f)) if (0.0..0.5).contains(&f) && f > 0.0 => Ok(RobustMode::Trimmed(f)),
+                Some(_) => Err(format!("robust mode '{other}': trim fraction must be in (0, 0.5)")),
+                None => Err(format!("unknown robust mode '{other}' (off|screen|median|trimmed:F)")),
+            },
+        }
+    }
+
+    /// Short name for reports and CSV columns.
+    pub fn name(&self) -> String {
+        match self {
+            RobustMode::Off => "off".to_string(),
+            RobustMode::Screen => "screen".to_string(),
+            RobustMode::Median => "median".to_string(),
+            RobustMode::Trimmed(f) => format!("trimmed:{f}"),
+        }
+    }
+
+    /// The aggregation rule this mode imposes (`Off`/`Screen` keep the
+    /// run's configured rule).
+    pub fn rule_or(&self, default: AggregationRule) -> AggregationRule {
+        match self {
+            RobustMode::Off | RobustMode::Screen => default,
+            RobustMode::Median => AggregationRule::CoordinateMedian,
+            RobustMode::Trimmed(f) => AggregationRule::Trimmed { frac: *f },
+        }
+    }
+}
+
+/// Robust-merge policy: the mode plus the reputation thresholds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RobustPolicy {
+    pub mode: RobustMode,
+    /// Quarantine a node once its score falls below this.
+    pub quarantine_below: f64,
+    /// Readmit a quarantined node once its score recovers above this
+    /// (and its current reply screened clean).
+    pub readmit_above: f64,
+    /// A reply is an outlier when its Procrustes distance to the robust
+    /// reference exceeds `outlier_factor ×` the median distance.
+    pub outlier_factor: f64,
+}
+
+impl RobustPolicy {
+    /// The plain pipeline: no screening, no reputation.
+    pub fn off() -> Self {
+        RobustPolicy::with_mode(RobustMode::Off)
+    }
+
+    /// Default thresholds for a mode: quarantine below 0.3 (two flagged
+    /// rounds from fresh: 1.0 -> 0.5 -> 0.25), readmit above 0.7 (two
+    /// clean rounds from the quarantine floor: 0.25 -> 0.625 -> 0.8125),
+    /// outliers at 4x the median distance.
+    pub fn with_mode(mode: RobustMode) -> Self {
+        RobustPolicy { mode, quarantine_below: 0.3, readmit_above: 0.7, outlier_factor: 4.0 }
+    }
+}
+
+impl Default for RobustPolicy {
+    fn default() -> Self {
+        RobustPolicy::off()
+    }
+}
+
+/// One quarantine-state transition, surfaced so the engines can meter it
+/// as control traffic, log it to the transcript, and (on TCP) notify the
+/// worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GateChange {
+    pub node: usize,
+    /// `false`: the node was just quarantined; `true`: just readmitted.
+    pub readmit: bool,
+}
+
+/// Leader-side robust gate: per-node reputation scores and quarantine
+/// flags, updated by screening each round's settled replies.
+pub struct RobustGate {
+    policy: RobustPolicy,
+    scores: Vec<f64>,
+    quarantined: Vec<bool>,
+}
+
+/// Absolute distance floor added to the outlier threshold so noiseless
+/// rounds (median distance ~0) don't flag honest replies on rounding.
+const OUTLIER_FLOOR: f64 = 0.05;
+
+impl RobustGate {
+    pub fn new(policy: RobustPolicy, m: usize) -> Self {
+        RobustGate { policy, scores: vec![1.0; m], quarantined: vec![false; m] }
+    }
+
+    /// Current reputation score of `node`.
+    pub fn score(&self, node: usize) -> f64 {
+        self.scores[node]
+    }
+
+    /// Is `node` currently quarantined?
+    pub fn is_quarantined(&self, node: usize) -> bool {
+        self.quarantined[node]
+    }
+
+    /// Screen one round's settled replies (node order). Returns the
+    /// contributions that may enter the merge — outliers and quarantined
+    /// nodes removed, weights set to the updated scores — plus any
+    /// quarantine transitions this round triggered.
+    pub fn screen(&mut self, replies: Vec<(usize, Mat)>) -> (Vec<Contribution>, Vec<GateChange>) {
+        if self.policy.mode == RobustMode::Off {
+            let contribs =
+                replies.into_iter().map(|(node, panel)| Contribution::plain(node, panel)).collect();
+            return (contribs, Vec::new());
+        }
+        // fewer than 3 replies cannot out-vote an outlier — pass the
+        // survivors through at their current weights, scores untouched
+        if replies.len() < 3 {
+            let contribs = replies
+                .into_iter()
+                .filter(|(node, _)| !self.quarantined[*node])
+                .map(|(node, panel)| Contribution { node, panel, weight: self.scores[node] })
+                .collect();
+            return (contribs, Vec::new());
+        }
+        let panels: Vec<Mat> = replies.iter().map(|(_, p)| p.clone()).collect();
+        let reference = &panels[robust_reference_index(&panels)];
+        let dists: Vec<f64> = panels.iter().map(|p| procrustes_distance(p, reference)).collect();
+        let mut sorted: Vec<f64> = dists.iter().copied().filter(|d| d.is_finite()).collect();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let median = if sorted.is_empty() { 0.0 } else { sorted[sorted.len() / 2] };
+        let threshold = self.policy.outlier_factor * median + OUTLIER_FLOOR;
+
+        let mut contribs = Vec::new();
+        let mut changes = Vec::new();
+        for ((node, panel), dist) in replies.into_iter().zip(dists) {
+            let flagged = !dist.is_finite() || dist > threshold;
+            let s = self.scores[node];
+            self.scores[node] = if flagged { 0.5 * s } else { s + 0.5 * (1.0 - s) };
+            if !self.quarantined[node] && self.scores[node] < self.policy.quarantine_below {
+                self.quarantined[node] = true;
+                changes.push(GateChange { node, readmit: false });
+            } else if self.quarantined[node]
+                && !flagged
+                && self.scores[node] > self.policy.readmit_above
+            {
+                self.quarantined[node] = false;
+                changes.push(GateChange { node, readmit: true });
+            }
+            if !flagged && !self.quarantined[node] {
+                contribs.push(Contribution { node, panel, weight: self.scores[node] });
+            }
+        }
+        (contribs, changes)
+    }
+
+    /// Screen the round-0 quorum outcome in place: screened-out nodes
+    /// move to `lost` and their panels leave both panel lists, so every
+    /// protocol's warm start is built from surviving replies only.
+    pub(crate) fn screen_round0(&mut self, round0: &mut Round0) -> Vec<GateChange> {
+        if self.policy.mode == RobustMode::Off {
+            return Vec::new();
+        }
+        let mut union_nodes: Vec<usize> =
+            round0.in_quorum.iter().chain(round0.late_merged.iter()).copied().collect();
+        union_nodes.sort_unstable();
+        let replies: Vec<(usize, Mat)> =
+            union_nodes.iter().copied().zip(round0.local_panels.iter().cloned()).collect();
+        let (contribs, changes) = self.screen(replies);
+        let keep: Vec<usize> = contribs.iter().map(|c| c.node).collect();
+        assert!(
+            keep.iter().any(|n| round0.in_quorum.contains(n)),
+            "robust screen rejected every in-quorum round-0 panel"
+        );
+        let filter_panels = |nodes: &[usize], panels: &[Mat]| -> Vec<Mat> {
+            nodes
+                .iter()
+                .zip(panels)
+                .filter(|(n, _)| keep.contains(n))
+                .map(|(_, p)| p.clone())
+                .collect()
+        };
+        round0.in_panels = filter_panels(&round0.in_quorum, &round0.in_panels);
+        round0.local_panels = filter_panels(&union_nodes, &round0.local_panels);
+        round0.lost.extend(union_nodes.iter().filter(|n| !keep.contains(n)));
+        round0.lost.sort_unstable();
+        round0.in_quorum.retain(|n| keep.contains(n));
+        round0.late_merged.retain(|n| keep.contains(n));
+        changes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn mode_parser_round_trips_and_rejects_bad_fractions() {
+        for s in ["off", "screen", "median", "trimmed:0.25"] {
+            assert_eq!(RobustMode::parse(s).unwrap().name(), s);
+        }
+        assert!(RobustMode::parse("trimmed:0.5").is_err());
+        assert!(RobustMode::parse("trimmed:0").is_err());
+        assert!(RobustMode::parse("trimmed:x").is_err());
+        assert!(RobustMode::parse("huber").is_err());
+        assert_eq!(
+            RobustMode::Median.rule_or(AggregationRule::Mean),
+            AggregationRule::CoordinateMedian
+        );
+        assert_eq!(
+            RobustMode::Trimmed(0.2).rule_or(AggregationRule::Mean),
+            AggregationRule::Trimmed { frac: 0.2 }
+        );
+        assert_eq!(RobustMode::Screen.rule_or(AggregationRule::Mean), AggregationRule::Mean);
+        assert_eq!(RobustMode::Off.rule_or(AggregationRule::CoordinateMedian), {
+            AggregationRule::CoordinateMedian
+        });
+    }
+
+    fn noisy_panels(rng: &mut Pcg64, d: usize, r: usize, m: usize, noise: f64) -> Vec<Mat> {
+        let base = rng.haar_stiefel(d, r);
+        (0..m)
+            .map(|_| {
+                crate::linalg::qr::orthonormalize(&base.add(&rng.normal_mat(d, r).scale(noise)))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn off_mode_passes_everything_through_at_weight_one() {
+        let mut rng = Pcg64::seed(1);
+        let panels = noisy_panels(&mut rng, 12, 2, 5, 0.01);
+        let mut gate = RobustGate::new(RobustPolicy::off(), 5);
+        let replies: Vec<(usize, Mat)> = panels.into_iter().enumerate().collect();
+        let (contribs, changes) = gate.screen(replies);
+        assert_eq!(contribs.len(), 5);
+        assert!(changes.is_empty());
+        assert!(contribs.iter().all(|c| c.weight == 1.0));
+    }
+
+    #[test]
+    fn outliers_are_screened_and_honest_scores_stay_at_one() {
+        let mut rng = Pcg64::seed(2);
+        let mut panels = noisy_panels(&mut rng, 16, 3, 6, 0.01);
+        panels[2] = rng.haar_stiefel(16, 3); // junk
+        let mut gate = RobustGate::new(RobustPolicy::with_mode(RobustMode::Screen), 6);
+        let replies: Vec<(usize, Mat)> = panels.into_iter().enumerate().collect();
+        let (contribs, _) = gate.screen(replies);
+        assert_eq!(contribs.len(), 5);
+        assert!(contribs.iter().all(|c| c.node != 2));
+        assert!(contribs.iter().all(|c| c.weight == 1.0), "honest weights stay exactly 1");
+        assert!(gate.score(2) < 1.0);
+        assert!(!gate.is_quarantined(2), "one flagged round is not enough to quarantine");
+    }
+
+    #[test]
+    fn persistent_deviant_is_quarantined_then_readmitted() {
+        let mut rng = Pcg64::seed(3);
+        let policy = RobustPolicy::with_mode(RobustMode::Screen);
+        let mut gate = RobustGate::new(policy, 5);
+        // rounds 1-2: node 4 sends junk; two halvings cross 0.3
+        let mut quarantined_at = None;
+        for round in 1..=2 {
+            let mut panels = noisy_panels(&mut rng, 12, 2, 5, 0.01);
+            panels[4] = rng.haar_stiefel(12, 2);
+            let (_, changes) = gate.screen(panels.into_iter().enumerate().collect());
+            if changes.iter().any(|c| c.node == 4 && !c.readmit) {
+                quarantined_at = Some(round);
+            }
+        }
+        assert_eq!(quarantined_at, Some(2));
+        assert!(gate.is_quarantined(4));
+        // clean rounds: replies are dropped pre-merge while quarantined,
+        // the score recovers, and the node is eventually readmitted
+        let mut readmitted = false;
+        for _ in 0..4 {
+            let was_quarantined = gate.is_quarantined(4);
+            let panels = noisy_panels(&mut rng, 12, 2, 5, 0.01);
+            let (contribs, changes) = gate.screen(panels.into_iter().enumerate().collect());
+            let readmit_now = changes.iter().any(|c| c.node == 4 && c.readmit);
+            if was_quarantined && !readmit_now {
+                assert!(
+                    contribs.iter().all(|c| c.node != 4),
+                    "no contribution while quarantined"
+                );
+            }
+            readmitted |= readmit_now;
+        }
+        assert!(readmitted);
+        assert!(!gate.is_quarantined(4));
+    }
+
+    #[test]
+    fn nan_reply_is_flagged_not_propagated() {
+        let mut rng = Pcg64::seed(4);
+        let mut panels = noisy_panels(&mut rng, 10, 2, 4, 0.01);
+        panels[1] = Mat::from_fn(10, 2, |_, _| f64::NAN);
+        let mut gate = RobustGate::new(RobustPolicy::with_mode(RobustMode::Screen), 4);
+        let (contribs, _) = gate.screen(panels.into_iter().enumerate().collect());
+        assert_eq!(contribs.len(), 3);
+        assert!(contribs.iter().all(|c| c.node != 1));
+        assert!(contribs.iter().all(|c| c.panel.as_slice().iter().all(|v| v.is_finite())));
+    }
+
+    #[test]
+    fn round0_screen_moves_rejected_nodes_to_lost() {
+        let mut rng = Pcg64::seed(5);
+        let mut panels = noisy_panels(&mut rng, 12, 2, 6, 0.01);
+        panels[3] = rng.haar_stiefel(12, 2);
+        let mut round0 = Round0 {
+            in_panels: panels[..5].to_vec(),
+            local_panels: panels.clone(),
+            in_quorum: (0..5).collect(),
+            late_merged: vec![5],
+            lost: vec![],
+        };
+        let mut gate = RobustGate::new(RobustPolicy::with_mode(RobustMode::Screen), 6);
+        let changes = gate.screen_round0(&mut round0);
+        assert!(changes.is_empty());
+        assert_eq!(round0.in_quorum, vec![0, 1, 2, 4]);
+        assert_eq!(round0.in_panels.len(), 4);
+        assert_eq!(round0.late_merged, vec![5]);
+        assert_eq!(round0.local_panels.len(), 5);
+        assert_eq!(round0.lost, vec![3]);
+    }
+}

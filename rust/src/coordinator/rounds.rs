@@ -73,26 +73,29 @@ pub enum ProtocolKind {
     /// iterate's subspace movement per round drops below it.
     QPower { rounds: usize, tol: f64 },
     /// Distributed Sanger iteration: `rounds` mixed gradient-ascent steps
-    /// of size `step` over Metropolis weights on `topology`.
-    Sanger { rounds: usize, step: f64, topology: Topology },
+    /// of size `step` over Metropolis weights on `topology`. `tol > 0`
+    /// stops early once the merged estimate stops moving.
+    Sanger { rounds: usize, step: f64, topology: Topology, tol: f64 },
     /// DeEPCA-style gradient tracking with `fastmix` Chebyshev-accelerated
     /// mixing steps per round over Metropolis weights on `topology`.
-    DeepCa { rounds: usize, fastmix: usize, topology: Topology },
+    /// `tol > 0` stops early once the merged estimate stops moving.
+    DeepCa { rounds: usize, fastmix: usize, topology: Topology, tol: f64 },
 }
 
 impl ProtocolKind {
     /// Parse a CLI spelling (`oneshot | qpower | sanger | deepca`), with
     /// `rounds` supplying the iteration count for the iterative kinds
-    /// (OneShot keeps taking its rounds from `refine_rounds`).
-    pub fn parse(s: &str, rounds: usize) -> Result<ProtocolKind, String> {
+    /// (OneShot keeps taking its rounds from `refine_rounds`) and `tol`
+    /// their early-stop threshold (0 disables the check).
+    pub fn parse(s: &str, rounds: usize, tol: f64) -> Result<ProtocolKind, String> {
         match s {
             "oneshot" => Ok(ProtocolKind::OneShot),
-            "qpower" => Ok(ProtocolKind::QPower { rounds, tol: 0.0 }),
+            "qpower" => Ok(ProtocolKind::QPower { rounds, tol }),
             "sanger" => {
-                Ok(ProtocolKind::Sanger { rounds, step: 0.3, topology: Topology::Ring })
+                Ok(ProtocolKind::Sanger { rounds, step: 0.3, topology: Topology::Ring, tol })
             }
             "deepca" => {
-                Ok(ProtocolKind::DeepCa { rounds, fastmix: 3, topology: Topology::Ring })
+                Ok(ProtocolKind::DeepCa { rounds, fastmix: 3, topology: Topology::Ring, tol })
             }
             other => Err(format!("unknown protocol '{other}' (oneshot|qpower|sanger|deepca)")),
         }
@@ -116,15 +119,17 @@ impl ProtocolKind {
             ProtocolKind::QPower { rounds, tol } => {
                 Arc::new(QPowerProtocol { rounds: *rounds, tol: *tol })
             }
-            ProtocolKind::Sanger { rounds, step, topology } => Arc::new(SangerProtocol {
+            ProtocolKind::Sanger { rounds, step, topology, tol } => Arc::new(SangerProtocol {
                 rounds: *rounds,
                 step: *step,
                 topology: topology.clone(),
+                tol: *tol,
             }),
-            ProtocolKind::DeepCa { rounds, fastmix, topology } => Arc::new(DeepCaProtocol {
+            ProtocolKind::DeepCa { rounds, fastmix, topology, tol } => Arc::new(DeepCaProtocol {
                 rounds: *rounds,
                 fastmix: *fastmix,
                 topology: topology.clone(),
+                tol: *tol,
             }),
         }
     }
@@ -204,6 +209,23 @@ pub struct LeaderCtx {
     pub codec: WireCodec,
 }
 
+/// One screened reply entering a leader merge: the node it came from,
+/// its decoded panel, and the reputation weight the robust gate assigned
+/// (1.0 everywhere when the gate is off — weighted merges then reduce to
+/// the unweighted rules bit-identically).
+pub struct Contribution {
+    pub node: usize,
+    pub panel: Mat,
+    pub weight: f64,
+}
+
+impl Contribution {
+    /// A full-trust contribution (the non-robust path).
+    pub fn plain(node: usize, panel: Mat) -> Self {
+        Contribution { node, panel, weight: 1.0 }
+    }
+}
+
 /// The leader's evolving state across rounds.
 pub trait LeaderState: Send {
     /// True when every node receives the same down-link panel this round
@@ -215,10 +237,10 @@ pub trait LeaderState: Send {
     /// broadcasting).
     fn down(&self, round: usize, node: usize) -> &Mat;
 
-    /// Fold one round's surviving replies (node order, in-window ∪ late)
-    /// into the state. Nodes outside the quorum window simply don't
-    /// appear.
-    fn merge(&mut self, round: usize, replies: Vec<(usize, Mat)>);
+    /// Fold one round's surviving replies (node order, in-window ∪ late,
+    /// post-screening) into the state. Nodes outside the quorum window —
+    /// or screened out by the robust gate — simply don't appear.
+    fn merge(&mut self, round: usize, replies: Vec<Contribution>);
 
     /// Optional early stop, checked after each merge.
     fn converged(&self) -> bool {
@@ -229,10 +251,24 @@ pub trait LeaderState: Send {
     fn into_estimate(self: Box<Self>) -> Mat;
 }
 
-fn rule_merge(panels: &[Mat], rule: AggregationRule) -> Mat {
+pub(crate) fn rule_merge(panels: &[Mat], rule: AggregationRule) -> Mat {
     match rule {
         AggregationRule::Mean => align::mean_qr(panels),
         AggregationRule::CoordinateMedian => align::median_qr(panels),
+        AggregationRule::Trimmed { frac } => align::trimmed_mean_qr(panels, frac),
+    }
+}
+
+/// Reputation-weighted merge: the mean rule weights panels by the gate's
+/// scores (all-1.0 weights take the plain [`align::mean_qr`] path, so the
+/// non-robust pipeline stays bit-identical); the order-statistic rules
+/// (median, trimmed mean) ignore weights — screening already removed the
+/// outliers they exist to resist.
+pub(crate) fn rule_merge_weighted(panels: &[Mat], weights: &[f64], rule: AggregationRule) -> Mat {
+    let uniform = weights.iter().all(|&w| w == 1.0);
+    match rule {
+        AggregationRule::Mean if !uniform => align::weighted_mean_qr(panels, weights),
+        _ => rule_merge(panels, rule),
     }
 }
 
@@ -294,9 +330,11 @@ impl LeaderState for OneShotState {
         &self.reference
     }
 
-    fn merge(&mut self, _round: usize, replies: Vec<(usize, Mat)>) {
-        let panels: Vec<Mat> = replies.into_iter().map(|(_, p)| p).collect();
-        if let Some(next) = merge_refined(panels, self.codec, &self.reference, self.rule) {
+    fn merge(&mut self, _round: usize, replies: Vec<Contribution>) {
+        let (panels, weights): (Vec<Mat>, Vec<f64>) =
+            replies.into_iter().map(|c| (c.panel, c.weight)).unzip();
+        if let Some(next) = merge_refined(panels, &weights, self.codec, &self.reference, self.rule)
+        {
             self.reference = next;
         }
     }
@@ -368,8 +406,9 @@ impl LeaderState for QPowerState {
         &self.x
     }
 
-    fn merge(&mut self, _round: usize, replies: Vec<(usize, Mat)>) {
-        let mut panels: Vec<Mat> = replies.into_iter().map(|(_, p)| p).collect();
+    fn merge(&mut self, _round: usize, replies: Vec<Contribution>) {
+        let (mut panels, weights): (Vec<Mat>, Vec<f64>) =
+            replies.into_iter().map(|c| (c.panel, c.weight)).unzip();
         if panels.is_empty() {
             return; // the whole round was lost; keep iterating from x
         }
@@ -381,7 +420,7 @@ impl LeaderState for QPowerState {
                 *p = procrustes_align(p, &self.x);
             }
         }
-        let next = rule_merge(&panels, self.rule);
+        let next = rule_merge_weighted(&panels, &weights, self.rule);
         self.last_move = dist2(&next, &self.x);
         self.x = next;
     }
@@ -403,6 +442,7 @@ struct SangerProtocol {
     rounds: usize,
     step: f64,
     topology: Topology,
+    tol: f64,
 }
 
 impl RoundProtocol for SangerProtocol {
@@ -447,7 +487,45 @@ impl RoundProtocol for SangerProtocol {
         let mixer = MixingMatrix::metropolis(&self.topology, ctx.m);
         let xs = vec![q; ctx.m];
         let mixed = mixer.mix(&xs);
-        Box::new(SangerState { xs, mixed, mixer, codec: ctx.codec, rule: ctx.aggregation })
+        Box::new(SangerState {
+            xs,
+            mixed,
+            mixer,
+            codec: ctx.codec,
+            rule: ctx.aggregation,
+            stop: StopCheck::new(self.tol),
+        })
+    }
+}
+
+/// Shared tol-based early-stop bookkeeping for the simulated decentralized
+/// protocols: track the merged estimate's per-round subspace movement, but
+/// only when a tolerance is actually set — the extra merge per round is
+/// never paid on the default (`tol == 0`) path.
+struct StopCheck {
+    tol: f64,
+    last_move: f64,
+    prev: Option<Mat>,
+}
+
+impl StopCheck {
+    fn new(tol: f64) -> Self {
+        StopCheck { tol, last_move: f64::INFINITY, prev: None }
+    }
+
+    fn observe(&mut self, estimate: impl FnOnce() -> Mat) {
+        if self.tol <= 0.0 {
+            return;
+        }
+        let est = estimate();
+        if let Some(prev) = &self.prev {
+            self.last_move = dist2(&est, prev);
+        }
+        self.prev = Some(est);
+    }
+
+    fn converged(&self) -> bool {
+        self.tol > 0.0 && self.last_move < self.tol
     }
 }
 
@@ -459,6 +537,7 @@ struct SangerState {
     mixer: MixingMatrix,
     codec: WireCodec,
     rule: AggregationRule,
+    stop: StopCheck,
 }
 
 impl LeaderState for SangerState {
@@ -470,15 +549,22 @@ impl LeaderState for SangerState {
         &self.mixed[node]
     }
 
-    fn merge(&mut self, _round: usize, replies: Vec<(usize, Mat)>) {
-        for (node, mut p) in replies {
+    fn merge(&mut self, _round: usize, replies: Vec<Contribution>) {
+        for c in replies {
+            let mut p = c.panel;
             if !self.codec.preserves_representative() {
                 // span-only decode: re-anchor to the panel it stepped from
-                p = procrustes_align(&p, &self.mixed[node]);
+                p = procrustes_align(&p, &self.mixed[c.node]);
             }
-            self.xs[node] = p;
+            self.xs[c.node] = p;
         }
         self.mixed = self.mixer.mix(&self.xs);
+        let (xs, rule) = (&self.xs, self.rule);
+        self.stop.observe(|| rule_merge(xs, rule));
+    }
+
+    fn converged(&self) -> bool {
+        self.stop.converged()
     }
 
     fn into_estimate(self: Box<Self>) -> Mat {
@@ -494,6 +580,7 @@ struct DeepCaProtocol {
     rounds: usize,
     fastmix: usize,
     topology: Topology,
+    tol: f64,
 }
 
 /// Slot layout inside [`WorkerMem::slots`] for DeEPCA.
@@ -550,6 +637,7 @@ impl RoundProtocol for DeepCaProtocol {
             fastmix: self.fastmix,
             codec: ctx.codec,
             rule: ctx.aggregation,
+            stop: StopCheck::new(self.tol),
         })
     }
 }
@@ -561,6 +649,7 @@ struct DeepCaState {
     fastmix: usize,
     codec: WireCodec,
     rule: AggregationRule,
+    stop: StopCheck,
 }
 
 impl LeaderState for DeepCaState {
@@ -572,17 +661,24 @@ impl LeaderState for DeepCaState {
         &self.ss[node]
     }
 
-    fn merge(&mut self, _round: usize, replies: Vec<(usize, Mat)>) {
-        for (node, mut p) in replies {
+    fn merge(&mut self, _round: usize, replies: Vec<Contribution>) {
+        for c in replies {
+            let mut p = c.panel;
             if !self.codec.preserves_representative() {
-                p = procrustes_align(&p, &self.ss[node]);
+                p = procrustes_align(&p, &self.ss[c.node]);
             }
-            self.ss[node] = p;
+            self.ss[c.node] = p;
         }
         // FastMix the tracked panels — the gradient-tracking invariant
         // (column sums preserved by doubly-stochastic W) survives the
         // Chebyshev polynomial because every term is a polynomial in W
         self.ss = self.mixer.fastmix(&self.ss, self.fastmix);
+        let (ss, rule) = (&self.ss, self.rule);
+        self.stop.observe(|| rule_merge(ss, rule));
+    }
+
+    fn converged(&self) -> bool {
+        self.stop.converged()
     }
 
     fn into_estimate(self: Box<Self>) -> Mat {
@@ -600,7 +696,7 @@ mod tests {
     #[test]
     fn parse_and_name_round_trip() {
         for (s, rounds) in [("oneshot", 0usize), ("qpower", 3), ("sanger", 4), ("deepca", 2)] {
-            let kind = ProtocolKind::parse(s, rounds).unwrap();
+            let kind = ProtocolKind::parse(s, rounds, 0.0).unwrap();
             assert_eq!(kind.name(), s);
             let proto = kind.build(5);
             assert_eq!(proto.name(), s);
@@ -608,8 +704,19 @@ mod tests {
             // keeps honoring refine_rounds
             assert_eq!(proto.rounds(), if s == "oneshot" { 5 } else { rounds });
         }
-        assert!(ProtocolKind::parse("power", 3).is_err());
-        assert_eq!(ProtocolKind::parse("oneshot", 9).unwrap(), ProtocolKind::OneShot);
+        assert!(ProtocolKind::parse("power", 3, 0.0).is_err());
+        assert_eq!(ProtocolKind::parse("oneshot", 9, 0.0).unwrap(), ProtocolKind::OneShot);
+        // --tol lands on every iterative kind
+        for s in ["qpower", "sanger", "deepca"] {
+            let kind = ProtocolKind::parse(s, 3, 1e-4).unwrap();
+            let got = match kind {
+                ProtocolKind::QPower { tol, .. }
+                | ProtocolKind::Sanger { tol, .. }
+                | ProtocolKind::DeepCa { tol, .. } => tol,
+                ProtocolKind::OneShot => unreachable!(),
+            };
+            assert_eq!(got, 1e-4, "{s}");
+        }
     }
 
     fn env_fixture(d: usize) -> (Shard, Arc<NativeEngine>, Pcg64) {
@@ -649,7 +756,8 @@ mod tests {
             _ => unreachable!(),
         };
         let (x, _) = crate::linalg::eig::top_eigvecs(&c, 3);
-        let proto = ProtocolKind::Sanger { rounds: 1, step: 0.3, topology: Topology::Ring };
+        let proto =
+            ProtocolKind::Sanger { rounds: 1, step: 0.3, topology: Topology::Ring, tol: 0.0 };
         let proto = proto.build(0);
         let mut mem = WorkerMem::default();
         let mut env = WorkerEnv { shard: &shard, solver: solver.as_ref(), r: 3, rng: &mut rng };
@@ -665,7 +773,8 @@ mod tests {
     fn deepca_worker_tracks_across_rounds() {
         let (shard, solver, mut rng) = env_fixture(10);
         let x0 = rng.haar_stiefel(10, 2);
-        let proto = ProtocolKind::DeepCa { rounds: 2, fastmix: 2, topology: Topology::Ring };
+        let proto =
+            ProtocolKind::DeepCa { rounds: 2, fastmix: 2, topology: Topology::Ring, tol: 0.0 };
         let proto = proto.build(0);
         let mut mem = WorkerMem::default();
         let mut env = WorkerEnv { shard: &shard, solver: solver.as_ref(), r: 2, rng: &mut rng };
@@ -710,8 +819,14 @@ mod tests {
         for (kind, broadcast) in [
             (ProtocolKind::OneShot, true),
             (ProtocolKind::QPower { rounds: 2, tol: 0.0 }, true),
-            (ProtocolKind::Sanger { rounds: 2, step: 0.3, topology: Topology::Ring }, false),
-            (ProtocolKind::DeepCa { rounds: 2, fastmix: 1, topology: Topology::Ring }, false),
+            (
+                ProtocolKind::Sanger { rounds: 2, step: 0.3, topology: Topology::Ring, tol: 0.0 },
+                false,
+            ),
+            (
+                ProtocolKind::DeepCa { rounds: 2, fastmix: 1, topology: Topology::Ring, tol: 0.0 },
+                false,
+            ),
         ] {
             let proto = kind.build(2);
             let mut leader = proto.init_leader(&round0, &ctx);
@@ -747,8 +862,44 @@ mod tests {
         let mut leader = proto.init_leader(&round0, &ctx);
         let x = leader.down(1, 0).clone();
         // replies exactly spanning the current iterate: zero movement
-        leader.merge(1, (0..m).map(|i| (i, x.clone())).collect());
+        leader.merge(1, (0..m).map(|i| Contribution::plain(i, x.clone())).collect());
         assert!(leader.converged());
+    }
+
+    /// The decentralized protocols share the tol early stop: echoing each
+    /// node's down-link back freezes the iterates, and the second merge
+    /// observes zero movement.
+    #[test]
+    fn sanger_and_deepca_tol_early_stop() {
+        let mut rng = Pcg64::seed(6);
+        let (d, r, m) = (8usize, 2usize, 4usize);
+        let panels: Vec<Mat> = (0..m).map(|_| rng.haar_stiefel(d, r)).collect();
+        let round0 = Round0 {
+            in_panels: panels.clone(),
+            local_panels: panels,
+            in_quorum: (0..m).collect(),
+            late_merged: vec![],
+            lost: vec![],
+        };
+        let ctx = LeaderCtx { m, aggregation: AggregationRule::Mean, codec: WireCodec::F64 };
+        for kind in [
+            ProtocolKind::Sanger { rounds: 5, step: 0.3, topology: Topology::Ring, tol: 1e-8 },
+            ProtocolKind::DeepCa { rounds: 5, fastmix: 1, topology: Topology::Ring, tol: 1e-8 },
+        ] {
+            let proto = kind.build(0);
+            let mut leader = proto.init_leader(&round0, &ctx);
+            for round in 1..=2 {
+                let replies: Vec<Contribution> = (0..m)
+                    .map(|i| Contribution::plain(i, leader.down(round, i).clone()))
+                    .collect();
+                let before = leader.converged();
+                leader.merge(round, replies);
+                if round == 1 {
+                    assert!(!before, "{}: no movement observed yet", proto.name());
+                }
+            }
+            assert!(leader.converged(), "{}", proto.name());
+        }
     }
 
     /// End-to-end smoke through the real engine: every protocol runs on
@@ -778,8 +929,8 @@ mod tests {
         for kind in [
             ProtocolKind::OneShot,
             ProtocolKind::QPower { rounds: 3, tol: 0.0 },
-            ProtocolKind::Sanger { rounds: 3, step: 0.3, topology: Topology::Ring },
-            ProtocolKind::DeepCa { rounds: 3, fastmix: 2, topology: Topology::Ring },
+            ProtocolKind::Sanger { rounds: 3, step: 0.3, topology: Topology::Ring, tol: 0.0 },
+            ProtocolKind::DeepCa { rounds: 3, fastmix: 2, topology: Topology::Ring, tol: 0.0 },
         ] {
             let cfg = ClusterConfig { r, seed: 5, protocol: kind.clone(), ..Default::default() };
             let res = run_cluster_faulty(

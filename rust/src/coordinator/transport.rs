@@ -48,6 +48,7 @@ const TAG_REFERENCE: u8 = 1;
 const TAG_ALIGNED: u8 = 2;
 const TAG_DONE: u8 = 3;
 const TAG_HELLO: u8 = 4;
+const TAG_QUARANTINE: u8 = 5;
 
 const CODEC_NONE: u8 = 0;
 const CODEC_F64: u8 = 1;
@@ -199,7 +200,15 @@ pub fn encode_message(msg: &Message) -> Vec<u8> {
             (TAG_ALIGNED, *node, *round, 0, Some(panel_wire(panel)))
         }
         Message::Hello { node } => (TAG_HELLO, *node, 0, 0, None),
+        Message::Quarantine { node, round, .. } => (TAG_QUARANTINE, *node, *round, 0, None),
         Message::Done => (TAG_DONE, 0, 0, 0, None),
+    };
+    // control frames carry no panel, so the rows field is free metadata;
+    // Quarantine parks its readmit flag there (ritz_len is rejected on
+    // non-estimate frames, rows is not)
+    let bare_rows = match msg {
+        Message::Quarantine { readmit, .. } => *readmit as usize,
+        _ => 0,
     };
     put_u32(&mut buf, FRAME_MAGIC);
     put_u32(&mut buf, msg.wire_bytes() as u32);
@@ -208,7 +217,7 @@ pub fn encode_message(msg: &Message) -> Vec<u8> {
     buf.extend_from_slice(&[0u8; 2]); // reserved
     put_u32(&mut buf, node as u32);
     put_u32(&mut buf, round as u32);
-    put_u32(&mut buf, pw.as_ref().map(|p| p.rows).unwrap_or(0) as u32);
+    put_u32(&mut buf, pw.as_ref().map(|p| p.rows).unwrap_or(bare_rows) as u32);
     put_u32(&mut buf, pw.as_ref().map(|p| p.cols).unwrap_or(0) as u32);
     put_u32(&mut buf, ritz_len as u32);
     debug_assert_eq!(buf.len(), HEADER_BYTES);
@@ -308,6 +317,12 @@ fn decode_frame(frame: &[u8]) -> Result<Message, FrameError> {
                 return Err(FrameError::Malformed("payload on a control frame"));
             }
             Ok(if tag == TAG_HELLO { Message::Hello { node } } else { Message::Done })
+        }
+        TAG_QUARANTINE => {
+            if !panel_body.is_empty() || codec != CODEC_NONE {
+                return Err(FrameError::Malformed("payload on a control frame"));
+            }
+            Ok(Message::Quarantine { node, round, readmit: rows != 0 })
         }
         other => Err(FrameError::BadTag(other)),
     }
@@ -430,7 +445,12 @@ mod tests {
     fn sample_messages() -> Vec<Message> {
         let mut rng = Pcg64::seed(31);
         let panel = rng.haar_stiefel(12, 3);
-        let mut out = vec![Message::Done, Message::Hello { node: 7 }];
+        let mut out = vec![
+            Message::Done,
+            Message::Hello { node: 7 },
+            Message::Quarantine { node: 2, round: 3, readmit: false },
+            Message::Quarantine { node: 9, round: 5, readmit: true },
+        ];
         for codec in every_codec() {
             out.push(Message::LocalEstimate {
                 node: 5,
@@ -471,6 +491,10 @@ mod tests {
                 assert_panels_equal(p1, p2);
             }
             (Message::Hello { node: n1 }, Message::Hello { node: n2 }) => assert_eq!(n1, n2),
+            (
+                Message::Quarantine { node: n1, round: r1, readmit: q1 },
+                Message::Quarantine { node: n2, round: r2, readmit: q2 },
+            ) => assert_eq!((n1, r1, q1), (n2, r2, q2)),
             (Message::Done, Message::Done) => {}
             (x, y) => panic!("message kind changed in transit: {x:?} vs {y:?}"),
         }

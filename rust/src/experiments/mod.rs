@@ -6,6 +6,7 @@
 //! sizes are gratuitous on one CPU — each scaling is noted in the module
 //! docs and EXPERIMENTS.md).
 
+mod byz;
 pub mod common;
 mod figs_apps;
 mod figs_intdim;
@@ -23,7 +24,7 @@ use crate::config::RunOptions;
 /// plus the wire-codec and fault-schedule sweeps this reproduction adds.
 pub const ALL: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9",
-    "fig10", "table1", "table2", "wire", "faults", "rounds",
+    "fig10", "table1", "table2", "wire", "faults", "rounds", "byz",
 ];
 
 /// Dispatch a single experiment by name.
@@ -45,6 +46,7 @@ pub fn run(name: &str, opts: &RunOptions) -> Result<()> {
         "wire" => wire::wire(opts),
         "faults" => netfault::faults(opts),
         "rounds" => rounds::rounds(opts),
+        "byz" => byz::byz(opts),
         "all" => {
             for n in ALL {
                 println!("\n================ {n} ================");

@@ -58,10 +58,10 @@ fn protocol_for(name: &str, k: usize) -> (ProtocolKind, usize) {
         "oneshot" => (ProtocolKind::OneShot, k),
         "qpower" => (ProtocolKind::QPower { rounds: k, tol: 0.0 }, 0),
         "sanger" => {
-            (ProtocolKind::Sanger { rounds: k, step: 0.3, topology: Topology::Ring }, 0)
+            (ProtocolKind::Sanger { rounds: k, step: 0.3, topology: Topology::Ring, tol: 0.0 }, 0)
         }
         "deepca" => {
-            (ProtocolKind::DeepCa { rounds: k, fastmix: 3, topology: Topology::Ring }, 0)
+            (ProtocolKind::DeepCa { rounds: k, fastmix: 3, topology: Topology::Ring, tol: 0.0 }, 0)
         }
         other => unreachable!("unknown protocol {other}"),
     }

@@ -4,13 +4,14 @@
 //! - `exp <fig1..fig10|table1|table2|all> [--quick] [--seed S] [--out DIR]
 //!   [--trials T]` — regenerate a paper figure/table (CSV + console table).
 //! - `cluster [--m M] [--n N] [--d D] [--r R] [--refine K] [--pjrt]
-//!   [--protocol oneshot|qpower|sanger|deepca] [--rounds K]
-//!   [--byzantine B] [--median] [--transport local|tcp] [--quorum Q]
-//!   [--faults SPEC] [--grace MS] [--straggler MS]` — run the
-//!   leader/worker coordinator on a synthetic distributed-PCA workload
-//!   (in-process or over loopback TCP, optionally under a deterministic
-//!   fault schedule, with a one-shot or iterative multi-round protocol)
-//!   and report accuracy + communication accounting, per round.
+//!   [--protocol oneshot|qpower|sanger|deepca] [--rounds K] [--tol T]
+//!   [--byzantine B] [--byz SPEC] [--robust MODE] [--median]
+//!   [--transport local|tcp] [--quorum Q] [--faults SPEC] [--grace MS]
+//!   [--straggler MS]` — run the leader/worker coordinator on a synthetic
+//!   distributed-PCA workload (in-process or over loopback TCP, optionally
+//!   under a deterministic fault schedule and/or a seeded Byzantine
+//!   adversary, with a one-shot or iterative multi-round protocol) and
+//!   report accuracy + communication accounting, per round.
 //! - `info` — version, artifact manifest, PJRT platform.
 
 use std::process::ExitCode;
@@ -19,7 +20,8 @@ use std::sync::Arc;
 use deigen::config::{Cli, RunOptions};
 use deigen::coordinator::{
     run_cluster_faulty, run_cluster_tcp, AggregationRule, ClusterConfig, FaultPlan,
-    FaultRunConfig, NetworkModel, NodeBehavior, ProtocolKind, Shard, WireCodec, WorkerData,
+    FaultRunConfig, NetworkModel, NodeBehavior, ProtocolKind, RobustMode, RobustPolicy, Shard,
+    WireCodec, WorkerData, CANNED_BYZ,
 };
 use deigen::linalg::subspace::dist2;
 use deigen::rng::Pcg64;
@@ -30,16 +32,19 @@ const USAGE: &str = "usage:
   deigen exp <name|all> [--quick] [--seed S] [--out DIR] [--trials T]
   deigen cluster [--m M] [--n N] [--d D] [--r R] [--refine K] [--pjrt]
                  [--protocol oneshot|qpower|sanger|deepca] [--rounds K]
-                 [--byzantine B] [--median] [--wan] [--seed S]
+                 [--tol T] [--byzantine B] [--byz SPEC] [--median]
+                 [--robust off|screen|median|trimmed:F] [--wan] [--seed S]
                  [--codec f64|f16|int8|fd<l>] [--transport local|tcp]
                  [--quorum Q] [--faults SPEC] [--grace MS] [--straggler MS]
   deigen plot <csv> [--x COL] [--y COL[,COL..]] [--group COL[,COL..]]
               [--linear-x] [--linear-y]
   deigen info
 experiments: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 table1
-             table2 wire faults rounds
+             table2 wire faults rounds byz
 fault spec:  clean|lossy|laggy|chaos or clauses drop=P, delay=P:MS, dup=P,
-             slow=N:MS, crash=N@R, join=N@R, part=A-B@R:K, retries=K, rto=MS";
+             slow=N:MS, crash=N@R, join=N@R, part=A-B@R:K, retries=K, rto=MS
+byz spec:    byz-minority|byz-majority or N:signflip|noise:S|rotate|
+             stale:K|collude|nan (N corrupt nodes, strategy)";
 
 fn main() -> ExitCode {
     match real_main() {
@@ -85,10 +90,14 @@ fn cluster_demo(cli: &Cli) -> anyhow::Result<()> {
     let r = cli.get_usize("r", if use_pjrt { 8 } else { 4 }).map_err(|e| anyhow::anyhow!(e))?;
     let refine = cli.get_usize("refine", 0).map_err(|e| anyhow::anyhow!(e))?;
     let rounds = cli.get_usize("rounds", 3).map_err(|e| anyhow::anyhow!(e))?;
-    let protocol = ProtocolKind::parse(&cli.get_str("protocol", "oneshot"), rounds)
+    let tol = cli.get_f64("tol", 0.0).map_err(|e| anyhow::anyhow!(e))?;
+    let protocol = ProtocolKind::parse(&cli.get_str("protocol", "oneshot"), rounds, tol)
         .map_err(|e| anyhow::anyhow!(e))?;
     let byz = cli.get_usize("byzantine", 0).map_err(|e| anyhow::anyhow!(e))?;
     let seed = cli.get_u64("seed", 20200504).map_err(|e| anyhow::anyhow!(e))?;
+    let robust = RobustPolicy::with_mode(
+        RobustMode::parse(&cli.get_str("robust", "off")).map_err(|e| anyhow::anyhow!(e))?,
+    );
     let codec = WireCodec::parse(&cli.get_str("codec", "f64"))
         .map_err(|e| anyhow::anyhow!(e))?;
     let transport = cli.get_str("transport", "local");
@@ -98,7 +107,18 @@ fn cluster_demo(cli: &Cli) -> anyhow::Result<()> {
     );
     let quorum = cli.get_usize("quorum", m).map_err(|e| anyhow::anyhow!(e))?;
     let faults = cli.get_str("faults", "none");
-    let plan = FaultPlan::parse(&faults).map_err(|e| anyhow::anyhow!(e))?.seeded(seed);
+    let mut plan = FaultPlan::parse(&faults).map_err(|e| anyhow::anyhow!(e))?.seeded(seed);
+    let byz_spec = cli.get_str("byz", "");
+    if !byz_spec.is_empty() {
+        // accept either a canned byz schedule name or a bare N:strategy clause
+        let byz_plan = if CANNED_BYZ.contains(&byz_spec.as_str()) {
+            FaultPlan::parse(&byz_spec)
+        } else {
+            FaultPlan::parse(&format!("byz={byz_spec}"))
+        }
+        .map_err(|e| anyhow::anyhow!(e))?;
+        plan.byz = byz_plan.byz;
+    }
     let fc = FaultRunConfig {
         plan,
         quorum,
@@ -108,10 +128,14 @@ fn cluster_demo(cli: &Cli) -> anyhow::Result<()> {
 
     println!(
         "cluster: m={m} n={n} d={d} r={r} protocol={} refine={refine} byzantine={byz} codec={} \
-         engine={} transport={transport} quorum={quorum} faults={faults}",
+         engine={} transport={transport} quorum={quorum} faults={faults} byz={} robust={}",
         protocol.name(),
         codec.name(),
-        if use_pjrt { "pjrt" } else { "native" }
+        if use_pjrt { "pjrt" } else { "native" },
+        fc.plan.byz.as_ref().map(|b| format!("{}:{}", b.count, b.strategy.label())).unwrap_or_else(
+            || "none".into()
+        ),
+        robust.mode.name(),
     );
 
     let mut rng = Pcg64::seed(seed);
@@ -157,6 +181,7 @@ fn cluster_demo(cli: &Cli) -> anyhow::Result<()> {
         },
         codec,
         seed,
+        robust,
     };
 
     let solver: Arc<dyn deigen::runtime::LocalSolver> = if use_pjrt {
@@ -193,13 +218,14 @@ fn cluster_demo(cli: &Cli) -> anyhow::Result<()> {
         wall,
     );
     println!(
-        "faults: retries={} dropped={} dups={} timeouts={} late_merged={} stall={:.1}ms; \
-         quorum {} in-window, {} late, {} lost",
+        "faults: retries={} dropped={} dups={} timeouts={} late_merged={} rejected={} \
+         stall={:.1}ms; quorum {} in-window, {} late, {} lost",
         res.comm.msgs_retry,
         res.comm.msgs_dropped,
         res.comm.msgs_dup,
         res.comm.timeouts,
         res.comm.late_merged,
+        res.comm.panels_rejected,
         res.comm.stall_us as f64 / 1000.0,
         res.in_quorum.len(),
         res.late_merged.len(),

@@ -1,0 +1,280 @@
+//! Byzantine-schedule property suite (DESIGN.md S16): the seeded
+//! adversary plane composed with the robust reputation-gated merge.
+//! Pins the breakdown point (⌈m/2⌉−1 corrupt nodes tolerated, ⌈m/2⌉
+//! not), NaN rejection at the decode boundary, exact meter↔transcript
+//! reconciliation under lossy+Byzantine schedules, bit-identical replay
+//! across the in-process and loopback-TCP engines, and the tol-driven
+//! early stop of the iterative protocols.
+
+use std::sync::Arc;
+
+use deigen::coordinator::fault::FaultAction;
+use deigen::coordinator::{
+    run_cluster_faulty, run_cluster_tcp, ClusterConfig, FaultPlan, FaultRunConfig,
+    FaultyClusterResult, LinkDir, ProtocolKind, RobustMode, RobustPolicy, WorkerData,
+};
+use deigen::linalg::subspace::dist2;
+use deigen::linalg::Mat;
+use deigen::rng::Pcg64;
+use deigen::runtime::NativeEngine;
+use deigen::synth::{CovModel, SpectrumModel};
+use deigen::testkit::{check, tol};
+
+fn pca_workers(seed: u64, d: usize, r: usize, m: usize, n: usize) -> (Mat, Vec<WorkerData>) {
+    let mut rng = Pcg64::seed(seed);
+    let model = SpectrumModel::M1 { r, lambda_lo: 0.5, lambda_hi: 1.0, delta: 0.2 };
+    let cov = CovModel::draw(&model, d, &mut rng);
+    let workers = (0..m)
+        .map(|i| {
+            WorkerData::dense(CovModel::empirical_cov(&cov.sample(n, &mut rng.split(i as u64))))
+        })
+        .collect();
+    (cov.principal_subspace(), workers)
+}
+
+fn byz_plan(spec: &str, seed: u64) -> FaultPlan {
+    FaultPlan::parse(spec).expect("byz spec must parse").seeded(seed)
+}
+
+fn run_with(
+    m: usize,
+    seed: u64,
+    protocol: ProtocolKind,
+    fc: &FaultRunConfig,
+    robust: RobustMode,
+) -> (f64, FaultyClusterResult, Mat) {
+    let (truth, workers) = pca_workers(seed, 24, 3, m, 200);
+    let cfg = ClusterConfig {
+        r: 3,
+        protocol,
+        seed,
+        robust: RobustPolicy::with_mode(robust),
+        ..Default::default()
+    };
+    let res = run_cluster_faulty(workers, Arc::new(NativeEngine::default()), &cfg, fc);
+    (dist2(&res.estimate, &truth), res, truth)
+}
+
+/// The acceptance pin: at m = 8 with ⌈m/2⌉−1 = 3 colluding nodes, the
+/// robust screen keeps qpower AND sanger within `tol::STAT` of the clean
+/// run, while the plain mean on the very same schedule breaks.
+#[test]
+fn robust_merge_tolerates_corrupt_minority_where_plain_breaks() {
+    let (m, seed) = (8usize, 21u64);
+    for protocol in [
+        ProtocolKind::parse("qpower", 3, 0.0).unwrap(),
+        ProtocolKind::parse("sanger", 3, 0.0).unwrap(),
+    ] {
+        let name = protocol.name();
+        let full = FaultRunConfig::full(m);
+        let byz = FaultRunConfig { plan: byz_plan("byz=3:collude", seed), ..FaultRunConfig::full(m) };
+
+        let (clean, _, _) = run_with(m, seed, protocol.clone(), &full, RobustMode::Off);
+        let (plain, _, _) = run_with(m, seed, protocol.clone(), &byz, RobustMode::Off);
+        let (robust, res, _) = run_with(m, seed, protocol.clone(), &byz, RobustMode::Screen);
+
+        check::assert_orthonormal(&res.estimate, tol::FACTOR, name);
+        assert!(robust < tol::STAT, "{name}: robust sin-theta {robust} under 3/8 colluders");
+        assert!(
+            (robust - clean).abs() < tol::STAT,
+            "{name}: robust {robust} drifted from clean {clean}"
+        );
+        assert!(
+            plain > tol::STAT,
+            "{name}: plain merge survived 3/8 colluders (sin-theta {plain}) — \
+             the attack is too tame to pin anything"
+        );
+        // the persistent colluders were reputation-quarantined, and the
+        // control events landed in the transcript
+        let quarantined = res
+            .transcript
+            .events
+            .iter()
+            .filter(|e| matches!(e.action, FaultAction::Quarantined))
+            .count();
+        assert!(quarantined >= 3, "{name}: only {quarantined} quarantine events");
+        assert!(res.comm.msgs_ctrl > 0, "{name}: quarantine notices not metered as control");
+    }
+}
+
+/// The breakdown point is one half: at m = 9, ⌈m/2⌉−1 = 4 colluders are
+/// screened out, but ⌈m/2⌉ = 5 capture the robust reference (their mutual
+/// Procrustes distance is exactly zero) and the estimate degrades.
+#[test]
+fn breakdown_point_sits_at_half_the_cluster() {
+    let (m, seed) = (9usize, 33u64);
+    let protocol = ProtocolKind::parse("qpower", 3, 0.0).unwrap();
+    let minority = FaultRunConfig { plan: byz_plan("byz=4:collude", seed), ..FaultRunConfig::full(m) };
+    let majority = FaultRunConfig { plan: byz_plan("byz=5:collude", seed), ..FaultRunConfig::full(m) };
+    let (d_min, _, _) = run_with(m, seed, protocol.clone(), &minority, RobustMode::Screen);
+    let (d_maj, _, _) = run_with(m, seed, protocol, &majority, RobustMode::Screen);
+    assert!(d_min < tol::STAT, "4/9 colluders should be screened: sin-theta {d_min}");
+    assert!(
+        d_maj > tol::STAT,
+        "5/9 colluders hold the majority; the robust merge must break (sin-theta {d_maj})"
+    );
+    assert!(d_maj > 2.0 * d_min, "breakdown curve did not actually break: {d_min} -> {d_maj}");
+}
+
+/// A NaN-flooding adversary is rejected at the decode boundary: the
+/// rejection is metered (`panels_rejected`), nothing panics, no NaN
+/// reaches the merge, and accuracy holds on the honest panels — in plain
+/// AND robust mode (the boundary check is mode-independent).
+#[test]
+fn nan_flood_is_rejected_at_the_boundary_not_propagated() {
+    let (m, seed) = (6usize, 47u64);
+    let protocol = ProtocolKind::parse("qpower", 3, 0.0).unwrap();
+    let fc = FaultRunConfig {
+        plan: byz_plan("byz=2:nan", seed),
+        quorum: m - 2,
+        grace_ms: 0.0,
+        straggler_ms: 0.0,
+    };
+    for mode in [RobustMode::Off, RobustMode::Screen] {
+        let (dist, res, _) = run_with(m, seed, protocol.clone(), &fc, mode);
+        assert!(res.comm.panels_rejected > 0, "NaN panels must be metered as rejected");
+        assert!(res.estimate.as_slice().iter().all(|v| v.is_finite()), "NaN reached the merge");
+        check::assert_orthonormal(&res.estimate, tol::FACTOR, "nan-flood estimate");
+        assert!(dist < tol::STAT, "honest-only merge should stay accurate: {dist}");
+    }
+}
+
+/// The meters and the transcript stay in exact agreement when a lossy
+/// link schedule and a Byzantine adversary fire together with the robust
+/// gate on, for every swept cluster size. Quarantine events are control
+/// traffic and must not leak into the payload accounting.
+#[test]
+fn meters_reconcile_exactly_under_lossy_plus_byz() {
+    for &m in &[4usize, 8, 16] {
+        let seed = 60 + m as u64;
+        let count = (m / 2).saturating_sub(1).max(1);
+        let plan = FaultPlan {
+            drop_p: 0.15,
+            delay_p: 0.3,
+            delay_ms: 30.0,
+            dup_p: 0.1,
+            ..byz_plan(&format!("byz={count}:rotate"), seed)
+        };
+        let fc = FaultRunConfig { plan, quorum: m - 1, grace_ms: 5.0, straggler_ms: 1000.0 };
+        let protocol = ProtocolKind::parse("qpower", 3, 0.0).unwrap();
+        let (_, res, _) = run_with(m, seed, protocol, &fc, RobustMode::Screen);
+        let up = res.transcript.counts(LinkDir::Up);
+        let down = res.transcript.counts(LinkDir::Down);
+        assert_eq!(up.msgs, res.comm.msgs_up, "m={m} up msgs");
+        assert_eq!(up.bytes, res.comm.bytes_up, "m={m} up bytes");
+        assert_eq!(down.msgs, res.comm.msgs_down, "m={m} down msgs");
+        assert_eq!(down.bytes, res.comm.bytes_down, "m={m} down bytes");
+        assert_eq!(up.retries + down.retries, res.comm.msgs_retry, "m={m} retries");
+        assert_eq!(up.dropped + down.dropped, res.comm.msgs_dropped, "m={m} drops");
+        assert_eq!(up.dups + down.dups, res.comm.msgs_dup, "m={m} dups");
+        assert_eq!(up.timeouts + down.timeouts, res.comm.timeouts, "m={m} timeouts");
+    }
+}
+
+/// A lossy+Byzantine schedule replays bit-identically: two in-process
+/// runs with the same seeds agree on the estimate, every meter, and the
+/// transcript (quarantine events included); a different plan seed does
+/// not.
+#[test]
+fn lossy_byz_schedule_replays_bit_identically_in_process() {
+    let (m, seed) = (8usize, 71u64);
+    let fc = |plan_seed: u64| FaultRunConfig {
+        plan: FaultPlan {
+            drop_p: 0.1,
+            dup_p: 0.1,
+            ..byz_plan("byz=3:collude", plan_seed)
+        },
+        quorum: m - 1,
+        grace_ms: 5.0,
+        straggler_ms: 500.0,
+    };
+    let protocol = ProtocolKind::parse("qpower", 3, 0.0).unwrap();
+    let (_, a, _) = run_with(m, seed, protocol.clone(), &fc(123), RobustMode::Screen);
+    let (_, b, _) = run_with(m, seed, protocol.clone(), &fc(123), RobustMode::Screen);
+    assert!(!a.transcript.events.is_empty());
+    assert!(
+        a.transcript.events.iter().any(|e| matches!(e.action, FaultAction::Quarantined)),
+        "schedule produced no quarantine events — nothing Byzantine to replay"
+    );
+    assert_eq!(a.transcript, b.transcript);
+    assert_eq!(a.comm, b.comm);
+    assert_eq!(a.per_round, b.per_round);
+    assert!(a.estimate.sub(&b.estimate).max_abs() == 0.0, "estimate not bit-identical");
+    let (_, c, _) = run_with(m, seed, protocol, &fc(124), RobustMode::Screen);
+    assert_ne!(a.transcript, c.transcript, "different plan seeds replayed identically");
+}
+
+/// Loopback sockets can be unavailable in sandboxed environments; a bind
+/// failure skips the test rather than failing it.
+fn sockets_available() -> bool {
+    match std::net::TcpListener::bind("127.0.0.1:0") {
+        Ok(_) => true,
+        Err(e) => {
+            eprintln!("skipping TCP byz replay: loopback unavailable ({e})");
+            false
+        }
+    }
+}
+
+/// The same lossy+Byzantine schedule replays bit-identically across the
+/// loopback-TCP engine and the in-process engine: estimate, per-round
+/// meters, and transcript — corruption is a pure hash of
+/// (seed, node, round), never of engine timing.
+#[test]
+fn lossy_byz_schedule_replays_bit_identically_over_tcp() {
+    if !sockets_available() {
+        return;
+    }
+    let (m, seed) = (5usize, 83u64);
+    let plan = FaultPlan {
+        drop_p: 0.15,
+        delay_p: 0.3,
+        delay_ms: 20.0,
+        dup_p: 0.1,
+        ..byz_plan("byz=2:rotate", seed)
+    };
+    let fc = FaultRunConfig { plan, quorum: m - 1, grace_ms: 40.0, straggler_ms: 400.0 };
+    let cfg = ClusterConfig {
+        r: 3,
+        protocol: ProtocolKind::parse("qpower", 3, 0.0).unwrap(),
+        seed,
+        robust: RobustPolicy::with_mode(RobustMode::Screen),
+        ..Default::default()
+    };
+    let (_, workers) = pca_workers(seed, 24, 3, m, 200);
+    let tcp = run_cluster_tcp(workers, Arc::new(NativeEngine::default()), &cfg, &fc)
+        .expect("loopback TCP run failed");
+    let (_, workers2) = pca_workers(seed, 24, 3, m, 200);
+    let local = run_cluster_faulty(workers2, Arc::new(NativeEngine::default()), &cfg, &fc);
+    assert!(
+        tcp.estimate.sub(&local.estimate).max_abs() == 0.0,
+        "TCP vs in-process estimate not bit-identical under lossy+byz"
+    );
+    assert_eq!(tcp.comm, local.comm, "meters diverge");
+    assert_eq!(tcp.per_round, local.per_round, "per-round meters diverge");
+    assert_eq!(tcp.transcript, local.transcript, "transcripts diverge");
+}
+
+/// `--tol` early stop: a converging iterative run under a positive
+/// tolerance stops before its round budget and therefore records strictly
+/// fewer per-round meter buckets than the same run with tol = 0.
+#[test]
+fn tol_early_stop_records_fewer_per_round_buckets() {
+    let (m, seed) = (6usize, 91u64);
+    for name in ["qpower", "sanger"] {
+        let budget = 6usize;
+        let full = ProtocolKind::parse(name, budget, 0.0).unwrap();
+        let tolled = ProtocolKind::parse(name, budget, 0.2).unwrap();
+        let (_, all_rounds, _) =
+            run_with(m, seed, full, &FaultRunConfig::full(m), RobustMode::Off);
+        let (dist, early, _) =
+            run_with(m, seed, tolled, &FaultRunConfig::full(m), RobustMode::Off);
+        assert!(
+            early.per_round.len() < all_rounds.per_round.len(),
+            "{name}: tol run recorded {} buckets, budget run {}",
+            early.per_round.len(),
+            all_rounds.per_round.len()
+        );
+        assert!(dist < tol::STAT, "{name}: early-stopped estimate degraded: {dist}");
+    }
+}

@@ -140,8 +140,14 @@ fn tcp_multi_round_protocols_replay_bit_identically_under_lossy_plan() {
     let (m, seed) = (5usize, 31u64);
     let combos = [
         (ProtocolKind::QPower { rounds: 3, tol: 0.0 }, WireCodec::Int8),
-        (ProtocolKind::Sanger { rounds: 3, step: 0.3, topology: Topology::Ring }, WireCodec::F64),
-        (ProtocolKind::DeepCa { rounds: 2, fastmix: 2, topology: Topology::Ring }, WireCodec::F64),
+        (
+            ProtocolKind::Sanger { rounds: 3, step: 0.3, topology: Topology::Ring, tol: 0.0 },
+            WireCodec::F64,
+        ),
+        (
+            ProtocolKind::DeepCa { rounds: 2, fastmix: 2, topology: Topology::Ring, tol: 0.0 },
+            WireCodec::F64,
+        ),
     ];
     for (protocol, codec) in combos {
         let plan =
