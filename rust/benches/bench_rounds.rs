@@ -13,8 +13,8 @@ use std::sync::Arc;
 
 use deigen::benchutil::{bench, header, quick_mode, report, JsonSink};
 use deigen::coordinator::{
-    run_cluster_faulty, ClusterConfig, FaultPlan, FaultRunConfig, ProtocolKind, RobustMode,
-    RobustPolicy, Topology, WireCodec, WorkerData,
+    run_cluster_faulty, run_cluster_journaled, ClusterConfig, FaultPlan, FaultRunConfig,
+    ProtocolKind, RobustMode, RobustPolicy, Topology, WireCodec, WorkerData,
 };
 use deigen::linalg::gemm::matmul;
 use deigen::linalg::Mat;
@@ -123,5 +123,31 @@ fn main() {
         report(&res);
         sink.record(&res, None);
     }
+
+    // journaling-overhead probe (DESIGN.md S17): the same qpower run with
+    // a per-round durable checkpoint (serialize + checksum + fsync) vs
+    // none — the delta divided by K+1 is the cost of one checkpoint
+    let jpath =
+        std::env::temp_dir().join(format!("deigen_bench_rounds_{}.journal", std::process::id()));
+    for (label, journal) in [("off", false), ("on ", true)] {
+        let cfg = ClusterConfig {
+            r,
+            protocol: ProtocolKind::QPower { rounds: k, tol: 0.0 },
+            seed: 11,
+            ..Default::default()
+        };
+        let res = bench(&format!("qpower journal={label} m={m} d={d} K={k}"), 1, iters, || {
+            let out = if journal {
+                run_cluster_journaled(mk(), solver.clone(), &cfg, &fc, &jpath)
+                    .expect("journaled bench run")
+            } else {
+                run_cluster_faulty(mk(), solver.clone(), &cfg, &fc)
+            };
+            std::hint::black_box(out.estimate);
+        });
+        report(&res);
+        sink.record(&res, None);
+    }
+    let _ = std::fs::remove_file(&jpath);
     sink.finish();
 }

@@ -54,10 +54,12 @@
 //! over real sockets.
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::{mpsc, Arc, Mutex};
+use std::path::Path;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::align;
+use crate::io::Json;
 use crate::linalg::symop::{GramOp, SymOp};
 use crate::linalg::{pool, Mat, Workspace};
 use crate::rng::Pcg64;
@@ -66,11 +68,16 @@ use crate::runtime::LocalSolver;
 use super::fault::{
     meter_schedule, AttackStrategy, FaultAction, FaultEvent, FaultPlan, LinkDir, Transcript,
 };
+use super::journal::{
+    comm_from_json, comm_to_json, event_from_json, event_to_json, f64_from_json, f64_to_json,
+    field, load_journal, mat_from_json, mat_to_json, obj, u64_from_json, u64_to_json,
+    usize_from_json, Journal, JournalError,
+};
 use super::netsim::{CommSnapshot, CommStats, NetworkModel};
 use super::protocol::{AggregationRule, Message, WireCodec, HEADER_BYTES};
 use super::reputation::{GateChange, RobustGate, RobustPolicy};
-use super::rounds::{Contribution, LeaderCtx, ProtocolKind, RoundProtocol, WorkerEnv, WorkerMem};
-use super::transport::{write_frame, FrameReader};
+use super::rounds::{LeaderCtx, LeaderState, ProtocolKind, RoundProtocol, WorkerEnv, WorkerMem};
+use super::transport::{connect_with_backoff, write_frame, FrameReader};
 
 /// What a worker node actually owns — the data plane behind its
 /// observation operator `X̂ⁱ`.
@@ -145,6 +152,7 @@ pub enum NodeBehavior {
 }
 
 /// Cluster-run configuration.
+#[derive(Clone, Debug)]
 pub struct ClusterConfig {
     /// Target subspace dimension.
     pub r: usize,
@@ -223,6 +231,7 @@ impl FaultRunConfig {
 }
 
 /// Output of a fault-injected (in-process or loopback-TCP) cluster run.
+#[derive(Debug)]
 pub struct FaultyClusterResult {
     /// The final orthonormal (d, r) estimate.
     pub estimate: Mat,
@@ -342,6 +351,292 @@ fn make_states(workers: Vec<WorkerData>, seed: u64) -> Vec<WorkerState> {
             byz_history: Vec::new(),
         })
         .collect()
+}
+
+/// The transcript line for one crash-recovery transition (control
+/// traffic: header-only, down-link direction; node 0 stands in for the
+/// leader itself on `LeaderCrashed`/`Resumed`).
+fn recovery_event(round: usize, node: usize, action: FaultAction) -> FaultEvent {
+    FaultEvent { round, dir: LinkDir::Down, node, attempt: 0, copy: 0, bytes: HEADER_BYTES, action }
+}
+
+/// Everything that must match between the journaling run and the resuming
+/// run for the resume to be bit-identical: topology, protocol, codec,
+/// fault plan, quorum policy. Compared as an opaque string so adding a
+/// knob to any of these types automatically tightens the check.
+fn run_fingerprint(m: usize, config: &ClusterConfig, fc: &FaultRunConfig) -> String {
+    format!(
+        "m={m} r={} refine={} proto={:?} agg={:?} robust={:?} codec={} net={:?} plan={:?} \
+         quorum={} grace_ms={} straggler_ms={}",
+        config.r,
+        config.refine_rounds,
+        config.protocol,
+        config.aggregation,
+        config.robust,
+        config.codec.name(),
+        config.network,
+        fc.plan,
+        fc.quorum,
+        fc.grace_ms,
+        fc.straggler_ms
+    )
+}
+
+/// Journal header record: the run seed plus the config fingerprint.
+fn run_header(m: usize, config: &ClusterConfig, fc: &FaultRunConfig) -> Json {
+    obj(vec![
+        ("seed", u64_to_json(config.seed)),
+        ("fingerprint", Json::Str(run_fingerprint(m, config, fc))),
+    ])
+}
+
+/// Refuse to resume a journal written by a different run: wrong seed and
+/// wrong config each get their own typed error so the operator can tell
+/// a stale journal from a mistyped flag.
+fn validate_header(
+    header: &Json,
+    m: usize,
+    config: &ClusterConfig,
+    fc: &FaultRunConfig,
+) -> Result<(), JournalError> {
+    let seed = u64_from_json(field(header, "seed").map_err(JournalError::Malformed)?)
+        .map_err(JournalError::Malformed)?;
+    if seed != config.seed {
+        return Err(JournalError::SeedMismatch { got: seed, want: config.seed });
+    }
+    let got = field(header, "fingerprint")
+        .map_err(JournalError::Malformed)?
+        .as_str()
+        .ok_or_else(|| JournalError::Malformed("fingerprint is not a string".into()))?;
+    let want = run_fingerprint(m, config, fc);
+    if got != want {
+        return Err(JournalError::ConfigMismatch { got: got.to_string(), want });
+    }
+    Ok(())
+}
+
+/// One journaled checkpoint: the complete run state after `round` —
+/// leader protocol state, every worker's rng cursor / protocol memory /
+/// attack history, the reputation gate, both meter planes, the canonical
+/// transcript, and the round-0 membership outcome. Decoding this record
+/// and continuing at `round + 1` is bit-identical to never stopping.
+fn checkpoint_record<'a>(
+    round: usize,
+    leader: &dyn LeaderState,
+    states: impl Iterator<Item = &'a WorkerState>,
+    gate: &RobustGate,
+    stats: &CommStats,
+    transcript: &Transcript,
+    round0: &Round0,
+) -> Json {
+    let (scores, quarantined) = gate.snapshot();
+    // serialize the transcript in canonical order: TCP worker threads
+    // append events concurrently, so insertion order is not a run
+    // invariant — sorted order is, and it is what both engines' final
+    // results report, so the two engines journal identical bytes
+    let canon = transcript.clone().canonical();
+    let workers = states
+        .map(|st| {
+            obj(vec![
+                ("rng", Json::Arr(st.rng.snapshot().iter().map(|&w| u64_to_json(w)).collect())),
+                ("mem", st.mem.snapshot()),
+                ("byz_history", Json::Arr(st.byz_history.iter().map(mat_to_json).collect())),
+            ])
+        })
+        .collect();
+    let nodes = |ns: &[usize]| Json::Arr(ns.iter().map(|&n| Json::Num(n as f64)).collect());
+    obj(vec![
+        ("round", Json::Num(round as f64)),
+        ("leader", leader.snapshot()),
+        ("workers", Json::Arr(workers)),
+        (
+            "gate",
+            obj(vec![
+                ("scores", Json::Arr(scores.iter().map(|&s| f64_to_json(s)).collect())),
+                ("quarantined", Json::Arr(quarantined.into_iter().map(Json::Bool).collect())),
+            ]),
+        ),
+        ("comm", comm_to_json(&stats.snapshot())),
+        ("per_round", Json::Arr(stats.round_snapshots().iter().map(comm_to_json).collect())),
+        ("transcript", Json::Arr(canon.events.iter().map(event_to_json).collect())),
+        ("in_quorum", nodes(&round0.in_quorum)),
+        ("late_merged", nodes(&round0.late_merged)),
+        ("lost", nodes(&round0.lost)),
+        ("in_panels", Json::Arr(round0.in_panels.iter().map(mat_to_json).collect())),
+        ("local_panels", Json::Arr(round0.local_panels.iter().map(mat_to_json).collect())),
+    ])
+}
+
+fn bad(e: String) -> JournalError {
+    JournalError::Malformed(e)
+}
+
+/// A decoded resume point: the run's complete state after `start_round`.
+/// The data plane (shards, node behaviors) is deliberately NOT journaled
+/// — it is the node's durable state and is re-supplied by the caller.
+struct ResumeState {
+    start_round: usize,
+    leader: Box<dyn LeaderState>,
+    /// Per-node (rng cursor, protocol memory, attack history), node order.
+    workers: Vec<(Pcg64, WorkerMem, Vec<Mat>)>,
+    gate: RobustGate,
+    stats: CommStats,
+    transcript: Transcript,
+    round0: Round0,
+}
+
+fn decode_checkpoint(
+    rec: &Json,
+    m: usize,
+    protocol: &dyn RoundProtocol,
+    lctx: &LeaderCtx,
+    robust: &RobustPolicy,
+) -> Result<ResumeState, JournalError> {
+    let start_round =
+        usize_from_json(field(rec, "round").map_err(bad)?, "checkpoint round").map_err(bad)?;
+    let leader = protocol.restore_leader(lctx, field(rec, "leader").map_err(bad)?).map_err(bad)?;
+    let wlist = field(rec, "workers")
+        .map_err(bad)?
+        .as_arr()
+        .ok_or_else(|| bad("workers is not an array".into()))?;
+    if wlist.len() != m {
+        return Err(bad(format!("checkpoint has {} workers, run has {m}", wlist.len())));
+    }
+    let mut workers = Vec::with_capacity(m);
+    for w in wlist {
+        let cursor = field(w, "rng")
+            .map_err(bad)?
+            .as_arr()
+            .ok_or_else(|| bad("rng cursor is not an array".into()))?;
+        if cursor.len() != 6 {
+            return Err(bad(format!("rng cursor has {} words, expected 6", cursor.len())));
+        }
+        let mut words = [0u64; 6];
+        for (slot, v) in words.iter_mut().zip(cursor) {
+            *slot = u64_from_json(v).map_err(bad)?;
+        }
+        let mem = WorkerMem::restore(field(w, "mem").map_err(bad)?).map_err(bad)?;
+        let history = field(w, "byz_history")
+            .map_err(bad)?
+            .as_arr()
+            .ok_or_else(|| bad("byz_history is not an array".into()))?
+            .iter()
+            .map(mat_from_json)
+            .collect::<Result<Vec<Mat>, String>>()
+            .map_err(bad)?;
+        workers.push((Pcg64::restore(&words), mem, history));
+    }
+    let gate_v = field(rec, "gate").map_err(bad)?;
+    let scores = field(gate_v, "scores")
+        .map_err(bad)?
+        .as_arr()
+        .ok_or_else(|| bad("gate scores is not an array".into()))?
+        .iter()
+        .map(f64_from_json)
+        .collect::<Result<Vec<f64>, String>>()
+        .map_err(bad)?;
+    let quarantined = field(gate_v, "quarantined")
+        .map_err(bad)?
+        .as_arr()
+        .ok_or_else(|| bad("gate quarantined is not an array".into()))?
+        .iter()
+        .map(|v| v.as_bool().ok_or_else(|| "gate quarantined entry is not a bool".to_string()))
+        .collect::<Result<Vec<bool>, String>>()
+        .map_err(bad)?;
+    if scores.len() != m {
+        return Err(bad(format!("gate snapshot covers {} nodes, run has {m}", scores.len())));
+    }
+    let gate = RobustGate::restore(robust.clone(), scores, quarantined);
+    let totals = comm_from_json(field(rec, "comm").map_err(bad)?).map_err(bad)?;
+    let per_round = field(rec, "per_round")
+        .map_err(bad)?
+        .as_arr()
+        .ok_or_else(|| bad("per_round is not an array".into()))?
+        .iter()
+        .map(comm_from_json)
+        .collect::<Result<Vec<CommSnapshot>, String>>()
+        .map_err(bad)?;
+    let stats = CommStats::restore(&totals, &per_round);
+    let events = field(rec, "transcript")
+        .map_err(bad)?
+        .as_arr()
+        .ok_or_else(|| bad("transcript is not an array".into()))?
+        .iter()
+        .map(event_from_json)
+        .collect::<Result<Vec<FaultEvent>, String>>()
+        .map_err(bad)?;
+    let transcript = Transcript { events };
+    let node_list = |key: &str| -> Result<Vec<usize>, JournalError> {
+        field(rec, key)
+            .map_err(bad)?
+            .as_arr()
+            .ok_or_else(|| bad(format!("{key} is not an array")))?
+            .iter()
+            .map(|v| usize_from_json(v, key))
+            .collect::<Result<Vec<usize>, String>>()
+            .map_err(bad)
+    };
+    let mat_list = |key: &str| -> Result<Vec<Mat>, JournalError> {
+        field(rec, key)
+            .map_err(bad)?
+            .as_arr()
+            .ok_or_else(|| bad(format!("{key} is not an array")))?
+            .iter()
+            .map(mat_from_json)
+            .collect::<Result<Vec<Mat>, String>>()
+            .map_err(bad)
+    };
+    let round0 = Round0 {
+        in_panels: mat_list("in_panels")?,
+        local_panels: mat_list("local_panels")?,
+        in_quorum: node_list("in_quorum")?,
+        late_merged: node_list("late_merged")?,
+        lost: node_list("lost")?,
+    };
+    Ok(ResumeState { start_round, leader, workers, gate, stats, transcript, round0 })
+}
+
+/// A TCP worker's state, shared with the leader thread for checkpointing.
+/// Workers are quiescent between rounds (blocked reading the next frame),
+/// and `round_done` tells the leader when a worker has finished mutating
+/// its state for a round — so a leader-side snapshot taken after waiting
+/// on it is race-free without any wire-protocol changes.
+struct WorkerShared {
+    state: Mutex<WorkerState>,
+    /// Highest round this worker has fully processed (compute plus
+    /// scheduled sends); -1 before round 0 completes.
+    round_done: Mutex<isize>,
+    cv: Condvar,
+}
+
+impl WorkerShared {
+    fn new(state: WorkerState) -> Arc<Self> {
+        Arc::new(WorkerShared {
+            state: Mutex::new(state),
+            round_done: Mutex::new(-1),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn mark_done(&self, round: usize) {
+        *self.round_done.lock().expect("round_done lock") = round as isize;
+        self.cv.notify_all();
+    }
+
+    /// Block until this worker has processed `round`, with a real-time
+    /// failsafe (a lost worker's last-known state is checkpointed as-is,
+    /// matching a worker that crashed mid-round).
+    fn wait_done(&self, round: usize, until: Instant) {
+        let mut done = self.round_done.lock().expect("round_done lock");
+        while *done < round as isize {
+            let left = until.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return;
+            }
+            let (next, _) = self.cv.wait_timeout(done, left).expect("round_done lock");
+            done = next;
+        }
+    }
 }
 
 /// One decoded panel with its virtual arrival time (ms after the round's
@@ -527,84 +822,129 @@ pub fn run_cluster_faulty(
     config: &ClusterConfig,
     fc: &FaultRunConfig,
 ) -> FaultyClusterResult {
+    run_inproc_engine(workers, solver, config, fc, None, None)
+        .expect("journal-free in-process run cannot fail")
+}
+
+/// [`run_cluster_faulty`] with durable round checkpoints: every completed
+/// round is appended to the journal at `path` (fsync'd), so a leader that
+/// dies mid-run — e.g. at the plan's `lcrash=R` — can be restarted with
+/// [`run_cluster_resume`] and finish bit-identically.
+pub fn run_cluster_journaled(
+    workers: Vec<WorkerData>,
+    solver: Arc<dyn LocalSolver>,
+    config: &ClusterConfig,
+    fc: &FaultRunConfig,
+    path: &Path,
+) -> Result<FaultyClusterResult, JournalError> {
+    let m = workers.len();
+    let mut journal = Journal::create(path, &run_header(m, config, fc))?;
+    run_inproc_engine(workers, solver, config, fc, Some(&mut journal), None)
+}
+
+/// Restart a crashed leader from its journal: validate the header against
+/// this run's seed and config, decode the last intact checkpoint, replay
+/// membership and worker state from it, and continue at the next round.
+/// The finished run — estimate, per-round meters, payload transcript — is
+/// bit-identical to the same run never having crashed.
+pub fn run_cluster_resume(
+    workers: Vec<WorkerData>,
+    solver: Arc<dyn LocalSolver>,
+    config: &ClusterConfig,
+    fc: &FaultRunConfig,
+    path: &Path,
+) -> Result<FaultyClusterResult, JournalError> {
+    let m = workers.len();
+    let loaded = load_journal(path)?;
+    validate_header(&loaded.header, m, config, fc)?;
+    let last = loaded.records.last().ok_or(JournalError::NoCheckpoint)?;
+    let protocol = config.protocol.build(config.refine_rounds);
+    let lctx = LeaderCtx {
+        m,
+        aggregation: config.robust.mode.rule_or(config.aggregation),
+        codec: config.codec,
+    };
+    let rs = decode_checkpoint(last, m, protocol.as_ref(), &lctx, &config.robust)?;
+    // reopen at the validated length: a corrupt tail is physically cut
+    // before new checkpoints land
+    let mut journal = Journal::reopen(path, loaded.valid_len)?;
+    run_inproc_engine(workers, solver, config, fc, Some(&mut journal), Some(rs))
+}
+
+fn run_inproc_engine(
+    workers: Vec<WorkerData>,
+    solver: Arc<dyn LocalSolver>,
+    config: &ClusterConfig,
+    fc: &FaultRunConfig,
+    mut journal: Option<&mut Journal>,
+    resume: Option<ResumeState>,
+) -> Result<FaultyClusterResult, JournalError> {
     assert!(!workers.is_empty());
     let m = workers.len();
-    let stats = Arc::new(CommStats::new());
-    let mut transcript = Transcript::default();
     let r = config.r;
     let codec = config.codec;
     let plan = &fc.plan;
-
-    let mut states = make_states(workers, config.seed);
-
-    // --- round 0: local solves fan out on the pool, one upload each ------
-    let mut uploads: Vec<Option<Message>> = (0..m).map(|_| None).collect();
-    {
-        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = states
-            .iter_mut()
-            .zip(uploads.iter_mut())
-            .filter(|(st, _)| plan.active(st.id, 0))
-            .map(|(st, slot)| {
-                let solver = Arc::clone(&solver);
-                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
-                    let WorkerState { id, behavior, shard, rng, mem, byz_history } = st;
-                    let d = shard.dim();
-                    // local solve through the operator data plane (or the
-                    // node's attack strategy at the uplink boundary); a
-                    // Samples shard never materializes its d×d Gram
-                    let panel = uplink_boundary(plan, *id, *behavior, 0, (d, r), byz_history, || {
-                        let p = solver.leading_subspace_op(&*shard, r, rng);
-                        mem.panel = Some(p.clone());
-                        p
-                    });
-                    let msg = Message::LocalEstimate {
-                        node: *id,
-                        round: 0,
-                        panel: codec.encode(&panel),
-                        ritz: vec![],
-                    };
-                    *slot = Some(msg);
-                });
-                job
-            })
-            .collect();
-        pool::run_scoped(jobs);
-    }
-    // the leader meters each upload through its link schedule and decodes
-    // the first delivered copy
-    let mut deliveries: Vec<Delivery> = Vec::new();
-    for (i, msg) in uploads.into_iter().enumerate() {
-        let Some(msg) = msg else { continue };
-        let bytes = msg.wire_bytes();
-        let sched = plan.link_schedule(i, LinkDir::Up, 0);
-        meter_schedule(&stats, LinkDir::Up, 0, bytes, &sched);
-        transcript.push_schedule(0, LinkDir::Up, i, bytes, &sched);
-        if let Some(e) = sched.delivered.first() {
-            let Message::LocalEstimate { panel, .. } = msg else { unreachable!() };
-            if let Some(panel) = finite_or_reject(panel.decode(), &stats, 0) {
-                deliveries.push(Delivery { node: i, arrival_ms: e.arrival_ms, panel });
-            }
-        }
-    }
-    stats.bump_round();
-    let split = split_quorum(deliveries, fc.quorum, fc.grace_ms, fc.straggler_ms);
-    let mut round0 = settle_round0(split, m, &stats);
-    let mut gate = RobustGate::new(config.robust.clone(), m);
-    for ch in gate.screen_round0(&mut round0) {
-        stats.record_ctrl(HEADER_BYTES);
-        transcript.events.push(gate_event(0, &ch));
-    }
-
-    // --- protocol rounds -------------------------------------------------
-    // everything past round 0 is the protocol's business: the leader state
-    // decides the down-link payload(s), the protocol decides the worker
-    // compute, and the merge folds the surviving replies back in. The
-    // skeleton — metering, transcript, quorum, pool fan-out — is common.
     let protocol = config.protocol.build(config.refine_rounds);
     let lctx = LeaderCtx { m, aggregation: config.robust.mode.rule_or(config.aggregation), codec };
-    let mut leader = protocol.init_leader(&round0, &lctx);
-    let mut last_round = 0usize;
-    for round in 1..=protocol.rounds() {
+
+    let mut states = make_states(workers, config.seed);
+    let (stats, mut transcript, mut gate, mut leader, round0, start_round) = match resume {
+        None => run_inproc_round0(&mut states, &solver, config, fc, protocol.as_ref(), &lctx),
+        Some(rs) => {
+            // replay the journaled state: rng cursors, protocol memory,
+            // and attack histories land exactly where the crash left them
+            for (st, (rng, mem, history)) in states.iter_mut().zip(rs.workers) {
+                st.rng = rng;
+                st.mem = mem;
+                st.byz_history = history;
+            }
+            let stats = Arc::new(rs.stats);
+            let mut transcript = rs.transcript;
+            // recovery control plane: the leader restart and the per-node
+            // re-seed broadcasts are bookkeeping, metered as round-less
+            // control traffic and filtered from payload transcripts — so
+            // the resumed run's payload meters match the uninterrupted run
+            stats.record_ctrl(HEADER_BYTES);
+            transcript.events.push(recovery_event(rs.start_round, 0, FaultAction::Resumed));
+            let next = rs.start_round + 1;
+            if next <= protocol.rounds() {
+                for i in 0..m {
+                    if !plan.active(i, next) {
+                        continue;
+                    }
+                    let msg = Message::Reseed {
+                        node: i,
+                        round: rs.start_round,
+                        panel: codec.encode(rs.leader.down(next, i)),
+                    };
+                    debug_assert!(msg.is_control());
+                    stats.record_ctrl(msg.wire_bytes());
+                    transcript.events.push(recovery_event(
+                        rs.start_round,
+                        i,
+                        FaultAction::Reconnected,
+                    ));
+                }
+            }
+            (stats, transcript, rs.gate, rs.leader, rs.round0, rs.start_round)
+        }
+    };
+    if start_round == 0 {
+        if let Some(j) = journal.as_deref_mut() {
+            j.append(&checkpoint_record(
+                0,
+                &*leader,
+                states.iter(),
+                &gate,
+                &stats,
+                &transcript,
+                &round0,
+            ))?;
+        }
+    }
+    let mut last_round = start_round;
+    let mut crashed = false;
+    for round in (start_round + 1)..=protocol.rounds() {
         // broadcast protocols encode (and decode) the shared payload once,
         // exactly like the legacy reference broadcast; per-node protocols
         // encode each node's panel separately
@@ -698,7 +1038,31 @@ pub fn run_cluster_faulty(
         }
         leader.merge(round, contribs);
         last_round = round;
-        if leader.converged() {
+        // convergence wins over a scheduled crash at the same round: the
+        // uninterrupted run would have shut down here, and a resume must
+        // not continue past it — so the crash simply never happens
+        let done = leader.converged();
+        if let Some(j) = journal.as_deref_mut() {
+            j.append(&checkpoint_record(
+                round,
+                &*leader,
+                states.iter(),
+                &gate,
+                &stats,
+                &transcript,
+                &round0,
+            ))?;
+        }
+        if !done && plan.lcrash == Some(round) {
+            // the leader process dies here: log it on the control plane
+            // and return without the Done shutdown — `run_cluster_resume`
+            // picks the run up from the checkpoint just written
+            stats.record_ctrl(HEADER_BYTES);
+            transcript.events.push(recovery_event(round, 0, FaultAction::LeaderCrashed));
+            crashed = true;
+            break;
+        }
+        if done {
             break;
         }
     }
@@ -707,20 +1071,23 @@ pub fn run_cluster_faulty(
     // --- shutdown --------------------------------------------------------
     // the protocol still ends with one Done per live worker link; it is
     // control traffic, metered separately so it cannot inflate the
-    // payload meters or the simulated wall-clock
-    for i in 0..m {
-        if !plan.active(i, last_round) {
-            continue;
+    // payload meters or the simulated wall-clock. A crashed leader sends
+    // nothing — its workers find out from the dead socket.
+    if !crashed {
+        for i in 0..m {
+            if !plan.active(i, last_round) {
+                continue;
+            }
+            let msg = Message::Done;
+            debug_assert!(msg.is_control());
+            stats.record_ctrl(msg.wire_bytes());
         }
-        let msg = Message::Done;
-        debug_assert!(msg.is_control());
-        stats.record_ctrl(msg.wire_bytes());
     }
 
     let comm = stats.snapshot();
     let per_round = stats.round_snapshots();
     let sim_time_s = stats.simulated_time(&config.network);
-    FaultyClusterResult {
+    Ok(FaultyClusterResult {
         estimate,
         local_panels: round0.local_panels,
         comm,
@@ -730,7 +1097,85 @@ pub fn run_cluster_faulty(
         in_quorum: round0.in_quorum,
         late_merged: round0.late_merged,
         lost: round0.lost,
+    })
+}
+
+/// Fresh-start round 0 for the in-process engine: local solves fan out on
+/// the pool, one upload each, quorum settle, robust screen, leader init.
+#[allow(clippy::type_complexity)]
+fn run_inproc_round0(
+    states: &mut [WorkerState],
+    solver: &Arc<dyn LocalSolver>,
+    config: &ClusterConfig,
+    fc: &FaultRunConfig,
+    protocol: &dyn RoundProtocol,
+    lctx: &LeaderCtx,
+) -> (Arc<CommStats>, Transcript, RobustGate, Box<dyn LeaderState>, Round0, usize) {
+    let m = states.len();
+    let r = config.r;
+    let codec = config.codec;
+    let plan = &fc.plan;
+    let stats = Arc::new(CommStats::new());
+    let mut transcript = Transcript::default();
+    let mut uploads: Vec<Option<Message>> = (0..m).map(|_| None).collect();
+    {
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = states
+            .iter_mut()
+            .zip(uploads.iter_mut())
+            .filter(|(st, _)| plan.active(st.id, 0))
+            .map(|(st, slot)| {
+                let solver = Arc::clone(&solver);
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let WorkerState { id, behavior, shard, rng, mem, byz_history } = st;
+                    let d = shard.dim();
+                    // local solve through the operator data plane (or the
+                    // node's attack strategy at the uplink boundary); a
+                    // Samples shard never materializes its d×d Gram
+                    let panel = uplink_boundary(plan, *id, *behavior, 0, (d, r), byz_history, || {
+                        let p = solver.leading_subspace_op(&*shard, r, rng);
+                        mem.panel = Some(p.clone());
+                        p
+                    });
+                    let msg = Message::LocalEstimate {
+                        node: *id,
+                        round: 0,
+                        panel: codec.encode(&panel),
+                        ritz: vec![],
+                    };
+                    *slot = Some(msg);
+                });
+                job
+            })
+            .collect();
+        pool::run_scoped(jobs);
     }
+    // the leader meters each upload through its link schedule and decodes
+    // the first delivered copy
+    let mut deliveries: Vec<Delivery> = Vec::new();
+    for (i, msg) in uploads.into_iter().enumerate() {
+        let Some(msg) = msg else { continue };
+        let bytes = msg.wire_bytes();
+        let sched = plan.link_schedule(i, LinkDir::Up, 0);
+        meter_schedule(&stats, LinkDir::Up, 0, bytes, &sched);
+        transcript.push_schedule(0, LinkDir::Up, i, bytes, &sched);
+        if let Some(e) = sched.delivered.first() {
+            let Message::LocalEstimate { panel, .. } = msg else { unreachable!() };
+            if let Some(panel) = finite_or_reject(panel.decode(), &stats, 0) {
+                deliveries.push(Delivery { node: i, arrival_ms: e.arrival_ms, panel });
+            }
+        }
+    }
+    stats.bump_round();
+    let split = split_quorum(deliveries, fc.quorum, fc.grace_ms, fc.straggler_ms);
+    let mut round0 = settle_round0(split, m, &stats);
+    let mut gate = RobustGate::new(config.robust.clone(), m);
+    for ch in gate.screen_round0(&mut round0) {
+        stats.record_ctrl(HEADER_BYTES);
+        transcript.events.push(gate_event(0, &ch));
+    }
+
+    let leader = protocol.init_leader(&round0, lctx);
+    (stats, transcript, gate, leader, round0, 0)
 }
 
 /// Everything a TCP worker thread needs besides its own state.
@@ -743,6 +1188,11 @@ struct NetCtx {
     codec: WireCodec,
     r: usize,
     protocol: Arc<dyn RoundProtocol>,
+    node: usize,
+    /// 0 on a fresh run; the journaled round on a resumed run — rejoining
+    /// workers skip the round-0 upload (the leader restored its outcome)
+    /// and retry their connect with backoff.
+    start_round: usize,
 }
 
 /// Worker-side fault-injected upload: meter and record the plan's
@@ -776,73 +1226,103 @@ fn send_with_schedule(
     Ok(())
 }
 
-/// One TCP worker: connect, handshake, round-0 upload, then serve the
+/// One TCP worker: connect (with capped-backoff retries when rejoining a
+/// restarted leader), handshake, round-0 upload, then serve the
 /// protocol's Reference→Aligned rounds until `Done` or the leader hangs
-/// up. The worker's protocol memory lives here, across rounds. Crash
-/// events make the worker leave silently, exactly when the plan says.
-fn worker_main(mut st: WorkerState, ctx: NetCtx) {
-    let Ok(mut stream) = TcpStream::connect(ctx.addr) else { return };
+/// up. The worker's protocol memory lives in `shared`, across rounds,
+/// where the leader checkpoints it between rounds. Crash events make the
+/// worker leave silently, exactly when the plan says.
+fn worker_main(shared: Arc<WorkerShared>, ctx: NetCtx) {
+    let node = ctx.node;
+    let stream = if ctx.start_round > 0 {
+        // rejoining after a leader restart: the new leader's socket may
+        // not be listening yet, so retry with capped exponential backoff
+        // under a reconnect deadline
+        connect_with_backoff(
+            ctx.addr,
+            Duration::from_millis(1),
+            Duration::from_millis(64),
+            Instant::now() + Duration::from_secs(10),
+        )
+    } else {
+        TcpStream::connect(ctx.addr)
+    };
+    let Ok(mut stream) = stream else { return };
     let _ = stream.set_nodelay(true);
     // socket-level handshake: the analogue of channel creation, unmetered
-    if write_frame(&mut stream, &Message::Hello { node: st.id }).is_err() {
+    if write_frame(&mut stream, &Message::Hello { node }).is_err() {
         return;
     }
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = FrameReader::new(read_half);
-    if ctx.plan.active(st.id, 0) {
-        let WorkerState { id, behavior, shard, rng, mem, byz_history } = &mut st;
-        let d = shard.dim();
-        let panel = uplink_boundary(&ctx.plan, *id, *behavior, 0, (d, ctx.r), byz_history, || {
-            let p = ctx.solver.leading_subspace_op(&*shard, ctx.r, rng);
-            mem.panel = Some(p.clone());
-            p
-        });
-        let msg = Message::LocalEstimate {
-            node: st.id,
-            round: 0,
-            panel: ctx.codec.encode(&panel),
-            ritz: vec![],
-        };
-        if send_with_schedule(&mut stream, &ctx, st.id, 0, &msg).is_err() {
-            return;
+    if ctx.start_round == 0 {
+        if ctx.plan.active(node, 0) {
+            let msg = {
+                let mut st = shared.state.lock().expect("worker state lock");
+                let WorkerState { id, behavior, shard, rng, mem, byz_history } = &mut *st;
+                let d = shard.dim();
+                let panel =
+                    uplink_boundary(&ctx.plan, *id, *behavior, 0, (d, ctx.r), byz_history, || {
+                        let p = ctx.solver.leading_subspace_op(&*shard, ctx.r, rng);
+                        mem.panel = Some(p.clone());
+                        p
+                    });
+                Message::LocalEstimate {
+                    node,
+                    round: 0,
+                    panel: ctx.codec.encode(&panel),
+                    ritz: vec![],
+                }
+            };
+            let sent = send_with_schedule(&mut stream, &ctx, node, 0, &msg);
+            shared.mark_done(0);
+            if sent.is_err() {
+                return;
+            }
+        } else {
+            shared.mark_done(0);
         }
     }
     loop {
         match reader.read_message() {
             Ok(Message::Reference { round, panel }) => {
-                if ctx.plan.crashed(st.id, round) {
+                if ctx.plan.crashed(node, round) {
                     // crash mid-computation: leave without a word
                     return;
                 }
                 let incoming = panel.decode();
-                let WorkerState { id, behavior, shard, rng, mem, byz_history } = &mut st;
-                let d = shard.dim();
-                let reply_panel = uplink_boundary(
-                    &ctx.plan,
-                    *id,
-                    *behavior,
-                    round,
-                    (d, ctx.r),
-                    byz_history,
-                    || {
-                        let mut env = WorkerEnv {
-                            shard: &*shard,
-                            solver: ctx.solver.as_ref(),
-                            r: ctx.r,
-                            rng,
-                        };
-                        ctx.protocol.worker_step(mem, round, &incoming, &mut env)
-                    },
-                );
-                let reply = Message::Aligned {
-                    node: st.id,
-                    round,
-                    panel: ctx.codec.encode(&reply_panel),
+                let reply = {
+                    let mut st = shared.state.lock().expect("worker state lock");
+                    let WorkerState { id, behavior, shard, rng, mem, byz_history } = &mut *st;
+                    let d = shard.dim();
+                    let reply_panel = uplink_boundary(
+                        &ctx.plan,
+                        *id,
+                        *behavior,
+                        round,
+                        (d, ctx.r),
+                        byz_history,
+                        || {
+                            let mut env = WorkerEnv {
+                                shard: &*shard,
+                                solver: ctx.solver.as_ref(),
+                                r: ctx.r,
+                                rng,
+                            };
+                            ctx.protocol.worker_step(mem, round, &incoming, &mut env)
+                        },
+                    );
+                    Message::Aligned { node, round, panel: ctx.codec.encode(&reply_panel) }
                 };
-                if send_with_schedule(&mut stream, &ctx, st.id, round, &reply).is_err() {
+                let sent = send_with_schedule(&mut stream, &ctx, node, round, &reply);
+                shared.mark_done(round);
+                if sent.is_err() {
                     return;
                 }
             }
+            // the restarted leader's re-seed broadcast: informational —
+            // this worker's protocol memory was restored from the journal
+            Ok(Message::Reseed { .. }) => {}
             // quarantine/readmission notices are informational: the gate
             // already decides merge membership on the leader side
             Ok(Message::Quarantine { .. }) => {}
@@ -850,6 +1330,43 @@ fn worker_main(mut st: WorkerState, ctx: NetCtx) {
             Ok(_) | Err(_) => return,
         }
     }
+}
+
+/// Journal one checkpoint from the TCP leader. Quiescence first: wait
+/// until every worker that computed this round (`waiters`) has finished
+/// mutating its state — BEFORE taking the transcript lock, which a
+/// still-sending worker needs to meter its reply — then lock and snapshot
+/// everything in one consistent cut.
+#[allow(clippy::too_many_arguments)]
+fn tcp_checkpoint(
+    journal: &mut Journal,
+    round: usize,
+    leader: &dyn LeaderState,
+    shareds: &[Arc<WorkerShared>],
+    waiters: &[bool],
+    until: Instant,
+    gate: &RobustGate,
+    stats: &CommStats,
+    transcript: &Mutex<Transcript>,
+    round0: &Round0,
+) -> Result<(), JournalError> {
+    for (sh, &wait) in shareds.iter().zip(waiters) {
+        if wait {
+            sh.wait_done(round, until);
+        }
+    }
+    let events = transcript.lock().expect("transcript lock");
+    let guards: Vec<_> =
+        shareds.iter().map(|sh| sh.state.lock().expect("worker state lock")).collect();
+    journal.append(&checkpoint_record(
+        round,
+        leader,
+        guards.iter().map(|g| &**g),
+        gate,
+        stats,
+        &events,
+        round0,
+    ))
 }
 
 /// Drain up to `expected` accepted frames from the reader channel, with a
@@ -898,28 +1415,102 @@ pub fn run_cluster_tcp(
     config: &ClusterConfig,
     fc: &FaultRunConfig,
 ) -> anyhow::Result<FaultyClusterResult> {
+    run_tcp_engine(workers, solver, config, fc, None, None)
+}
+
+/// [`run_cluster_tcp`] with durable round checkpoints — the loopback
+/// analogue of [`run_cluster_journaled`]. The leader checkpoints after
+/// each settled round (waiting for worker quiescence through the shared
+/// state, never through extra wire traffic), so `lcrash=R` drops every
+/// connection mid-protocol and [`run_cluster_tcp_resume`] finishes the
+/// run bit-identically.
+pub fn run_cluster_tcp_journaled(
+    workers: Vec<WorkerData>,
+    solver: Arc<dyn LocalSolver>,
+    config: &ClusterConfig,
+    fc: &FaultRunConfig,
+    path: &Path,
+) -> anyhow::Result<FaultyClusterResult> {
+    let m = workers.len();
+    let mut journal = Journal::create(path, &run_header(m, config, fc))?;
+    run_tcp_engine(workers, solver, config, fc, Some(&mut journal), None)
+}
+
+/// Restart a crashed TCP leader from its journal: a fresh socket binds,
+/// rejoining workers reconnect with capped exponential backoff, the
+/// leader re-seeds them from the last broadcast (`Reseed`, metered as
+/// control traffic), and the protocol continues at the journaled round
+/// plus one — bit-identical to never having crashed.
+pub fn run_cluster_tcp_resume(
+    workers: Vec<WorkerData>,
+    solver: Arc<dyn LocalSolver>,
+    config: &ClusterConfig,
+    fc: &FaultRunConfig,
+    path: &Path,
+) -> anyhow::Result<FaultyClusterResult> {
+    let m = workers.len();
+    let loaded = load_journal(path)?;
+    validate_header(&loaded.header, m, config, fc)?;
+    let last = loaded.records.last().ok_or(JournalError::NoCheckpoint)?;
+    let protocol = config.protocol.build(config.refine_rounds);
+    let lctx = LeaderCtx {
+        m,
+        aggregation: config.robust.mode.rule_or(config.aggregation),
+        codec: config.codec,
+    };
+    let rs = decode_checkpoint(last, m, protocol.as_ref(), &lctx, &config.robust)?;
+    let mut journal = Journal::reopen(path, loaded.valid_len)?;
+    run_tcp_engine(workers, solver, config, fc, Some(&mut journal), Some(rs))
+}
+
+fn run_tcp_engine(
+    workers: Vec<WorkerData>,
+    solver: Arc<dyn LocalSolver>,
+    config: &ClusterConfig,
+    fc: &FaultRunConfig,
+    mut journal: Option<&mut Journal>,
+    resume: Option<ResumeState>,
+) -> anyhow::Result<FaultyClusterResult> {
     assert!(!workers.is_empty());
     let m = workers.len();
     let r = config.r;
     let codec = config.codec;
     let plan = fc.plan.clone();
     let protocol = config.protocol.build(config.refine_rounds);
-    let stats = Arc::new(CommStats::new());
-    let transcript = Arc::new(Mutex::new(Transcript::default()));
+    let lctx = LeaderCtx { m, aggregation: config.robust.mode.rule_or(config.aggregation), codec };
+
+    let mut states = make_states(workers, config.seed);
+    let (stats, transcript, restored) = match resume {
+        None => (Arc::new(CommStats::new()), Arc::new(Mutex::new(Transcript::default())), None),
+        Some(rs) => {
+            let ResumeState { start_round, leader, workers, gate, stats, transcript, round0 } = rs;
+            for (st, (rng, mem, history)) in states.iter_mut().zip(workers) {
+                st.rng = rng;
+                st.mem = mem;
+                st.byz_history = history;
+            }
+            (
+                Arc::new(stats),
+                Arc::new(Mutex::new(transcript)),
+                Some((start_round, leader, gate, round0)),
+            )
+        }
+    };
+    let start_round = restored.as_ref().map_or(0, |(sr, ..)| *sr);
 
     let listener = TcpListener::bind("127.0.0.1:0")
         .map_err(|e| anyhow::anyhow!("loopback bind failed: {e}"))?;
     let addr = listener.local_addr()?;
     listener.set_nonblocking(true)?;
 
-    let states = make_states(workers, config.seed);
+    let shareds: Vec<Arc<WorkerShared>> = states.into_iter().map(WorkerShared::new).collect();
     // real-time failsafe per collection: the plan's virtual horizon plus
     // a generous compute margin (correctness never depends on it)
     let deadline = Duration::from_millis(plan.horizon_ms().ceil() as u64 + 30_000);
 
     let (estimate, round0) = std::thread::scope(|s| -> anyhow::Result<(Mat, Round0)> {
-        for st in states {
-            if plan.crashed_at_start(st.id) {
+        for (i, sh) in shareds.iter().enumerate() {
+            if plan.crashed_at_start(i) {
                 continue;
             }
             let ctx = NetCtx {
@@ -931,8 +1522,11 @@ pub fn run_cluster_tcp(
                 codec,
                 r,
                 protocol: Arc::clone(&protocol),
+                node: i,
+                start_round,
             };
-            s.spawn(move || worker_main(st, ctx));
+            let sh = Arc::clone(sh);
+            s.spawn(move || worker_main(sh, ctx));
         }
 
         // accept one connection per live worker, route frames by node
@@ -984,47 +1578,103 @@ pub fn run_cluster_tcp(
         }
         drop(tx);
 
-        // --- round 0: collect every physically-expected upload frame -----
-        let expected: usize = (0..m)
-            .filter(|&i| plan.active(i, 0))
-            .map(|i| plan.link_schedule(i, LinkDir::Up, 0).delivered.len())
-            .sum();
-        let mut got: Vec<Option<Mat>> = (0..m).map(|_| None).collect();
-        collect_expected(&rx, expected, deadline, &mut got, |node, msg| match msg {
-            Message::LocalEstimate { panel, .. } => Some((node, panel.decode())),
-            _ => None,
-        });
-        let mut deliveries: Vec<Delivery> = Vec::new();
-        for (i, slot) in got.iter_mut().enumerate() {
-            if !plan.active(i, 0) {
-                continue;
+        let (mut leader, mut gate, round0) = match restored {
+            None => {
+                // --- round 0: collect every physically-expected frame ----
+                let expected: usize = (0..m)
+                    .filter(|&i| plan.active(i, 0))
+                    .map(|i| plan.link_schedule(i, LinkDir::Up, 0).delivered.len())
+                    .sum();
+                let mut got: Vec<Option<Mat>> = (0..m).map(|_| None).collect();
+                collect_expected(&rx, expected, deadline, &mut got, |node, msg| match msg {
+                    Message::LocalEstimate { panel, .. } => Some((node, panel.decode())),
+                    _ => None,
+                });
+                let mut deliveries: Vec<Delivery> = Vec::new();
+                for (i, slot) in got.iter_mut().enumerate() {
+                    if !plan.active(i, 0) {
+                        continue;
+                    }
+                    let sched = plan.link_schedule(i, LinkDir::Up, 0);
+                    let (Some(e), Some(panel)) = (sched.delivered.first(), slot.take()) else {
+                        continue;
+                    };
+                    let Some(panel) = finite_or_reject(panel, &stats, 0) else { continue };
+                    deliveries.push(Delivery { node: i, arrival_ms: e.arrival_ms, panel });
+                }
+                stats.bump_round();
+                let split = split_quorum(deliveries, fc.quorum, fc.grace_ms, fc.straggler_ms);
+                let mut round0 = settle_round0(split, m, &stats);
+                let mut gate = RobustGate::new(config.robust.clone(), m);
+                for ch in gate.screen_round0(&mut round0) {
+                    let msg = Message::Quarantine { node: ch.node, round: 0, readmit: ch.readmit };
+                    stats.record_ctrl(msg.wire_bytes());
+                    transcript.lock().expect("transcript lock").events.push(gate_event(0, &ch));
+                    if let Some(w) = writers[ch.node].as_mut() {
+                        let _ = write_frame(w, &msg);
+                    }
+                }
+                let leader = protocol.init_leader(&round0, &lctx);
+                (leader, gate, round0)
             }
-            let sched = plan.link_schedule(i, LinkDir::Up, 0);
-            let (Some(e), Some(panel)) = (sched.delivered.first(), slot.take()) else {
-                continue;
-            };
-            let Some(panel) = finite_or_reject(panel, &stats, 0) else { continue };
-            deliveries.push(Delivery { node: i, arrival_ms: e.arrival_ms, panel });
-        }
-        stats.bump_round();
-        let split = split_quorum(deliveries, fc.quorum, fc.grace_ms, fc.straggler_ms);
-        let mut round0 = settle_round0(split, m, &stats);
-        let mut gate = RobustGate::new(config.robust.clone(), m);
-        for ch in gate.screen_round0(&mut round0) {
-            let msg = Message::Quarantine { node: ch.node, round: 0, readmit: ch.readmit };
-            stats.record_ctrl(msg.wire_bytes());
-            transcript.lock().expect("transcript lock").events.push(gate_event(0, &ch));
-            if let Some(w) = writers[ch.node].as_mut() {
-                let _ = write_frame(w, &msg);
+            Some((sr, leader, gate, round0)) => {
+                // recovery control plane — accounting identical to the
+                // in-process engine, plus the physical re-seed frames to
+                // the reconnected workers
+                stats.record_ctrl(HEADER_BYTES);
+                transcript
+                    .lock()
+                    .expect("transcript lock")
+                    .events
+                    .push(recovery_event(sr, 0, FaultAction::Resumed));
+                let next = sr + 1;
+                if next <= protocol.rounds() {
+                    for i in 0..m {
+                        if !plan.active(i, next) {
+                            continue;
+                        }
+                        let msg = Message::Reseed {
+                            node: i,
+                            round: sr,
+                            panel: codec.encode(leader.down(next, i)),
+                        };
+                        debug_assert!(msg.is_control());
+                        stats.record_ctrl(msg.wire_bytes());
+                        transcript
+                            .lock()
+                            .expect("transcript lock")
+                            .events
+                            .push(recovery_event(sr, i, FaultAction::Reconnected));
+                        if let Some(w) = writers[i].as_mut() {
+                            let _ = write_frame(w, &msg);
+                        }
+                    }
+                }
+                (leader, gate, round0)
             }
-        }
+        };
 
         // --- protocol rounds over real sockets ---------------------------
-        let lctx =
-            LeaderCtx { m, aggregation: config.robust.mode.rule_or(config.aggregation), codec };
-        let mut leader = protocol.init_leader(&round0, &lctx);
-        let mut last_round = 0usize;
-        for round in 1..=protocol.rounds() {
+        if start_round == 0 {
+            if let Some(j) = journal.as_deref_mut() {
+                let waiters: Vec<bool> = (0..m).map(|i| plan.active(i, 0)).collect();
+                tcp_checkpoint(
+                    j,
+                    0,
+                    &*leader,
+                    &shareds,
+                    &waiters,
+                    Instant::now() + deadline,
+                    &gate,
+                    &stats,
+                    &transcript,
+                    &round0,
+                )?;
+            }
+        }
+        let mut last_round = start_round;
+        let mut crashed = false;
+        for round in (start_round + 1)..=protocol.rounds() {
             // broadcast protocols reuse one encoded frame; per-node
             // protocols encode each node's panel — the receiving worker
             // decodes either way, so both engines feed worker_step the
@@ -1097,24 +1747,68 @@ pub fn run_cluster_tcp(
             }
             leader.merge(round, contribs);
             last_round = round;
-            if leader.converged() {
+            // convergence wins over a scheduled crash at the same round
+            // (see the in-process engine)
+            let done = leader.converged();
+            if let Some(j) = journal.as_deref_mut() {
+                let waiters: Vec<bool> = down_ok.iter().map(|d| d.is_some()).collect();
+                tcp_checkpoint(
+                    j,
+                    round,
+                    &*leader,
+                    &shareds,
+                    &waiters,
+                    Instant::now() + deadline,
+                    &gate,
+                    &stats,
+                    &transcript,
+                    &round0,
+                )?;
+            }
+            if !done && plan.lcrash == Some(round) {
+                // the leader process dies here: no Done frames — dropping
+                // the write halves below surfaces as an EOF `FrameError`
+                // on every worker, exactly like a real dead leader
+                stats.record_ctrl(HEADER_BYTES);
+                transcript
+                    .lock()
+                    .expect("transcript lock")
+                    .events
+                    .push(recovery_event(round, 0, FaultAction::LeaderCrashed));
+                crashed = true;
+                break;
+            }
+            if done {
                 break;
             }
         }
         let estimate = leader.into_estimate();
 
         // --- shutdown ----------------------------------------------------
-        for i in 0..m {
-            if !plan.active(i, last_round) {
-                continue;
-            }
-            let msg = Message::Done;
-            stats.record_ctrl(msg.wire_bytes());
-            if let Some(w) = writers[i].as_mut() {
-                let _ = write_frame(w, &msg);
+        if !crashed {
+            for i in 0..m {
+                if !plan.active(i, last_round) {
+                    continue;
+                }
+                let msg = Message::Done;
+                stats.record_ctrl(msg.wire_bytes());
+                if let Some(w) = writers[i].as_mut() {
+                    let _ = write_frame(w, &msg);
+                }
             }
         }
-        // dropping the write halves hangs up every remaining worker
+        // a crashed leader's sockets die hard: dropping the write halves
+        // alone leaves the reader-pump clones holding the connections
+        // open (no FIN until their read timeout), so shut each socket
+        // down at the TCP level — workers and pumps see EOF immediately
+        if crashed {
+            for w in writers.iter().flatten() {
+                let _ = w.shutdown(std::net::Shutdown::Both);
+            }
+        }
+        // on a clean run, dropping the write halves after `Done` hangs up
+        // every remaining worker; each closing worker socket then ends
+        // its reader pump
         drop(writers);
         Ok((estimate, round0))
     })?;

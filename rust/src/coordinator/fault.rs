@@ -178,6 +178,11 @@ pub struct FaultPlan {
     pub rto_ms: f64,
     /// Byzantine data-plane corruption (`byz=N:STRATEGY` clause).
     pub byz: Option<ByzSpec>,
+    /// Deterministic *leader* crash after completing refine round R
+    /// (`lcrash=R` clause). Orthogonal to the link hashes — adding or
+    /// removing it never changes any wire schedule, so a crashed-and-
+    /// resumed run can be compared against the same plan without it.
+    pub lcrash: Option<usize>,
 }
 
 impl Default for FaultPlan {
@@ -195,6 +200,7 @@ impl Default for FaultPlan {
             max_retries: DEFAULT_RETRIES,
             rto_ms: DEFAULT_RTO_MS,
             byz: None,
+            lcrash: None,
         }
     }
 }
@@ -226,6 +232,7 @@ impl FaultPlan {
             && self.joins.is_empty()
             && self.partitions.is_empty()
             && self.byz.is_none()
+            && self.lcrash.is_none()
     }
 
     /// Rebind the hash seed (builder style).
@@ -287,6 +294,7 @@ impl FaultPlan {
     /// part=A-B@R:K    nodes A..=B unreachable for K rounds from round R
     /// retries=K       retransmission attempts after the first send
     /// rto=MS          retransmission timeout (ms)
+    /// lcrash=R        the *leader* crashes after completing refine round R
     /// byz=N:STRAT     nodes 1..=N corrupt every uplink with STRAT, one of
     ///                 signflip|noise:S|rotate|stale:K|collude|nan
     /// ```
@@ -368,10 +376,20 @@ impl FaultPlan {
                         strategy: AttackStrategy::parse(strat)?,
                     });
                 }
+                "lcrash" => {
+                    let r = parse_node(key, val)?;
+                    if r == 0 {
+                        return Err(format!(
+                            "lcrash='{val}': the leader can only crash after a \
+                             refine round (R >= 1)"
+                        ));
+                    }
+                    plan.lcrash = Some(r);
+                }
                 other => {
                     return Err(format!(
                         "unknown fault clause '{other}' \
-                         (drop|delay|dup|slow|crash|join|part|retries|rto|byz)"
+                         (drop|delay|dup|slow|crash|join|part|retries|rto|byz|lcrash)"
                     ))
                 }
             }
@@ -652,6 +670,29 @@ pub enum FaultAction {
     Quarantined,
     /// The robust leader readmitted this node.
     Readmitted,
+    /// The leader crashed after completing this round (`lcrash=R`);
+    /// recovery events sit after the gate events so transcripts stay
+    /// canonically ordered across engines.
+    LeaderCrashed,
+    /// A leader restarted from the journal resumed the run at round+1.
+    Resumed,
+    /// A worker re-established its session with the restarted leader
+    /// (and was re-seeded from the last broadcast).
+    Reconnected,
+}
+
+impl FaultAction {
+    /// Recovery bookkeeping (crash/resume/reconnect)? These are
+    /// control-plane events: ctrl-metered, excluded from wire counts,
+    /// and — unlike the rest of the transcript — legitimately present
+    /// only in the interrupted run, so bit-identity comparisons filter
+    /// them out (see `Transcript::payload`).
+    pub fn is_recovery(&self) -> bool {
+        matches!(
+            self,
+            FaultAction::LeaderCrashed | FaultAction::Resumed | FaultAction::Reconnected
+        )
+    }
 }
 
 /// One transcript line. Ordering is the canonical transcript order.
@@ -741,6 +782,22 @@ impl Transcript {
         self
     }
 
+    /// The transcript with recovery bookkeeping stripped: what the fault
+    /// plan did to the *payload* protocol. A crashed-and-resumed run has
+    /// extra `LeaderCrashed`/`Resumed`/`Reconnected` lines by
+    /// construction; its payload transcript is `==` the uninterrupted
+    /// run's (the bit-identity contract of DESIGN.md S17).
+    pub fn payload(&self) -> Transcript {
+        Transcript {
+            events: self
+                .events
+                .iter()
+                .copied()
+                .filter(|e| !e.action.is_recovery())
+                .collect(),
+        }
+    }
+
     /// Recompute the per-direction wire totals this transcript implies.
     pub fn counts(&self, dir: LinkDir) -> WireCounts {
         let mut c = WireCounts::default();
@@ -766,9 +823,14 @@ impl Transcript {
                     }
                 }
                 FaultAction::TimedOut => c.timeouts += 1,
-                // reputation-gate control events are metered as control
-                // traffic, which is round-less and outside wire counts
-                FaultAction::Quarantined | FaultAction::Readmitted => {}
+                // reputation-gate and crash-recovery control events are
+                // metered as control traffic, which is round-less and
+                // outside wire counts
+                FaultAction::Quarantined
+                | FaultAction::Readmitted
+                | FaultAction::LeaderCrashed
+                | FaultAction::Resumed
+                | FaultAction::Reconnected => {}
             }
         }
         c.retries = attempts.values().map(|a| a.saturating_sub(1)).sum();
@@ -782,7 +844,8 @@ fn ms_to_us(ms: f64) -> u64 {
 
 /// splitmix64 — the standard 64-bit finalizer; fast, stateless, and good
 /// enough to decorrelate the (seed, node, dir, round, attempt) lanes.
-fn splitmix64(mut x: u64) -> u64 {
+/// Also the journal's record checksum primitive (coordinator/journal.rs).
+pub(crate) fn splitmix64(mut x: u64) -> u64 {
     x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
     x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
     x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);

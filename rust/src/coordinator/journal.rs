@@ -1,0 +1,646 @@
+//! Append-only, self-validating run journal (DESIGN.md S17).
+//!
+//! The crash-recovery engines checkpoint the full leader-side protocol
+//! state once per completed round. A journal file is:
+//!
+//! ```text
+//! [magic: u64 LE][version: u32 LE][reserved: u32 LE]      file header
+//! [len: u32 LE][checksum: u64 LE][payload: len bytes]     record 0: run header
+//! [len: u32 LE][checksum: u64 LE][payload: len bytes]     record 1: checkpoint
+//! ...
+//! ```
+//!
+//! Each payload is compact JSON (`crate::io::Json::dump`). The checksum
+//! folds the payload through the fault plane's splitmix64, seeded with
+//! the payload length, so a torn write — truncated tail, flipped byte,
+//! partial record — is detected on load and *cleanly dropped*: the run
+//! resumes from the last intact checkpoint instead of refusing to load.
+//! Structural problems that no prefix can survive (wrong magic, wrong
+//! version) are hard, typed errors.
+//!
+//! Bit-exactness contract: every `f64` that crosses the journal travels
+//! as its IEEE-754 bit pattern in fixed-width hex — never decimal text —
+//! so a restored run continues with *exactly* the floats the crashed run
+//! held. The helpers here ([`f64_to_json`], [`mat_to_json`], ...) are the
+//! only sanctioned way to put floats into a journal record.
+
+use std::fmt;
+use std::fmt::Write as _;
+use std::fs;
+use std::io::{Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::io::{parse_json, Json};
+use crate::linalg::Mat;
+
+use super::fault::{splitmix64, FaultAction, FaultEvent, LinkDir};
+use super::netsim::CommSnapshot;
+
+/// File magic: the wire magic's family, lane 2 (`jrnl`).
+const JOURNAL_MAGIC: u64 = 0xd1e1_6e02_6a72_6e6c;
+/// Bumped on any incompatible record-layout change.
+pub const JOURNAL_VERSION: u32 = 1;
+/// Sanity cap on a single record (a checkpoint is panels + transcript;
+/// far below this).
+const MAX_RECORD_BYTES: usize = 1 << 30;
+
+/// Why a journal could not be created, appended, or resumed from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JournalError {
+    /// Underlying filesystem failure.
+    Io(String),
+    /// The file is not a run journal at all.
+    BadMagic,
+    /// The file is a journal from an incompatible build.
+    VersionMismatch { got: u32, want: u32 },
+    /// The journal was written by a run with a different seed.
+    SeedMismatch { got: u64, want: u64 },
+    /// The journal's config fingerprint does not match the resume config.
+    ConfigMismatch { got: String, want: String },
+    /// The journal holds no intact checkpoint to resume from.
+    NoCheckpoint,
+    /// A structurally valid record carried nonsense (missing fields,
+    /// wrong shapes) — distinct from a corrupt tail, which is truncated.
+    Malformed(String),
+}
+
+impl fmt::Display for JournalError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JournalError::Io(e) => write!(f, "journal I/O error: {e}"),
+            JournalError::BadMagic => write!(f, "not a run journal (bad magic)"),
+            JournalError::VersionMismatch { got, want } => {
+                write!(f, "journal version {got}, this build reads version {want}")
+            }
+            JournalError::SeedMismatch { got, want } => {
+                write!(f, "journal was written with seed {got}, resume requested seed {want}")
+            }
+            JournalError::ConfigMismatch { got, want } => {
+                write!(f, "journal config '{got}' does not match resume config '{want}'")
+            }
+            JournalError::NoCheckpoint => write!(f, "journal holds no usable checkpoint"),
+            JournalError::Malformed(m) => write!(f, "malformed journal: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for JournalError {}
+
+fn io_err(e: std::io::Error) -> JournalError {
+    JournalError::Io(e.to_string())
+}
+
+/// Record checksum: splitmix64 folded over the payload in 8-byte LE
+/// words, seeded with the length so a record cannot validate at the
+/// wrong size.
+fn record_checksum(payload: &[u8]) -> u64 {
+    let mut h = splitmix64(JOURNAL_MAGIC ^ payload.len() as u64);
+    for chunk in payload.chunks(8) {
+        let mut w = [0u8; 8];
+        w[..chunk.len()].copy_from_slice(chunk);
+        h = splitmix64(h ^ u64::from_le_bytes(w));
+    }
+    h
+}
+
+/// Checksum of a matrix's exact bit patterns (shape-sensitive). The CLI
+/// prints this for the final estimate so the CI kill-and-resume smoke can
+/// diff a resumed run against its uninterrupted twin with a string
+/// compare — no float parsing, no tolerance.
+pub fn mat_checksum(m: &Mat) -> u64 {
+    let mut payload = Vec::with_capacity(16 + m.as_slice().len() * 8);
+    payload.extend_from_slice(&(m.rows() as u64).to_le_bytes());
+    payload.extend_from_slice(&(m.cols() as u64).to_le_bytes());
+    for &x in m.as_slice() {
+        payload.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+    record_checksum(&payload)
+}
+
+/// An open journal, positioned for appending.
+pub struct Journal {
+    file: fs::File,
+}
+
+impl Journal {
+    /// Create (truncating any previous file) and write the file header
+    /// plus the run-header record.
+    pub fn create(path: &Path, run_header: &Json) -> Result<Journal, JournalError> {
+        let mut file = fs::File::create(path).map_err(io_err)?;
+        file.write_all(&JOURNAL_MAGIC.to_le_bytes()).map_err(io_err)?;
+        file.write_all(&JOURNAL_VERSION.to_le_bytes()).map_err(io_err)?;
+        file.write_all(&0u32.to_le_bytes()).map_err(io_err)?;
+        let mut j = Journal { file };
+        j.append(run_header)?;
+        Ok(j)
+    }
+
+    /// Reopen an existing journal for appending after its validated
+    /// prefix (`valid_len` from [`load_journal`]): any corrupt tail is
+    /// physically dropped before new checkpoints land after it.
+    pub fn reopen(path: &Path, valid_len: u64) -> Result<Journal, JournalError> {
+        let mut file =
+            fs::OpenOptions::new().read(true).write(true).open(path).map_err(io_err)?;
+        file.set_len(valid_len).map_err(io_err)?;
+        file.seek(SeekFrom::End(0)).map_err(io_err)?;
+        Ok(Journal { file })
+    }
+
+    /// Append one record: length prefix, checksum, JSON payload, fsync.
+    /// The sync is the durability point — a checkpoint the caller saw
+    /// succeed survives a crash immediately after.
+    pub fn append(&mut self, record: &Json) -> Result<(), JournalError> {
+        let payload = record.dump().into_bytes();
+        if payload.len() > MAX_RECORD_BYTES {
+            return Err(JournalError::Malformed(format!(
+                "record of {} bytes exceeds the {} byte cap",
+                payload.len(),
+                MAX_RECORD_BYTES
+            )));
+        }
+        self.file.write_all(&(payload.len() as u32).to_le_bytes()).map_err(io_err)?;
+        self.file.write_all(&record_checksum(&payload).to_le_bytes()).map_err(io_err)?;
+        self.file.write_all(&payload).map_err(io_err)?;
+        self.file.sync_data().map_err(io_err)?;
+        Ok(())
+    }
+}
+
+/// The validated contents of a journal file.
+pub struct LoadedJournal {
+    /// Record 0: seed, config fingerprint, protocol name.
+    pub header: Json,
+    /// Checkpoint records 1.. in append order.
+    pub records: Vec<Json>,
+    /// True when a corrupt or partial tail was dropped during load.
+    pub truncated: bool,
+    /// Length of the validated prefix; [`Journal::reopen`] appends there.
+    pub valid_len: u64,
+}
+
+/// Read and validate a journal. Corrupt tails truncate (the run resumes
+/// from the last intact checkpoint); structural mismatches are errors.
+pub fn load_journal(path: &Path) -> Result<LoadedJournal, JournalError> {
+    let bytes = fs::read(path).map_err(io_err)?;
+    if bytes.len() < 8 {
+        return Err(JournalError::BadMagic);
+    }
+    let magic = u64::from_le_bytes(bytes[0..8].try_into().expect("8 bytes"));
+    if magic != JOURNAL_MAGIC {
+        return Err(JournalError::BadMagic);
+    }
+    if bytes.len() < 16 {
+        return Err(JournalError::Malformed("file header cut short".to_string()));
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
+    if version != JOURNAL_VERSION {
+        return Err(JournalError::VersionMismatch { got: version, want: JOURNAL_VERSION });
+    }
+    let mut records = Vec::new();
+    let mut off = 16usize;
+    let mut valid_len = off as u64;
+    let mut truncated = false;
+    while off < bytes.len() {
+        if off + 12 > bytes.len() {
+            truncated = true;
+            break;
+        }
+        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().expect("4 bytes")) as usize;
+        let sum = u64::from_le_bytes(bytes[off + 4..off + 12].try_into().expect("8 bytes"));
+        if len > bytes.len() - off - 12 {
+            truncated = true;
+            break;
+        }
+        let payload = &bytes[off + 12..off + 12 + len];
+        if record_checksum(payload) != sum {
+            truncated = true;
+            break;
+        }
+        let parsed = std::str::from_utf8(payload).ok().and_then(|t| parse_json(t).ok());
+        match parsed {
+            Some(v) => records.push(v),
+            None => {
+                // checksum passed but the payload is not JSON we wrote —
+                // treat like any other tail damage
+                truncated = true;
+                break;
+            }
+        }
+        off += 12 + len;
+        valid_len = off as u64;
+    }
+    if records.is_empty() {
+        return Err(JournalError::NoCheckpoint);
+    }
+    let header = records.remove(0);
+    Ok(LoadedJournal { header, records, truncated, valid_len })
+}
+
+// ---------------------------------------------------------------------------
+// JSON codecs: bit-exact floats, matrices, meters, transcript events
+// ---------------------------------------------------------------------------
+
+/// Build a JSON object from labeled values.
+pub(crate) fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Fetch a required field, naming it in the error.
+pub(crate) fn field<'a>(v: &'a Json, key: &str) -> Result<&'a Json, String> {
+    v.get(key).ok_or_else(|| format!("missing field '{key}'"))
+}
+
+/// An `f64` as its fixed-width hex bit pattern (bit-exact, NaN-safe).
+pub(crate) fn f64_to_json(x: f64) -> Json {
+    Json::Str(format!("{:016x}", x.to_bits()))
+}
+
+pub(crate) fn f64_from_json(v: &Json) -> Result<f64, String> {
+    let s = v.as_str().ok_or_else(|| "expected an f64 bit-pattern string".to_string())?;
+    u64::from_str_radix(s, 16)
+        .map(f64::from_bits)
+        .map_err(|e| format!("bad f64 bit pattern '{s}': {e}"))
+}
+
+/// A `u64` as fixed-width hex (JSON numbers are doubles; 2^53 is too low
+/// for seeds and rng cursors).
+pub(crate) fn u64_to_json(x: u64) -> Json {
+    Json::Str(format!("{x:016x}"))
+}
+
+pub(crate) fn u64_from_json(v: &Json) -> Result<u64, String> {
+    let s = v.as_str().ok_or_else(|| "expected a u64 hex string".to_string())?;
+    u64::from_str_radix(s, 16).map_err(|e| format!("bad u64 hex '{s}': {e}"))
+}
+
+pub(crate) fn usize_from_json(v: &Json, what: &str) -> Result<usize, String> {
+    v.as_usize().ok_or_else(|| format!("{what} is not an unsigned integer"))
+}
+
+/// A matrix as `{rows, cols, data}` with `data` the concatenated hex bit
+/// patterns of the row-major buffer.
+pub(crate) fn mat_to_json(m: &Mat) -> Json {
+    let mut data = String::with_capacity(m.as_slice().len() * 16);
+    for &x in m.as_slice() {
+        let _ = write!(data, "{:016x}", x.to_bits());
+    }
+    obj(vec![
+        ("rows", Json::Num(m.rows() as f64)),
+        ("cols", Json::Num(m.cols() as f64)),
+        ("data", Json::Str(data)),
+    ])
+}
+
+pub(crate) fn mat_from_json(v: &Json) -> Result<Mat, String> {
+    let rows = usize_from_json(field(v, "rows")?, "mat rows")?;
+    let cols = usize_from_json(field(v, "cols")?, "mat cols")?;
+    let s = field(v, "data")?
+        .as_str()
+        .ok_or_else(|| "mat data is not a string".to_string())?;
+    if !s.is_ascii() || s.len() != rows * cols * 16 {
+        return Err(format!(
+            "mat data has {} hex chars, expected {} for a {rows}x{cols} matrix",
+            s.len(),
+            rows * cols * 16
+        ));
+    }
+    let mut data = Vec::with_capacity(rows * cols);
+    for k in 0..rows * cols {
+        let bits = u64::from_str_radix(&s[16 * k..16 * (k + 1)], 16)
+            .map_err(|e| format!("bad f64 bit pattern in mat data at {k}: {e}"))?;
+        data.push(f64::from_bits(bits));
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+pub(crate) fn opt_mat_to_json(m: Option<&Mat>) -> Json {
+    match m {
+        Some(m) => mat_to_json(m),
+        None => Json::Null,
+    }
+}
+
+pub(crate) fn opt_mat_from_json(v: &Json) -> Result<Option<Mat>, String> {
+    match v {
+        Json::Null => Ok(None),
+        other => mat_from_json(other).map(Some),
+    }
+}
+
+/// A [`CommSnapshot`] with every counter spelled out (all are well below
+/// 2^53, so plain JSON numbers round-trip exactly).
+pub(crate) fn comm_to_json(s: &CommSnapshot) -> Json {
+    obj(vec![
+        ("bytes_up", Json::Num(s.bytes_up as f64)),
+        ("bytes_down", Json::Num(s.bytes_down as f64)),
+        ("msgs_up", Json::Num(s.msgs_up as f64)),
+        ("msgs_down", Json::Num(s.msgs_down as f64)),
+        ("msgs_ctrl", Json::Num(s.msgs_ctrl as f64)),
+        ("bytes_ctrl", Json::Num(s.bytes_ctrl as f64)),
+        ("bytes_peer", Json::Num(s.bytes_peer as f64)),
+        ("msgs_peer", Json::Num(s.msgs_peer as f64)),
+        ("peer_serial_bytes", Json::Num(s.peer_serial_bytes as f64)),
+        ("rounds", Json::Num(s.rounds as f64)),
+        ("msgs_retry", Json::Num(s.msgs_retry as f64)),
+        ("msgs_dropped", Json::Num(s.msgs_dropped as f64)),
+        ("msgs_dup", Json::Num(s.msgs_dup as f64)),
+        ("timeouts", Json::Num(s.timeouts as f64)),
+        ("late_merged", Json::Num(s.late_merged as f64)),
+        ("panels_rejected", Json::Num(s.panels_rejected as f64)),
+        ("stall_us", Json::Num(s.stall_us as f64)),
+    ])
+}
+
+pub(crate) fn comm_from_json(v: &Json) -> Result<CommSnapshot, String> {
+    let g = |key: &str| -> Result<usize, String> { usize_from_json(field(v, key)?, key) };
+    Ok(CommSnapshot {
+        bytes_up: g("bytes_up")?,
+        bytes_down: g("bytes_down")?,
+        msgs_up: g("msgs_up")?,
+        msgs_down: g("msgs_down")?,
+        msgs_ctrl: g("msgs_ctrl")?,
+        bytes_ctrl: g("bytes_ctrl")?,
+        bytes_peer: g("bytes_peer")?,
+        msgs_peer: g("msgs_peer")?,
+        peer_serial_bytes: g("peer_serial_bytes")?,
+        rounds: g("rounds")?,
+        msgs_retry: g("msgs_retry")?,
+        msgs_dropped: g("msgs_dropped")?,
+        msgs_dup: g("msgs_dup")?,
+        timeouts: g("timeouts")?,
+        late_merged: g("late_merged")?,
+        panels_rejected: g("panels_rejected")?,
+        stall_us: g("stall_us")?,
+    })
+}
+
+/// One transcript event; `arrival_us` rides as hex (virtual microseconds
+/// are u64).
+pub(crate) fn event_to_json(e: &FaultEvent) -> Json {
+    let (action, arrival) = match e.action {
+        FaultAction::Dropped => ("dropped", None),
+        FaultAction::Delivered { arrival_us } => ("delivered", Some(arrival_us)),
+        FaultAction::TimedOut => ("timeout", None),
+        FaultAction::Quarantined => ("quarantined", None),
+        FaultAction::Readmitted => ("readmitted", None),
+        FaultAction::LeaderCrashed => ("lcrash", None),
+        FaultAction::Resumed => ("resumed", None),
+        FaultAction::Reconnected => ("reconnected", None),
+    };
+    let mut pairs = vec![
+        ("round", Json::Num(e.round as f64)),
+        ("dir", Json::Str(if e.dir == LinkDir::Up { "up" } else { "down" }.to_string())),
+        ("node", Json::Num(e.node as f64)),
+        ("attempt", Json::Num(e.attempt as f64)),
+        ("copy", Json::Num(e.copy as f64)),
+        ("bytes", Json::Num(e.bytes as f64)),
+        ("action", Json::Str(action.to_string())),
+    ];
+    if let Some(us) = arrival {
+        pairs.push(("arrival_us", u64_to_json(us)));
+    }
+    obj(pairs)
+}
+
+pub(crate) fn event_from_json(v: &Json) -> Result<FaultEvent, String> {
+    let action = match field(v, "action")?.as_str() {
+        Some("dropped") => FaultAction::Dropped,
+        Some("delivered") => {
+            FaultAction::Delivered { arrival_us: u64_from_json(field(v, "arrival_us")?)? }
+        }
+        Some("timeout") => FaultAction::TimedOut,
+        Some("quarantined") => FaultAction::Quarantined,
+        Some("readmitted") => FaultAction::Readmitted,
+        Some("lcrash") => FaultAction::LeaderCrashed,
+        Some("resumed") => FaultAction::Resumed,
+        Some("reconnected") => FaultAction::Reconnected,
+        other => return Err(format!("unknown transcript action {other:?}")),
+    };
+    let dir = match field(v, "dir")?.as_str() {
+        Some("up") => LinkDir::Up,
+        Some("down") => LinkDir::Down,
+        other => return Err(format!("unknown link dir {other:?}")),
+    };
+    Ok(FaultEvent {
+        round: usize_from_json(field(v, "round")?, "event round")?,
+        dir,
+        node: usize_from_json(field(v, "node")?, "event node")?,
+        attempt: usize_from_json(field(v, "attempt")?, "event attempt")?,
+        copy: usize_from_json(field(v, "copy")?, "event copy")?,
+        bytes: usize_from_json(field(v, "bytes")?, "event bytes")?,
+        action,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("deigen_journal_test");
+        let _ = fs::create_dir_all(&dir);
+        dir.join(format!("{}_{name}.journal", std::process::id()))
+    }
+
+    fn header() -> Json {
+        obj(vec![("seed", u64_to_json(42)), ("fingerprint", Json::Str("test".into()))])
+    }
+
+    fn rec(i: usize) -> Json {
+        obj(vec![("round", Json::Num(i as f64)), ("x", f64_to_json(1.0 / i as f64))])
+    }
+
+    #[test]
+    fn append_then_load_round_trips() {
+        let path = tmp("round_trip");
+        let mut j = Journal::create(&path, &header()).unwrap();
+        for i in 1..=3 {
+            j.append(&rec(i)).unwrap();
+        }
+        drop(j);
+        let loaded = load_journal(&path).unwrap();
+        assert_eq!(loaded.header, header());
+        assert_eq!(loaded.records, vec![rec(1), rec(2), rec(3)]);
+        assert!(!loaded.truncated);
+        assert_eq!(loaded.valid_len, fs::metadata(&path).unwrap().len());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_tail_is_dropped_cleanly() {
+        let path = tmp("corrupt");
+        let mut j = Journal::create(&path, &header()).unwrap();
+        for i in 1..=3 {
+            j.append(&rec(i)).unwrap();
+        }
+        drop(j);
+        let mut bytes = fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 2] ^= 0x01;
+        fs::write(&path, &bytes).unwrap();
+        let loaded = load_journal(&path).unwrap();
+        assert!(loaded.truncated);
+        assert_eq!(loaded.records, vec![rec(1), rec(2)]);
+        assert!(loaded.valid_len < n as u64);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn partial_tail_is_dropped_cleanly() {
+        let path = tmp("partial");
+        let mut j = Journal::create(&path, &header()).unwrap();
+        for i in 1..=2 {
+            j.append(&rec(i)).unwrap();
+        }
+        drop(j);
+        let bytes = fs::read(&path).unwrap();
+        // a torn write: half the final record never hit the disk
+        fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+        let loaded = load_journal(&path).unwrap();
+        assert!(loaded.truncated);
+        assert_eq!(loaded.records, vec![rec(1)]);
+        // a cut inside the length prefix of the next record also truncates
+        fs::write(&path, &bytes[..loaded.valid_len as usize + 3]).unwrap();
+        let loaded = load_journal(&path).unwrap();
+        assert!(loaded.truncated);
+        assert_eq!(loaded.records, vec![rec(1)]);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn reopen_drops_the_bad_tail_and_appends() {
+        let path = tmp("reopen");
+        let mut j = Journal::create(&path, &header()).unwrap();
+        j.append(&rec(1)).unwrap();
+        j.append(&rec(2)).unwrap();
+        drop(j);
+        let mut bytes = fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xff;
+        fs::write(&path, &bytes).unwrap();
+        let loaded = load_journal(&path).unwrap();
+        assert!(loaded.truncated);
+        assert_eq!(loaded.records, vec![rec(1)]);
+        let mut j = Journal::reopen(&path, loaded.valid_len).unwrap();
+        j.append(&rec(3)).unwrap();
+        drop(j);
+        let loaded = load_journal(&path).unwrap();
+        assert!(!loaded.truncated);
+        assert_eq!(loaded.records, vec![rec(1), rec(3)]);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn structural_mismatches_are_typed_errors() {
+        let path = tmp("structural");
+        let mut j = Journal::create(&path, &header()).unwrap();
+        j.append(&rec(1)).unwrap();
+        drop(j);
+        let good = fs::read(&path).unwrap();
+        let mut bad = good.clone();
+        bad[0] ^= 0x01;
+        fs::write(&path, &bad).unwrap();
+        assert_eq!(load_journal(&path).unwrap_err(), JournalError::BadMagic);
+        let mut bad = good.clone();
+        bad[8] = 99;
+        fs::write(&path, &bad).unwrap();
+        assert_eq!(
+            load_journal(&path).unwrap_err(),
+            JournalError::VersionMismatch { got: 99, want: JOURNAL_VERSION }
+        );
+        // magic alone, no header record at all
+        fs::write(&path, &good[..16]).unwrap();
+        assert_eq!(load_journal(&path).unwrap_err(), JournalError::NoCheckpoint);
+        fs::write(&path, &good[..6]).unwrap();
+        assert_eq!(load_journal(&path).unwrap_err(), JournalError::BadMagic);
+        assert!(matches!(
+            load_journal(Path::new("/nonexistent/deigen.journal")).unwrap_err(),
+            JournalError::Io(_)
+        ));
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn float_codecs_are_bit_exact() {
+        for x in [
+            0.0,
+            -0.0,
+            1.0 / 3.0,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            f64::MIN_POSITIVE,
+            1e308,
+        ] {
+            let text = f64_to_json(x).dump();
+            let back = f64_from_json(&parse_json(&text).unwrap()).unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x}");
+        }
+        for x in [0u64, 1, 0xdead_beef, u64::MAX] {
+            let back = u64_from_json(&parse_json(&u64_to_json(x).dump()).unwrap()).unwrap();
+            assert_eq!(back, x);
+        }
+    }
+
+    #[test]
+    fn mat_codec_round_trips_exactly() {
+        let m = Mat::from_fn(3, 2, |i, j| (1.0 + i as f64) / (3.0 + j as f64));
+        let back = mat_from_json(&parse_json(&mat_to_json(&m).dump()).unwrap()).unwrap();
+        assert_eq!(m, back);
+        assert_eq!(opt_mat_from_json(&Json::Null).unwrap(), None);
+        assert_eq!(opt_mat_from_json(&mat_to_json(&m)).unwrap(), Some(m.clone()));
+        // wrong payload size is a descriptive error, not a panic
+        let mut v = mat_to_json(&m);
+        if let Json::Obj(map) = &mut v {
+            map.insert("rows".to_string(), Json::Num(4.0));
+        }
+        assert!(mat_from_json(&v).unwrap_err().contains("expected"));
+    }
+
+    #[test]
+    fn comm_and_event_codecs_round_trip() {
+        let s = CommSnapshot {
+            bytes_up: 1,
+            bytes_down: 2,
+            msgs_up: 3,
+            msgs_down: 4,
+            msgs_ctrl: 5,
+            bytes_ctrl: 6,
+            bytes_peer: 7,
+            msgs_peer: 8,
+            peer_serial_bytes: 9,
+            rounds: 10,
+            msgs_retry: 11,
+            msgs_dropped: 12,
+            msgs_dup: 13,
+            timeouts: 14,
+            late_merged: 15,
+            panels_rejected: 16,
+            stall_us: 17,
+        };
+        let back = comm_from_json(&parse_json(&comm_to_json(&s).dump()).unwrap()).unwrap();
+        assert_eq!(s, back);
+        for action in [
+            FaultAction::Dropped,
+            FaultAction::Delivered { arrival_us: u64::from(u32::MAX) + 7 },
+            FaultAction::TimedOut,
+            FaultAction::Quarantined,
+            FaultAction::Readmitted,
+            FaultAction::LeaderCrashed,
+            FaultAction::Resumed,
+            FaultAction::Reconnected,
+        ] {
+            let e = FaultEvent {
+                round: 2,
+                dir: LinkDir::Up,
+                node: 3,
+                attempt: 1,
+                copy: 0,
+                bytes: 99,
+                action,
+            };
+            let back = event_from_json(&parse_json(&event_to_json(&e).dump()).unwrap()).unwrap();
+            assert_eq!(e, back);
+        }
+    }
+}

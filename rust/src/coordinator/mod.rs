@@ -27,9 +27,17 @@
 //! quantized power method — every round metered, fault-injected, and
 //! transcripted through the same boundaries.
 
+//! Durable crash-recovery (DESIGN.md S17) closes the loop: [`journal`]
+//! appends one self-validating checkpoint per settled round (leader
+//! protocol state, worker rng cursors and memory, gate, meters,
+//! transcript), so a leader killed mid-run — `lcrash=R` in the fault spec
+//! — restarts from disk and finishes bit-identically on both engines,
+//! with rejoining TCP workers reconnecting under capped backoff.
+
 mod cluster;
 pub mod fault;
 pub mod gossip;
+pub mod journal;
 mod netsim;
 mod protocol;
 pub mod reputation;
@@ -37,7 +45,8 @@ pub mod rounds;
 pub mod transport;
 
 pub use cluster::{
-    run_cluster, run_cluster_faulty, run_cluster_tcp, ClusterConfig, ClusterResult,
+    run_cluster, run_cluster_faulty, run_cluster_journaled, run_cluster_resume, run_cluster_tcp,
+    run_cluster_tcp_journaled, run_cluster_tcp_resume, ClusterConfig, ClusterResult,
     FaultRunConfig, FaultyClusterResult, NodeBehavior, Shard, WorkerData,
 };
 pub use fault::{
@@ -45,10 +54,11 @@ pub use fault::{
     CANNED, CANNED_BYZ,
 };
 pub use gossip::{MixingMatrix, Topology};
+pub use journal::{load_journal, Journal, JournalError, LoadedJournal};
 pub use netsim::{CommSnapshot, CommStats, NetworkModel};
 pub use protocol::{AggregationRule, Message, WireCodec, WirePanel, HEADER_BYTES};
 pub use reputation::{GateChange, RobustGate, RobustMode, RobustPolicy};
 pub use rounds::{
     Contribution, LeaderCtx, LeaderState, ProtocolKind, RoundProtocol, WorkerEnv, WorkerMem,
 };
-pub use transport::{FrameDecoder, FrameError, FrameReader, TransportError};
+pub use transport::{connect_with_backoff, FrameDecoder, FrameError, FrameReader, TransportError};

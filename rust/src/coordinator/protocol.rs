@@ -170,6 +170,14 @@ pub enum Message {
     /// or readmitted (`readmit == true`). Control traffic: header only,
     /// metered round-less like `Done`.
     Quarantine { node: usize, round: usize, readmit: bool },
+    /// Leader -> worker, crash recovery: a leader restarted from its
+    /// journal re-seeds a rejoining worker with the last broadcast (the
+    /// down-link panel of the round the run resumes at). The worker's
+    /// protocol memory is restored from the journal, so this frame is
+    /// informational — but it is real traffic, so it carries the encoded
+    /// panel and is metered as *control* bytes (recovery is bookkeeping,
+    /// not payload; DESIGN.md S17).
+    Reseed { node: usize, round: usize, panel: WirePanel },
     /// Leader -> worker: the protocol is finished.
     Done,
 }
@@ -182,17 +190,25 @@ impl Message {
             Message::LocalEstimate { panel, ritz, .. } => {
                 HEADER_BYTES + panel.wire_bytes() + 8 * ritz.len()
             }
-            Message::Reference { panel, .. } | Message::Aligned { panel, .. } => {
-                HEADER_BYTES + panel.wire_bytes()
-            }
+            Message::Reference { panel, .. }
+            | Message::Aligned { panel, .. }
+            | Message::Reseed { panel, .. } => HEADER_BYTES + panel.wire_bytes(),
             Message::Hello { .. } | Message::Quarantine { .. } | Message::Done => HEADER_BYTES,
         }
     }
 
-    /// Control messages carry no payload and are metered separately from
-    /// the data traffic (they do not contribute to `sim_time_s`).
+    /// Control messages are metered separately from the data traffic
+    /// (they do not contribute to `sim_time_s`). Most carry no payload;
+    /// the crash-recovery `Reseed` carries one but is still bookkeeping,
+    /// so its bytes land in the control meters too.
     pub fn is_control(&self) -> bool {
-        matches!(self, Message::Hello { .. } | Message::Quarantine { .. } | Message::Done)
+        matches!(
+            self,
+            Message::Hello { .. }
+                | Message::Quarantine { .. }
+                | Message::Reseed { .. }
+                | Message::Done
+        )
     }
 }
 
@@ -236,6 +252,10 @@ mod tests {
         assert!(Message::Done.is_control() && !e.is_control());
         assert!(Message::Hello { node: 3 }.is_control());
         assert!(q.is_control());
+        // the re-seed frame is control traffic that still pays for its panel
+        let rs = Message::Reseed { node: 1, round: 2, panel: WireCodec::F64.encode(&panel) };
+        assert_eq!(rs.wire_bytes(), HEADER_BYTES + 8 * 64 * 8);
+        assert!(rs.is_control());
 
         // the quantized payloads carry a 16-byte codec header (range/meta)
         let f16 = Message::Reference { round: 0, panel: WireCodec::F16.encode(&panel) };

@@ -159,6 +159,22 @@ impl RobustGate {
         self.quarantined[node]
     }
 
+    /// Export the gate's mutable state (scores + quarantine flags) for a
+    /// crash-recovery checkpoint. The policy is config, not state — the
+    /// resuming run rebuilds it from its own `RobustPolicy`.
+    pub fn snapshot(&self) -> (Vec<f64>, Vec<bool>) {
+        (self.scores.clone(), self.quarantined.clone())
+    }
+
+    /// Rebuild a gate from a [`RobustGate::snapshot`]. Scores must be
+    /// restored bit-exactly (the journal ships them as f64 bit patterns):
+    /// the score-vs-threshold comparisons gate quarantine transitions,
+    /// and a 1-ulp drift could flip one.
+    pub fn restore(policy: RobustPolicy, scores: Vec<f64>, quarantined: Vec<bool>) -> Self {
+        assert_eq!(scores.len(), quarantined.len(), "gate snapshot shape mismatch");
+        RobustGate { policy, scores, quarantined }
+    }
+
     /// Screen one round's settled replies (node order). Returns the
     /// contributions that may enter the merge — outliers and quarantined
     /// nodes removed, weights set to the updated scores — plus any

@@ -48,6 +48,7 @@
 use std::sync::Arc;
 
 use crate::align;
+use crate::io::Json;
 use crate::linalg::gemm::matmul;
 use crate::linalg::procrustes::procrustes_align;
 use crate::linalg::qr::orthonormalize;
@@ -58,6 +59,10 @@ use crate::runtime::LocalSolver;
 
 use super::cluster::{merge_refined, quorum_estimate, Round0, Shard};
 use super::gossip::{MixingMatrix, Topology};
+use super::journal::{
+    f64_from_json, f64_to_json, field, mat_from_json, mat_to_json, obj, opt_mat_from_json,
+    opt_mat_to_json,
+};
 use super::protocol::{AggregationRule, WireCodec};
 
 /// Which multi-round protocol a cluster run executes (round 0 — local
@@ -146,6 +151,29 @@ pub struct WorkerMem {
     pub slots: Vec<Mat>,
 }
 
+impl WorkerMem {
+    /// Journal snapshot: the exact local panel (or null before the first
+    /// solve) plus every protocol slot, all f64s as raw bit buffers.
+    pub fn snapshot(&self) -> Json {
+        obj(vec![
+            ("panel", opt_mat_to_json(self.panel.as_ref())),
+            ("slots", Json::Arr(self.slots.iter().map(mat_to_json).collect())),
+        ])
+    }
+
+    /// Rebuild from a [`WorkerMem::snapshot`] value, bit-exactly.
+    pub fn restore(v: &Json) -> Result<WorkerMem, String> {
+        let panel = opt_mat_from_json(field(v, "panel")?)?;
+        let slots = field(v, "slots")?
+            .as_arr()
+            .ok_or_else(|| "worker mem: slots is not an array".to_string())?
+            .iter()
+            .map(mat_from_json)
+            .collect::<Result<Vec<Mat>, String>>()?;
+        Ok(WorkerMem { panel, slots })
+    }
+}
+
 /// What a worker step may touch besides its protocol memory: the node's
 /// observation shard, the local solver (for joiners that must still
 /// produce a round-0-style panel), the target rank, and the node's
@@ -200,6 +228,15 @@ pub trait RoundProtocol: Send + Sync {
 
     /// Seed the leader state from the round-0 quorum outcome.
     fn init_leader(&self, round0: &Round0, ctx: &LeaderCtx) -> Box<dyn LeaderState>;
+
+    /// Rebuild the leader from a journaled [`LeaderState::snapshot`]
+    /// (crash recovery). Static parameters — tol, step size, topology,
+    /// mixing weights — come from the protocol itself; only the dynamic
+    /// state travels through the snapshot, so a restored leader is
+    /// bit-identical to the one that wrote it. Fails with a descriptive
+    /// error when the snapshot's `kind` tag or shape does not match.
+    fn restore_leader(&self, ctx: &LeaderCtx, snap: &Json)
+        -> Result<Box<dyn LeaderState>, String>;
 }
 
 /// Leader-side construction context.
@@ -247,6 +284,12 @@ pub trait LeaderState: Send {
         false
     }
 
+    /// Serialize the dynamic state for the run journal. Everything that
+    /// influences later rounds must round-trip bit-exactly through
+    /// [`RoundProtocol::restore_leader`]: matrices as raw f64 bit
+    /// buffers, scalars as bit patterns — never decimal text.
+    fn snapshot(&self) -> Json;
+
     /// The final orthonormal (d, r) estimate.
     fn into_estimate(self: Box<Self>) -> Mat;
 }
@@ -270,6 +313,24 @@ pub(crate) fn rule_merge_weighted(panels: &[Mat], weights: &[f64], rule: Aggrega
         AggregationRule::Mean if !uniform => align::weighted_mean_qr(panels, weights),
         _ => rule_merge(panels, rule),
     }
+}
+
+/// Reject a leader snapshot written by a different protocol.
+fn check_kind(snap: &Json, want: &str) -> Result<(), String> {
+    match field(snap, "kind")?.as_str() {
+        Some(k) if k == want => Ok(()),
+        Some(k) => Err(format!("leader snapshot is for protocol '{k}', expected '{want}'")),
+        None => Err("leader snapshot: kind is not a string".to_string()),
+    }
+}
+
+/// Decode a node-indexed panel array, checking the cluster size.
+fn mats_from_json(v: &Json, m: usize, what: &str) -> Result<Vec<Mat>, String> {
+    let arr = v.as_arr().ok_or_else(|| format!("leader snapshot: {what} is not an array"))?;
+    if arr.len() != m {
+        return Err(format!("leader snapshot: {what} has {} panels, expected {m}", arr.len()));
+    }
+    arr.iter().map(mat_from_json).collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -313,6 +374,16 @@ impl RoundProtocol for OneShotProtocol {
         };
         Box::new(OneShotState { reference, codec: ctx.codec, rule: ctx.aggregation })
     }
+
+    fn restore_leader(
+        &self,
+        ctx: &LeaderCtx,
+        snap: &Json,
+    ) -> Result<Box<dyn LeaderState>, String> {
+        check_kind(snap, "oneshot")?;
+        let reference = mat_from_json(field(snap, "reference")?)?;
+        Ok(Box::new(OneShotState { reference, codec: ctx.codec, rule: ctx.aggregation }))
+    }
 }
 
 struct OneShotState {
@@ -337,6 +408,13 @@ impl LeaderState for OneShotState {
         {
             self.reference = next;
         }
+    }
+
+    fn snapshot(&self) -> Json {
+        obj(vec![
+            ("kind", Json::Str("oneshot".into())),
+            ("reference", mat_to_json(&self.reference)),
+        ])
     }
 
     fn into_estimate(self: Box<Self>) -> Mat {
@@ -387,6 +465,21 @@ impl RoundProtocol for QPowerProtocol {
             last_move: f64::INFINITY,
         })
     }
+
+    fn restore_leader(
+        &self,
+        ctx: &LeaderCtx,
+        snap: &Json,
+    ) -> Result<Box<dyn LeaderState>, String> {
+        check_kind(snap, "qpower")?;
+        Ok(Box::new(QPowerState {
+            x: mat_from_json(field(snap, "x")?)?,
+            codec: ctx.codec,
+            rule: ctx.aggregation,
+            tol: self.tol,
+            last_move: f64_from_json(field(snap, "last_move")?)?,
+        }))
+    }
 }
 
 struct QPowerState {
@@ -427,6 +520,14 @@ impl LeaderState for QPowerState {
 
     fn converged(&self) -> bool {
         self.tol > 0.0 && self.last_move < self.tol
+    }
+
+    fn snapshot(&self) -> Json {
+        obj(vec![
+            ("kind", Json::Str("qpower".into())),
+            ("x", mat_to_json(&self.x)),
+            ("last_move", f64_to_json(self.last_move)),
+        ])
     }
 
     fn into_estimate(self: Box<Self>) -> Mat {
@@ -496,6 +597,24 @@ impl RoundProtocol for SangerProtocol {
             stop: StopCheck::new(self.tol),
         })
     }
+
+    fn restore_leader(
+        &self,
+        ctx: &LeaderCtx,
+        snap: &Json,
+    ) -> Result<Box<dyn LeaderState>, String> {
+        check_kind(snap, "sanger")?;
+        // the Metropolis weights are a pure function of (topology, m) —
+        // rebuilt, not journaled
+        Ok(Box::new(SangerState {
+            xs: mats_from_json(field(snap, "xs")?, ctx.m, "xs")?,
+            mixed: mats_from_json(field(snap, "mixed")?, ctx.m, "mixed")?,
+            mixer: MixingMatrix::metropolis(&self.topology, ctx.m),
+            codec: ctx.codec,
+            rule: ctx.aggregation,
+            stop: StopCheck::restore(self.tol, field(snap, "stop")?)?,
+        }))
+    }
 }
 
 /// Shared tol-based early-stop bookkeeping for the simulated decentralized
@@ -526,6 +645,23 @@ impl StopCheck {
 
     fn converged(&self) -> bool {
         self.tol > 0.0 && self.last_move < self.tol
+    }
+
+    /// Journal the dynamic fields (`tol` is static — the protocol
+    /// re-supplies it on restore).
+    fn snapshot(&self) -> Json {
+        obj(vec![
+            ("last_move", f64_to_json(self.last_move)),
+            ("prev", opt_mat_to_json(self.prev.as_ref())),
+        ])
+    }
+
+    fn restore(tol: f64, v: &Json) -> Result<StopCheck, String> {
+        Ok(StopCheck {
+            tol,
+            last_move: f64_from_json(field(v, "last_move")?)?,
+            prev: opt_mat_from_json(field(v, "prev")?)?,
+        })
     }
 }
 
@@ -565,6 +701,15 @@ impl LeaderState for SangerState {
 
     fn converged(&self) -> bool {
         self.stop.converged()
+    }
+
+    fn snapshot(&self) -> Json {
+        obj(vec![
+            ("kind", Json::Str("sanger".into())),
+            ("xs", Json::Arr(self.xs.iter().map(mat_to_json).collect())),
+            ("mixed", Json::Arr(self.mixed.iter().map(mat_to_json).collect())),
+            ("stop", self.stop.snapshot()),
+        ])
     }
 
     fn into_estimate(self: Box<Self>) -> Mat {
@@ -640,6 +785,22 @@ impl RoundProtocol for DeepCaProtocol {
             stop: StopCheck::new(self.tol),
         })
     }
+
+    fn restore_leader(
+        &self,
+        ctx: &LeaderCtx,
+        snap: &Json,
+    ) -> Result<Box<dyn LeaderState>, String> {
+        check_kind(snap, "deepca")?;
+        Ok(Box::new(DeepCaState {
+            ss: mats_from_json(field(snap, "ss")?, ctx.m, "ss")?,
+            mixer: MixingMatrix::metropolis(&self.topology, ctx.m),
+            fastmix: self.fastmix,
+            codec: ctx.codec,
+            rule: ctx.aggregation,
+            stop: StopCheck::restore(self.tol, field(snap, "stop")?)?,
+        }))
+    }
 }
 
 struct DeepCaState {
@@ -679,6 +840,14 @@ impl LeaderState for DeepCaState {
 
     fn converged(&self) -> bool {
         self.stop.converged()
+    }
+
+    fn snapshot(&self) -> Json {
+        obj(vec![
+            ("kind", Json::Str("deepca".into())),
+            ("ss", Json::Arr(self.ss.iter().map(mat_to_json).collect())),
+            ("stop", self.stop.snapshot()),
+        ])
     }
 
     fn into_estimate(self: Box<Self>) -> Mat {
@@ -947,5 +1116,94 @@ mod tests {
             assert_eq!(res.comm.rounds, want_rounds, "{}", kind.name());
             assert_eq!(res.per_round.len(), want_rounds, "{}", kind.name());
         }
+    }
+
+    /// Crash-recovery contract: `snapshot()` → text → `restore_leader()`
+    /// rebuilds a leader that behaves bit-identically — same down panels,
+    /// same merge results, same convergence flag, same final estimate.
+    #[test]
+    fn leader_snapshot_restore_is_bit_identical() {
+        use crate::io::parse_json;
+        let mut rng = Pcg64::seed(11);
+        let (d, r, m) = (8usize, 2usize, 4usize);
+        let panels: Vec<Mat> = (0..m).map(|_| rng.haar_stiefel(d, r)).collect();
+        let round0 = Round0 {
+            in_panels: panels.clone(),
+            local_panels: panels,
+            in_quorum: (0..m).collect(),
+            late_merged: vec![],
+            lost: vec![],
+        };
+        let ctx = LeaderCtx { m, aggregation: AggregationRule::Mean, codec: WireCodec::F64 };
+        for kind in [
+            ProtocolKind::OneShot,
+            ProtocolKind::QPower { rounds: 3, tol: 1e-9 },
+            ProtocolKind::Sanger { rounds: 3, step: 0.3, topology: Topology::Ring, tol: 1e-9 },
+            ProtocolKind::DeepCa { rounds: 3, fastmix: 2, topology: Topology::Ring, tol: 1e-9 },
+        ] {
+            let proto = kind.build(3);
+            let mut live = proto.init_leader(&round0, &ctx);
+            // advance one round so the snapshot captures non-trivial state
+            // (QPower's last_move, the stop checks' prev estimate, ...)
+            let r1: Vec<Mat> = (0..m).map(|_| rng.haar_stiefel(d, r)).collect();
+            live.merge(1, r1.iter().enumerate().map(|(i, p)| Contribution::plain(i, p.clone())).collect());
+            // the snapshot must survive the journal's textual round trip
+            let text = live.snapshot().dump();
+            let snap = parse_json(&text).unwrap();
+            let mut restored = proto.restore_leader(&ctx, &snap).unwrap();
+            assert_eq!(live.is_broadcast(), restored.is_broadcast(), "{}", proto.name());
+            for node in 0..m {
+                assert_eq!(
+                    live.down(2, node).as_slice(),
+                    restored.down(2, node).as_slice(),
+                    "{} node {node} down-link differs after restore",
+                    proto.name()
+                );
+            }
+            // identical replies into both must keep them in lock-step
+            let r2: Vec<Mat> = (0..m).map(|_| rng.haar_stiefel(d, r)).collect();
+            live.merge(2, r2.iter().enumerate().map(|(i, p)| Contribution::plain(i, p.clone())).collect());
+            restored
+                .merge(2, r2.iter().enumerate().map(|(i, p)| Contribution::plain(i, p.clone())).collect());
+            assert_eq!(live.converged(), restored.converged(), "{}", proto.name());
+            assert_eq!(
+                live.into_estimate().as_slice(),
+                restored.into_estimate().as_slice(),
+                "{} estimate differs after restore",
+                proto.name()
+            );
+        }
+        // a snapshot from one protocol is rejected by another, with the
+        // offending kind named in the error
+        let one = kind_leader_snapshot(&ProtocolKind::OneShot, &round0, &ctx);
+        let err = ProtocolKind::QPower { rounds: 1, tol: 0.0 }
+            .build(0)
+            .restore_leader(&ctx, &one)
+            .unwrap_err();
+        assert!(err.contains("oneshot") && err.contains("qpower"), "{err}");
+    }
+
+    fn kind_leader_snapshot(kind: &ProtocolKind, round0: &Round0, ctx: &LeaderCtx) -> Json {
+        kind.build(1).init_leader(round0, ctx).snapshot()
+    }
+
+    /// Worker memory — the exact panel and protocol slots — survives the
+    /// journal round trip bit-exactly, including the pre-solve None panel.
+    #[test]
+    fn worker_mem_round_trips_through_json() {
+        use crate::io::parse_json;
+        let mut rng = Pcg64::seed(13);
+        let mem = WorkerMem {
+            panel: Some(rng.haar_stiefel(9, 3)),
+            slots: vec![rng.normal_mat(9, 3), rng.normal_mat(3, 3)],
+        };
+        let back = WorkerMem::restore(&parse_json(&mem.snapshot().dump()).unwrap()).unwrap();
+        assert_eq!(mem.panel, back.panel);
+        assert_eq!(mem.slots, back.slots);
+        let empty = WorkerMem::default();
+        let back = WorkerMem::restore(&parse_json(&empty.snapshot().dump()).unwrap()).unwrap();
+        assert!(back.panel.is_none() && back.slots.is_empty());
+        // malformed snapshots fail with a message, not a panic
+        assert!(WorkerMem::restore(&Json::Null).is_err());
     }
 }

@@ -27,9 +27,15 @@
 //! Decoding is defensive: truncated frames, oversized length headers and
 //! garbage bytes surface as typed [`FrameError`]s — never panics, never
 //! unbounded buffering ([`MAX_FRAME_BYTES`] caps allocation before any
-//! payload byte is read).
+//! payload byte is read). A stream that *ends* mid-frame (a crashed
+//! peer) is [`FrameError::Truncated`] with exact got/want byte counts,
+//! distinct from the clean between-frames close ([`TransportError::Eof`])
+//! — the crash-recovery plane keys its reconnect logic on the
+//! distinction ([`connect_with_backoff`]).
 
 use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
 
 use crate::linalg::Mat;
 use crate::sketch::{Codec, QuantizedPanel};
@@ -49,6 +55,7 @@ const TAG_ALIGNED: u8 = 2;
 const TAG_DONE: u8 = 3;
 const TAG_HELLO: u8 = 4;
 const TAG_QUARANTINE: u8 = 5;
+const TAG_RESEED: u8 = 6;
 
 const CODEC_NONE: u8 = 0;
 const CODEC_F64: u8 = 1;
@@ -72,6 +79,11 @@ pub enum FrameError {
     BadCodec(u8),
     /// Header fields and payload length disagree.
     Malformed(&'static str),
+    /// The stream ended mid-frame: `got` bytes buffered of the `want`
+    /// the frame promised (the header size when the length prefix itself
+    /// was cut short). The signature of a crashed peer, as opposed to
+    /// the clean between-frames close ([`TransportError::Eof`]).
+    Truncated { got: usize, want: usize },
 }
 
 impl std::fmt::Display for FrameError {
@@ -89,6 +101,9 @@ impl std::fmt::Display for FrameError {
             FrameError::BadTag(t) => write!(f, "unknown message tag {t}"),
             FrameError::BadCodec(c) => write!(f, "unknown panel codec byte {c}"),
             FrameError::Malformed(why) => write!(f, "malformed frame: {why}"),
+            FrameError::Truncated { got, want } => {
+                write!(f, "stream truncated mid-frame: got {got} of {want} bytes")
+            }
         }
     }
 }
@@ -201,6 +216,9 @@ pub fn encode_message(msg: &Message) -> Vec<u8> {
         }
         Message::Hello { node } => (TAG_HELLO, *node, 0, 0, None),
         Message::Quarantine { node, round, .. } => (TAG_QUARANTINE, *node, *round, 0, None),
+        Message::Reseed { node, round, panel } => {
+            (TAG_RESEED, *node, *round, 0, Some(panel_wire(panel)))
+        }
         Message::Done => (TAG_DONE, 0, 0, 0, None),
     };
     // control frames carry no panel, so the rows field is free metadata;
@@ -312,6 +330,7 @@ fn decode_frame(frame: &[u8]) -> Result<Message, FrameError> {
             Ok(Message::Reference { round, panel: decode_panel()? })
         }
         TAG_ALIGNED => Ok(Message::Aligned { node, round, panel: decode_panel()? }),
+        TAG_RESEED => Ok(Message::Reseed { node, round, panel: decode_panel()? }),
         TAG_HELLO | TAG_DONE => {
             if !panel_body.is_empty() || codec != CODEC_NONE {
                 return Err(FrameError::Malformed("payload on a control frame"));
@@ -350,6 +369,17 @@ impl FrameDecoder {
     /// Bytes buffered but not yet consumed as frames.
     pub fn pending(&self) -> usize {
         self.buf.len()
+    }
+
+    /// Total bytes the in-progress frame promises, once the length
+    /// prefix is buffered (`None` below 8 bytes). Blocking readers use
+    /// this to report *how much* of a frame an EOF cut off.
+    pub fn expected_len(&self) -> Option<usize> {
+        if self.buf.len() >= 8 {
+            Some(get_u32(&self.buf, 4) as usize)
+        } else {
+            None
+        }
     }
 
     /// Try to decode the next complete frame. `Ok(None)` means more bytes
@@ -406,8 +436,10 @@ impl<R: Read> FrameReader<R> {
     }
 
     /// Read until one complete message is available. EOF between frames
-    /// is [`TransportError::Eof`]; EOF inside a frame is a truncation
-    /// ([`FrameError::Malformed`]).
+    /// is [`TransportError::Eof`]; EOF inside a frame is
+    /// [`FrameError::Truncated`] carrying how many of the promised bytes
+    /// arrived (`want` falls back to the header size while the length
+    /// prefix itself is incomplete).
     pub fn read_message(&mut self) -> Result<Message, TransportError> {
         let mut chunk = [0u8; 4096];
         loop {
@@ -416,10 +448,12 @@ impl<R: Read> FrameReader<R> {
             }
             let n = self.inner.read(&mut chunk)?;
             if n == 0 {
-                return if self.dec.pending() == 0 {
+                let got = self.dec.pending();
+                return if got == 0 {
                     Err(TransportError::Eof)
                 } else {
-                    Err(FrameError::Malformed("stream truncated mid-frame").into())
+                    let want = self.dec.expected_len().unwrap_or(HEADER_BYTES);
+                    Err(FrameError::Truncated { got, want }.into())
                 };
             }
             self.dec.push(&chunk[..n]);
@@ -430,6 +464,37 @@ impl<R: Read> FrameReader<R> {
 /// Write one message as a frame.
 pub fn write_frame<W: Write>(w: &mut W, msg: &Message) -> std::io::Result<()> {
     w.write_all(&encode_message(msg))
+}
+
+/// Connect to `addr`, retrying with capped exponential backoff until
+/// `deadline`: the delay starts at `base` and doubles per failure up to
+/// `cap`. Workers rejoining a restarted leader use this — the listener
+/// may not be bound yet when the worker comes back up, and a fixed-rate
+/// hammer would turn recovery into a connect storm. Returns
+/// `ErrorKind::TimedOut` (carrying the last connect error) once the
+/// next retry would overshoot the deadline.
+pub fn connect_with_backoff(
+    addr: SocketAddr,
+    base: Duration,
+    cap: Duration,
+    deadline: Instant,
+) -> std::io::Result<TcpStream> {
+    let mut delay = base.max(Duration::from_millis(1)).min(cap.max(Duration::from_millis(1)));
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(stream) => return Ok(stream),
+            Err(e) => {
+                if Instant::now() + delay >= deadline {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        format!("reconnect deadline exceeded for {addr}: {e}"),
+                    ));
+                }
+                std::thread::sleep(delay);
+                delay = delay.saturating_mul(2).min(cap);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -460,6 +525,7 @@ mod tests {
             });
             out.push(Message::Reference { round: 2, panel: codec.encode(&panel) });
             out.push(Message::Aligned { node: 3, round: 2, panel: codec.encode(&panel) });
+            out.push(Message::Reseed { node: 4, round: 3, panel: codec.encode(&panel) });
         }
         out
     }
@@ -485,6 +551,10 @@ mod tests {
             (
                 Message::Aligned { node: n1, round: r1, panel: p1 },
                 Message::Aligned { node: n2, round: r2, panel: p2 },
+            )
+            | (
+                Message::Reseed { node: n1, round: r1, panel: p1 },
+                Message::Reseed { node: n2, round: r2, panel: p2 },
             ) => {
                 assert_eq!(n1, n2);
                 assert_eq!(r1, r2);
@@ -640,7 +710,10 @@ mod tests {
         let cut = &frame[..frame.len() - 3];
         let mut reader = FrameReader::new(cut);
         match reader.read_message() {
-            Err(TransportError::Frame(FrameError::Malformed(_))) => {}
+            Err(TransportError::Frame(FrameError::Truncated { got, want })) => {
+                assert_eq!(got, frame.len() - 3);
+                assert_eq!(want, frame.len());
+            }
             other => panic!("expected truncation error, got {other:?}"),
         }
         // clean EOF between frames is Eof, not an error with bytes pending
@@ -649,6 +722,73 @@ mod tests {
             Err(TransportError::Eof) => {}
             other => panic!("expected Eof, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn eof_at_every_boundary_reports_exact_got_and_want() {
+        // EOF after every possible prefix of every message kind x codec:
+        // mid-magic and mid-length cuts (< 8 bytes) can only promise the
+        // header; once the length prefix is in, `want` is the frame size
+        for msg in sample_messages() {
+            let frame = encode_message(&msg);
+            for cut in 1..frame.len() {
+                let mut reader = FrameReader::new(&frame[..cut]);
+                match reader.read_message() {
+                    Err(TransportError::Frame(FrameError::Truncated { got, want })) => {
+                        assert_eq!(got, cut, "{msg:?}");
+                        let expect = if cut < 8 { HEADER_BYTES } else { frame.len() };
+                        assert_eq!(want, expect, "cut at {cut} of {msg:?}");
+                    }
+                    other => panic!("cut at {cut} of {msg:?}: expected Truncated, got {other:?}"),
+                }
+            }
+            // ... and EOF after a complete frame is a clean close
+            let mut reader = FrameReader::new(&frame[..]);
+            reader.read_message().unwrap();
+            match reader.read_message() {
+                Err(TransportError::Eof) => {}
+                other => panic!("expected Eof after whole frame, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn backoff_connects_when_listener_is_up() {
+        let Ok(listener) = std::net::TcpListener::bind("127.0.0.1:0") else {
+            eprintln!("skipping: no loopback sockets in this sandbox");
+            return;
+        };
+        let addr = listener.local_addr().unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let stream = connect_with_backoff(
+            addr,
+            Duration::from_millis(5),
+            Duration::from_millis(50),
+            deadline,
+        );
+        assert!(stream.is_ok(), "{stream:?}");
+    }
+
+    #[test]
+    fn backoff_times_out_against_a_dead_leader() {
+        // bind-then-drop guarantees a port with nothing listening
+        let Ok(listener) = std::net::TcpListener::bind("127.0.0.1:0") else {
+            eprintln!("skipping: no loopback sockets in this sandbox");
+            return;
+        };
+        let addr = listener.local_addr().unwrap();
+        drop(listener);
+        let t0 = Instant::now();
+        let err = connect_with_backoff(
+            addr,
+            Duration::from_millis(2),
+            Duration::from_millis(20),
+            t0 + Duration::from_millis(150),
+        )
+        .expect_err("nothing is listening");
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut);
+        // the deadline bounds the retry loop: no retry may start past it
+        assert!(t0.elapsed() < Duration::from_secs(5), "{:?}", t0.elapsed());
     }
 
     #[test]

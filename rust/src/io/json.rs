@@ -1,6 +1,9 @@
 //! Minimal recursive-descent JSON parser — just enough for the AOT
 //! artifact manifest (`artifacts/manifest.json`). Supports the full JSON
 //! grammar except exotic escapes (\uXXXX is decoded for the BMP).
+//! [`Json::dump`] is the matching writer: `parse_json(v.dump()) == v`
+//! for every finite tree, which the run journal (coordinator/journal.rs)
+//! relies on for its checkpoint payloads.
 
 use std::collections::BTreeMap;
 
@@ -41,12 +44,92 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
             _ => None,
         }
     }
+
+    /// Serialize to compact JSON text. Numbers use Rust's shortest
+    /// round-trip `Display`, so finite values survive a dump/parse cycle
+    /// bit-exactly; callers that must round-trip non-finite values (the
+    /// journal) encode them as bit-pattern strings instead of `Num`.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.dump_into(&mut out);
+        out
+    }
+
+    fn dump_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    // integral values print without the ".0" suffix Rust
+                    // would add for f64 — keeps counters readable and
+                    // still parses back to the identical f64
+                    if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                        out.push_str(&format!("{}", *n as i64));
+                    } else {
+                        out.push_str(&format!("{n}"));
+                    }
+                } else {
+                    // JSON has no literal for NaN/inf; degrade to null
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => dump_str(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.dump_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    dump_str(k, out);
+                    out.push(':');
+                    v.dump_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn dump_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 /// Parse a JSON document.
@@ -250,5 +333,33 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(parse_json("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+    }
+
+    #[test]
+    fn dump_round_trips() {
+        let doc = r#"{"a": [1, 2.5, {"b": "c\nd"}], "e": null, "f": true, "g": -0.125}"#;
+        let v = parse_json(doc).unwrap();
+        assert_eq!(parse_json(&v.dump()).unwrap(), v);
+        // nested dump is deterministic (BTreeMap ordering)
+        assert_eq!(v.dump(), parse_json(&v.dump()).unwrap().dump());
+    }
+
+    #[test]
+    fn dump_numbers_survive_exactly() {
+        for x in [0.0, -0.0, 1.0, 1e300, 0.1, 1.0 / 3.0, f64::MIN_POSITIVE, 2.0_f64.powi(-40)]
+        {
+            let v = Json::Num(x);
+            let back = parse_json(&v.dump()).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} did not round-trip");
+        }
+        // integral values drop the trailing .0 but still parse back
+        assert_eq!(Json::Num(42.0).dump(), "42");
+        assert_eq!(Json::Num(-3.0).dump(), "-3");
+    }
+
+    #[test]
+    fn dump_escapes_control_chars() {
+        let v = Json::Str("a\"b\\c\nd\u{1}".into());
+        assert_eq!(parse_json(&v.dump()).unwrap(), v);
     }
 }

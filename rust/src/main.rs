@@ -7,22 +7,31 @@
 //!   [--protocol oneshot|qpower|sanger|deepca] [--rounds K] [--tol T]
 //!   [--byzantine B] [--byz SPEC] [--robust MODE] [--median]
 //!   [--transport local|tcp] [--quorum Q] [--faults SPEC] [--grace MS]
-//!   [--straggler MS]` — run the leader/worker coordinator on a synthetic
-//!   distributed-PCA workload (in-process or over loopback TCP, optionally
-//!   under a deterministic fault schedule and/or a seeded Byzantine
-//!   adversary, with a one-shot or iterative multi-round protocol) and
-//!   report accuracy + communication accounting, per round.
+//!   [--straggler MS] [--journal PATH] [--resume] [--csv PATH]` — run the
+//!   leader/worker coordinator on a synthetic distributed-PCA workload
+//!   (in-process or over loopback TCP, optionally under a deterministic
+//!   fault schedule and/or a seeded Byzantine adversary, with a one-shot
+//!   or iterative multi-round protocol) and report accuracy +
+//!   communication accounting, per round. `--journal` checkpoints every
+//!   settled round to disk; after a leader crash (`lcrash=R` in the fault
+//!   spec) `--resume` restarts from the journal and finishes the run
+//!   bit-identically. `--csv` writes the per-round meters plus the
+//!   estimate's bit checksum, so two runs can be diffed exactly.
 //! - `info` — version, artifact manifest, PJRT platform.
 
 use std::process::ExitCode;
 use std::sync::Arc;
 
 use deigen::config::{Cli, RunOptions};
+use deigen::coordinator::fault::FaultAction;
+use deigen::coordinator::journal::mat_checksum;
 use deigen::coordinator::{
-    run_cluster_faulty, run_cluster_tcp, AggregationRule, ClusterConfig, FaultPlan,
-    FaultRunConfig, NetworkModel, NodeBehavior, ProtocolKind, RobustMode, RobustPolicy, Shard,
-    WireCodec, WorkerData, CANNED_BYZ,
+    run_cluster_faulty, run_cluster_journaled, run_cluster_resume, run_cluster_tcp,
+    run_cluster_tcp_journaled, run_cluster_tcp_resume, AggregationRule, ClusterConfig, FaultPlan,
+    FaultRunConfig, FaultyClusterResult, NetworkModel, NodeBehavior, ProtocolKind, RobustMode,
+    RobustPolicy, Shard, WireCodec, WorkerData, CANNED_BYZ,
 };
+use deigen::io::CsvWriter;
 use deigen::linalg::subspace::dist2;
 use deigen::rng::Pcg64;
 use deigen::runtime::{Manifest, NativeEngine, PjrtEngine, SharedPjrtSolver};
@@ -36,13 +45,16 @@ const USAGE: &str = "usage:
                  [--robust off|screen|median|trimmed:F] [--wan] [--seed S]
                  [--codec f64|f16|int8|fd<l>] [--transport local|tcp]
                  [--quorum Q] [--faults SPEC] [--grace MS] [--straggler MS]
+                 [--journal PATH] [--resume] [--csv PATH]
   deigen plot <csv> [--x COL] [--y COL[,COL..]] [--group COL[,COL..]]
               [--linear-x] [--linear-y]
   deigen info
 experiments: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 table1
              table2 wire faults rounds byz
 fault spec:  clean|lossy|laggy|chaos or clauses drop=P, delay=P:MS, dup=P,
-             slow=N:MS, crash=N@R, join=N@R, part=A-B@R:K, retries=K, rto=MS
+             slow=N:MS, crash=N@R, join=N@R, part=A-B@R:K, retries=K,
+             rto=MS, lcrash=R (leader dies after completing round R;
+             restart with --resume --journal PATH)
 byz spec:    byz-minority|byz-majority or N:signflip|noise:S|rotate|
              stale:K|collude|nan (N corrupt nodes, strategy)";
 
@@ -195,15 +207,24 @@ fn cluster_demo(cli: &Cli) -> anyhow::Result<()> {
         Arc::new(NativeEngine::default())
     };
 
+    let journal_path = cli.get_str("journal", "");
+    let resume = cli.get_flag("resume");
+    anyhow::ensure!(!resume || !journal_path.is_empty(), "--resume needs --journal PATH");
+    let jpath = std::path::Path::new(&journal_path);
+
     let t0 = std::time::Instant::now();
-    let res = if transport == "tcp" {
-        run_cluster_tcp(workers, solver, &config, &fc)?
-    } else {
-        run_cluster_faulty(workers, solver, &config, &fc)
+    let res = match (transport == "tcp", journal_path.is_empty(), resume) {
+        (true, true, _) => run_cluster_tcp(workers, solver, &config, &fc)?,
+        (true, false, false) => run_cluster_tcp_journaled(workers, solver, &config, &fc, jpath)?,
+        (true, false, true) => run_cluster_tcp_resume(workers, solver, &config, &fc, jpath)?,
+        (false, true, _) => run_cluster_faulty(workers, solver, &config, &fc),
+        (false, false, false) => run_cluster_journaled(workers, solver, &config, &fc, jpath)?,
+        (false, false, true) => run_cluster_resume(workers, solver, &config, &fc, jpath)?,
     };
     let wall = t0.elapsed();
 
     println!("estimate dist2 to truth: {:.4}", dist2(&res.estimate, &truth));
+    println!("estimate checksum: {:016x}", mat_checksum(&res.estimate));
     println!(
         "comm: rounds={} up={}B ({} msgs) down={}B ({} msgs) ctrl={}B ({} msgs); \
          simulated net time {:.4}s; wall {:?}",
@@ -244,6 +265,51 @@ fn cluster_demo(cli: &Cli) -> anyhow::Result<()> {
             );
         }
     }
+    let crashed = res.transcript.events.iter().any(|e| e.action == FaultAction::LeaderCrashed);
+    if crashed {
+        println!(
+            "leader crashed after its scheduled round (lcrash); checkpoints are durable — \
+             rerun the same command with --resume to finish from the journal"
+        );
+    }
+    let csv_path = cli.get_str("csv", "");
+    if !csv_path.is_empty() {
+        write_cluster_csv(&csv_path, &res, crashed)?;
+        println!("per-round CSV written to {csv_path}");
+    }
+    Ok(())
+}
+
+/// Per-round meter rows plus a final summary row carrying the estimate's
+/// bit checksum. A resumed run writes byte-identical rows to the
+/// uninterrupted run — the CI kill-and-resume smoke diffs the two files.
+fn write_cluster_csv(path: &str, res: &FaultyClusterResult, crashed: bool) -> anyhow::Result<()> {
+    let mut w = CsvWriter::create(
+        path,
+        &[("crashed", format!("{crashed}"))],
+        &["round", "bytes_up", "msgs_up", "bytes_down", "msgs_down", "stall_us", "checksum"],
+    )?;
+    for (k, s) in res.per_round.iter().enumerate() {
+        w.row_strs(&[
+            k.to_string(),
+            s.bytes_up.to_string(),
+            s.msgs_up.to_string(),
+            s.bytes_down.to_string(),
+            s.msgs_down.to_string(),
+            s.stall_us.to_string(),
+            String::new(),
+        ])?;
+    }
+    w.row_strs(&[
+        "estimate".into(),
+        res.comm.bytes_up.to_string(),
+        res.comm.msgs_up.to_string(),
+        res.comm.bytes_down.to_string(),
+        res.comm.msgs_down.to_string(),
+        res.comm.stall_us.to_string(),
+        format!("{:016x}", mat_checksum(&res.estimate)),
+    ])?;
+    w.finish()?;
     Ok(())
 }
 

@@ -1,0 +1,489 @@
+//! Durable crash-recovery integration suite (tier-1, DESIGN.md S17):
+//!
+//! 1. For every protocol kind, a run whose leader crashes after round R
+//!    (`lcrash=R`) and is restarted from its journal produces a
+//!    bit-identical estimate, per-round meter sequence, payload
+//!    transcript, membership, and simulated time to the uninterrupted
+//!    same-seed run — under a lossy + Byzantine fault plan, on both the
+//!    in-process and the loopback-TCP engines.
+//! 2. Recovery traffic (Resumed / Reseed / Reconnected) is metered as
+//!    round-less control bytes only: it never touches the payload meters.
+//! 3. Journal robustness: a corrupted or truncated tail falls back to the
+//!    previous checkpoint (the crash re-fires on the replayed round and a
+//!    second resume still converges to the same bits); wrong seed, wrong
+//!    config, and a non-journal file are rejected with typed errors.
+//! 4. The snapshot/restore contract round-trips bit-exactly under every
+//!    protocol × codec pairing.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use deigen::coordinator::fault::FaultAction;
+use deigen::coordinator::{
+    load_journal, run_cluster_faulty, run_cluster_journaled, run_cluster_resume,
+    run_cluster_tcp_journaled, run_cluster_tcp_resume, ClusterConfig, CommSnapshot, FaultPlan,
+    FaultRunConfig, FaultyClusterResult, JournalError, ProtocolKind, WireCodec, WorkerData,
+};
+use deigen::linalg::gemm::matmul;
+use deigen::linalg::Mat;
+use deigen::rng::Pcg64;
+use deigen::runtime::NativeEngine;
+
+const LOSSY_BYZ: &str = "drop=0.1, delay=0.2:10, dup=0.1, rto=5, byz=1:signflip";
+
+fn noisy_observations(rng: &mut Pcg64, d: usize, r: usize, m: usize, noise: f64) -> Vec<Mat> {
+    let q = rng.haar_orthogonal(d);
+    let evs: Vec<f64> = (0..d).map(|i| if i < r { 1.0 } else { 0.3 }).collect();
+    let x = matmul(&Mat::from_fn(d, d, |i, j| q[(i, j)] * evs[j]), &q.transpose());
+    (0..m)
+        .map(|_| {
+            let mut e = rng.normal_mat(d, d).scale(noise);
+            e.symmetrize();
+            x.add(&e)
+        })
+        .collect()
+}
+
+fn mk_workers(obs: &[Mat]) -> Vec<WorkerData> {
+    obs.iter().map(|o| WorkerData::dense(o.clone())).collect()
+}
+
+fn journal_path(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir()
+        .join(format!("deigen_recovery_{}_{tag}.journal", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+/// The four protocol kinds, each configured for K=3 protocol rounds with
+/// early stopping disabled so every run covers the full schedule.
+fn protocol_kinds() -> Vec<(&'static str, ProtocolKind, usize)> {
+    vec![
+        ("oneshot", ProtocolKind::OneShot, 3),
+        ("qpower", ProtocolKind::parse("qpower", 3, 0.0).unwrap(), 0),
+        ("sanger", ProtocolKind::parse("sanger", 3, 0.0).unwrap(), 0),
+        ("deepca", ProtocolKind::parse("deepca", 3, 0.0).unwrap(), 0),
+    ]
+}
+
+fn config(kind: &ProtocolKind, refine: usize, seed: u64) -> ClusterConfig {
+    ClusterConfig {
+        r: 2,
+        refine_rounds: refine,
+        protocol: kind.clone(),
+        codec: WireCodec::Int8,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn fault_config(spec: &str, seed: u64, m: usize) -> FaultRunConfig {
+    FaultRunConfig {
+        plan: FaultPlan::parse(spec).unwrap().seeded(seed),
+        quorum: m - 1,
+        grace_ms: 20.0,
+        straggler_ms: 200.0,
+    }
+}
+
+/// The acceptance predicate: everything the protocol computed matches
+/// bit-for-bit; only the round-less recovery control traffic may differ.
+fn assert_bit_identical(resumed: &FaultyClusterResult, base: &FaultyClusterResult, what: &str) {
+    assert!(
+        resumed.estimate.sub(&base.estimate).max_abs() == 0.0,
+        "{what}: estimate bits diverge"
+    );
+    assert_eq!(resumed.per_round, base.per_round, "{what}: per-round meters diverge");
+    assert_eq!(
+        resumed.transcript.payload(),
+        base.transcript.payload(),
+        "{what}: payload transcripts diverge"
+    );
+    assert_eq!(resumed.in_quorum, base.in_quorum, "{what}: quorum membership diverges");
+    assert_eq!(resumed.late_merged, base.late_merged, "{what}: late-merge set diverges");
+    assert_eq!(resumed.lost, base.lost, "{what}: lost set diverges");
+    assert_eq!(
+        resumed.sim_time_s.to_bits(),
+        base.sim_time_s.to_bits(),
+        "{what}: simulated time diverges"
+    );
+    // totals: identical except the recovery control plane, which only a
+    // crashed-and-resumed run carries (satellite: recovery is metered,
+    // and metered as ctrl only)
+    let normalized = CommSnapshot {
+        bytes_ctrl: base.comm.bytes_ctrl,
+        msgs_ctrl: base.comm.msgs_ctrl,
+        ..resumed.comm
+    };
+    assert_eq!(normalized, base.comm, "{what}: payload totals diverge");
+    assert!(
+        resumed.comm.bytes_ctrl > base.comm.bytes_ctrl,
+        "{what}: recovery control traffic was not metered"
+    );
+}
+
+fn crashed(res: &FaultyClusterResult) -> bool {
+    res.transcript.events.iter().any(|e| e.action == FaultAction::LeaderCrashed)
+}
+
+/// Core acceptance: crash at round 2 of 3, resume, finish bit-identically
+/// — every protocol kind, in-process engine, lossy + Byzantine plan.
+#[test]
+fn crashed_and_resumed_runs_are_bit_identical_inproc() {
+    let (d, m, seed) = (16usize, 6usize, 11u64);
+    let mut rng = Pcg64::seed(seed);
+    let obs = noisy_observations(&mut rng, d, 2, m, 0.05);
+    for (name, kind, refine) in protocol_kinds() {
+        let cfg = config(&kind, refine, seed);
+        let base_fc = fault_config(LOSSY_BYZ, seed, m);
+        let crash_fc = fault_config(&format!("{LOSSY_BYZ}, lcrash=2"), seed, m);
+        let base =
+            run_cluster_faulty(mk_workers(&obs), Arc::new(NativeEngine::default()), &cfg, &base_fc);
+        assert!(!crashed(&base), "{name}: uninterrupted run reports a crash");
+
+        let path = journal_path(&format!("inproc_{name}"));
+        let partial = run_cluster_journaled(
+            mk_workers(&obs),
+            Arc::new(NativeEngine::default()),
+            &cfg,
+            &crash_fc,
+            &path,
+        )
+        .expect("journaled run failed");
+        assert!(crashed(&partial), "{name}: lcrash=2 did not crash the leader");
+        assert!(
+            partial.per_round.len() < base.per_round.len(),
+            "{name}: crashed run finished every round"
+        );
+        // the journal holds checkpoints for rounds 0..=2 (crash after 2)
+        let loaded = load_journal(&path).expect("journal unreadable after crash");
+        assert_eq!(loaded.records.len(), 3, "{name}: unexpected checkpoint count");
+        assert!(!loaded.truncated, "{name}: clean journal reported a damaged tail");
+
+        let resumed = run_cluster_resume(
+            mk_workers(&obs),
+            Arc::new(NativeEngine::default()),
+            &cfg,
+            &crash_fc,
+            &path,
+        )
+        .expect("resume failed");
+        assert!(!crashed(&resumed), "{name}: resumed run crashed again");
+        assert_bit_identical(&resumed, &base, name);
+        // the resumed leader kept journaling: one checkpoint per round
+        let finished = load_journal(&path).expect("journal unreadable after resume");
+        assert_eq!(finished.records.len(), 4, "{name}: resumed run stopped journaling");
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+/// The same acceptance over real loopback sockets: the TCP leader
+/// checkpoints between rounds, dies without `Done` frames (workers see
+/// EOF), and a restarted leader + reconnecting workers finish on exactly
+/// the bits of the uninterrupted in-process run.
+#[test]
+fn crashed_and_resumed_runs_are_bit_identical_tcp() {
+    let Ok(probe) = std::net::TcpListener::bind("127.0.0.1:0") else {
+        eprintln!("skipping: loopback unavailable");
+        return;
+    };
+    drop(probe);
+    let (d, m, seed) = (16usize, 5usize, 19u64);
+    let mut rng = Pcg64::seed(seed);
+    let obs = noisy_observations(&mut rng, d, 2, m, 0.05);
+    for (name, kind, refine) in protocol_kinds() {
+        let cfg = config(&kind, refine, seed);
+        let base_fc = fault_config(LOSSY_BYZ, seed, m);
+        let crash_fc = fault_config(&format!("{LOSSY_BYZ}, lcrash=2"), seed, m);
+        // the in-process uninterrupted run is the cross-engine oracle
+        let base =
+            run_cluster_faulty(mk_workers(&obs), Arc::new(NativeEngine::default()), &cfg, &base_fc);
+
+        let path = journal_path(&format!("tcp_{name}"));
+        let partial = run_cluster_tcp_journaled(
+            mk_workers(&obs),
+            Arc::new(NativeEngine::default()),
+            &cfg,
+            &crash_fc,
+            &path,
+        )
+        .expect("TCP journaled run failed");
+        assert!(crashed(&partial), "{name}: TCP lcrash=2 did not crash the leader");
+
+        let resumed = run_cluster_tcp_resume(
+            mk_workers(&obs),
+            Arc::new(NativeEngine::default()),
+            &cfg,
+            &crash_fc,
+            &path,
+        )
+        .expect("TCP resume failed");
+        assert_bit_identical(&resumed, &base, name);
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+/// A crashed TCP run and a crashed in-process run journal identical
+/// checkpoints — byte-for-byte — so a journal written by one engine
+/// resumes on the other.
+#[test]
+fn journals_are_byte_identical_across_engines_and_interchangeable() {
+    let Ok(probe) = std::net::TcpListener::bind("127.0.0.1:0") else {
+        eprintln!("skipping: loopback unavailable");
+        return;
+    };
+    drop(probe);
+    let (d, m, seed) = (16usize, 5usize, 7u64);
+    let mut rng = Pcg64::seed(seed);
+    let obs = noisy_observations(&mut rng, d, 2, m, 0.05);
+    let kind = ProtocolKind::parse("qpower", 3, 0.0).unwrap();
+    let cfg = config(&kind, 0, seed);
+    let base_fc = fault_config(LOSSY_BYZ, seed, m);
+    let crash_fc = fault_config(&format!("{LOSSY_BYZ}, lcrash=2"), seed, m);
+    let base =
+        run_cluster_faulty(mk_workers(&obs), Arc::new(NativeEngine::default()), &cfg, &base_fc);
+
+    let p_in = journal_path("xengine_inproc");
+    let p_tcp = journal_path("xengine_tcp");
+    run_cluster_journaled(
+        mk_workers(&obs),
+        Arc::new(NativeEngine::default()),
+        &cfg,
+        &crash_fc,
+        &p_in,
+    )
+    .expect("journaled run failed");
+    run_cluster_tcp_journaled(
+        mk_workers(&obs),
+        Arc::new(NativeEngine::default()),
+        &cfg,
+        &crash_fc,
+        &p_tcp,
+    )
+    .expect("TCP journaled run failed");
+    let bytes_in = std::fs::read(&p_in).unwrap();
+    let bytes_tcp = std::fs::read(&p_tcp).unwrap();
+    assert_eq!(bytes_in, bytes_tcp, "the two engines journal different bytes");
+
+    // cross-resume: the TCP-written journal drives an in-process resume
+    let resumed = run_cluster_resume(
+        mk_workers(&obs),
+        Arc::new(NativeEngine::default()),
+        &cfg,
+        &crash_fc,
+        &p_tcp,
+    )
+    .expect("cross-engine resume failed");
+    assert_bit_identical(&resumed, &base, "cross-engine");
+    let _ = std::fs::remove_file(&p_in);
+    let _ = std::fs::remove_file(&p_tcp);
+}
+
+/// A damaged tail is not fatal: resume falls back to the checkpoint
+/// before it, the scheduled crash re-fires on the replayed round (and is
+/// journaled again), and a second resume completes — still bit-identical.
+#[test]
+fn corrupt_tail_falls_back_to_previous_checkpoint_and_recovers() {
+    let (d, m, seed) = (16usize, 6usize, 29u64);
+    let mut rng = Pcg64::seed(seed);
+    let obs = noisy_observations(&mut rng, d, 2, m, 0.05);
+    let kind = ProtocolKind::parse("deepca", 3, 0.0).unwrap();
+    let cfg = config(&kind, 0, seed);
+    let base_fc = fault_config(LOSSY_BYZ, seed, m);
+    let crash_fc = fault_config(&format!("{LOSSY_BYZ}, lcrash=2"), seed, m);
+    let base =
+        run_cluster_faulty(mk_workers(&obs), Arc::new(NativeEngine::default()), &cfg, &base_fc);
+
+    let path = journal_path("corrupt_tail");
+    run_cluster_journaled(
+        mk_workers(&obs),
+        Arc::new(NativeEngine::default()),
+        &cfg,
+        &crash_fc,
+        &path,
+    )
+    .expect("journaled run failed");
+
+    // flip one byte near the end: the round-2 checkpoint no longer
+    // validates and must be dropped, not trusted
+    let mut bytes = std::fs::read(&path).unwrap();
+    let n = bytes.len();
+    bytes[n - 9] ^= 0xff;
+    std::fs::write(&path, &bytes).unwrap();
+    let loaded = load_journal(&path).expect("corrupt tail should load with truncation");
+    assert!(loaded.truncated, "corruption not detected");
+    assert_eq!(loaded.records.len(), 2, "expected fallback to the round-1 checkpoint");
+
+    // resume from round 1 replays round 2, where lcrash=2 fires again
+    let again = run_cluster_resume(
+        mk_workers(&obs),
+        Arc::new(NativeEngine::default()),
+        &cfg,
+        &crash_fc,
+        &path,
+    )
+    .expect("resume over corrupt tail failed");
+    assert!(crashed(&again), "replayed round did not re-fire the scheduled crash");
+
+    // ... after which the journal is whole again and a second resume
+    // finishes the run on the original bits
+    let resumed = run_cluster_resume(
+        mk_workers(&obs),
+        Arc::new(NativeEngine::default()),
+        &cfg,
+        &crash_fc,
+        &path,
+    )
+    .expect("second resume failed");
+    assert!(resumed.estimate.sub(&base.estimate).max_abs() == 0.0, "estimate bits diverge");
+    assert_eq!(resumed.per_round, base.per_round, "per-round meters diverge");
+    assert_eq!(resumed.transcript.payload(), base.transcript.payload());
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Structural rejections are typed: wrong seed, wrong config, and a file
+/// that is not a journal each name their failure exactly.
+#[test]
+fn mismatched_or_garbage_journals_are_rejected_with_typed_errors() {
+    let (d, m, seed) = (16usize, 5usize, 31u64);
+    let mut rng = Pcg64::seed(seed);
+    let obs = noisy_observations(&mut rng, d, 2, m, 0.05);
+    let kind = ProtocolKind::parse("qpower", 3, 0.0).unwrap();
+    let cfg = config(&kind, 0, seed);
+    let crash_fc = fault_config("lcrash=1", seed, m);
+    let path = journal_path("typed_errors");
+    run_cluster_journaled(
+        mk_workers(&obs),
+        Arc::new(NativeEngine::default()),
+        &cfg,
+        &crash_fc,
+        &path,
+    )
+    .expect("journaled run failed");
+
+    // wrong seed: both the plan hashes and the rng streams would differ
+    let wrong_seed = ClusterConfig { seed: seed + 1, ..cfg.clone() };
+    let err = run_cluster_resume(
+        mk_workers(&obs),
+        Arc::new(NativeEngine::default()),
+        &wrong_seed,
+        &fault_config("lcrash=1", seed, m),
+        &path,
+    )
+    .unwrap_err();
+    assert!(
+        matches!(err, JournalError::SeedMismatch { got, want } if got == seed && want == seed + 1),
+        "expected SeedMismatch, got {err:?}"
+    );
+
+    // wrong config (codec changes the wire bits): fingerprint mismatch
+    let wrong_codec = ClusterConfig { codec: WireCodec::F64, ..cfg.clone() };
+    let err = run_cluster_resume(
+        mk_workers(&obs),
+        Arc::new(NativeEngine::default()),
+        &wrong_codec,
+        &crash_fc,
+        &path,
+    )
+    .unwrap_err();
+    assert!(
+        matches!(err, JournalError::ConfigMismatch { .. }),
+        "expected ConfigMismatch, got {err:?}"
+    );
+
+    // not a journal at all
+    let garbage = journal_path("garbage");
+    std::fs::write(&garbage, b"not a journal, definitely").unwrap();
+    let err = run_cluster_resume(
+        mk_workers(&obs),
+        Arc::new(NativeEngine::default()),
+        &cfg,
+        &crash_fc,
+        &garbage,
+    )
+    .unwrap_err();
+    assert!(matches!(err, JournalError::BadMagic), "expected BadMagic, got {err:?}");
+
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&garbage);
+}
+
+/// The snapshot/restore contract round-trips under every protocol ×
+/// codec pairing: whatever panel bits the codec produced are exactly the
+/// bits the journal reproduces, so crash + resume is bit-identical for
+/// each combination (clean plan except the crash — the serialization is
+/// what is under test here; the lossy+byz leg is covered above).
+#[test]
+fn journal_round_trips_across_protocols_and_codecs() {
+    let (d, m, seed) = (16usize, 5usize, 41u64);
+    let mut rng = Pcg64::seed(seed);
+    let obs = noisy_observations(&mut rng, d, 2, m, 0.05);
+    for (name, kind, refine) in protocol_kinds() {
+        for codec in [WireCodec::F64, WireCodec::Int8, WireCodec::FdSketch { l: 4 }] {
+            let cfg = ClusterConfig { codec, ..config(&kind, refine, seed) };
+            let fc = fault_config("lcrash=2", seed, m);
+            let base_fc = FaultRunConfig { plan: FaultPlan::none().seeded(seed), ..fc.clone() };
+            let base = run_cluster_faulty(
+                mk_workers(&obs),
+                Arc::new(NativeEngine::default()),
+                &cfg,
+                &base_fc,
+            );
+            let tag = format!("rt_{name}_{}", codec.name());
+            let path = journal_path(&tag);
+            run_cluster_journaled(
+                mk_workers(&obs),
+                Arc::new(NativeEngine::default()),
+                &cfg,
+                &fc,
+                &path,
+            )
+            .expect("journaled run failed");
+            let resumed = run_cluster_resume(
+                mk_workers(&obs),
+                Arc::new(NativeEngine::default()),
+                &cfg,
+                &fc,
+                &path,
+            )
+            .expect("resume failed");
+            let what = format!("{name}/{}", codec.name());
+            assert!(
+                resumed.estimate.sub(&base.estimate).max_abs() == 0.0,
+                "{what}: estimate bits diverge"
+            );
+            assert_eq!(resumed.per_round, base.per_round, "{what}: per-round meters diverge");
+            assert_eq!(
+                resumed.transcript.payload(),
+                base.transcript.payload(),
+                "{what}: payload transcripts diverge"
+            );
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+}
+
+/// Journaling a run that never crashes is a no-op for the results: same
+/// bits with or without `--journal`, and the finished journal replays
+/// (checkpoint per round, clean tail). Also covers the clean-plan case.
+#[test]
+fn journaling_without_a_crash_changes_nothing() {
+    let (d, m, seed) = (16usize, 5usize, 37u64);
+    let mut rng = Pcg64::seed(seed);
+    let obs = noisy_observations(&mut rng, d, 2, m, 0.05);
+    let kind = ProtocolKind::parse("sanger", 3, 0.0).unwrap();
+    let cfg = config(&kind, 0, seed);
+    let fc = FaultRunConfig::full(m);
+    let base = run_cluster_faulty(mk_workers(&obs), Arc::new(NativeEngine::default()), &cfg, &fc);
+    let path = journal_path("no_crash");
+    let journaled =
+        run_cluster_journaled(mk_workers(&obs), Arc::new(NativeEngine::default()), &cfg, &fc, &path)
+            .expect("journaled run failed");
+    assert!(journaled.estimate.sub(&base.estimate).max_abs() == 0.0);
+    assert_eq!(journaled.comm, base.comm);
+    assert_eq!(journaled.transcript, base.transcript);
+    let loaded = load_journal(&path).expect("finished journal unreadable");
+    assert_eq!(loaded.records.len(), 4, "checkpoints for rounds 0..=3");
+    assert!(!loaded.truncated);
+    let _ = std::fs::remove_file(&path);
+}
