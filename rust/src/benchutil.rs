@@ -50,10 +50,10 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
         f();
         times.push(t0.elapsed().as_secs_f64());
     }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times.sort_by(|a, b| a.total_cmp(b));
     let median = times[times.len() / 2];
     let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
-    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    devs.sort_by(|a, b| a.total_cmp(b));
     BenchResult {
         name: name.to_string(),
         median_s: median,

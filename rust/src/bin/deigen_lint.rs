@@ -1,0 +1,90 @@
+//! `deigen-lint` — the project-invariant static analyzer (DESIGN.md S18).
+//!
+//! Walks the workspace source (`src/`, `benches/`, `tests/` minus the
+//! fixture corpus, plus the repo-level `examples/`) and enforces the
+//! determinism/metering/unsafe-containment invariants the reproduction's
+//! claims rest on. Suppressions are audited: an allow that suppresses
+//! nothing is itself an error.
+//!
+//! ```text
+//! deigen_lint [--root DIR] [--json]
+//! ```
+//!
+//! - `--root DIR` — workspace root (default: the crate dir when built by
+//!   cargo, else the current directory).
+//! - `--json` — machine-readable findings on stdout (round-trips through
+//!   `io::parse_json`); human rendering otherwise.
+//!
+//! Exit codes: 0 clean, 1 unsuppressed findings or stale allows, 2 usage
+//! or IO error. CI runs this as a required gate.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut json = false;
+    let mut root: Option<PathBuf> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--json" => json = true,
+            "--root" => {
+                i += 1;
+                match args.get(i) {
+                    Some(dir) => root = Some(PathBuf::from(dir)),
+                    None => {
+                        eprintln!("deigen-lint: --root needs a directory");
+                        return ExitCode::from(2);
+                    }
+                }
+            }
+            "--help" | "-h" => {
+                println!("usage: deigen_lint [--root DIR] [--json]");
+                println!("rules: {}", deigen::lintpass::rules::RULES.join(", "));
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("deigen-lint: unknown argument `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+        i += 1;
+    }
+
+    // default root: the crate directory this binary was built from, so
+    // `cargo run --bin deigen_lint` works from anywhere in the repo; a
+    // plain invocation outside cargo falls back to cwd if the baked-in
+    // path has moved.
+    let root = root.unwrap_or_else(|| {
+        let baked = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        if baked.join("src").is_dir() {
+            baked
+        } else {
+            PathBuf::from(".")
+        }
+    });
+    if !root.join("src").is_dir() {
+        eprintln!("deigen-lint: {} is not the workspace root (no src/)", root.display());
+        return ExitCode::from(2);
+    }
+
+    let report = match deigen::lintpass::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("deigen-lint: walking {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    if json {
+        print!("{}", report.to_json());
+    } else {
+        print!("{}", report.render_human());
+    }
+    if report.is_clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

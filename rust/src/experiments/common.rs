@@ -89,6 +89,7 @@ pub fn pca_trial_on(
     let mut panels: Vec<Mat> = Vec::with_capacity(m);
     let central = match plane {
         DataPlane::Dense => {
+            // deigen-lint: allow(no-square-alloc-in-sharded-modules) — DataPlane::Dense is explicitly the dense regime; the sharded regime takes the SymOp branch below
             let mut avg_cov = Mat::zeros(d, d);
             for i in 0..m {
                 let mut node_rng = rng.split(i as u64 + 1);
@@ -150,7 +151,7 @@ pub fn median(xs: &[f64]) -> f64 {
     if v.is_empty() {
         return f64::NAN;
     }
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let mid = v.len() / 2;
     if v.len() % 2 == 1 {
         v[mid]

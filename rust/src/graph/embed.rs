@@ -57,7 +57,7 @@ pub fn hope_embedding(g: &Graph, dim: usize, beta: f64) -> Mat {
     // converges that way; sorting pins ties deterministically), scale by
     // the magnitude's square root
     let mut idx: Vec<usize> = (0..dim).collect();
-    idx.sort_by(|&a, &b| lam[b].abs().partial_cmp(&lam[a].abs()).unwrap());
+    idx.sort_by(|&a, &b| lam[b].abs().total_cmp(&lam[a].abs()));
     let mut z = Mat::zeros(g.n, dim);
     for (jz, &jv) in idx.iter().enumerate() {
         let s = lam[jv].abs().sqrt();
@@ -112,7 +112,7 @@ mod tests {
         // with identical top-|λ| semantics
         let (vals, vecs) = crate::linalg::eig::sym_eig(&s);
         let mut idx: Vec<usize> = (0..80).collect();
-        idx.sort_by(|&a, &b| vals[b].abs().partial_cmp(&vals[a].abs()).unwrap());
+        idx.sort_by(|&a, &b| vals[b].abs().total_cmp(&vals[a].abs()));
         let zi = Mat::from_fn(80, 16, |i, j| {
             vecs[(i, idx[j])] * vals[idx[j]].abs().sqrt()
         });
@@ -172,7 +172,7 @@ mod tests {
         let s = katz_proximity(&g, 0.1, 24);
         let (vals, _) = crate::linalg::eig::sym_eig(&s);
         let mut by_mag: Vec<f64> = vals.clone();
-        by_mag.sort_by(|a, b| b.abs().partial_cmp(&a.abs()).unwrap());
+        by_mag.sort_by(|a, b| b.abs().total_cmp(&a.abs()));
         assert!(
             by_mag[1] < -0.05,
             "premise broken: second-|λ| eigenvalue {} not negative",
@@ -189,5 +189,18 @@ mod tests {
             );
             assert!(norm2 > 0.05, "embedding column {j} was zeroed");
         }
+    }
+
+    /// NaN regression for the `total_cmp` sweep (DESIGN.md S18): a NaN
+    /// decay factor poisons every Ritz value, which used to panic the
+    /// |λ|-descending column sort via `partial_cmp().unwrap()`. The
+    /// embedding is meaningless, but it must come back as a well-shaped
+    /// matrix, not a panic.
+    #[test]
+    fn hope_embedding_with_nan_beta_does_not_panic() {
+        let mut rng = Pcg64::seed(9);
+        let g = sbm(30, 2, 0.3, 0.05, &mut rng);
+        let z = hope_embedding(&g, 3, f64::NAN);
+        assert_eq!(z.shape(), (30, 3));
     }
 }

@@ -18,6 +18,9 @@
 //! - [`experiments`] — regeneration of every figure/table in the paper.
 //! - [`testkit`] — seeded generators, independent reference oracles and
 //!   invariant checkers the test suites pin every kernel against.
+//! - [`lintpass`] — `deigen-lint`, the static analyzer that turns the
+//!   S18 invariant ledger (determinism, metering, unsafe containment)
+//!   into machine-checked law over this very source tree.
 
 pub mod align;
 pub mod benchutil;
@@ -28,6 +31,7 @@ pub mod experiments;
 pub mod graph;
 pub mod io;
 pub mod linalg;
+pub mod lintpass;
 pub mod rng;
 pub mod runtime;
 pub mod sensing;

@@ -165,7 +165,7 @@ pub fn sym_eig_naive(a: &Mat) -> (Vec<f64>, Mat) {
 
     // sort ascending (insertion into permutation)
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&i, &j| d[i].partial_cmp(&d[j]).unwrap());
+    order.sort_by(|&i, &j| d[i].total_cmp(&d[j]));
     let vals: Vec<f64> = order.iter().map(|&i| d[i]).collect();
     let vecs = Mat::from_fn(n, n, |i, j| zt[(order[j], i)]);
     (vals, vecs)
@@ -581,7 +581,7 @@ pub fn sym_eig(a: &Mat) -> (Vec<f64>, Mat) {
     let mut zt = Mat::eye(n); // transposed accumulator (I is symmetric)
     ql_implicit(&mut d, &mut e, &mut zt);
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&i, &j| d[i].partial_cmp(&d[j]).unwrap());
+    order.sort_by(|&i, &j| d[i].total_cmp(&d[j]));
     let vals: Vec<f64> = order.iter().map(|&i| d[i]).collect();
     // columns of the tridiagonal eigenbasis = rows of zt, permuted
     let mut vecs = Mat::from_fn(n, n, |i, j| zt[(order[j], i)]);
@@ -1192,6 +1192,25 @@ mod tests {
                 "{name}: residual {:.2e}",
                 av.sub(&vl).max_abs()
             );
+        }
+    }
+
+    /// NaN regression for the `total_cmp` sweep (DESIGN.md S18): a NaN in
+    /// the spectrum used to panic inside the eigenvalue sort via
+    /// `partial_cmp().unwrap()`. The result is garbage-in-garbage-out,
+    /// but it must come back as a well-shaped answer, not a panic.
+    #[test]
+    fn top_eigvecs_with_nan_entries_does_not_panic() {
+        // d = 6 takes the naive QL path, d = 48 the blocked top-r path
+        // (tridiagonalize + bisection + inverse iteration)
+        let mut rng = Pcg64::seed(0xbad_f00d);
+        for &d in &[6usize, 48] {
+            let mut a = random_sym(&mut rng, d);
+            a[(0, 1)] = f64::NAN;
+            a[(1, 0)] = f64::NAN;
+            let (v, lam) = top_eigvecs(&a, 2);
+            assert_eq!((v.rows(), v.cols()), (d, 2));
+            assert_eq!(lam.len(), 2);
         }
     }
 }

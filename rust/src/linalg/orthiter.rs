@@ -191,9 +191,9 @@ mod tests {
         let (_, ritz) = orth_iter(&c, &v0, 80);
         let (vals, _) = crate::linalg::eig::sym_eig(&c);
         let mut top: Vec<f64> = vals.iter().rev().take(3).copied().collect();
-        top.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        top.sort_by(|a, b| b.total_cmp(a));
         let mut sorted = ritz.clone();
-        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        sorted.sort_by(|a, b| b.total_cmp(a));
         for (r, t) in sorted.iter().zip(&top) {
             assert!((r - t).abs() < 1e-4, "{r} vs {t}");
         }

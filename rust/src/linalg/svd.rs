@@ -68,7 +68,7 @@ pub fn svd(a: &Mat) -> (Mat, Vec<f64>, Mat) {
         .collect();
     // sort descending, permuting U, V columns
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&i, &j| s[j].partial_cmp(&s[i]).unwrap());
+    order.sort_by(|&i, &j| s[j].total_cmp(&s[i]));
     let su = u.clone();
     let sv = v.clone();
     let mut s_sorted = vec![0.0; n];

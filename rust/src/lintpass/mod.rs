@@ -1,0 +1,374 @@
+//! # `deigen-lint` — the project-invariant static analyzer
+//!
+//! DESIGN.md's prose ledger of invariants, turned into machine-checked
+//! law (S18). Every headline claim of this reproduction — Theorem-1
+//! error rates, the rounds-vs-bytes frontier, Byzantine breakdown
+//! curves, bit-identical crash resume — rests on conventions that used
+//! to be enforced only by review: pure-hash wire decisions, ascending-k
+//! summation, honest byte metering at every send site, no d×d
+//! materialization on the sharded plane, one blessed home for unsafe
+//! concurrency. This pass walks the workspace source and enforces them.
+//!
+//! Layers:
+//! - [`scan`] — comment/string-masking lexer + structure (test spans,
+//!   `fn` spans, suppression annotations);
+//! - [`rules`] — the rule set, one lexical check per invariant;
+//! - this module — the engine: suppression resolution, the stale-allow
+//!   audit (an `allow` that suppresses nothing is itself an error), the
+//!   workspace walker, and human/`--json` rendering.
+//!
+//! Suppression syntax, line-scoped (same line or the line below):
+//!
+//! ```text
+//! // deigen-lint: allow(<rule-id>) — <mandatory reason>
+//! ```
+//!
+//! The binary (`src/bin/deigen_lint.rs`) exits nonzero on any
+//! unsuppressed finding or stale allow; `tests/lint_clean.rs` runs the
+//! same pass over the real tree as a tier-1 gate, and the fixture corpus
+//! under `tests/lint_fixtures/` proves every rule both fires on its
+//! known-bad snippet and stays silent on the known-good twin.
+
+pub mod rules;
+pub mod scan;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One finding, after suppression resolution.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Workspace-relative path with `/` separators.
+    pub file: String,
+    /// 1-indexed.
+    pub line: usize,
+    pub rule: String,
+    pub message: String,
+    /// True when an audited `allow` covers this finding. Suppressed
+    /// findings are reported (so the ledger stays visible) but do not
+    /// fail the gate.
+    pub suppressed: bool,
+    /// The allow's justification, when suppressed.
+    pub reason: Option<String>,
+}
+
+/// Aggregated result of a lint run.
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    pub fn unsuppressed(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| !f.suppressed)
+    }
+
+    /// Zero unsuppressed findings (stale allows included — they surface
+    /// as unsuppressed `stale-allow` findings).
+    pub fn is_clean(&self) -> bool {
+        self.unsuppressed().next().is_none()
+    }
+
+    /// Human-readable rendering: one line per finding + a summary line.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            if f.suppressed {
+                let why = f.reason.as_deref().unwrap_or("");
+                out.push_str(&format!(
+                    "{}:{}: [{}] suppressed — {}\n",
+                    f.file, f.line, f.rule, why
+                ));
+            } else {
+                out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+            }
+        }
+        let bad = self.unsuppressed().count();
+        let ok = self.findings.len() - bad;
+        out.push_str(&format!(
+            "deigen-lint: {} finding{} ({} suppressed) across {} files — {}\n",
+            bad,
+            if bad == 1 { "" } else { "s" },
+            ok,
+            self.files_scanned,
+            if bad == 0 { "clean" } else { "FAIL" }
+        ));
+        out
+    }
+
+    /// Machine-readable rendering. The shape round-trips through
+    /// [`crate::io::parse_json`] (pinned by a unit test below).
+    pub fn to_json(&self) -> String {
+        let mut rows: Vec<String> = Vec::with_capacity(self.findings.len());
+        for f in &self.findings {
+            rows.push(format!(
+                "    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \
+                 \"message\": \"{}\", \"suppressed\": {}, \"reason\": {}}}",
+                esc(&f.file),
+                f.line,
+                esc(&f.rule),
+                esc(&f.message),
+                f.suppressed,
+                match &f.reason {
+                    Some(r) => format!("\"{}\"", esc(r)),
+                    None => "null".to_string(),
+                }
+            ));
+        }
+        format!(
+            "{{\n  \"files_scanned\": {},\n  \"unsuppressed\": {},\n  \"suppressed\": {},\n  \
+             \"findings\": [\n{}\n  ]\n}}\n",
+            self.files_scanned,
+            self.unsuppressed().count(),
+            self.findings.len() - self.unsuppressed().count(),
+            rows.join(",\n")
+        )
+    }
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Lint one file's source text. `path` is the workspace-relative path
+/// the scoping rules match against (`/` separators). Returns findings
+/// with suppression resolved, plus the stale-allow audit.
+pub fn lint_source(path: &str, text: &str) -> Vec<Finding> {
+    let s = scan::scan(text);
+    let raw = rules::check_file(path, &s);
+
+    let mut used = vec![false; s.allows.len()];
+    let mut findings: Vec<Finding> = Vec::new();
+    for rf in raw {
+        // an allow suppresses findings of its rule on its own line and
+        // the line immediately below it
+        let hit = s.allows.iter().enumerate().find(|(_, a)| {
+            a.rule == rf.rule && (a.line == rf.line || a.line + 1 == rf.line)
+        });
+        match hit {
+            Some((i, a)) => {
+                used[i] = true;
+                findings.push(Finding {
+                    file: path.to_string(),
+                    line: rf.line,
+                    rule: rf.rule.to_string(),
+                    message: rf.message,
+                    suppressed: true,
+                    reason: Some(a.reason.clone()),
+                });
+            }
+            None => findings.push(Finding {
+                file: path.to_string(),
+                line: rf.line,
+                rule: rf.rule.to_string(),
+                message: rf.message,
+                suppressed: false,
+                reason: None,
+            }),
+        }
+    }
+
+    // audit the suppressions themselves
+    for (i, a) in s.allows.iter().enumerate() {
+        if !rules::is_known_rule(&a.rule) {
+            findings.push(Finding {
+                file: path.to_string(),
+                line: a.line,
+                rule: "stale-allow".to_string(),
+                message: format!("allow({}) names an unknown rule", a.rule),
+                suppressed: false,
+                reason: None,
+            });
+        } else if !used[i] {
+            findings.push(Finding {
+                file: path.to_string(),
+                line: a.line,
+                rule: "stale-allow".to_string(),
+                message: format!(
+                    "allow({}) suppresses nothing — the finding it audited is gone; \
+                     delete the annotation",
+                    a.rule
+                ),
+                suppressed: false,
+                reason: None,
+            });
+        }
+    }
+    for (line, problem) in &s.malformed {
+        findings.push(Finding {
+            file: path.to_string(),
+            line: *line,
+            rule: "stale-allow".to_string(),
+            message: format!("malformed deigen-lint directive: {problem}"),
+            suppressed: false,
+            reason: None,
+        });
+    }
+    findings.sort_by(|a, b| (a.line, &a.rule).cmp(&(b.line, &b.rule)));
+    findings
+}
+
+/// Directories (by final component) the walker never descends into.
+/// `vendor` is third-party code, `lint_fixtures` is the deliberately
+/// rule-violating corpus, `target` is build output.
+const SKIP_DIRS: &[&str] = &["target", "vendor", "lint_fixtures", ".git"];
+
+/// Walk the workspace rooted at the crate dir (`rust/`): `src/`,
+/// `benches/`, `tests/` beneath it plus the repo-level `examples/`
+/// beside it, linting every `.rs` file. Paths in the report are
+/// workspace-relative with `/` separators, sorted, so output is
+/// deterministic across platforms.
+pub fn lint_tree(root: &Path) -> io::Result<LintReport> {
+    let mut files: Vec<(String, PathBuf)> = Vec::new();
+    for sub in ["src", "benches", "tests"] {
+        collect_rs(&root.join(sub), sub, &mut files)?;
+    }
+    let examples = root.join("..").join("examples");
+    if examples.is_dir() {
+        collect_rs(&examples, "examples", &mut files)?;
+    }
+    files.sort();
+
+    let mut report = LintReport::default();
+    for (rel, abs) in files {
+        let text = fs::read_to_string(&abs)?;
+        report.findings.extend(lint_source(&rel, &text));
+        report.files_scanned += 1;
+    }
+    report.findings.sort_by(|a, b| (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule)));
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, rel: &str, out: &mut Vec<(String, PathBuf)>) -> io::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if path.is_dir() {
+            if SKIP_DIRS.contains(&name.as_str()) {
+                continue;
+            }
+            collect_rs(&path, &format!("{rel}/{name}"), out)?;
+        } else if name.ends_with(".rs") {
+            out.push((format!("{rel}/{name}"), path));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suppression_covers_same_line_and_next_line() {
+        let trailing = "fn f() { unsafe { x(); } } // deigen-lint: allow(no-unsafe-outside-pool) — audited FFI shim\n";
+        let above = "// deigen-lint: allow(no-unsafe-outside-pool) — audited FFI shim\nfn f() { unsafe { x(); } }\n";
+        for src in [trailing, above] {
+            let fs = lint_source("src/runtime/pjrt.rs", src);
+            assert_eq!(fs.len(), 1, "{src}");
+            assert!(fs[0].suppressed);
+            assert_eq!(fs[0].rule, "no-unsafe-outside-pool");
+            assert!(fs[0].reason.as_deref().unwrap().contains("FFI"));
+        }
+    }
+
+    #[test]
+    fn allow_does_not_reach_two_lines_down() {
+        let src = "// deigen-lint: allow(no-unsafe-outside-pool) — too far away\n\nfn f() { unsafe { x(); } }\n";
+        let fs = lint_source("src/runtime/pjrt.rs", src);
+        // the unsafe stays unsuppressed AND the allow goes stale
+        assert_eq!(fs.iter().filter(|f| !f.suppressed).count(), 2);
+        assert!(fs.iter().any(|f| f.rule == "stale-allow"));
+        assert!(fs.iter().any(|f| f.rule == "no-unsafe-outside-pool" && !f.suppressed));
+    }
+
+    #[test]
+    fn stale_allow_is_an_error() {
+        let src = "// deigen-lint: allow(no-nan-partial-cmp) — nothing here\nlet x = 1;\n";
+        let fs = lint_source("src/linalg/eig.rs", src);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, "stale-allow");
+        assert!(!fs[0].suppressed);
+        assert!(fs[0].message.contains("suppresses nothing"));
+    }
+
+    #[test]
+    fn unknown_rule_in_allow_is_an_error() {
+        let src = "// deigen-lint: allow(no-such-rule) — typo\nlet x = 1;\n";
+        let fs = lint_source("src/linalg/eig.rs", src);
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].message.contains("unknown rule"));
+    }
+
+    #[test]
+    fn one_allow_covers_one_rule_only() {
+        // an unsafe allow must not hide a partial_cmp finding on the line
+        let src = "// deigen-lint: allow(no-unsafe-outside-pool) — wrong rule\nv.sort_by(|a, b| a.partial_cmp(b).unwrap());\n";
+        let fs = lint_source("src/linalg/eig.rs", src);
+        let unsup: Vec<_> = fs.iter().filter(|f| !f.suppressed).collect();
+        assert_eq!(unsup.len(), 2, "finding stays + allow goes stale: {fs:?}");
+    }
+
+    #[test]
+    fn report_counts_and_clean_flag() {
+        let mut r = LintReport::default();
+        assert!(r.is_clean());
+        r.findings = lint_source(
+            "src/linalg/eig.rs",
+            "v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n",
+        );
+        r.files_scanned = 1;
+        assert!(!r.is_clean());
+        assert!(r.render_human().contains("FAIL"));
+        assert!(r.render_human().contains("no-nan-partial-cmp"));
+    }
+
+    #[test]
+    fn json_output_round_trips_through_io_parse_json() {
+        let mut r = LintReport::default();
+        r.findings = lint_source(
+            "src/coordinator/transport.rs",
+            // blank line between the two sites so the trailing allow's
+            // one-line reach cannot also cover the second finding
+            "fn f(x: Option<u8>) -> u8 { x.unwrap() } // deigen-lint: allow(no-unwrap-in-transport) — test of \"quoted\" reasons\n\nfn g(y: Option<u8>) -> u8 { y.expect(\"boom\") }\n",
+        );
+        r.files_scanned = 1;
+        let parsed = crate::io::parse_json(&r.to_json()).expect("lint --json must be valid JSON");
+        assert_eq!(
+            parsed.get("files_scanned").and_then(|v| v.as_f64()),
+            Some(1.0)
+        );
+        let rows = parsed.get("findings").and_then(|v| v.as_arr()).expect("findings array");
+        assert_eq!(rows.len(), r.findings.len());
+        let n_sup = rows
+            .iter()
+            .filter(|row| row.get("suppressed").and_then(|v| v.as_bool()) == Some(true))
+            .count();
+        assert_eq!(n_sup, 1);
+        assert!(rows.iter().any(|row| {
+            row.get("reason").and_then(|v| v.as_str()).is_some_and(|s| s.contains("\"quoted\""))
+        }));
+        assert_eq!(
+            parsed.get("unsuppressed").and_then(|v| v.as_f64()),
+            Some(1.0)
+        );
+    }
+}

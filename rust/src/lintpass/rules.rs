@@ -1,0 +1,622 @@
+//! The `deigen-lint` rule set (DESIGN.md S18, one subsection per rule).
+//!
+//! Every rule codifies an invariant the paper reproduction's headline
+//! claims rest on — deterministic replay, honest byte metering, the
+//! matrix-free sharded plane, the single blessed home for unsafe
+//! concurrency. Rules are lexical checks over [`FileScan`] masked lines:
+//! deliberately simple, line-granular (so the suppression syntax can
+//! reach every finding), and scoped by path suffix so the fixture corpus
+//! can exercise them under `tests/lint_fixtures/<rule>/…` mirrors of the
+//! real tree.
+//!
+//! Conventions shared by all rules:
+//! - paths are matched with `/` separators against the workspace-relative
+//!   suffix (`src/coordinator/journal.rs`), so the same engine lints the
+//!   real tree and the fixture corpus;
+//! - `skip_tests` rules ignore `#[cfg(test)]` code — tests may
+//!   deliberately materialize dense oracles or construct unmetered
+//!   messages for codec round-trips;
+//! - a finding names the rule, the line, and what to do instead.
+
+use super::scan::{has_word, FileScan};
+
+/// A raw finding before suppression resolution.
+#[derive(Clone, Debug)]
+pub struct RawFinding {
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// Rule ids, in reporting order. `stale-allow` is the meta rule emitted
+/// by the engine's suppression audit (mod.rs), not by `check_file`.
+pub const RULES: &[&str] = &[
+    "no-nan-partial-cmp",
+    "no-stray-threads",
+    "no-wallclock-in-metered-paths",
+    "no-unordered-iteration",
+    "no-unsafe-outside-pool",
+    "no-square-alloc-in-sharded-modules",
+    "send-implies-meter",
+    "no-unwrap-in-transport",
+    "float-bits-in-snapshots",
+    "stale-allow",
+];
+
+pub fn is_known_rule(id: &str) -> bool {
+    RULES.contains(&id)
+}
+
+/// Run every rule over one scanned file. `path` must use `/` separators.
+pub fn check_file(path: &str, s: &FileScan) -> Vec<RawFinding> {
+    let mut out = Vec::new();
+    no_nan_partial_cmp(path, s, &mut out);
+    no_stray_threads(path, s, &mut out);
+    no_wallclock(path, s, &mut out);
+    no_unordered_iteration(path, s, &mut out);
+    no_unsafe_outside_pool(path, s, &mut out);
+    no_square_alloc(path, s, &mut out);
+    send_implies_meter(path, s, &mut out);
+    no_unwrap_in_transport(path, s, &mut out);
+    float_bits_in_snapshots(path, s, &mut out);
+    out.sort_by_key(|f| f.line);
+    out
+}
+
+fn ends(path: &str, suffix: &str) -> bool {
+    path.ends_with(suffix)
+}
+
+fn in_dir(path: &str, dir: &str) -> bool {
+    path.contains(dir)
+}
+
+// ---------------------------------------------------------------------
+// rule: no-nan-partial-cmp
+// ---------------------------------------------------------------------
+
+/// `partial_cmp(..).unwrap()` panics the moment a NaN reaches the sort —
+/// the exact failure PR 8 paid for in `align/robust.rs` when a corrupted
+/// f16 panel decoded to NaN. Float orderings must use `total_cmp`.
+/// Applies everywhere, tests included: a panicking oracle hides the
+/// defect it was meant to catch.
+fn no_nan_partial_cmp(_path: &str, s: &FileScan, out: &mut Vec<RawFinding>) {
+    for (idx, line) in s.masked.iter().enumerate() {
+        if let Some(p) = line.find(".partial_cmp(") {
+            if line[p..].contains(".unwrap()") {
+                out.push(RawFinding {
+                    line: idx + 1,
+                    rule: "no-nan-partial-cmp",
+                    message: "`partial_cmp(..).unwrap()` panics on NaN — order floats with \
+                              `total_cmp` (NaN sorts last) instead"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// rule: no-stray-threads
+// ---------------------------------------------------------------------
+
+/// All parallelism funnels through the spawn-once pool in
+/// `linalg/pool.rs` (DESIGN.md S1); the only sanctioned exception is the
+/// TCP engine (`coordinator/cluster.rs`, `coordinator/transport.rs`),
+/// where one OS thread per socket is the documented design (S14). A
+/// stray `thread::spawn` elsewhere reintroduces per-call spawn costs and
+/// unaudited concurrency.
+fn no_stray_threads(path: &str, s: &FileScan, out: &mut Vec<RawFinding>) {
+    if ends(path, "linalg/pool.rs")
+        || ends(path, "coordinator/cluster.rs")
+        || ends(path, "coordinator/transport.rs")
+    {
+        return;
+    }
+    for (idx, line) in s.masked.iter().enumerate() {
+        for pat in ["thread::spawn", "thread::scope", "thread::Builder"] {
+            if line.contains(pat) {
+                out.push(RawFinding {
+                    line: idx + 1,
+                    rule: "no-stray-threads",
+                    message: format!(
+                        "`{pat}` outside linalg/pool.rs (or the documented TCP engine \
+                         exception) — fan out through `pool::run_scoped` instead"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// rule: no-wallclock-in-metered-paths
+// ---------------------------------------------------------------------
+
+const METERED_PATH_FILES: &[&str] = &[
+    "coordinator/fault.rs",
+    "coordinator/rounds.rs",
+    "coordinator/protocol.rs",
+    "coordinator/journal.rs",
+    "coordinator/reputation.rs",
+];
+
+/// Simulated time and every wire decision must be pure functions of the
+/// fault plan (splitmix64 hashes of (seed, node, dir, round, attempt) —
+/// DESIGN.md S14), or bit-identical replay across the in-process and TCP
+/// engines dies. Wall-clock reads are confined to the physical layer
+/// (cluster.rs/transport.rs socket deadlines) and the bench harness.
+fn no_wallclock(path: &str, s: &FileScan, out: &mut Vec<RawFinding>) {
+    let scoped = METERED_PATH_FILES.iter().any(|f| ends(path, f))
+        || in_dir(path, "src/align/")
+        || in_dir(path, "src/linalg/");
+    if !scoped {
+        return;
+    }
+    for (idx, line) in s.masked.iter().enumerate() {
+        for pat in ["Instant::now", "SystemTime"] {
+            if line.contains(pat) {
+                out.push(RawFinding {
+                    line: idx + 1,
+                    rule: "no-wallclock-in-metered-paths",
+                    message: format!(
+                        "`{pat}` in a metered/deterministic path — sim time must derive \
+                         from the fault plan, not the wall clock"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// rule: no-unordered-iteration
+// ---------------------------------------------------------------------
+
+/// `HashMap`/`HashSet` iteration order is randomized per process, which
+/// breaks the bit-identity contract everything in `coordinator/` is
+/// stated over (same-seed runs must produce byte-identical transcripts,
+/// journals and CSVs). Use `BTreeMap`/`BTreeSet`, or sort before
+/// draining.
+fn no_unordered_iteration(path: &str, s: &FileScan, out: &mut Vec<RawFinding>) {
+    if !in_dir(path, "src/coordinator/") {
+        return;
+    }
+    for (idx, line) in s.masked.iter().enumerate() {
+        for pat in ["HashMap", "HashSet"] {
+            if has_word(line, pat) {
+                out.push(RawFinding {
+                    line: idx + 1,
+                    rule: "no-unordered-iteration",
+                    message: format!(
+                        "`{pat}` in coordinator code — iteration order is nondeterministic \
+                         and breaks bit-identical replay; use BTree{} or a sorted drain",
+                        if pat == "HashMap" { "Map" } else { "Set" }
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// rule: no-unsafe-outside-pool
+// ---------------------------------------------------------------------
+
+/// The one piece of `unsafe` in the tree is the latch-guarded lifetime
+/// erasure in `linalg/pool.rs` (scoped borrows handed to long-lived
+/// workers), exercised under Miri in CI. Any new `unsafe` must either
+/// move there or carry an audited allow explaining why the aliasing
+/// model holds.
+fn no_unsafe_outside_pool(path: &str, s: &FileScan, out: &mut Vec<RawFinding>) {
+    if ends(path, "linalg/pool.rs") {
+        return;
+    }
+    for (idx, line) in s.masked.iter().enumerate() {
+        if has_word(line, "unsafe") {
+            out.push(RawFinding {
+                line: idx + 1,
+                rule: "no-unsafe-outside-pool",
+                message: "`unsafe` outside linalg/pool.rs — the pool is the single audited \
+                          home for unsafe concurrency (Miri-checked in CI)"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// rule: no-square-alloc-in-sharded-modules
+// ---------------------------------------------------------------------
+
+const SHARDED_FILES: &[&str] = &["linalg/symop.rs", "experiments/common.rs"];
+
+/// Static companion to the `Mat::forbid_square_allocs` runtime tripwire:
+/// the sharded data plane (DESIGN.md S13) exists so sample-sharded
+/// solves never materialize d×d — the regime where the Fan et al. /
+/// Chen et al. analyses apply. A `Mat::zeros(d, d)`-shaped call in these
+/// modules is either a regression or needs an audited allow (e.g.
+/// `SymOp::to_dense`, the documented escape hatch for inherently dense
+/// consumers).
+fn no_square_alloc(path: &str, s: &FileScan, out: &mut Vec<RawFinding>) {
+    if !SHARDED_FILES.iter().any(|f| ends(path, f)) {
+        return;
+    }
+    for (idx, line) in s.masked.iter().enumerate() {
+        if s.is_test[idx] {
+            continue; // tests pin ops against dense oracles on purpose
+        }
+        for ctor in ["Mat::zeros(", "Mat::new(", "Mat::from_fn("] {
+            let mut from = 0;
+            while let Some(p) = line[from..].find(ctor) {
+                let at = from + p + ctor.len();
+                if let Some((a, b)) = first_two_args(&line[at..]) {
+                    if !a.is_empty() && a == b {
+                        out.push(RawFinding {
+                            line: idx + 1,
+                            rule: "no-square-alloc-in-sharded-modules",
+                            message: format!(
+                                "square allocation `{}{a}, {b}, ..)`-shaped in a sharded \
+                                 module — the operator plane must stay matrix-free \
+                                 (runtime twin: Mat::forbid_square_allocs)",
+                                ctor
+                            ),
+                        });
+                    }
+                }
+                from = at;
+            }
+        }
+        if line.contains("Mat::eye(") {
+            out.push(RawFinding {
+                line: idx + 1,
+                rule: "no-square-alloc-in-sharded-modules",
+                message: "`Mat::eye(..)` is a square allocation — sharded modules must stay \
+                          matrix-free (runtime twin: Mat::forbid_square_allocs)"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// First two top-level comma-separated argument tokens of a call whose
+/// opening paren has just been consumed. Same-line only (multi-line
+/// calls are invisible to this rule — the tree's allocation calls are
+/// all single-line, and rustfmt keeps short ctor calls that way).
+fn first_two_args(rest: &str) -> Option<(String, String)> {
+    let mut depth = 0i32;
+    let mut args: Vec<String> = vec![String::new()];
+    for c in rest.chars() {
+        match c {
+            '(' | '[' | '{' => {
+                depth += 1;
+                args.last_mut().unwrap().push(c);
+            }
+            ')' | ']' | '}' if depth > 0 => {
+                depth -= 1;
+                args.last_mut().unwrap().push(c);
+            }
+            ')' => break,
+            ',' if depth == 0 => args.push(String::new()),
+            c => args.last_mut().unwrap().push(c),
+        }
+    }
+    if args.len() >= 2 {
+        Some((args[0].trim().to_string(), args[1].trim().to_string()))
+    } else {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------
+// rule: send-implies-meter
+// ---------------------------------------------------------------------
+
+/// Calls that book traffic into `CommStats` / the transcript. A function
+/// that constructs wire messages and never touches one of these funnels
+/// is an unmetered send path — the rounds-vs-bytes frontier and every
+/// `bytes_up` claim silently under-count.
+const METER_FUNNELS: &[&str] = &[
+    "record_up(",
+    "record_down(",
+    "record_ctrl(",
+    "record_peer(",
+    "meter_schedule(",
+    "send_with_schedule(",
+    "push_schedule(",
+];
+
+/// Every `Message` construction site in the cluster engines must sit in
+/// a function that meters (directly or via the `send_with_schedule` /
+/// `meter_schedule` funnels). Function granularity is deliberate: the
+/// construction and the metering call are rarely on the same line, but
+/// they are always in the same function — and the failure mode this rule
+/// exists for is a whole new send path with no metering at all.
+fn send_implies_meter(path: &str, s: &FileScan, out: &mut Vec<RawFinding>) {
+    if !(ends(path, "coordinator/cluster.rs") || ends(path, "coordinator/gossip.rs")) {
+        return;
+    }
+    for (idx, line) in s.masked.iter().enumerate() {
+        if s.is_test[idx] {
+            continue;
+        }
+        let Some(p) = line.find("Message::") else { continue };
+        // pattern position, not construction: match arms (`=>` anywhere
+        // on the line) and `let <pattern> = <expr>` destructures where
+        // `Message::` sits left of the `=`
+        if line.contains("=>") {
+            continue;
+        }
+        if let Some(eq) = line.find('=') {
+            if p < eq && line.trim_start().starts_with("let ") {
+                continue;
+            }
+        }
+        // construction heuristics: `Message::Variant {` / `(`, or a bare
+        // unit variant like `Message::Done`
+        let lineno = idx + 1;
+        let Some(f) = s.enclosing_fn(lineno) else {
+            out.push(RawFinding {
+                line: lineno,
+                rule: "send-implies-meter",
+                message: "Message constructed outside any function — cannot verify metering"
+                    .to_string(),
+            });
+            continue;
+        };
+        let metered = (f.start..=f.end).any(|l| {
+            let text = s.line(l);
+            METER_FUNNELS.iter().any(|m| text.contains(m))
+        });
+        if !metered {
+            out.push(RawFinding {
+                line: lineno,
+                rule: "send-implies-meter",
+                message: "Message constructed in a function with no CommStats/transcript \
+                          call — every send site must meter its encoded bytes \
+                          (record_*/meter_schedule/send_with_schedule)"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// rule: no-unwrap-in-transport
+// ---------------------------------------------------------------------
+
+/// Frame- and IO-handling paths have typed errors (`FrameError`,
+/// `JournalError`) precisely so a torn frame or corrupt journal tail is
+/// a recoverable condition, not a panic. The one exemption is
+/// `try_into().expect(..)` on fixed-width slices — infallible by
+/// construction (the bounds are literals two tokens away).
+fn no_unwrap_in_transport(path: &str, s: &FileScan, out: &mut Vec<RawFinding>) {
+    if !(ends(path, "coordinator/transport.rs") || ends(path, "coordinator/journal.rs")) {
+        return;
+    }
+    for (idx, line) in s.masked.iter().enumerate() {
+        if s.is_test[idx] {
+            continue;
+        }
+        for pat in [".unwrap()", ".expect("] {
+            let mut from = 0;
+            while let Some(p) = line[from..].find(pat) {
+                let at = from + p;
+                let before = line[..at].trim_end();
+                if !before.ends_with("try_into()") {
+                    out.push(RawFinding {
+                        line: idx + 1,
+                        rule: "no-unwrap-in-transport",
+                        message: format!(
+                            "`{}` in a frame/IO path — surface a typed FrameError/\
+                             JournalError instead of panicking on wire input",
+                            pat.trim_end_matches('(')
+                        ),
+                    });
+                }
+                from = at + pat.len();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// rule: float-bits-in-snapshots
+// ---------------------------------------------------------------------
+
+/// Journal snapshots must restore bit-identically, so every f64 crosses
+/// the JSON boundary as `to_bits()` hex via `f64_to_json` — a decimal
+/// float would round-trip through formatting and break `diff`-level
+/// resume equality (DESIGN.md S17). `Json::Num` is reserved for exact
+/// integer casts, recognizably written `<expr> as f64`.
+fn float_bits_in_snapshots(path: &str, s: &FileScan, out: &mut Vec<RawFinding>) {
+    if !(ends(path, "coordinator/journal.rs") || ends(path, "coordinator/cluster.rs")) {
+        return;
+    }
+    for (idx, line) in s.masked.iter().enumerate() {
+        if s.is_test[idx] {
+            continue;
+        }
+        let mut from = 0;
+        while let Some(p) = line[from..].find("Json::Num(") {
+            let at = from + p + "Json::Num(".len();
+            let arg = single_arg(&line[at..]);
+            if !arg.trim_end().ends_with("as f64") {
+                out.push(RawFinding {
+                    line: idx + 1,
+                    rule: "float-bits-in-snapshots",
+                    message: "snapshot field carries a raw f64 through `Json::Num` — \
+                              round-trip floats via `f64_to_json` (`to_bits` hex); \
+                              `Json::Num` is for exact `.. as f64` integer casts only"
+                        .to_string(),
+                });
+            }
+            from = at;
+        }
+    }
+}
+
+/// The argument text up to the matching close paren (same line only).
+fn single_arg(rest: &str) -> String {
+    let mut depth = 0i32;
+    let mut out = String::new();
+    for c in rest.chars() {
+        match c {
+            '(' | '[' | '{' => {
+                depth += 1;
+                out.push(c);
+            }
+            ')' | ']' | '}' if depth > 0 => {
+                depth -= 1;
+                out.push(c);
+            }
+            ')' => break,
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lintpass::scan::scan;
+
+    fn run(path: &str, src: &str) -> Vec<RawFinding> {
+        check_file(path, &scan(src))
+    }
+
+    fn rules_of(fs: &[RawFinding]) -> Vec<&'static str> {
+        fs.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn nan_partial_cmp_fires_and_total_cmp_passes() {
+        let bad = "fn s(v: &mut Vec<f64>) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n";
+        let good = "fn s(v: &mut Vec<f64>) { v.sort_by(|a, b| a.total_cmp(b)); }\n";
+        assert_eq!(rules_of(&run("src/linalg/eig.rs", bad)), ["no-nan-partial-cmp"]);
+        assert!(run("src/linalg/eig.rs", good).is_empty());
+        // masked: the pattern inside a comment or string cannot fire
+        let masked = "// a.partial_cmp(b).unwrap() is bad\nlet s = \".partial_cmp(x).unwrap()\";\n";
+        assert!(run("src/linalg/eig.rs", masked).is_empty());
+    }
+
+    #[test]
+    fn stray_threads_scoped_to_pool_and_tcp() {
+        let src = "fn f() { std::thread::spawn(|| {}); }\n";
+        assert_eq!(rules_of(&run("src/align/estimators.rs", src)), ["no-stray-threads"]);
+        assert!(run("src/linalg/pool.rs", src).is_empty());
+        assert!(run("src/coordinator/cluster.rs", src)
+            .iter()
+            .all(|f| f.rule != "no-stray-threads"));
+    }
+
+    #[test]
+    fn wallclock_scoped_to_metered_paths() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        assert_eq!(
+            rules_of(&run("src/coordinator/rounds.rs", src)),
+            ["no-wallclock-in-metered-paths"]
+        );
+        assert!(run("src/coordinator/cluster.rs", src).is_empty());
+        assert!(run("src/benchutil.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unordered_iteration_in_coordinator_only() {
+        let src = "use std::collections::HashMap;\nfn f() { let m: HashMap<u32, u32> = HashMap::new(); }\n";
+        let fs = run("src/coordinator/journal.rs", src);
+        assert!(fs.iter().all(|f| f.rule == "no-unordered-iteration"));
+        assert_eq!(fs.len(), 2, "one finding per line, both lines flagged");
+        assert!(run("src/runtime/pjrt.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_outside_pool() {
+        let src = "fn f() { unsafe { std::ptr::null::<u8>().read(); } }\n";
+        assert_eq!(rules_of(&run("src/linalg/gemm.rs", src)), ["no-unsafe-outside-pool"]);
+        assert!(run("src/linalg/pool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn square_alloc_shapes() {
+        let bad = "fn f(d: usize) -> Mat { Mat::zeros(d, d) }\n";
+        let rect = "fn f(d: usize, r: usize) -> Mat { Mat::zeros(d, r) }\n";
+        let eye = "fn f(d: usize) -> Mat { Mat::eye(d) }\n";
+        let from_fn = "fn f(n: usize) -> Mat { Mat::from_fn(n, n, |i, j| (i + j) as f64) }\n";
+        assert_eq!(
+            rules_of(&run("src/linalg/symop.rs", bad)),
+            ["no-square-alloc-in-sharded-modules"]
+        );
+        assert!(run("src/linalg/symop.rs", rect).is_empty());
+        assert_eq!(
+            rules_of(&run("src/linalg/symop.rs", eye)),
+            ["no-square-alloc-in-sharded-modules"]
+        );
+        assert_eq!(
+            rules_of(&run("src/experiments/common.rs", from_fn)),
+            ["no-square-alloc-in-sharded-modules"]
+        );
+        // out of scope module: silent
+        assert!(run("src/linalg/eig.rs", bad).is_empty());
+        // test code in scope: silent (dense oracles are deliberate)
+        let in_test = "#[cfg(test)]\nmod t {\n    fn f(d: usize) -> Mat { Mat::zeros(d, d) }\n}\n";
+        assert!(run("src/linalg/symop.rs", in_test).is_empty());
+    }
+
+    #[test]
+    fn send_implies_meter_function_granularity() {
+        let bad = "fn leak(ch: &Chan) {\n    let m = Message::Done;\n    ch.send(m);\n}\n";
+        let good = "fn ok(ch: &Chan, stats: &CommStats) {\n    let m = Message::Done;\n    stats.record_ctrl(m.wire_bytes());\n    ch.send(m);\n}\n";
+        let pattern_only =
+            "fn recv(m: Message) {\n    match m {\n        Message::Done => {}\n        _ => {}\n    }\n}\n";
+        let destructure = "fn d(reply: Message) {\n    let Message::Aligned { panel, .. } = reply else { return };\n    drop(panel);\n}\n";
+        assert_eq!(rules_of(&run("src/coordinator/cluster.rs", bad)), ["send-implies-meter"]);
+        assert!(run("src/coordinator/cluster.rs", good).is_empty());
+        assert!(run("src/coordinator/gossip.rs", pattern_only).is_empty());
+        assert!(run("src/coordinator/cluster.rs", destructure).is_empty());
+        assert!(run("src/coordinator/rounds.rs", bad).is_empty(), "out of scope");
+    }
+
+    #[test]
+    fn unwrap_in_transport_with_try_into_exemption() {
+        let bad = "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n";
+        let infallible =
+            "fn g(b: &[u8]) -> u64 { u64::from_le_bytes(b[0..8].try_into().expect(\"8 bytes\")) }\n";
+        assert_eq!(
+            rules_of(&run("src/coordinator/transport.rs", bad)),
+            ["no-unwrap-in-transport"]
+        );
+        assert!(run("src/coordinator/journal.rs", infallible).is_empty());
+        assert!(run("src/coordinator/fault.rs", bad).is_empty(), "out of scope");
+        let in_test = "#[cfg(test)]\nmod t {\n    fn f(x: Option<u8>) -> u8 { x.unwrap() }\n}\n";
+        assert!(run("src/coordinator/transport.rs", in_test).is_empty());
+    }
+
+    #[test]
+    fn float_bits_in_snapshots_rules() {
+        let bad = "fn s(x: f64) -> Json { Json::Num(x) }\n";
+        let cast = "fn s(n: usize) -> Json { Json::Num(n as f64) }\n";
+        let bits = "fn s(x: f64) -> Json { f64_to_json(x) }\n";
+        assert_eq!(
+            rules_of(&run("src/coordinator/journal.rs", bad)),
+            ["float-bits-in-snapshots"]
+        );
+        assert!(run("src/coordinator/journal.rs", cast).is_empty());
+        assert!(run("src/coordinator/journal.rs", bits).is_empty());
+        assert!(run("src/io/json.rs", bad).is_empty(), "out of scope");
+    }
+
+    #[test]
+    fn first_two_args_handles_nesting() {
+        assert_eq!(
+            first_two_args("g.n, &g.edges, beta)"),
+            Some(("g.n".to_string(), "&g.edges".to_string()))
+        );
+        assert_eq!(
+            first_two_args("f(a, b), f(a, b))"),
+            Some(("f(a, b)".to_string(), "f(a, b)".to_string()))
+        );
+        assert_eq!(first_two_args("d)"), None);
+    }
+}

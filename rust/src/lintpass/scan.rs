@@ -1,0 +1,556 @@
+//! Lexical file scanner for `deigen-lint` (DESIGN.md S18).
+//!
+//! Rules never see raw source: they see *masked* lines where comment
+//! bodies and string/char-literal contents have been blanked to spaces
+//! (delimiters are kept so token boundaries survive). That is what makes
+//! the pass self-clean — the rule patterns in `rules.rs` live inside
+//! string literals, and a snippet like `".partial_cmp("` in a doc comment
+//! cannot fire a finding. On top of the mask the scanner derives the
+//! structure the rules need: per-line test-code flags (`#[cfg(test)]`
+//! blocks and `#[test]` functions), `fn` body spans for scope-granular
+//! rules (send-implies-meter), and the `// deigen-lint: allow(<rule>) —
+//! <reason>` suppression annotations, which are themselves audited by the
+//! engine (an allow that suppresses nothing is an error).
+//!
+//! The scanner is a line/token pass, not a parser: it tracks exactly the
+//! Rust surface it needs (nested block comments, raw strings `r#"…"#`,
+//! byte strings, char-vs-lifetime disambiguation, brace depth) and
+//! nothing more. Findings are line-granular, which is the granularity the
+//! suppression syntax works at.
+
+/// One suppression annotation: `// deigen-lint: allow(<rule>) — <reason>`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Allow {
+    /// Rule id inside the parens.
+    pub rule: String,
+    /// 1-indexed line the annotation sits on. It suppresses findings of
+    /// `rule` on this line and the immediately following line.
+    pub line: usize,
+    /// Free-text justification after the rule. Mandatory: an allow
+    /// without a reason is reported by the audit.
+    pub reason: String,
+}
+
+/// A `fn` body span (1-indexed, inclusive of the line holding the
+/// closing brace). Nested items stay inside their parent's span.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FnSpan {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl FnSpan {
+    pub fn contains(&self, line: usize) -> bool {
+        self.start <= line && line <= self.end
+    }
+}
+
+/// Everything the rule engine needs to know about one source file.
+pub struct FileScan {
+    /// Masked source, split into lines (no trailing newlines).
+    pub masked: Vec<String>,
+    /// Per-line: is this line inside `#[cfg(test)]`-gated code or a
+    /// `#[test]` function body?
+    pub is_test: Vec<bool>,
+    /// All suppression annotations, in line order.
+    pub allows: Vec<Allow>,
+    /// Annotations that *look* like deigen-lint directives but do not
+    /// parse (missing rule, missing reason). `(line, problem)`.
+    pub malformed: Vec<(usize, String)>,
+    /// All `fn` body spans, innermost-last per nesting chain.
+    pub fns: Vec<FnSpan>,
+}
+
+impl FileScan {
+    /// Masked text of 1-indexed `line` ("" out of range).
+    pub fn line(&self, line: usize) -> &str {
+        self.masked.get(line.wrapping_sub(1)).map(String::as_str).unwrap_or("")
+    }
+
+    /// Innermost `fn` span containing `line`, if any.
+    pub fn enclosing_fn(&self, line: usize) -> Option<FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| f.contains(line))
+            .min_by_key(|f| f.end - f.start)
+            .copied()
+    }
+}
+
+/// Scan one file.
+pub fn scan(text: &str) -> FileScan {
+    let (masked_text, comments) = mask(text);
+    let masked: Vec<String> = masked_text.split('\n').map(str::to_string).collect();
+    let (is_test, fns) = analyze(&masked);
+    let mut allows = Vec::new();
+    let mut malformed = Vec::new();
+    for (line, body) in &comments {
+        match parse_allow(body) {
+            Some(Ok((rule, reason))) => allows.push(Allow { rule, line: *line, reason }),
+            Some(Err(problem)) => malformed.push((*line, problem)),
+            None => {}
+        }
+    }
+    FileScan { masked, is_test, allows, malformed, fns }
+}
+
+/// Does `line` contain `word` as a standalone token (non-identifier
+/// characters, or the line boundary, on both sides)?
+pub fn has_word(line: &str, word: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut from = 0;
+    while let Some(p) = line[from..].find(word) {
+        let at = from + p;
+        let before_ok = at == 0 || !is_ident(bytes[at - 1]);
+        let after = at + word.len();
+        let after_ok = after >= bytes.len() || !is_ident(bytes[after]);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = at + word.len();
+    }
+    false
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+// ---------------------------------------------------------------------
+// masking state machine
+// ---------------------------------------------------------------------
+
+/// Blank comment bodies and string/char contents to spaces, preserving
+/// newlines, delimiters and everything else. Returns the masked text and
+/// the collected comment bodies as `(1-indexed line, text)` — block
+/// comments contribute one entry per line they cover.
+fn mask(text: &str) -> (String, Vec<(usize, String)>) {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut out = String::with_capacity(text.len());
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut cur = String::new();
+    let mut in_comment = false;
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    enum St {
+        Code,
+        Line,
+        Block(u32),
+        Str,
+        RawStr(u32),
+    }
+    let mut st = St::Code;
+
+    macro_rules! flush_comment {
+        () => {
+            if in_comment {
+                comments.push((line, std::mem::take(&mut cur)));
+                in_comment = false;
+            }
+        };
+    }
+
+    while i < n {
+        let c = chars[i];
+        match st {
+            St::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    st = St::Line;
+                    in_comment = true;
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::Block(1);
+                    in_comment = true;
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Str;
+                    out.push('"');
+                    i += 1;
+                } else if c == 'r' && raw_str_hashes(&chars, i).is_some() {
+                    let h = raw_str_hashes(&chars, i).unwrap();
+                    out.push('r');
+                    for _ in 0..h {
+                        out.push('#');
+                    }
+                    out.push('"');
+                    st = St::RawStr(h);
+                    i += 2 + h as usize;
+                } else if c == '\'' {
+                    // char literal vs lifetime
+                    if chars.get(i + 1) == Some(&'\\') {
+                        // escaped char literal: consume to the closing quote
+                        out.push('\'');
+                        i += 1;
+                        while i < n && chars[i] != '\'' {
+                            if chars[i] == '\\' {
+                                out.push_str("  ");
+                                i += 2;
+                            } else {
+                                if chars[i] == '\n' {
+                                    out.push('\n');
+                                    line += 1;
+                                } else {
+                                    out.push(' ');
+                                }
+                                i += 1;
+                            }
+                        }
+                        if i < n {
+                            out.push('\'');
+                            i += 1;
+                        }
+                    } else if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
+                        // plain char literal 'x' (any single char)
+                        out.push('\'');
+                        out.push(' ');
+                        out.push('\'');
+                        i += 3;
+                    } else {
+                        // lifetime — emit the quote, stay in code
+                        out.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    if c == '\n' {
+                        line += 1;
+                    }
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            St::Line => {
+                if c == '\n' {
+                    flush_comment!();
+                    st = St::Code;
+                    out.push('\n');
+                    line += 1;
+                } else {
+                    cur.push(c);
+                    out.push(' ');
+                }
+                i += 1;
+            }
+            St::Block(depth) => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::Block(depth + 1);
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    if depth == 1 {
+                        flush_comment!();
+                        st = St::Code;
+                    } else {
+                        st = St::Block(depth - 1);
+                    }
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    if c == '\n' {
+                        flush_comment!();
+                        in_comment = true; // continues on the next line
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        cur.push(c);
+                        out.push(' ');
+                    }
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    out.push('"');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    if c == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if c == '"' && closes_raw(&chars, i, h) {
+                    out.push('"');
+                    for _ in 0..h {
+                        out.push('#');
+                    }
+                    st = St::Code;
+                    i += 1 + h as usize;
+                } else {
+                    if c == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    i += 1;
+                }
+            }
+        }
+    }
+    if in_comment {
+        comments.push((line, cur));
+    }
+    (out, comments)
+}
+
+/// Is `chars[i] == 'r'` the start of a raw string? Returns the hash
+/// count. Requires a non-identifier character before the `r` so
+/// identifiers ending in `r` (e.g. `var"x"` can't occur, but `r` inside
+/// a path could) never false-trigger.
+fn raw_str_hashes(chars: &[char], i: usize) -> Option<u32> {
+    if i > 0 {
+        let p = chars[i - 1];
+        if p.is_alphanumeric() || p == '_' {
+            return None;
+        }
+    }
+    let mut j = i + 1;
+    let mut h = 0u32;
+    while chars.get(j) == Some(&'#') {
+        h += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some(h)
+    } else {
+        None
+    }
+}
+
+/// Does the quote at `i` close a raw string with `h` hashes?
+fn closes_raw(chars: &[char], i: usize, h: u32) -> bool {
+    (1..=h as usize).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+// ---------------------------------------------------------------------
+// structural analysis over masked lines
+// ---------------------------------------------------------------------
+
+/// Per-line test flags and `fn` spans, from brace tracking over the
+/// masked lines. `#[cfg(test)]` arms a flag that marks the next
+/// brace-delimited item (the `mod tests { … }` block, or a gated helper
+/// `fn`) as test code; a `;` before any `{` (e.g. `#[cfg(test)] use …;`)
+/// disarms it.
+fn analyze(masked: &[String]) -> (Vec<bool>, Vec<FnSpan>) {
+    let mut is_test = vec![false; masked.len()];
+    let mut fns: Vec<FnSpan> = Vec::new();
+    let mut depth: i64 = 0;
+    let mut pending_cfg = false;
+    let mut pending_fn: Option<usize> = None;
+    let mut test_entry: Vec<i64> = Vec::new();
+    let mut open_fns: Vec<(usize, i64)> = Vec::new();
+
+    for (idx, line) in masked.iter().enumerate() {
+        let lineno = idx + 1;
+        if !test_entry.is_empty() {
+            is_test[idx] = true;
+        }
+        if line.contains("#[cfg(test)]") || line.contains("#[test]") {
+            pending_cfg = true;
+        }
+        if has_word(line, "fn") {
+            // position is resolved by the token walk below; recording the
+            // line here is enough because the walk only needs the start
+            pending_fn = Some(lineno);
+        }
+        for ch in line.chars() {
+            match ch {
+                '{' => {
+                    if pending_cfg {
+                        test_entry.push(depth);
+                        pending_cfg = false;
+                        is_test[idx] = true;
+                    }
+                    if let Some(s) = pending_fn.take() {
+                        open_fns.push((s, depth));
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if open_fns.last().is_some_and(|&(_, d)| d == depth) {
+                        let (s, _) = open_fns.pop().unwrap();
+                        fns.push(FnSpan { start: s, end: lineno });
+                    }
+                    if test_entry.last() == Some(&depth) {
+                        test_entry.pop();
+                        is_test[idx] = true;
+                    }
+                }
+                ';' => {
+                    // `fn f(…) -> T;` (trait decl) and `#[cfg(test)] use …;`:
+                    // a semicolon before any `{` closes the pending item
+                    pending_fn = None;
+                    pending_cfg = false;
+                }
+                _ => {}
+            }
+        }
+    }
+    fns.sort_by_key(|f| (f.start, f.end));
+    (is_test, fns)
+}
+
+// ---------------------------------------------------------------------
+// suppression annotations
+// ---------------------------------------------------------------------
+
+/// Parse one comment body. `None` — not a deigen-lint directive at all.
+/// `Some(Ok((rule, reason)))` — well-formed allow. `Some(Err(why))` —
+/// directive-shaped but malformed (audited as an error by the engine).
+///
+/// A directive must *begin* the comment body (after whitespace), i.e. be
+/// written `// deigen-lint: …` or trail code as `x(); // deigen-lint: …`.
+/// Doc comments (`///` and `//!` leave a leading `/` or `!` in the body)
+/// and prose that merely mentions the marker mid-sentence never parse as
+/// directives — documentation about the syntax cannot trip the audit.
+fn parse_allow(body: &str) -> Option<Result<(String, String), String>> {
+    let rest = body.trim_start().strip_prefix("deigen-lint:")?.trim_start();
+    let Some(inner) = rest.strip_prefix("allow(") else {
+        return Some(Err(format!("expected `allow(<rule>)` after `deigen-lint:`, got `{rest}`")));
+    };
+    let Some(close) = inner.find(')') else {
+        return Some(Err("unterminated `allow(` — missing `)`".to_string()));
+    };
+    let rule = inner[..close].trim().to_string();
+    if rule.is_empty() {
+        return Some(Err("empty rule id in `allow()`".to_string()));
+    }
+    let mut reason = inner[close + 1..].trim_start();
+    for sep in ["—", "--", "-", ":"] {
+        if let Some(r) = reason.strip_prefix(sep) {
+            reason = r;
+            break;
+        }
+    }
+    let reason = reason.trim();
+    if reason.is_empty() {
+        return Some(Err(format!("allow({rule}) has no justification — a reason is mandatory")));
+    }
+    Some(Ok((rule, reason.to_string())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_line_and_block_comments() {
+        let s = scan("let x = 1; // partial_cmp().unwrap()\n/* unsafe */ let y = 2;\n");
+        assert!(!s.line(1).contains("partial_cmp"));
+        assert!(s.line(1).contains("let x = 1;"));
+        assert!(!s.line(2).contains("unsafe"));
+        assert!(s.line(2).contains("let y = 2;"));
+    }
+
+    #[test]
+    fn masks_string_contents_but_keeps_delimiters() {
+        let s = scan("let p = \".unwrap()\";\nlet q = r#\"HashMap\"#;\n");
+        assert!(!s.line(1).contains("unwrap"));
+        assert!(s.line(1).contains('"'));
+        assert!(!s.line(2).contains("HashMap"));
+    }
+
+    #[test]
+    fn nested_block_comments_and_multiline_strings() {
+        let s = scan("/* a /* b */ still comment */ code();\nlet s = \"one\\\n two\";\nafter();\n");
+        assert!(s.line(1).contains("code();"));
+        assert!(!s.line(2).contains("one"));
+        assert!(s.line(3).contains("after();"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let s = scan("fn f<'a>(x: &'a str) -> &'a str { let c = 'x'; let t = '\\n'; x }\n");
+        // the fn span must close on line 1 — a runaway char literal would
+        // swallow the braces
+        assert_eq!(s.fns, vec![FnSpan { start: 1, end: 1 }]);
+        assert!(!s.line(1).contains('x') || s.line(1).contains("x }"));
+    }
+
+    #[test]
+    fn cfg_test_block_is_flagged() {
+        let text = "fn real() {}\n#[cfg(test)]\nmod tests {\n    fn helper() { bad(); }\n}\nfn tail() {}\n";
+        let s = scan(text);
+        assert!(!s.is_test[0]);
+        assert!(s.is_test[3], "inside mod tests");
+        assert!(s.is_test[4], "closing brace line");
+        assert!(!s.is_test[5], "after the block");
+    }
+
+    #[test]
+    fn cfg_test_on_use_does_not_leak() {
+        let s = scan("#[cfg(test)]\nuse super::*;\nfn live() { x(); }\n");
+        assert!(!s.is_test[2], "cfg(test) on a use must not mark the next fn");
+    }
+
+    #[test]
+    fn fn_spans_nest() {
+        let text = "fn outer() {\n    fn inner() {\n        y();\n    }\n    x();\n}\n";
+        let s = scan(text);
+        assert_eq!(s.fns, vec![
+            FnSpan { start: 2, end: 4 },
+            FnSpan { start: 1, end: 6 },
+        ]);
+        assert_eq!(s.enclosing_fn(3), Some(FnSpan { start: 2, end: 4 }));
+        assert_eq!(s.enclosing_fn(5), Some(FnSpan { start: 1, end: 6 }));
+    }
+
+    #[test]
+    fn trait_method_decl_does_not_open_a_span() {
+        let s = scan("trait T {\n    fn decl(&self) -> usize;\n    fn body(&self) { g(); }\n}\n");
+        assert_eq!(s.fns, vec![FnSpan { start: 3, end: 3 }]);
+    }
+
+    #[test]
+    fn allow_parsing_and_malformed() {
+        let text = "\
+// deigen-lint: allow(no-unsafe-outside-pool) — FFI Send wrapper, no shared state\n\
+let x = 1; // deigen-lint: allow(float-bits-in-snapshots): integer cast is exact\n\
+// deigen-lint: allow(no-stray-threads)\n\
+// ordinary comment mentioning deigen-lint usage in prose is fine\n";
+        let s = scan(text);
+        assert_eq!(s.allows.len(), 2);
+        assert_eq!(s.allows[0].rule, "no-unsafe-outside-pool");
+        assert_eq!(s.allows[0].line, 1);
+        assert!(s.allows[0].reason.contains("FFI"));
+        assert_eq!(s.allows[1].rule, "float-bits-in-snapshots");
+        assert_eq!(s.allows[1].line, 2);
+        // line 3 lacks a reason → malformed; line 4 is plain prose where
+        // the marker does not begin the comment body → ignored
+        assert_eq!(s.malformed.len(), 1);
+        assert_eq!(s.malformed[0].0, 3);
+    }
+
+    #[test]
+    fn doc_comments_about_the_syntax_are_not_directives() {
+        let text = "\
+/// Suppressions look like `// deigen-lint: allow(<rule>) — <reason>`.\n\
+//! The `// deigen-lint: allow(x)` form is audited.\n\
+// see deigen-lint: allow(...) in DESIGN.md S18 for the grammar\n\
+fn documented() {}\n";
+        let s = scan(text);
+        assert!(s.allows.is_empty());
+        assert!(s.malformed.is_empty(), "doc/prose mentions must not parse: {:?}", s.malformed);
+    }
+
+    #[test]
+    fn has_word_respects_boundaries() {
+        assert!(has_word("pub fn f()", "fn"));
+        assert!(!has_word("Mat::from_fn(a, b)", "fn"));
+        assert!(!has_word("fnord", "fn"));
+        assert!(has_word("unsafe {", "unsafe"));
+    }
+}

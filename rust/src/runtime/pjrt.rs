@@ -37,6 +37,7 @@ mod real {
     // client has no thread affinity; the rust wrapper types only lose the
     // auto traits because they hold raw pointers. `SharedPjrtSolver`
     // additionally serializes all calls behind a Mutex.
+    // deigen-lint: allow(no-unsafe-outside-pool) — FFI Send assertion on a raw-pointer wrapper, no shared mutable state crosses threads
     unsafe impl Send for PjrtEngine {}
 
     impl PjrtEngine {

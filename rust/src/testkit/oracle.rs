@@ -108,7 +108,7 @@ pub fn jacobi_eig(a: &Mat) -> (Vec<f64>, Mat) {
     }
 
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&i, &j| m[(i, i)].partial_cmp(&m[(j, j)]).unwrap());
+    order.sort_by(|&i, &j| m[(i, i)].total_cmp(&m[(j, j)]));
     let vals: Vec<f64> = order.iter().map(|&i| m[(i, i)]).collect();
     let vecs = Mat::from_fn(n, n, |i, j| v[(i, order[j])]);
     (vals, vecs)
@@ -191,7 +191,7 @@ mod tests {
         let a = a_bt(&matmul(&q, &Mat::from_diag(&d)), &q);
         let (vals, vecs) = jacobi_eig(&a);
         let mut want = d.to_vec();
-        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        want.sort_by(|a, b| a.total_cmp(b));
         for (got, want) in vals.iter().zip(&want) {
             assert!((got - want).abs() < 1e-10, "{got} vs {want}");
         }

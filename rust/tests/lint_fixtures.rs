@@ -1,0 +1,113 @@
+//! Drives the fixture corpus under `tests/lint_fixtures/`: every rule
+//! must *fire* on its known-bad snippet (and only that rule) and stay
+//! *silent* on the known-good twin. This is the proof that the gate in
+//! `lint_clean.rs` is load-bearing — a rule that never fires would pass
+//! the tree trivially.
+
+use std::fs;
+use std::path::Path;
+
+use deigen::lintpass::rules;
+use deigen::lintpass::{lint_source, Finding};
+
+/// Lint every `.rs` file under `base`, returning `(rel_path, findings)`
+/// with paths relative to `base` (so the rules' path scoping sees the
+/// same `src/coordinator/…` suffixes as the real tree).
+fn lint_subtree(base: &Path) -> Vec<(String, Vec<Finding>)> {
+    fn walk(dir: &Path, base: &Path, out: &mut Vec<(String, Vec<Finding>)>) {
+        let mut entries: Vec<_> =
+            fs::read_dir(dir).expect("fixture dir").map(|e| e.expect("entry").path()).collect();
+        entries.sort();
+        for path in entries {
+            if path.is_dir() {
+                walk(&path, base, out);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                let rel = path
+                    .strip_prefix(base)
+                    .expect("under base")
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                let text = fs::read_to_string(&path).expect("fixture source");
+                out.push((rel.clone(), lint_source(&rel, &text)));
+            }
+        }
+    }
+    let mut out = Vec::new();
+    walk(base, base, &mut out);
+    out
+}
+
+#[test]
+fn every_rule_fires_on_bad_and_stays_silent_on_good() {
+    let corpus = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests").join("lint_fixtures");
+    let mut covered: Vec<String> = Vec::new();
+
+    let mut rule_dirs: Vec<_> = fs::read_dir(&corpus)
+        .expect("corpus dir")
+        .map(|e| e.expect("entry").path())
+        .filter(|p| p.is_dir())
+        .collect();
+    rule_dirs.sort();
+    for dir in rule_dirs {
+        let rule = dir.file_name().expect("dir name").to_string_lossy().into_owned();
+        assert!(
+            rules::is_known_rule(&rule),
+            "fixture dir {rule} does not match any rule id"
+        );
+        covered.push(rule.clone());
+
+        // bad: at least one unsuppressed finding, all of this rule
+        let bad = lint_subtree(&dir.join("bad"));
+        assert!(!bad.is_empty(), "{rule}/bad is empty");
+        let mut fired = 0usize;
+        for (rel, findings) in &bad {
+            let unsup: Vec<&Finding> = findings.iter().filter(|f| !f.suppressed).collect();
+            assert!(!unsup.is_empty(), "{rule}/bad/{rel}: rule did not fire");
+            for f in &unsup {
+                assert_eq!(
+                    f.rule, rule,
+                    "{rule}/bad/{rel}:{}: cross-contamination — [{}] {}",
+                    f.line, f.rule, f.message
+                );
+            }
+            fired += unsup.len();
+        }
+        assert!(fired >= 1, "{rule}: nothing fired across bad fixtures");
+
+        // good: the whole pass is silent (suppressed findings allowed —
+        // the stale-allow twin demonstrates a live suppression)
+        let good = lint_subtree(&dir.join("good"));
+        assert!(!good.is_empty(), "{rule}/good is empty");
+        for (rel, findings) in &good {
+            let unsup: Vec<String> = findings
+                .iter()
+                .filter(|f| !f.suppressed)
+                .map(|f| format!("{}:{}: [{}] {}", rel, f.line, f.rule, f.message))
+                .collect();
+            assert!(
+                unsup.is_empty(),
+                "{rule}/good/{rel} must be clean:\n{}",
+                unsup.join("\n")
+            );
+        }
+    }
+
+    // the corpus must cover every rule, stale-allow included
+    covered.sort_unstable();
+    let mut want: Vec<String> = rules::RULES.iter().map(|r| r.to_string()).collect();
+    want.sort_unstable();
+    assert_eq!(covered, want, "corpus coverage != rule set");
+}
+
+/// The stale-allow good twin exercises the suppression machinery: its
+/// finding must surface as *suppressed* with the written justification.
+#[test]
+fn good_twin_suppression_carries_its_reason() {
+    let corpus = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests").join("lint_fixtures");
+    let good = lint_subtree(&corpus.join("stale-allow").join("good"));
+    let sup: Vec<&Finding> =
+        good.iter().flat_map(|(_, fs)| fs).filter(|f| f.suppressed).collect();
+    assert_eq!(sup.len(), 1, "expected exactly one suppressed finding");
+    assert_eq!(sup[0].rule, "no-stray-threads");
+    assert!(sup[0].reason.as_deref().unwrap_or("").contains("pool migration"));
+}

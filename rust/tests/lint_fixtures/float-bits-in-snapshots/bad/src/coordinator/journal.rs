@@ -1,0 +1,7 @@
+//! Known-bad: a true f64 serialized through `Json::Num` goes through
+//! decimal formatting, and the reread checkpoint is no longer
+//! bit-identical — the crash-recovery resume guarantee dies here.
+
+pub fn snapshot_residual(residual: f64) -> Json {
+    Json::Num(residual)
+}

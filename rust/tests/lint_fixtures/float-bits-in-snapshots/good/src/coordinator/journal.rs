@@ -1,0 +1,10 @@
+//! Known-good twin: exact small integers may cast (`as f64` is exact to
+//! 2^53), and true floats go through the `to_bits` hex path
+//! (`f64_to_json`), which round-trips bit-identically.
+
+pub fn snapshot(round: usize, residual: f64) -> Vec<(&'static str, Json)> {
+    vec![
+        ("round", Json::Num(round as f64)),
+        ("residual", f64_to_json(residual)),
+    ]
+}

@@ -1,0 +1,6 @@
+//! Known-bad: float sort through `partial_cmp().unwrap()` panics on the
+//! first NaN that reaches it.
+
+pub fn sort_desc(v: &mut Vec<f64>) {
+    v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+}

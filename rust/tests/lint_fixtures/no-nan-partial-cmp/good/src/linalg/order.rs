@@ -1,0 +1,6 @@
+//! Known-good twin: `total_cmp` is total — NaN sorts to one end instead
+//! of panicking, and the order is identical for NaN-free data.
+
+pub fn sort_desc(v: &mut Vec<f64>) {
+    v.sort_by(|a, b| b.total_cmp(a));
+}

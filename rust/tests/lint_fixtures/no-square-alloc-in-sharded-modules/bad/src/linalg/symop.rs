@@ -1,0 +1,14 @@
+//! Known-bad: materializing a d×d matrix in a sharded-plane module.
+//! The entire point of the operator plane is that nothing n×n or d×d
+//! ever exists; a square alloc here is the abstraction leaking.
+
+use crate::linalg::Mat;
+
+pub fn densify(d: usize) -> Mat {
+    let out = Mat::zeros(d, d);
+    out
+}
+
+pub fn probe(d: usize) -> Mat {
+    Mat::eye(d)
+}

@@ -1,0 +1,25 @@
+//! Known-good twin: rectangular panels are the sharded plane's native
+//! shape, and test code may densify freely — the rule skips
+//! `#[cfg(test)]` spans.
+
+use crate::linalg::Mat;
+
+pub fn panel(d: usize, r: usize) -> Mat {
+    Mat::zeros(d, r)
+}
+
+pub fn workspace(rows: usize) -> Mat {
+    Mat::zeros(rows, 8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_pin() {
+        let d = 6;
+        let full = Mat::zeros(d, d);
+        assert_eq!(full.rows(), d);
+    }
+}

@@ -1,0 +1,7 @@
+//! Known-bad: an estimator spinning up its own thread. All parallelism
+//! must go through `linalg::pool` so determinism and thread-count
+//! control stay centralized.
+
+pub fn sketch_in_background(data: Vec<f64>) -> std::thread::JoinHandle<f64> {
+    std::thread::spawn(move || data.iter().sum())
+}

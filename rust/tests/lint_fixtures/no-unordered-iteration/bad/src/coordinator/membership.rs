@@ -1,0 +1,13 @@
+//! Known-bad: hash containers in the coordinator. Iteration order is
+//! seed-dependent, so any protocol decision derived from it (peer order,
+//! quorum tallies, transcript layout) silently loses determinism.
+
+use std::collections::HashMap;
+
+pub fn tally(votes: &[(u32, bool)]) -> usize {
+    let mut by_peer: HashMap<u32, bool> = HashMap::new();
+    for &(peer, up) in votes {
+        by_peer.insert(peer, up);
+    }
+    by_peer.values().filter(|&&v| v).count()
+}

@@ -1,0 +1,13 @@
+//! Known-good twin: `BTreeMap` gives the same API with a deterministic
+//! (sorted) iteration order — the sanctioned container in coordinator
+//! code.
+
+use std::collections::BTreeMap;
+
+pub fn tally(votes: &[(u32, bool)]) -> usize {
+    let mut by_peer: BTreeMap<u32, bool> = BTreeMap::new();
+    for &(peer, up) in votes {
+        by_peer.insert(peer, up);
+    }
+    by_peer.values().filter(|&&v| v).count()
+}

@@ -1,0 +1,12 @@
+//! Known-bad: raw-pointer arithmetic outside the blessed pool module.
+//! Unsafe concurrency/aliasing lives in `linalg/pool.rs` only, where
+//! Miri and TSan watch it.
+
+pub fn sum_raw(v: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    let p = v.as_ptr();
+    for i in 0..v.len() {
+        acc += unsafe { *p.add(i) };
+    }
+    acc
+}

@@ -1,0 +1,12 @@
+//! Known-good twin: the same unsafe block inside `linalg/pool.rs`, the
+//! one module sanctioned to hold it (and covered by the Miri/TSan CI
+//! jobs).
+
+pub fn sum_raw(v: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    let p = v.as_ptr();
+    for i in 0..v.len() {
+        acc += unsafe { *p.add(i) };
+    }
+    acc
+}

@@ -1,0 +1,11 @@
+//! Known-bad: panicking extraction on the wire path. A malformed frame
+//! from a faulty (or Byzantine) peer must surface as a typed transport
+//! error the protocol can act on, never a leader panic.
+
+pub fn frame_len(header: &[u8], fallback: Option<usize>) -> usize {
+    if header.len() >= 4 {
+        fallback.unwrap()
+    } else {
+        fallback.expect("no fallback length")
+    }
+}

@@ -1,0 +1,21 @@
+//! Known-good twin: the infallible fixed-width `try_into()` conversion
+//! is exempt (a 4-byte slice into `[u8; 4]` cannot fail), errors flow
+//! through `Result`, and tests may unwrap freely.
+
+pub fn frame_len(header: &[u8]) -> Result<u32, String> {
+    if header.len() < 4 {
+        return Err("short header".to_string());
+    }
+    let word: [u8; 4] = header[0..4].try_into().expect("length checked above");
+    Ok(u32::from_le_bytes(word))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_length() {
+        assert_eq!(frame_len(&[7, 0, 0, 0]).unwrap(), 7);
+    }
+}

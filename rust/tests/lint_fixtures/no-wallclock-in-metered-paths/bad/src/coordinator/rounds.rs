@@ -1,0 +1,9 @@
+//! Known-bad: wall-clock reads inside a metered protocol path. Round
+//! accounting must be driven by the simulated schedule, not host time,
+//! or the rounds-vs-bytes frontier stops being reproducible.
+
+pub fn round_elapsed_ms(start_ms: u64) -> u64 {
+    let now = std::time::Instant::now();
+    let _ = now;
+    start_ms + 1
+}

@@ -1,0 +1,10 @@
+//! Known-good twin: the same wall-clock read in an experiment driver,
+//! outside the metered scope (`coordinator/{fault,rounds,protocol,
+//! journal,reputation}.rs`, `align/`, `linalg/`) — timing the host is
+//! exactly what a benchmark harness is for.
+
+pub fn wall_ms<F: FnOnce()>(f: F) -> f64 {
+    let t0 = std::time::Instant::now();
+    f();
+    t0.elapsed().as_secs_f64() * 1e3
+}

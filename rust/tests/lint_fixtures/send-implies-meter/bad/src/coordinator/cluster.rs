@@ -1,0 +1,11 @@
+//! Known-bad: a function that constructs a wire `Message` without any
+//! metering funnel in scope. Unmetered sends falsify the bytes axis of
+//! every communication-cost figure.
+
+pub fn broadcast_panel(panel: Vec<f64>, peers: &[u32]) -> Vec<(u32, Message)> {
+    let mut out = Vec::new();
+    for &p in peers {
+        out.push((p, Message::Panel { data: panel.clone() }));
+    }
+    out
+}

@@ -1,0 +1,21 @@
+//! Known-good twin: the three sanctioned shapes. Construction next to a
+//! metering funnel, `match` arms that only *consume* messages, and
+//! `let`-destructures that bind out of one.
+
+pub fn send_panel(stats: &mut CommStats, panel: Vec<f64>, peer: u32) -> (u32, Message) {
+    let msg = Message::Panel { data: panel };
+    stats.record_up(wire_len(&msg));
+    (peer, msg)
+}
+
+pub fn classify(msg: &Message) -> &'static str {
+    match msg {
+        Message::Panel { .. } => "panel",
+        Message::Ack { .. } => "ack",
+    }
+}
+
+pub fn unpack(msg: Message) -> Vec<f64> {
+    let Message::Panel { data } = msg else { return Vec::new() };
+    data
+}

@@ -1,0 +1,19 @@
+//! Known-bad: suppressions that have rotted. An allow whose finding is
+//! gone, an allow naming a rule that does not exist, and a directive
+//! with no justification are all audit errors — suppressions are part
+//! of the ledger, not a mute button.
+
+// deigen-lint: allow(no-stray-threads) — the spawn this audited was removed two PRs ago
+pub fn align(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+// deigen-lint: allow(no-wallclock) — typo: the rule id is no-wallclock-in-metered-paths
+pub fn residual(a: &[f64]) -> f64 {
+    a.iter().sum()
+}
+
+// deigen-lint: allow(no-stray-threads)
+pub fn norm(a: &[f64]) -> f64 {
+    a.iter().map(|x| x * x).sum::<f64>().sqrt()
+}

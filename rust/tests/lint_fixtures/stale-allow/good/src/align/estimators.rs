@@ -1,0 +1,8 @@
+//! Known-good twin: a live, justified suppression. The finding is still
+//! reported (suppressed, with its reason — the ledger stays visible)
+//! but the gate passes and the audit finds nothing stale.
+
+pub fn legacy_background_sum(data: Vec<f64>) -> std::thread::JoinHandle<f64> {
+    // deigen-lint: allow(no-stray-threads) — quarantined legacy path, scheduled for the pool migration
+    std::thread::spawn(move || data.iter().sum())
+}

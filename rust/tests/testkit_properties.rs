@@ -147,7 +147,7 @@ fn eigensolver_adversarial_spectra_vs_jacobi_oracle() {
         // where the spectrum has a clean gap at r, the top-r panel must
         // span the oracle's leading subspace
         let mut sorted = evs.clone();
-        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        sorted.sort_by(|a, b| b.total_cmp(a));
         if sorted[r - 1] - sorted[r] > 1e-3 * scale {
             let otop = oracle::top_eigvecs(&a, r).0;
             assert!(
